@@ -1,0 +1,39 @@
+//! Quickstart: train linear regression at 5-bit end-to-end low precision
+//! and compare against FP32 — the paper's core claim in ~40 lines.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use zipml::data::synthetic::make_regression;
+use zipml::runtime::Runtime;
+use zipml::sgd::{self, Mode, ModelKind, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the AOT-compiled artifact store (PJRT CPU client)
+    let rt = Runtime::open_default()?;
+
+    // 2. a Synthetic-100-like regression problem (Table 1)
+    let ds = make_regression("quickstart", 8192, 1024, 100, 42);
+
+    // 3. train FP32 vs double-sampled 5-bit (Fig 4a)
+    let mut cfg = TrainConfig::new(ModelKind::Linreg, Mode::Full);
+    cfg.epochs = 12;
+    cfg.lr0 = 0.05;
+    let fp = sgd::train(&rt, &ds, &cfg)?;
+
+    cfg.mode = Mode::DoubleSample { bits: 5 };
+    let q5 = sgd::train(&rt, &ds, &cfg)?;
+
+    println!("epoch   fp32        ds5");
+    for (e, (a, b)) in fp.loss_curve.iter().zip(&q5.loss_curve).enumerate() {
+        println!("{e:5}   {a:<10.6}  {b:<10.6}");
+    }
+    println!(
+        "\nfinal: fp32 {:.6} vs 5-bit {:.6}  ({:.2}x less sample traffic)",
+        fp.final_loss,
+        q5.final_loss,
+        fp.sample_bytes_per_epoch / q5.sample_bytes_per_epoch
+    );
+    println!("test MSE: fp32 {:.6} vs 5-bit {:.6}",
+        ds.test_mse(&fp.final_model), ds.test_mse(&q5.final_model));
+    Ok(())
+}

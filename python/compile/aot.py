@@ -1,0 +1,230 @@
+"""AOT compile path: lower every L2 step function to HLO *text* artifacts.
+
+HLO text (NOT `lowered.compile()` / `.serialize()`) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--only REGEX]
+
+Writes one `<name>.hlo.txt` per artifact plus `manifest.json` describing
+input/output shapes so the Rust runtime can build literals without guessing.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+U8 = jnp.uint8
+
+BATCH = 64
+CHEBY_DEG = 15  # degree-15 polynomial → 16 independent quantizations (§5.4)
+
+# Shape classes. Regression ns cover Table 1 equivalents (cadata 8,
+# synthetic 10, cpusmall 12, YearPrediction 90, synthetic 100/1000) plus the
+# 64x64 tomography volume (n = 4096). Classification: cod-rna 8,
+# synthetic 100, gisette-like 500 (scaled from 5000; DESIGN.md §3).
+REGRESSION_NS = [8, 10, 12, 90, 100, 500, 1000, 4096]
+CLASSIFICATION_NS = [8, 100, 500]
+FIG6_BATCHES = [16, 256]  # minibatch-impact experiment, n = 100
+
+MLP_DIMS = model.MLP_DIMS
+MLP_LEVELS = 33  # max level-grid size for the quantized-model artifacts
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype_tag(dt) -> str:
+    return {np.dtype("float32"): "f32", np.dtype("int32"): "i32", np.dtype("uint8"): "u8"}[
+        np.dtype(dt)
+    ]
+
+
+def to_hlo_text(fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def registry():
+    """name -> (fn, [(arg_name, spec)], num_outputs, meta)"""
+    arts = {}
+
+    def add(name, fn, args, nout, **meta):
+        assert name not in arts, name
+        arts[name] = (fn, args, nout, meta)
+
+    def linear_family(n, batch=BATCH, suffix=""):
+        x = ("x", spec((n, 1)))
+        a = ("a", spec((batch, n)))
+        b = ("b", spec((batch, 1)))
+        lr = ("lr", spec((1, 1)))
+        c = ("c", spec((1, 1)))
+        tag = f"_n{n}{suffix}"
+        add(f"linreg_fp_step{tag}", model.linreg_fp_step, [x, a, b, lr], 1,
+            kind="linreg_fp_step", n=n, batch=batch)
+        add(f"linreg_ds_step{tag}", model.linreg_ds_step,
+            [x, ("a1", spec((batch, n))), ("a2", spec((batch, n))), b, lr], 1,
+            kind="linreg_ds_step", n=n, batch=batch)
+        add(f"linreg_loss{tag}", model.linreg_loss, [x, a, b], 1,
+            kind="linreg_loss", n=n, batch=batch)
+        if suffix:
+            return
+        add(f"linreg_ds_u8_step{tag}", model.linreg_ds_u8_step,
+            [x, ("idx1", spec((batch, n), U8)), ("idx2", spec((batch, n), U8)),
+             ("m", spec((1, n))), ("s", spec((1, 1))), b, lr], 1,
+            kind="linreg_ds_u8_step", n=n, batch=batch)
+        add(f"e2e_step{tag}", model.e2e_step,
+            [x, ("a1", spec((batch, n))), ("a2", spec((batch, n))), b, lr,
+             ("rand_m", spec((1, n))), ("rand_g", spec((1, n))),
+             ("s_m", spec((1, 1))), ("s_g", spec((1, 1)))], 1,
+            kind="e2e_step", n=n, batch=batch)
+        add(f"lssvm_fp_step{tag}", model.lssvm_fp_step, [x, a, b, lr, c], 1,
+            kind="lssvm_fp_step", n=n, batch=batch)
+        add(f"lssvm_ds_step{tag}", model.lssvm_ds_step,
+            [x, ("a1", spec((batch, n))), ("a2", spec((batch, n))), b, lr, c], 1,
+            kind="lssvm_ds_step", n=n, batch=batch)
+        add(f"lssvm_loss{tag}", model.lssvm_loss, [x, a, b, c], 1,
+            kind="lssvm_loss", n=n, batch=batch)
+
+    def classification_family(n, batch=BATCH):
+        x = ("x", spec((n, 1)))
+        a = ("a", spec((batch, n)))
+        b = ("b", spec((batch, 1)))
+        lr = ("lr", spec((1, 1)))
+        coefs = ("coefs", spec((CHEBY_DEG + 1, 1)))
+        mono = ("mono", spec((CHEBY_DEG + 1, 1)))
+        aq = ("aq", spec((CHEBY_DEG + 1, batch, n)))
+        tag = f"_n{n}"
+        add(f"logistic_fp_step{tag}", model.logistic_fp_step, [x, a, b, lr], 1,
+            kind="logistic_fp_step", n=n, batch=batch)
+        add(f"logistic_loss{tag}", model.logistic_loss, [x, a, b], 1,
+            kind="logistic_loss", n=n, batch=batch)
+        add(f"svm_fp_step{tag}", model.svm_fp_step, [x, a, b, lr], 1,
+            kind="svm_fp_step", n=n, batch=batch)
+        add(f"hinge_loss{tag}", model.hinge_loss, [x, a, b], 1,
+            kind="hinge_loss", n=n, batch=batch)
+        add(f"margins{tag}", model.margins, [x, a, b], 1,
+            kind="margins", n=n, batch=batch)
+        add(f"cheby_step{tag}", model.cheby_step,
+            [x, ("a1", spec((batch, n))), ("a2", spec((batch, n))), b, lr, coefs], 1,
+            kind="cheby_step", n=n, batch=batch, degree=CHEBY_DEG,
+            radius=model.RADIUS)
+        add(f"poly_ds_step{tag}", model.poly_ds_step, [x, aq, b, lr, mono], 1,
+            kind="poly_ds_step", n=n, batch=batch, degree=CHEBY_DEG)
+
+    for n in REGRESSION_NS:
+        linear_family(n)
+    for batch in FIG6_BATCHES:
+        linear_family(100, batch=batch, suffix=f"_b{batch}")
+    for n in CLASSIFICATION_NS:
+        classification_family(n)
+
+    # Standalone quantizer (tests + gradient/model compression paths).
+    for n in (100, 1000):
+        add(f"quantize_v_n{n}", model.quantize_v,
+            [("v", spec((1, n))), ("rand", spec((1, n))),
+             ("m", spec((1, n))), ("s", spec((1, 1)))], 1,
+            kind="quantize_v", n=n, batch=1)
+
+    # Epoch-fused perf variants (DESIGN.md §8): 64 batches per dispatch.
+    nb, n = 64, 100
+    add("linreg_fp_epoch_n100", model.linreg_fp_epoch,
+        [("x", spec((n, 1))), ("a_all", spec((nb, BATCH, n))),
+         ("b_all", spec((nb, BATCH, 1))), ("lr", spec((1, 1)))], 1,
+        kind="linreg_fp_epoch", n=n, batch=BATCH, num_batches=nb)
+    add("linreg_ds_epoch_n100", model.linreg_ds_epoch,
+        [("x", spec((n, 1))), ("a1_all", spec((nb, BATCH, n))),
+         ("a2_all", spec((nb, BATCH, n))), ("b_all", spec((nb, BATCH, 1))),
+         ("lr", spec((1, 1)))], 1,
+        kind="linreg_ds_epoch", n=n, batch=BATCH, num_batches=nb)
+
+    # Deep-learning extension (§3.3).
+    d0, d1, d2, d3 = MLP_DIMS
+    params = [("w1", spec((d0, d1))), ("b1", spec((1, d1))),
+              ("w2", spec((d1, d2))), ("b2", spec((1, d2))),
+              ("w3", spec((d2, d3))), ("b3", spec((1, d3)))]
+    xy = [("x", spec((BATCH, d0))), ("y", spec((BATCH,), I32))]
+    lrs = [("lr", spec((1, 1)))]
+    lvls = [("l1", spec((MLP_LEVELS,))), ("l2", spec((MLP_LEVELS,))),
+            ("l3", spec((MLP_LEVELS,)))]
+    add("mlp_fp_step", model.mlp_fp_step, params + xy + lrs, 7,
+        kind="mlp_fp_step", batch=BATCH, dims=list(MLP_DIMS))
+    add("mlp_q_step", model.mlp_q_step, params + xy + lrs + lvls, 7,
+        kind="mlp_q_step", batch=BATCH, dims=list(MLP_DIMS), levels=MLP_LEVELS)
+    add("mlp_eval_fp", model.mlp_eval_fp, params + xy, 2,
+        kind="mlp_eval_fp", batch=BATCH, dims=list(MLP_DIMS))
+    add("mlp_eval_q", model.mlp_eval_q, params + xy + lvls, 2,
+        kind="mlp_eval_q", batch=BATCH, dims=list(MLP_DIMS), levels=MLP_LEVELS)
+
+    return arts
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=str(Path(__file__).resolve().parents[2] / "artifacts"))
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    arts = registry()
+    pattern = re.compile(args.only) if args.only else None
+
+    manifest = {"batch": BATCH, "cheby_degree": CHEBY_DEG, "radius": model.RADIUS,
+                "mlp_dims": list(MLP_DIMS), "mlp_levels": MLP_LEVELS, "artifacts": {}}
+    t0 = time.time()
+    for name, (fn, named_specs, nout, meta) in sorted(arts.items()):
+        if pattern and not pattern.search(name):
+            continue
+        t1 = time.time()
+        specs = [s for (_, s) in named_specs]
+        text = to_hlo_text(fn, specs)
+        (out_dir / f"{name}.hlo.txt").write_text(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"name": an, "shape": list(s.shape), "dtype": _dtype_tag(s.dtype)}
+                for (an, s) in named_specs
+            ],
+            "num_outputs": nout,
+            "meta": meta,
+        }
+        print(f"  lowered {name:36s} {time.time() - t1:6.2f}s  {len(text) // 1024:5d} KiB")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    # Line-based twin for the Rust loader (no serde in the offline crate set):
+    #   artifact\t<name>\t<file>\t<num_outputs>
+    #   input\t<name>\t<arg>\t<dtype>\t<d0,d1,...>
+    #   meta\t<name>\t<key>\t<value>
+    lines = []
+    for name, entry in sorted(manifest["artifacts"].items()):
+        lines.append(f"artifact\t{name}\t{entry['file']}\t{entry['num_outputs']}")
+        for i in entry["inputs"]:
+            dims = ",".join(str(d) for d in i["shape"])
+            lines.append(f"input\t{name}\t{i['name']}\t{i['dtype']}\t{dims}")
+        for k, v in entry["meta"].items():
+            lines.append(f"meta\t{name}\t{k}\t{v}")
+    (out_dir / "manifest.tsv").write_text("\n".join(lines) + "\n")
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir} "
+          f"in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

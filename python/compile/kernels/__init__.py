@@ -1,0 +1,16 @@
+"""L1 Pallas kernels for ZipML (interpret=True — CPU-PJRT runnable HLO).
+
+Each kernel has a pure-jnp oracle in `ref.py`; pytest asserts allclose.
+"""
+from .quantize import stochastic_quantize, nearest_levels, stochastic_levels
+from .ds_grad import ds_gradient, ds_gradient_u8
+from .cheby import clenshaw
+
+__all__ = [
+    "stochastic_quantize",
+    "nearest_levels",
+    "stochastic_levels",
+    "ds_gradient",
+    "ds_gradient_u8",
+    "clenshaw",
+]

@@ -1,0 +1,53 @@
+"""Chebyshev / Clenshaw evaluation Pallas kernel (ZipML §4.2).
+
+Evaluates P(z) = Σ_k c_k T_k(z / R) at a batch of scalars via the Clenshaw
+recurrence (numerically stable, unlike monomial expansion, for the degree-15
+approximations the paper uses for the sigmoid and the Heaviside step).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_B_TILE = 128
+
+
+def _clenshaw_kernel(z_ref, coef_ref, o_ref, *, radius: float):
+    t = jnp.clip(z_ref[...] / radius, -1.0, 1.0)
+    coefs = coef_ref[...]  # (D+1, 1)
+    deg = coefs.shape[0] - 1
+
+    def body(k, carry):
+        bk1, bk2 = carry
+        # descending index: j = deg - k
+        c = jax.lax.dynamic_slice_in_dim(coefs, deg - k, 1, axis=0)[0, 0]
+        bk = c + 2.0 * t * bk1 - bk2
+        return (bk, bk1)
+
+    zeros = jnp.zeros_like(t)
+    b1, b2 = jax.lax.fori_loop(0, deg, body, (zeros, zeros))
+    c0 = coefs[0, 0]
+    o_ref[...] = c0 + t * b1 - b2
+
+
+def clenshaw(z, coefs, radius):
+    """P(z) with Chebyshev coefficients ``coefs`` (D+1, 1) on [-radius, radius].
+
+    z: (B, 1). Out-of-range z is clamped (the paper constrains ‖x‖₂ ≤ R so
+    |aᵀx| ≤ R for normalized samples).
+    """
+    rows = z.shape[0]
+    bt = next(c for c in range(min(rows, _B_TILE), 0, -1) if rows % c == 0)
+    ncoef = coefs.shape[0]
+    return pl.pallas_call(
+        functools.partial(_clenshaw_kernel, radius=float(radius)),
+        grid=(pl.cdiv(rows, bt),),
+        in_specs=[
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+            pl.BlockSpec((ncoef, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(z.shape, z.dtype),
+        interpret=True,
+    )(z, coefs)

@@ -1,0 +1,151 @@
+"""Double-sampling gradient Pallas kernels (ZipML §2.2 / §B.2).
+
+The unbiased low-precision least-squares gradient over a minibatch of two
+independent quantizations ``A1, A2`` of the same samples is the symmetrized
+estimator the paper uses in practice (footnote 2):
+
+    g = 1/(2B) * [ A1ᵀ(A2 x − b) + A2ᵀ(A1 x − b) ]
+
+Two kernels, composed over a 2-D grid (the HBM↔VMEM schedule of DESIGN.md
+§4):
+
+* `_residual_kernel` — r = A x − b, tiled (batch × feature) with feature-
+  axis accumulation into the output block (revisited across the inner grid
+  dimension, the standard Pallas accumulation idiom).
+* `_grad_kernel`     — g_tile = A1[:, tile]ᵀ r2 + A2[:, tile]ᵀ r1, tiled
+  (feature × batch) with batch-axis accumulation.
+
+`ds_gradient_u8` is the bandwidth-faithful variant: samples arrive as u8
+level indices plus per-column scales and are dequantized *inside* the kernel
+(HBM traffic is 1 byte/value instead of 4 — the paper's FPGA argument mapped
+to the TPU memory hierarchy).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_B_TILE = 32
+_F_TILE = 128
+
+
+def _tile(dim: int, tile: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``tile``.
+
+    Partial tiles are padded (with NaN under interpret mode) and would
+    poison the matmul accumulations, so blocks must divide exactly.
+    """
+    for cand in range(min(tile, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _residual_kernel(a_ref, x_ref, b_ref, r_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        r_ref[...] = -b_ref[...]
+
+    r_ref[...] += a_ref[...] @ x_ref[...]
+
+
+def _residual(a, x, b):
+    """r = a @ x - b with x (n,1), b (B,1)."""
+    rows, cols = a.shape
+    bt, ft = _tile(rows, _B_TILE), _tile(cols, _F_TILE)
+    grid = (pl.cdiv(rows, bt), pl.cdiv(cols, ft))
+    return pl.pallas_call(
+        _residual_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, ft), lambda i, j: (i, j)),
+            pl.BlockSpec((ft, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 1), a.dtype),
+        interpret=True,
+    )(a, x, b)
+
+
+def _grad_kernel(a1_ref, a2_ref, r1_ref, r2_ref, g_ref, *, inv2b: float):
+    i = pl.program_id(1)  # batch tile (inner, accumulated)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    contrib = a1_ref[...].T @ r2_ref[...] + a2_ref[...].T @ r1_ref[...]
+    g_ref[...] += contrib * inv2b
+
+
+def _grad(a1, a2, r1, r2):
+    rows, cols = a1.shape
+    bt, ft = _tile(rows, _B_TILE), _tile(cols, _F_TILE)
+    grid = (pl.cdiv(cols, ft), pl.cdiv(rows, bt))
+    return pl.pallas_call(
+        functools.partial(_grad_kernel, inv2b=0.5 / rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, ft), lambda j, i: (i, j)),
+            pl.BlockSpec((bt, ft), lambda j, i: (i, j)),
+            pl.BlockSpec((bt, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ft, 1), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((cols, 1), a1.dtype),
+        interpret=True,
+    )(a1, a2, r1, r2)
+
+
+def ds_gradient(a1, a2, x, b):
+    """Symmetrized double-sampling least-squares gradient.
+
+    a1, a2: (B, n) independent quantizations; x: (n, 1); b: (B, 1).
+    Returns g: (n, 1), an unbiased estimator of ∇ 1/(2B)Σ(aᵀx − b)².
+    """
+    r1 = _residual(a1, x, b)
+    r2 = _residual(a2, x, b)
+    return _grad(a1, a2, r1, r2)
+
+
+def _dequant_kernel(idx_ref, m_ref, s_ref, o_ref):
+    """u8 level index → f32 value on the symmetric uniform grid."""
+    idx = idx_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    s = s_ref[0, 0]
+    o_ref[...] = (idx / s * 2.0 - 1.0) * m
+
+
+def dequantize_u8(idx, m, s):
+    """Dequantize u8 indices (R, C) with per-column scale m (1, C), s intervals."""
+    rows, cols = idx.shape
+    rt, ct = _tile(rows, _B_TILE), _tile(cols, _F_TILE)
+    grid = (pl.cdiv(rows, rt), pl.cdiv(cols, ct))
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+            pl.BlockSpec((1, ct), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(idx.shape, jnp.float32),
+        interpret=True,
+    )(idx, m, s)
+
+
+def ds_gradient_u8(idx1, idx2, m, s, x, b):
+    """Double-sampling gradient straight from packed u8 level indices.
+
+    idx1, idx2: (B, n) u8; m: (1, n) per-column scales; s: (1, 1) interval
+    count; x: (n, 1); b: (B, 1). Dequantizes in-kernel, then reuses the
+    tiled residual/grad kernels.
+    """
+    a1 = dequantize_u8(idx1, m, s)
+    a2 = dequantize_u8(idx2, m, s)
+    return ds_gradient(a1, a2, x, b)

@@ -1,0 +1,127 @@
+"""Stochastic quantization Pallas kernels (ZipML §2.1 / §A.3).
+
+Three kernels:
+
+* `stochastic_quantize` — uniform grid of ``s`` intervals over a symmetric
+  per-column range ``[-m_i, m_i]`` ("column scaling", §A.3) or a shared
+  scalar range ("row scaling" for model/gradient vectors). Randomness is an
+  explicit uniform-[0,1) input so the lowered HLO is a pure function; the
+  Rust coordinator supplies it from its own RNG.
+* `stochastic_levels` — stochastic rounding onto an *arbitrary sorted level
+  grid* (the variance-optimal levels of §3, computed by the Rust DP).
+* `nearest_levels` — deterministic nearest-level assignment (used by the
+  XNOR-style quantized-model forward pass of §3.3 under an STE backward).
+
+TPU mapping (DESIGN.md §4): all three are elementwise over a (rows, cols)
+tile; BlockSpec tiles the plane so each VMEM-resident block is quantized
+in-place — the dequantize-on-the-fly half lives in `ds_grad.py`.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block tile sizes: 8x128 is the f32 VPU lane layout on TPU; interpret mode
+# does not care, but we keep the shapes MXU/VPU-friendly on purpose.
+_ROW_TILE = 8
+_COL_TILE = 128
+
+
+def _tile(dim: int, tile: int) -> int:
+    """Largest divisor of ``dim`` ≤ ``tile`` — partial tiles are NaN-padded
+    under interpret mode, so blocks must divide the array exactly."""
+    for cand in range(min(tile, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _quantize_kernel(v_ref, rand_ref, m_ref, s_ref, o_ref):
+    """One (Rt, Ct) tile: snap v to the uniform grid stochastically."""
+    v = v_ref[...]
+    m = m_ref[...]  # (1, Ct) per-column scale, broadcasts over rows
+    s = s_ref[0, 0]  # number of intervals (f32 scalar)
+    # u in [-1, 1]; guard m == 0 columns (constant-zero features).
+    safe_m = jnp.where(m > 0.0, m, 1.0)
+    u = jnp.clip(v / safe_m, -1.0, 1.0)
+    t = (u + 1.0) * 0.5 * s  # in [0, s]
+    lo = jnp.clip(jnp.floor(t), 0.0, s - 1.0)
+    p = t - lo  # P[round up]
+    idx = lo + (rand_ref[...] < p).astype(v.dtype)
+    q = (idx / s * 2.0 - 1.0) * m
+    o_ref[...] = jnp.where(m > 0.0, q, 0.0)
+
+
+def stochastic_quantize(v, rand, m, s):
+    """Quantize ``v`` (R, C) onto ``s`` uniform intervals of ``[-m, m]``.
+
+    ``m`` has shape (1, C) (column scaling; pass (1, 1)-broadcastable for row
+    scaling). ``rand`` ~ U[0,1) with v's shape; ``s`` is a (1, 1) f32 array.
+    Unbiased: E[out] = clip(v, -m, m).
+    """
+    rows, cols = v.shape
+    rt, ct = _tile(rows, _ROW_TILE), _tile(cols, _COL_TILE)
+    grid = (pl.cdiv(rows, rt), pl.cdiv(cols, ct))
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+            pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+            pl.BlockSpec((1, ct), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+        interpret=True,
+    )(v, rand, m, s)
+
+
+def _levels_kernel(v_ref, rand_ref, levels_ref, o_ref, *, stochastic: bool):
+    v = v_ref[...]  # (Rt, Ct)
+    levels = levels_ref[0, :]  # (L,) sorted ascending
+    # Bracketing interval: idx = #levels strictly below v, clipped so that
+    # [lo, hi] = [levels[idx-1], levels[idx]] brackets clip(v, levels range).
+    cmp = (v[..., None] > levels[None, None, :]).astype(jnp.float32)
+    idx = jnp.clip(jnp.sum(cmp, axis=-1), 1.0, levels.shape[0] - 1.0)
+    idx = idx.astype(jnp.int32)
+    lo = levels[idx - 1]
+    hi = levels[idx]
+    vc = jnp.clip(v, levels[0], levels[-1])
+    if stochastic:
+        width = hi - lo
+        p = jnp.where(width > 0.0, (vc - lo) / jnp.where(width > 0, width, 1.0), 0.0)
+        o_ref[...] = jnp.where(rand_ref[...] < p, hi, lo)
+    else:
+        o_ref[...] = jnp.where(vc - lo <= hi - vc, lo, hi)
+
+
+def _levels_call(v, rand, levels, stochastic):
+    rows, cols = v.shape
+    rt, ct = _tile(rows, _ROW_TILE), _tile(cols, _COL_TILE)
+    nlv = levels.shape[0]
+    grid = (pl.cdiv(rows, rt), pl.cdiv(cols, ct))
+    return pl.pallas_call(
+        functools.partial(_levels_kernel, stochastic=stochastic),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+            pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+            pl.BlockSpec((1, nlv), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+        interpret=True,
+    )(v, rand, levels.reshape(1, -1))
+
+
+def stochastic_levels(v, rand, levels):
+    """Unbiased stochastic rounding of ``v`` (R, C) onto sorted ``levels`` (L,)."""
+    return _levels_call(v, rand, levels, stochastic=True)
+
+
+def nearest_levels(v, levels):
+    """Deterministic nearest-level assignment (XNOR-style model quantizer)."""
+    dummy = jnp.zeros_like(v)
+    return _levels_call(v, dummy, levels, stochastic=False)

@@ -1,0 +1,73 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis); they are also what the L2 model *could* use directly — the
+kernels must be drop-in replacements up to float tolerance.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+def stochastic_quantize_ref(v, rand, m, s):
+    """Uniform symmetric stochastic quantizer, E[out] = clip(v, -m, m)."""
+    s = jnp.asarray(s).reshape(())
+    safe_m = jnp.where(m > 0.0, m, 1.0)
+    u = jnp.clip(v / safe_m, -1.0, 1.0)
+    t = (u + 1.0) * 0.5 * s
+    lo = jnp.clip(jnp.floor(t), 0.0, s - 1.0)
+    p = t - lo
+    idx = lo + (rand < p).astype(v.dtype)
+    q = (idx / s * 2.0 - 1.0) * m
+    return jnp.where(m > 0.0, q, 0.0)
+
+
+def stochastic_levels_ref(v, rand, levels):
+    """Stochastic rounding onto an arbitrary sorted grid ``levels`` (L,)."""
+    cmp = (v[..., None] > levels[None, None, :]).astype(jnp.float32)
+    idx = jnp.clip(jnp.sum(cmp, axis=-1), 1.0, levels.shape[0] - 1.0).astype(jnp.int32)
+    lo = levels[idx - 1]
+    hi = levels[idx]
+    vc = jnp.clip(v, levels[0], levels[-1])
+    width = hi - lo
+    p = jnp.where(width > 0.0, (vc - lo) / jnp.where(width > 0, width, 1.0), 0.0)
+    return jnp.where(rand < p, hi, lo)
+
+
+def nearest_levels_ref(v, levels):
+    """Deterministic nearest-level assignment."""
+    cmp = (v[..., None] > levels[None, None, :]).astype(jnp.float32)
+    idx = jnp.clip(jnp.sum(cmp, axis=-1), 1.0, levels.shape[0] - 1.0).astype(jnp.int32)
+    lo = levels[idx - 1]
+    hi = levels[idx]
+    vc = jnp.clip(v, levels[0], levels[-1])
+    return jnp.where(vc - lo <= hi - vc, lo, hi)
+
+
+def ds_gradient_ref(a1, a2, x, b):
+    """Symmetrized double-sampling least-squares gradient (n, 1)."""
+    batch = a1.shape[0]
+    r1 = a1 @ x - b
+    r2 = a2 @ x - b
+    return (a1.T @ r2 + a2.T @ r1) * (0.5 / batch)
+
+
+def dequantize_u8_ref(idx, m, s):
+    s = jnp.asarray(s).reshape(())
+    return (idx.astype(jnp.float32) / s * 2.0 - 1.0) * m
+
+
+def ds_gradient_u8_ref(idx1, idx2, m, s, x, b):
+    a1 = dequantize_u8_ref(idx1, m, s)
+    a2 = dequantize_u8_ref(idx2, m, s)
+    return ds_gradient_ref(a1, a2, x, b)
+
+
+def clenshaw_ref(z, coefs, radius):
+    """Direct T_k summation (numpy cos-acos form) as oracle for Clenshaw."""
+    t = np.clip(np.asarray(z, dtype=np.float64) / radius, -1.0, 1.0)
+    coefs = np.asarray(coefs, dtype=np.float64).reshape(-1)
+    theta = np.arccos(t)
+    out = np.zeros_like(t)
+    for k, c in enumerate(coefs):
+        out += c * np.cos(k * theta)
+    return out

@@ -1,0 +1,298 @@
+"""L2: ZipML model step functions in JAX, calling the L1 Pallas kernels.
+
+Every public function here is lowered once by `aot.py` to an HLO-text
+artifact and executed from the Rust coordinator's hot loop — Python never
+runs at training time. All functions are pure; all randomness arrives as
+explicit uniform-[0,1) operands supplied by the Rust RNG.
+
+Conventions:
+  x  : model,          (n, 1) f32
+  A  : sample batch,   (B, n) f32      A1/A2: independent quantizations
+  b  : labels,         (B, 1) f32      (regression targets or ±1 labels)
+  lr : step size,      (1, 1) f32
+Losses follow Eq. (3): F(x) = 1/K Σ (aᵀx − b)² (+ R), i.e. mean squared
+residual for regression models.
+"""
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    clenshaw,
+    ds_gradient,
+    ds_gradient_u8,
+    nearest_levels,
+    stochastic_quantize,
+)
+
+# ---------------------------------------------------------------------------
+# Linear regression (§2)
+# ---------------------------------------------------------------------------
+
+
+def linreg_fp_step(x, a, b, lr):
+    """Full-precision minibatch SGD step for least squares."""
+    batch = a.shape[0]
+    g = a.T @ (a @ x - b) * (1.0 / batch)
+    return (x - lr * g,)
+
+
+def linreg_ds_step(x, a1, a2, b, lr):
+    """Double-sampling unbiased low-precision step (Eq. 6, symmetrized)."""
+    g = ds_gradient(a1, a2, x, b)
+    return (x - lr * g,)
+
+
+def linreg_ds_u8_step(x, idx1, idx2, m, s, b, lr):
+    """Double-sampling step consuming packed u8 level indices.
+
+    Dequantization happens inside the Pallas kernel — the bandwidth-faithful
+    path (1 byte/value over the host↔device link instead of 4).
+    """
+    g = ds_gradient_u8(idx1, idx2, m, s, x, b)
+    return (x - lr * g,)
+
+
+def linreg_loss(x, a, b):
+    r = a @ x - b
+    return (jnp.mean(r * r).reshape(1, 1),)
+
+
+# ---------------------------------------------------------------------------
+# Least-squares SVM (§F.1): linear regression on ±1 labels + l2 reg
+# ---------------------------------------------------------------------------
+
+
+def lssvm_fp_step(x, a, b, lr, c):
+    batch = a.shape[0]
+    g = a.T @ (a @ x - b) * (1.0 / batch) + c * x
+    return (x - lr * g,)
+
+
+def lssvm_ds_step(x, a1, a2, b, lr, c):
+    g = ds_gradient(a1, a2, x, b) + c * x
+    return (x - lr * g,)
+
+
+def lssvm_loss(x, a, b, c):
+    r = a @ x - b
+    val = jnp.mean(r * r) + 0.5 * jnp.sum(c * x * x)
+    return (val.reshape(1, 1),)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end quantization (§E): samples + model + gradient all quantized
+# ---------------------------------------------------------------------------
+
+
+def e2e_step(x, a1, a2, b, lr, rand_m, rand_g, s_m, s_g):
+    """g = Q4( DS-grad(a1, a2, Q3(x)) ); update applied in full precision.
+
+    Q3 (model) and Q4 (gradient) use row scaling M = ‖v‖₂ (§A.3); a1/a2 are
+    already-quantized samples (column scaling happens in the Rust store).
+    rand_m/rand_g: (1, n) uniforms; s_m/s_g: (1, 1) interval counts.
+    """
+    n = x.shape[0]
+    mx = jnp.sqrt(jnp.sum(x * x)).reshape(1, 1)
+    xq = stochastic_quantize(x.reshape(1, n), rand_m, jnp.broadcast_to(mx, (1, n)), s_m)
+    g = ds_gradient(a1, a2, xq.reshape(n, 1), b)
+    mg = jnp.sqrt(jnp.sum(g * g)).reshape(1, 1)
+    gq = stochastic_quantize(g.reshape(1, n), rand_g, jnp.broadcast_to(mg, (1, n)), s_g)
+    return (x - lr * gq.reshape(n, 1),)
+
+
+def quantize_v(v, rand, m, s):
+    """Standalone stochastic quantizer artifact (1, n) — used by tests and
+    by the coordinator for gradient/model compression outside step fusion."""
+    return (stochastic_quantize(v, rand, m, s),)
+
+
+# ---------------------------------------------------------------------------
+# Smooth non-linear models (§4.2): logistic regression
+# ---------------------------------------------------------------------------
+
+
+def logistic_fp_step(x, a, b, lr):
+    """Exact logistic SGD: ℓ(z)=log(1+e^{-z}), z = b·aᵀx, ℓ'(z) = -σ(-z)."""
+    batch = a.shape[0]
+    z = b * (a @ x)
+    lp = -jax.nn.sigmoid(-z)
+    g = a.T @ (b * lp) * (1.0 / batch)
+    return (x - lr * g,)
+
+
+def logistic_loss(x, a, b):
+    z = b * (a @ x)
+    return (jnp.mean(jnp.logaddexp(0.0, -z)).reshape(1, 1),)
+
+
+def cheby_step(x, a1, a2, b, lr, coefs):
+    """Chebyshev-approximate gradient step (practical variant, Fig 9).
+
+    P ≈ ℓ' as Chebyshev coefficients ``coefs`` (D+1, 1) on [-R, R] with
+    R = RADIUS; z is evaluated on one quantization, the gradient direction
+    uses an independent one (bias ≤ ε sup-norm of the approximation).
+    """
+    batch = a1.shape[0]
+    z = b * (a1 @ x)
+    p = clenshaw(z, coefs, RADIUS)
+    g = a2.T @ (b * p) * (1.0 / batch)
+    return (x - lr * g,)
+
+
+RADIUS = 8.0  # approximation interval [-R, R]; Rust clips ‖x‖ accordingly
+
+
+def poly_ds_step(x, aq, b, lr, mono):
+    """Unbiased polynomial gradient via d+1 independent quantizations (§4.1).
+
+    aq: (d+1, B, n) — slices 0..d-1 feed the monomial products, slice d is
+    the gradient direction. mono: (d+1, 1) monomial coefficients of P
+    (converted from Chebyshev in the Rust coordinator, f64).
+    Q(P) = Σ_i m_i Π_{j≤i} (b · Q_j(a)ᵀ x); g = E[b · Q(P) · Q_{d+1}(a)].
+    """
+    d_plus_1, batch, _ = aq.shape
+    deg = d_plus_1 - 1
+    z = b[None, :, :] * (aq[:deg] @ x)  # (d, B, 1)
+    cum = jnp.cumprod(z, axis=0)  # cum[i] = Π_{j≤i} z_j
+    pval = mono[0, 0] + jnp.sum(mono[1:, :, None] * cum, axis=0)  # (B, 1)
+    g = aq[deg].T @ (b * pval) * (1.0 / batch)
+    return (x - lr * g,)
+
+
+# ---------------------------------------------------------------------------
+# Non-smooth non-linear models (§4.3): SVM / hinge
+# ---------------------------------------------------------------------------
+
+
+def svm_fp_step(x, a, b, lr):
+    """Hinge subgradient step: g = -mean(1[z<1] · b · a)."""
+    batch = a.shape[0]
+    z = b * (a @ x)
+    mask = (z < 1.0).astype(x.dtype)
+    g = -(a.T @ (b * mask)) * (1.0 / batch)
+    return (x - lr * g,)
+
+
+def hinge_loss(x, a, b):
+    z = b * (a @ x)
+    return (jnp.mean(jnp.maximum(0.0, 1.0 - z)).reshape(1, 1),)
+
+
+def margins(x, a, b):
+    """z = b ⊙ (A x) — the quantity the ℓ1-refetch bound (§G.4) brackets."""
+    return (b * (a @ x),)
+
+
+# ---------------------------------------------------------------------------
+# Deep-learning extension (§3.3): MLP with quantized weights, STE backward
+# ---------------------------------------------------------------------------
+
+MLP_DIMS = (784, 256, 128, 10)
+
+
+@jax.custom_vjp
+def _ste_quant(w, levels):
+    """Forward: nearest of `levels`; backward: identity (straight-through).
+
+    custom_vjp keeps AD from trying to linearize through the Pallas call —
+    the backward pass passes the cotangent straight through to ``w``.
+    """
+    return nearest_levels(w, levels)
+
+
+def _ste_fwd(w, levels):
+    return _ste_quant(w, levels), None
+
+
+def _ste_bwd(_res, g):
+    return (g, None)
+
+
+_ste_quant.defvjp(_ste_fwd, _ste_bwd)
+
+
+def _mlp_forward(params, x, levels=None):
+    w1, b1, w2, b2, w3, b3 = params
+    if levels is not None:
+        l1, l2, l3 = levels
+        w1 = _ste_quant(w1, l1)
+        w2 = _ste_quant(w2, l2)
+        w3 = _ste_quant(w3, l3)
+    h = jax.nn.relu(x @ w1 + b1)
+    h = jax.nn.relu(h @ w2 + b2)
+    return h @ w3 + b3
+
+
+def _mlp_loss(params, x, y, levels=None):
+    logits = _mlp_forward(params, x, levels)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, MLP_DIMS[-1], dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def mlp_fp_step(w1, b1, w2, b2, w3, b3, x, y, lr):
+    params = (w1, b1, w2, b2, w3, b3)
+    loss, grads = jax.value_and_grad(_mlp_loss)(params, x, y)
+    step = lr[0, 0]
+    new = tuple(p - step * g for p, g in zip(params, grads))
+    return new + (loss.reshape(1, 1),)
+
+
+def mlp_q_step(w1, b1, w2, b2, w3, b3, x, y, lr, l1, l2, l3):
+    """Quantized-model training step: min_W l(Q(W)) with STE (§3.3).
+
+    The level grids l1/l2/l3 are either uniform ("XNOR5") or the variance-
+    optimal grids from the Rust DP ("Optimal5") — same artifact serves both.
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+    loss, grads = jax.value_and_grad(_mlp_loss)(params, x, y, (l1, l2, l3))
+    step = lr[0, 0]
+    new = tuple(p - step * g for p, g in zip(params, grads))
+    return new + (loss.reshape(1, 1),)
+
+
+def mlp_eval_fp(w1, b1, w2, b2, w3, b3, x, y):
+    params = (w1, b1, w2, b2, w3, b3)
+    logits = _mlp_forward(params, x)
+    loss = _mlp_loss(params, x, y)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return (loss.reshape(1, 1), acc.reshape(1, 1))
+
+
+def mlp_eval_q(w1, b1, w2, b2, w3, b3, x, y, l1, l2, l3):
+    params = (w1, b1, w2, b2, w3, b3)
+    logits = _mlp_forward(params, x, (l1, l2, l3))
+    loss = _mlp_loss(params, x, y, (l1, l2, l3))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return (loss.reshape(1, 1), acc.reshape(1, 1))
+
+
+# ---------------------------------------------------------------------------
+# Epoch-fused steps (perf pass): scan over pre-batched data, one dispatch
+# ---------------------------------------------------------------------------
+
+
+def linreg_fp_epoch(x, a_all, b_all, lr):
+    """lax.scan over (nb, B, n) batches — removes per-step PJRT dispatch."""
+
+    def body(xc, batch):
+        a, b = batch
+        bsz = a.shape[0]
+        g = a.T @ (a @ xc - b) * (1.0 / bsz)
+        return xc - lr * g, ()
+
+    xf, _ = jax.lax.scan(body, x, (a_all, b_all))
+    return (xf,)
+
+
+def linreg_ds_epoch(x, a1_all, a2_all, b_all, lr):
+    def body(xc, batch):
+        a1, a2, b = batch
+        bsz = a1.shape[0]
+        r1 = a1 @ xc - b
+        r2 = a2 @ xc - b
+        g = (a1.T @ r2 + a2.T @ r1) * (0.5 / bsz)
+        return xc - lr * g, ()
+
+    xf, _ = jax.lax.scan(body, x, (a1_all, a2_all, b_all))
+    return (xf,)

@@ -1,0 +1,55 @@
+"""AOT registry and manifest sanity — the compile path contract with Rust."""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import aot
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_registry_names_well_formed():
+    arts = aot.registry()
+    assert len(arts) > 80
+    for name, (fn, args, nout, meta) in arts.items():
+        assert "kind" in meta
+        assert nout >= 1
+        names = [a for (a, _) in args]
+        assert len(names) == len(set(names)), name
+
+
+def test_lower_one_artifact_produces_parseable_hlo():
+    arts = aot.registry()
+    fn, args, _, _ = arts["linreg_ds_step_n10"]
+    text = aot.to_hlo_text(fn, [s for (_, s) in args])
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True → root is a tuple
+    assert "tuple(" in text or "(f32[" in text
+
+
+@pytest.mark.skipif(not (ARTIFACT_DIR / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+def test_manifest_matches_registry_and_files():
+    manifest = json.loads((ARTIFACT_DIR / "manifest.json").read_text())
+    arts = aot.registry()
+    assert set(manifest["artifacts"].keys()) == set(arts.keys())
+    for name, entry in manifest["artifacts"].items():
+        f = ARTIFACT_DIR / entry["file"]
+        assert f.exists() and f.stat().st_size > 0, name
+        _, args, nout, _ = arts[name]
+        assert entry["num_outputs"] == nout
+        assert [tuple(i["shape"]) for i in entry["inputs"]] == [tuple(s.shape) for (_, s) in args]
+
+
+@pytest.mark.skipif(not (ARTIFACT_DIR / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+def test_manifest_dtypes():
+    manifest = json.loads((ARTIFACT_DIR / "manifest.json").read_text())
+    entry = manifest["artifacts"]["linreg_ds_u8_step_n100"]
+    dts = {i["name"]: i["dtype"] for i in entry["inputs"]}
+    assert dts["idx1"] == "u8" and dts["x"] == "f32"
+    entry = manifest["artifacts"]["mlp_fp_step"]
+    dts = {i["name"]: i["dtype"] for i in entry["inputs"]}
+    assert dts["y"] == "i32"

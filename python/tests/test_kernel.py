@@ -1,0 +1,184 @@
+"""L1 kernel vs ref oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes/seeds; fixed cases pin the paper-relevant shapes.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    clenshaw,
+    ds_gradient,
+    ds_gradient_u8,
+    nearest_levels,
+    stochastic_levels,
+    stochastic_quantize,
+)
+from compile.kernels import ref
+from compile.kernels.ds_grad import dequantize_u8
+
+SETTINGS = dict(max_examples=8, deadline=None, derandomize=True)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@st.composite
+def shape_seed(draw, max_rows=96, max_cols=160):
+    rows = draw(st.integers(1, max_rows))
+    cols = draw(st.integers(1, max_cols))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return rows, cols, seed
+
+
+@given(shape_seed(), st.integers(1, 255))
+@settings(**SETTINGS)
+def test_stochastic_quantize_matches_ref(sh, s):
+    rows, cols, seed = sh
+    rng = _rng(seed)
+    v = rng.normal(size=(rows, cols)).astype(np.float32) * 3.0
+    r = rng.random(size=(rows, cols)).astype(np.float32)
+    m = (np.abs(v).max(axis=0, keepdims=True) + 1e-3).astype(np.float32)
+    sv = np.array([[float(s)]], dtype=np.float32)
+    out = np.asarray(stochastic_quantize(jnp.array(v), jnp.array(r), jnp.array(m), jnp.array(sv)))
+    exp = np.asarray(ref.stochastic_quantize_ref(jnp.array(v), jnp.array(r), jnp.array(m), jnp.array(sv)))
+    np.testing.assert_allclose(out, exp, atol=1e-6)
+
+
+@given(shape_seed(max_rows=48, max_cols=96), st.integers(2, 33))
+@settings(**SETTINGS)
+def test_stochastic_levels_matches_ref(sh, nlevels):
+    rows, cols, seed = sh
+    rng = _rng(seed)
+    v = rng.normal(size=(rows, cols)).astype(np.float32)
+    r = rng.random(size=(rows, cols)).astype(np.float32)
+    lv = np.sort(rng.normal(size=nlevels)).astype(np.float32)
+    lv = np.unique(lv)
+    if lv.size < 2:
+        lv = np.array([-1.0, 1.0], dtype=np.float32)
+    out = np.asarray(stochastic_levels(jnp.array(v), jnp.array(r), jnp.array(lv)))
+    exp = np.asarray(ref.stochastic_levels_ref(jnp.array(v), jnp.array(r), jnp.array(lv)))
+    np.testing.assert_allclose(out, exp, atol=1e-6)
+    # outputs land exactly on grid points
+    assert np.isin(out.ravel().round(6), lv.round(6)).all()
+
+
+@given(shape_seed(max_rows=48, max_cols=96), st.integers(2, 17))
+@settings(**SETTINGS)
+def test_nearest_levels_matches_ref(sh, nlevels):
+    rows, cols, seed = sh
+    rng = _rng(seed)
+    v = rng.normal(size=(rows, cols)).astype(np.float32)
+    lv = np.unique(np.sort(rng.normal(size=nlevels)).astype(np.float32))
+    if lv.size < 2:
+        lv = np.array([-1.0, 1.0], dtype=np.float32)
+    out = np.asarray(nearest_levels(jnp.array(v), jnp.array(lv)))
+    exp = np.asarray(ref.nearest_levels_ref(jnp.array(v), jnp.array(lv)))
+    np.testing.assert_allclose(out, exp, atol=1e-6)
+
+
+def test_quantizer_statistically_unbiased():
+    """E[Q(v)] = v — the ZipML linchpin (Lemma 6, unbiasedness).
+
+    Trials are stacked on the row axis so a single kernel call covers all of
+    them (each row gets independent randomness).
+    """
+    rng = _rng(7)
+    trials, n = 8192, 64
+    v_row = rng.uniform(-1, 1, size=(1, n)).astype(np.float32)
+    v = np.broadcast_to(v_row, (trials, n)).copy()
+    r = rng.random(size=(trials, n)).astype(np.float32)
+    m = np.ones((1, n), dtype=np.float32)
+    s = np.array([[3.0]], dtype=np.float32)
+    out = np.asarray(stochastic_quantize(jnp.array(v), jnp.array(r), jnp.array(m), jnp.array(s)))
+    err = np.abs(out.mean(axis=0) - v_row.ravel()).max()
+    # per-sample std ≤ (1/s) / 2 = 1/6; mean std ≈ 0.00184; max of 64 coords
+    # stays within ~4 sigma ≈ 0.0074 whp; assert at 6 sigma.
+    assert err < 0.011, err
+
+
+@given(st.integers(1, 96), st.integers(1, 160), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_ds_gradient_matches_ref(batch, n, seed):
+    rng = _rng(seed)
+    a1 = rng.normal(size=(batch, n)).astype(np.float32)
+    a2 = rng.normal(size=(batch, n)).astype(np.float32)
+    x = rng.normal(size=(n, 1)).astype(np.float32)
+    b = rng.normal(size=(batch, 1)).astype(np.float32)
+    g = np.asarray(ds_gradient(jnp.array(a1), jnp.array(a2), jnp.array(x), jnp.array(b)))
+    ge = np.asarray(ref.ds_gradient_ref(jnp.array(a1), jnp.array(a2), jnp.array(x), jnp.array(b)))
+    np.testing.assert_allclose(g, ge, atol=1e-4 * max(1.0, np.abs(ge).max()))
+
+
+@given(st.integers(1, 64), st.integers(1, 128), st.integers(1, 255), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_dequantize_u8_matches_ref(batch, n, s, seed):
+    rng = _rng(seed)
+    idx = rng.integers(0, s + 1, size=(batch, n)).astype(np.uint8)
+    m = rng.uniform(0.1, 4.0, size=(1, n)).astype(np.float32)
+    sv = np.array([[float(s)]], dtype=np.float32)
+    out = np.asarray(dequantize_u8(jnp.array(idx), jnp.array(m), jnp.array(sv)))
+    exp = np.asarray(ref.dequantize_u8_ref(jnp.array(idx), jnp.array(m), jnp.array(sv)))
+    np.testing.assert_allclose(out, exp, rtol=1e-6)
+
+
+def test_ds_gradient_u8_matches_ref():
+    rng = _rng(3)
+    batch, n, s = 64, 100, 15
+    i1 = rng.integers(0, s + 1, size=(batch, n)).astype(np.uint8)
+    i2 = rng.integers(0, s + 1, size=(batch, n)).astype(np.uint8)
+    m = rng.uniform(0.5, 2.0, size=(1, n)).astype(np.float32)
+    sv = np.array([[float(s)]], dtype=np.float32)
+    x = rng.normal(size=(n, 1)).astype(np.float32)
+    b = rng.normal(size=(batch, 1)).astype(np.float32)
+    g = np.asarray(ds_gradient_u8(jnp.array(i1), jnp.array(i2), jnp.array(m), jnp.array(sv), jnp.array(x), jnp.array(b)))
+    ge = np.asarray(ref.ds_gradient_u8_ref(jnp.array(i1), jnp.array(i2), jnp.array(m), jnp.array(sv), jnp.array(x), jnp.array(b)))
+    np.testing.assert_allclose(g, ge, atol=1e-3)
+
+
+def _np_stochastic_quantize(v, rand, m, s):
+    """Vectorized numpy twin of the quantizer (kernel==ref already tested)."""
+    u = np.clip(v / m, -1.0, 1.0)
+    t = (u + 1.0) * 0.5 * s
+    lo = np.clip(np.floor(t), 0.0, s - 1.0)
+    idx = lo + (rand < (t - lo))
+    return (idx / s * 2.0 - 1.0) * m
+
+
+def test_ds_gradient_unbiased_for_full_gradient():
+    """E over quantizations of the DS gradient == full-precision gradient.
+
+    Statistical property of the estimator itself, so it runs on the numpy
+    twin (kernel equality to ref is covered above) with trials vectorized.
+    """
+    rng = _rng(11)
+    batch, n, s, trials = 16, 20, 3.0, 6000
+    a = rng.normal(size=(batch, n)).astype(np.float64)
+    x = rng.normal(size=(n, 1)).astype(np.float64)
+    b = rng.normal(size=(batch, 1)).astype(np.float64)
+    m = np.abs(a).max(axis=0, keepdims=True) + 1e-3
+    gfull = a.T @ (a @ x - b) / batch
+    r1 = rng.random(size=(trials, batch, n))
+    r2 = rng.random(size=(trials, batch, n))
+    q1 = _np_stochastic_quantize(a[None], r1, m[None], s)
+    q2 = _np_stochastic_quantize(a[None], r2, m[None], s)
+    res1 = q1 @ x - b[None]
+    res2 = q2 @ x - b[None]
+    g = (np.einsum("tbn,tbo->tno", q1, res2) + np.einsum("tbn,tbo->tno", q2, res1)) * (0.5 / batch)
+    err = np.abs(g.mean(axis=0) - gfull).max()
+    assert err < 0.06, err  # ≈5 sigma for this (s, trials)
+
+
+@given(st.integers(1, 200), st.integers(0, 15), st.integers(0, 2**31 - 1),
+       st.floats(1.0, 16.0))
+@settings(**SETTINGS)
+def test_clenshaw_matches_cos_form(batch, deg, seed, radius):
+    rng = _rng(seed)
+    z = (rng.normal(size=(batch, 1)) * radius).astype(np.float32)
+    coefs = rng.normal(size=(deg + 1, 1)).astype(np.float32)
+    out = np.asarray(clenshaw(jnp.array(z), jnp.array(coefs), radius)).ravel()
+    exp = ref.clenshaw_ref(z, coefs, radius).ravel()
+    scale = max(1.0, np.abs(exp).max())
+    np.testing.assert_allclose(out, exp, atol=2e-4 * scale)

@@ -1,0 +1,41 @@
+//! Chebyshev machinery benchmarks (§4): fit/eval cost vs degree, and the
+//! degree-accuracy tradeoff table behind the precision-variance discussion.
+//! Run: cargo bench --bench cheby [-- --quick]
+
+use zipml::bench::{bench, black_box, section, BenchOpts};
+use zipml::cheby::{cheb_eval, cheb_fit, cheb_to_monomial, degree_for_eps_logistic, logistic_lprime};
+
+fn main() {
+    let opts = BenchOpts::from_env_and_args();
+
+    section("fit + monomial conversion cost vs degree");
+    for deg in [7usize, 15, 31] {
+        bench(&format!("cheb_fit logistic deg={deg}"), &opts, || {
+            black_box(cheb_fit(logistic_lprime, 8.0, deg));
+        });
+        let coefs = cheb_fit(logistic_lprime, 8.0, deg);
+        bench(&format!("cheb_to_monomial deg={deg}"), &opts, || {
+            black_box(cheb_to_monomial(&coefs, 8.0));
+        });
+    }
+
+    section("Clenshaw evaluation throughput (deg 15)");
+    let coefs = cheb_fit(logistic_lprime, 8.0, 15);
+    let zs: Vec<f64> = (0..4096).map(|i| -8.0 + 16.0 * i as f64 / 4095.0).collect();
+    let r = bench("cheb_eval x4096", &opts, || {
+        let mut acc = 0.0;
+        for &z in &zs {
+            acc += cheb_eval(&coefs, 8.0, z);
+        }
+        black_box(acc);
+    });
+    println!("   {}", r.throughput_line("evals", 4096.0));
+
+    section("degree needed for eps (Lemma 5's D(eps, l) empirically)");
+    for eps in [1e-1f64, 1e-2, 1e-3, 1e-4] {
+        match degree_for_eps_logistic(8.0, eps, 64) {
+            Some(d) => println!("  eps={eps:.0e}  degree {d}"),
+            None => println!("  eps={eps:.0e}  > 64"),
+        }
+    }
+}

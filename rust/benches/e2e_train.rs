@@ -1,0 +1,46 @@
+//! End-to-end training epoch wallclock per mode — the whole-stack numbers
+//! behind EXPERIMENTS.md §Perf. Requires `make artifacts`.
+//! Run: cargo bench --bench e2e_train [-- --quick]
+
+use zipml::bench::{bench, black_box, section, BenchOpts};
+use zipml::data::synthetic::make_regression;
+use zipml::runtime::Runtime;
+use zipml::sgd::{self, Mode, ModelKind, TrainConfig};
+
+fn main() {
+    let opts = BenchOpts::from_env_and_args();
+    let rt = Runtime::open_default().expect("run `make artifacts`");
+    let ds = make_regression("bench100", 4096, 256, 100, 11);
+
+    let mk = |mode: Mode| {
+        let mut c = TrainConfig::new(ModelKind::Linreg, mode);
+        c.epochs = 1;
+        c.lr0 = 0.05;
+        c.eval_batches = 1;
+        c
+    };
+
+    section("one epoch (4096 samples, n=100, batch 64) per mode");
+    for mode in [
+        Mode::Full,
+        Mode::Naive { bits: 4 },
+        Mode::DoubleSample { bits: 4 },
+        Mode::DoubleSampleU8 { bits: 4 },
+        Mode::EndToEnd { bits_s: 5, bits_m: 8, bits_g: 8 },
+        Mode::OptimalDs { levels: 16 },
+    ] {
+        let cfg = mk(mode);
+        // warm compile cache
+        let _ = sgd::train(&rt, &ds, &cfg).unwrap();
+        bench(&format!("epoch {}", cfg.mode.label()), &opts, || {
+            black_box(sgd::train(&rt, &ds, &cfg).unwrap());
+        });
+    }
+
+    let st = rt.stats();
+    println!(
+        "\nruntime totals: {} executions, mean exec {:.1} µs",
+        st.executions,
+        st.exec_nanos as f64 / 1e3 / st.executions.max(1) as f64
+    );
+}

@@ -1,0 +1,40 @@
+//! Fig 5 bench: simulated FPGA epoch throughput per precision + the real
+//! Hogwild! baseline wallclock. Run: cargo bench --bench fig5_fpga [-- --quick]
+
+use zipml::bench::{bench, black_box, section, BenchOpts};
+use zipml::data::synthetic::make_regression;
+use zipml::fpga::{self, epoch_seconds, Precision};
+
+fn main() {
+    let opts = BenchOpts::from_env_and_args();
+
+    section("simulated FPGA epoch time (paper Fig 5/13/14 shape)");
+    let (k, n) = (50_000usize, 90usize);
+    let base = epoch_seconds(Precision::Float, k, n);
+    println!("  {:8} {:>14} {:>10}", "prec", "epoch_time", "speedup");
+    for p in [Precision::Float, Precision::Q(8), Precision::Q(4), Precision::Q(2), Precision::Q(1)] {
+        let t = epoch_seconds(p, k, n);
+        println!("  {:8} {:>12.4e} s {:>9.2}x", p.label(), t, base / t);
+    }
+    println!("  (paper: FPGA quantized 6-7x over FPGA float / 10-core Hogwild)");
+
+    section("real Hogwild! epoch wallclock on this machine");
+    let ds = make_regression("bench", 20_000, 256, 100, 7);
+    for threads in [1usize, 2, 4, 8] {
+        bench(&format!("hogwild epoch, {threads} threads"), &opts, || {
+            black_box(fpga::hogwild_train(
+                &ds,
+                &fpga::HogwildConfig { threads, epochs: 1, lr0: 0.02, seed: 1 },
+            ));
+        });
+    }
+
+    section("pipeline model evaluation cost (pure fn)");
+    bench("epoch_seconds x1000", &opts, || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            acc += epoch_seconds(Precision::Q(4), 10_000 + i, 100);
+        }
+        black_box(acc);
+    });
+}

@@ -1,0 +1,44 @@
+//! Level-placement algorithm benchmarks (§3.1/§3.2/§I; Theorem 8's
+//! near-linear claim): exact DP vs discretized DP vs ADAQUANT runtime, and
+//! the resulting variance quality.
+//! Run: cargo bench --bench optimal_dp [-- --quick]
+
+use zipml::bench::{bench, black_box, section, BenchOpts};
+use zipml::quant::{
+    discretized_optimal_levels, greedy::adaquant_levels, optimal_levels, quantization_variance,
+};
+use zipml::rng::Rng;
+
+fn main() {
+    let opts = BenchOpts::from_env_and_args();
+    let mut rng = Rng::new(2);
+    let levels = 8;
+
+    section("runtime scaling in N (k=8 levels)");
+    for n in [500usize, 2000, 8000] {
+        let pts: Vec<f32> = (0..n).map(|_| rng.f32().powi(2)).collect();
+        if n <= 2000 {
+            bench(&format!("exact_dp      N={n}"), &opts, || {
+                black_box(optimal_levels(&pts, levels));
+            });
+        }
+        bench(&format!("discretized   N={n} M=128"), &opts, || {
+            black_box(discretized_optimal_levels(&pts, levels, 128));
+        });
+        bench(&format!("adaquant      N={n}"), &opts, || {
+            black_box(adaquant_levels(&pts, levels));
+        });
+    }
+
+    section("quality at N=4000 (mean variance, lower is better)");
+    let pts: Vec<f32> = (0..4000)
+        .map(|_| if rng.f32() < 0.75 { rng.normal() * 0.1 } else { rng.normal() * 0.5 + 2.0 })
+        .collect();
+    let lo = pts.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = pts.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let uniform: Vec<f32> = (0..levels).map(|i| lo + (hi - lo) * i as f32 / (levels - 1) as f32).collect();
+    println!("  uniform      MV = {:.4e}", quantization_variance(&pts, &uniform));
+    println!("  exact DP     MV = {:.4e}", quantization_variance(&pts, &optimal_levels(&pts, levels)));
+    println!("  discretized  MV = {:.4e}", quantization_variance(&pts, &discretized_optimal_levels(&pts, levels, 128)));
+    println!("  adaquant     MV = {:.4e}", quantization_variance(&pts, &adaquant_levels(&pts, levels)));
+}

@@ -1,0 +1,68 @@
+//! Quantization-throughput benchmarks: the L3 hot path that feeds every
+//! training step (stochastic quantize, pack/unpack, double-sample encode).
+//! Run: cargo bench --bench quantize [-- --quick]
+
+use zipml::bench::{bench, black_box, section, BenchOpts};
+use zipml::quant::packing::{DoubleSampleBlock, PackedMatrix};
+use zipml::quant::{quantize_values, ColumnScale};
+use zipml::rng::Rng;
+use zipml::tensor::Matrix;
+
+fn main() {
+    let opts = BenchOpts::from_env_and_args();
+    let mut rng = Rng::new(1);
+    let (rows, cols) = (64usize, 1000usize);
+    let nvals = rows * cols;
+    let a = Matrix::from_vec(rows, cols, (0..nvals).map(|_| rng.normal()).collect());
+    let scale = ColumnScale::from_data(&a);
+
+    section("stochastic quantization (64x1000 batch)");
+    let mut out = vec![0.0f32; nvals];
+    for s in [3u32, 15, 255] {
+        let r = bench(&format!("quantize_values s={s}"), &opts, || {
+            quantize_values(&a.data, cols, &scale.m, s, &mut rng, &mut out);
+            black_box(&out);
+        });
+        println!("   {}", r.throughput_line("values", nvals as f64));
+    }
+
+    section("bit-packed store");
+    for bits in [2u32, 4, 8] {
+        bench(&format!("PackedMatrix::quantize {bits}-bit"), &opts, || {
+            black_box(PackedMatrix::quantize(&a, &scale, bits, &mut rng));
+        });
+    }
+    let p4 = PackedMatrix::quantize(&a, &scale, 4, &mut rng);
+    let mut row = vec![0.0f32; cols];
+    let r = bench("dequantize_row 4-bit (x64 rows)", &opts, || {
+        for i in 0..rows {
+            p4.dequantize_row(i, &mut row);
+        }
+        black_box(&row);
+    });
+    println!("   {}", r.throughput_line("values", nvals as f64));
+
+    section("double-sample encode/decode");
+    for k in [2usize, 16] {
+        bench(&format!("DoubleSampleBlock::quantize k={k} 4-bit"), &opts, || {
+            black_box(DoubleSampleBlock::quantize(&a, &scale, 4, k, &mut rng));
+        });
+    }
+    let ds = DoubleSampleBlock::quantize(&a, &scale, 4, 2, &mut rng);
+    let r = bench("ds dequantize both samples (x64 rows)", &opts, || {
+        for i in 0..rows {
+            ds.dequantize_row(i, 0, &mut row);
+            ds.dequantize_row(i, 1, &mut row);
+        }
+        black_box(&row);
+    });
+    println!("   {}", r.throughput_line("values", 2.0 * nvals as f64));
+
+    section("rng fill (randomness supply for artifacts)");
+    let mut buf = vec![0.0f32; nvals];
+    let r = bench("fill_uniform 64k", &opts, || {
+        rng.fill_uniform(&mut buf);
+        black_box(&buf);
+    });
+    println!("   {}", r.throughput_line("values", nvals as f64));
+}

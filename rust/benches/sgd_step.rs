@@ -1,0 +1,128 @@
+//! PJRT step-dispatch latency per artifact kind — the L3↔runtime boundary
+//! that dominates training wallclock (EXPERIMENTS.md §Perf).
+//! Requires `make artifacts`. Run: cargo bench --bench sgd_step [-- --quick]
+
+use zipml::bench::{bench, black_box, section, BenchOpts};
+use zipml::rng::Rng;
+use zipml::runtime::{lit_f32, lit_scalar11, lit_u8, Runtime};
+
+fn main() {
+    let opts = BenchOpts::from_env_and_args();
+    let rt = Runtime::open_default().expect("run `make artifacts`");
+    let mut rng = Rng::new(3);
+    let b = 64usize;
+
+    section("per-step execute latency (batch 64)");
+    for n in [10usize, 100, 1000] {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let a1: Vec<f32> = (0..b * n).map(|_| rng.normal()).collect();
+        let a2: Vec<f32> = (0..b * n).map(|_| rng.normal()).collect();
+        let bv: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let name = format!("linreg_ds_step_n{n}");
+        // warm the compile cache outside the timer
+        rt.load(&name).unwrap();
+        bench(&format!("exec {name}"), &opts, || {
+            let out = rt
+                .exec1_f32(
+                    &name,
+                    &[
+                        lit_f32(&[n, 1], &x).unwrap(),
+                        lit_f32(&[b, n], &a1).unwrap(),
+                        lit_f32(&[b, n], &a2).unwrap(),
+                        lit_f32(&[b, 1], &bv).unwrap(),
+                        lit_scalar11(0.05).unwrap(),
+                    ],
+                )
+                .unwrap();
+            black_box(out);
+        });
+    }
+
+    section("u8 vs f32 operand upload (n=1000)");
+    let n = 1000;
+    let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let bv: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+    let a1: Vec<f32> = (0..b * n).map(|_| rng.normal()).collect();
+    let a2 = a1.clone();
+    let i1: Vec<u8> = (0..b * n).map(|_| rng.below(16) as u8).collect();
+    let i2 = i1.clone();
+    let m: Vec<f32> = (0..n).map(|_| 1.0).collect();
+    rt.load("linreg_ds_step_n1000").unwrap();
+    rt.load("linreg_ds_u8_step_n1000").unwrap();
+    bench("f32 operands (256 KiB/step)", &opts, || {
+        black_box(
+            rt.exec1_f32(
+                "linreg_ds_step_n1000",
+                &[
+                    lit_f32(&[n, 1], &x).unwrap(),
+                    lit_f32(&[b, n], &a1).unwrap(),
+                    lit_f32(&[b, n], &a2).unwrap(),
+                    lit_f32(&[b, 1], &bv).unwrap(),
+                    lit_scalar11(0.05).unwrap(),
+                ],
+            )
+            .unwrap(),
+        );
+    });
+    bench("u8 operands (64 KiB/step, dequant in-kernel)", &opts, || {
+        black_box(
+            rt.exec1_f32(
+                "linreg_ds_u8_step_n1000",
+                &[
+                    lit_f32(&[n, 1], &x).unwrap(),
+                    lit_u8(&[b, n], &i1).unwrap(),
+                    lit_u8(&[b, n], &i2).unwrap(),
+                    lit_f32(&[1, n], &m).unwrap(),
+                    lit_scalar11(15.0).unwrap(),
+                    lit_f32(&[b, 1], &bv).unwrap(),
+                    lit_scalar11(0.05).unwrap(),
+                ],
+            )
+            .unwrap(),
+        );
+    });
+
+    section("per-step vs epoch-fused dispatch (n=100, 64 batches)");
+    let n = 100;
+    let nb = 64usize;
+    let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let a_all: Vec<f32> = (0..nb * b * n).map(|_| rng.normal()).collect();
+    let b_all: Vec<f32> = (0..nb * b).map(|_| rng.normal()).collect();
+    rt.load("linreg_ds_step_n100").unwrap();
+    rt.load("linreg_ds_epoch_n100").unwrap();
+    bench("64 x linreg_ds_step_n100", &opts, || {
+        let mut xc = x.clone();
+        for i in 0..nb {
+            let sl = &a_all[i * b * n..(i + 1) * b * n];
+            let bl = &b_all[i * b..(i + 1) * b];
+            xc = rt
+                .exec1_f32(
+                    "linreg_ds_step_n100",
+                    &[
+                        lit_f32(&[n, 1], &xc).unwrap(),
+                        lit_f32(&[b, n], sl).unwrap(),
+                        lit_f32(&[b, n], sl).unwrap(),
+                        lit_f32(&[b, 1], bl).unwrap(),
+                        lit_scalar11(0.05).unwrap(),
+                    ],
+                )
+                .unwrap();
+        }
+        black_box(xc);
+    });
+    bench("1 x linreg_ds_epoch_n100 (scan-fused)", &opts, || {
+        black_box(
+            rt.exec1_f32(
+                "linreg_ds_epoch_n100",
+                &[
+                    lit_f32(&[n, 1], &x).unwrap(),
+                    lit_f32(&[nb, b, n], &a_all).unwrap(),
+                    lit_f32(&[nb, b, n], &a_all).unwrap(),
+                    lit_f32(&[nb, b, 1], &b_all).unwrap(),
+                    lit_scalar11(0.05).unwrap(),
+                ],
+            )
+            .unwrap(),
+        );
+    });
+}

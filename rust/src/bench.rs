@@ -1,0 +1,129 @@
+//! In-repo micro-benchmark harness (criterion is not in the offline crate
+//! set). Used by every target under `rust/benches/` with `harness = false`.
+//!
+//! Methodology: warmup until ≥ `WARMUP` elapsed, then time batches sized so
+//! each batch takes ≳ 10 ms, collect ≥ `MIN_SAMPLES` batch means, report
+//! mean / median / p95 / stddev. `--quick` (or env `ZIPML_BENCH_QUICK=1`)
+//! shrinks budgets ~10× for CI smoke runs.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+}
+
+impl BenchOpts {
+    pub fn from_env_and_args() -> Self {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("ZIPML_BENCH_QUICK").is_ok_and(|v| v == "1");
+        if quick {
+            BenchOpts { warmup: Duration::from_millis(30), measure: Duration::from_millis(200), min_samples: 5 }
+        } else {
+            BenchOpts { warmup: Duration::from_millis(300), measure: Duration::from_secs(2), min_samples: 20 }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn throughput_line(&self, unit: &str, per_iter: f64) -> String {
+        let per_sec = per_iter / (self.mean_ns * 1e-9);
+        format!("{:44} {:>12} mean  {:>12} p95   {:>14.3e} {unit}/s",
+            self.name, fmt_ns(self.mean_ns), fmt_ns(self.p95_ns), per_sec)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` per the harness methodology; prints and returns the result.
+pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult {
+    // Warmup + estimate per-call cost.
+    let wstart = Instant::now();
+    let mut calls = 0u64;
+    while wstart.elapsed() < opts.warmup || calls < 3 {
+        f();
+        calls += 1;
+    }
+    let per_call = wstart.elapsed().as_secs_f64() / calls as f64;
+    let batch = ((0.01 / per_call).ceil() as u64).max(1);
+
+    let mut samples: Vec<f64> = Vec::new();
+    let mstart = Instant::now();
+    while mstart.elapsed() < opts.measure || samples.len() < opts.min_samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed().as_secs_f64() * 1e9 / batch as f64);
+        if samples.len() >= 5000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let median = samples[n / 2];
+    let p95 = samples[(n as f64 * 0.95) as usize % n];
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        median_ns: median,
+        p95_ns: p95,
+        stddev_ns: var.sqrt(),
+        samples: n,
+    };
+    println!(
+        "{:44} {:>12} mean  {:>12} med  {:>12} p95  ±{:>10}  ({} samples)",
+        r.name, fmt_ns(r.mean_ns), fmt_ns(r.median_ns), fmt_ns(r.p95_ns),
+        fmt_ns(r.stddev_ns), r.samples
+    );
+    r
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let opts = BenchOpts { warmup: Duration::from_millis(5), measure: Duration::from_millis(20), min_samples: 3 };
+        let mut acc = 0u64;
+        let r = bench("noop-ish", &opts, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0 && r.mean_ns < 1e7);
+        assert!(r.samples >= 3);
+    }
+}

@@ -1,0 +1,191 @@
+//! Chebyshev approximation machinery (§4.2–4.3).
+//!
+//! The coordinator fits P ≈ ℓ' once per model (degree-15 by default, the
+//! paper's setting) and ships the coefficients to the `cheby_step` /
+//! `poly_ds_step` artifacts. The step function (hinge gradient) is fitted
+//! through an erf-smoothed surrogate with gap δ — polynomials cannot
+//! approximate the discontinuity on [-δ, δ] (§4.3), which is exactly the
+//! regime the refetch heuristics guard.
+
+/// Fit Chebyshev coefficients c_0..c_deg of f on [-radius, radius] by
+/// interpolation at Chebyshev nodes (discrete orthogonality — exact for
+/// polynomials of degree ≤ deg, near-minimax for smooth f).
+pub fn cheb_fit<F: Fn(f64) -> f64>(f: F, radius: f64, deg: usize) -> Vec<f64> {
+    let n = deg + 1;
+    let fv: Vec<f64> = (0..n)
+        .map(|j| {
+            let theta = (2 * j + 1) as f64 / (2 * n) as f64 * std::f64::consts::PI;
+            f(theta.cos() * radius)
+        })
+        .collect();
+    (0..n)
+        .map(|k| {
+            let mut acc = 0.0;
+            for (j, &v) in fv.iter().enumerate() {
+                let theta = (2 * j + 1) as f64 / (2 * n) as f64 * std::f64::consts::PI;
+                acc += v * (k as f64 * theta).cos();
+            }
+            acc * if k == 0 { 1.0 } else { 2.0 } / n as f64
+        })
+        .collect()
+}
+
+/// Clenshaw evaluation of Σ c_k T_k(z/radius); clamps |z| to the radius
+/// (mirrors the L1 kernel).
+pub fn cheb_eval(coefs: &[f64], radius: f64, z: f64) -> f64 {
+    let t = (z / radius).clamp(-1.0, 1.0);
+    let (mut b1, mut b2) = (0.0f64, 0.0f64);
+    for &c in coefs.iter().skip(1).rev() {
+        let b = c + 2.0 * t * b1 - b2;
+        b2 = b1;
+        b1 = b;
+    }
+    coefs[0] + t * b1 - b2
+}
+
+/// Convert Chebyshev coefficients (on [-radius, radius]) to monomial
+/// coefficients m_0..m_deg of P(z) = Σ m_i z^i — the `poly_ds_step`
+/// artifacts need monomials because the unbiased multi-sample estimator
+/// multiplies independent quantizations per monomial term (§4.1).
+pub fn cheb_to_monomial(coefs: &[f64], radius: f64) -> Vec<f64> {
+    let deg = coefs.len() - 1;
+    // T_k recurrence in monomial space (in t = z/radius).
+    let mut tk_prev = vec![0.0f64; deg + 1]; // T_0 = 1
+    tk_prev[0] = 1.0;
+    let mut tk = vec![0.0f64; deg + 1]; // T_1 = t
+    if deg >= 1 {
+        tk[1] = 1.0;
+    }
+    let mut mono_t = vec![0.0f64; deg + 1];
+    mono_t[0] += coefs[0];
+    if deg >= 1 {
+        for (m, &t1) in mono_t.iter_mut().zip(tk.iter()) {
+            *m += coefs[1] * t1;
+        }
+    }
+    for k in 2..=deg {
+        // T_k = 2 t T_{k-1} − T_{k-2}
+        let mut next = vec![0.0f64; deg + 1];
+        for i in 0..deg {
+            next[i + 1] += 2.0 * tk[i];
+        }
+        for i in 0..=deg {
+            next[i] -= tk_prev[i];
+        }
+        for (m, &t1) in mono_t.iter_mut().zip(next.iter()) {
+            *m += coefs[k] * t1;
+        }
+        tk_prev = tk;
+        tk = next;
+    }
+    // substitute t = z / radius
+    mono_t
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| c / radius.powi(i as i32))
+        .collect()
+}
+
+/// ℓ'(z) for logistic loss ℓ(z) = log(1 + e^{-z}): ℓ'(z) = -σ(-z).
+pub fn logistic_lprime(z: f64) -> f64 {
+    -1.0 / (1.0 + z.exp())
+}
+
+/// Smoothed hinge-gradient surrogate: ℓ'(z) = -H(1-z) smoothed with an erf
+/// transition of width `delta` (the [-δ, δ] gap of §4.3).
+pub fn hinge_lprime_smoothed(z: f64, delta: f64) -> f64 {
+    -0.5 * (1.0 - erf((z - 1.0) / delta))
+}
+
+/// Abramowitz–Stegun 7.1.26 erf approximation (|err| ≤ 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Degree needed so the Chebyshev fit of logistic ℓ' on [-R, R] has sup-norm
+/// error ≤ eps (scanned empirically; Lemma 5's D(ε, ℓ)).
+pub fn degree_for_eps_logistic(radius: f64, eps: f64, max_deg: usize) -> Option<usize> {
+    for deg in 1..=max_deg {
+        let coefs = cheb_fit(logistic_lprime, radius, deg);
+        let worst = (0..400)
+            .map(|i| {
+                let z = -radius + 2.0 * radius * i as f64 / 399.0;
+                (cheb_eval(&coefs, radius, z) - logistic_lprime(z)).abs()
+            })
+            .fold(0.0f64, f64::max);
+        if worst <= eps {
+            return Some(deg);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_polynomial_exactly() {
+        // f(z) = 1 − 2z + 0.5 z³ is degree 3: a deg-5 fit must be exact.
+        let f = |z: f64| 1.0 - 2.0 * z + 0.5 * z * z * z;
+        let coefs = cheb_fit(f, 4.0, 5);
+        for i in 0..50 {
+            let z = -4.0 + 8.0 * i as f64 / 49.0;
+            assert!((cheb_eval(&coefs, 4.0, z) - f(z)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn logistic_fit_deg15_accurate() {
+        // the paper's setting: degree 15 on a moderate radius
+        let coefs = cheb_fit(logistic_lprime, 8.0, 15);
+        let mut worst = 0.0f64;
+        for i in 0..200 {
+            let z = -8.0 + 16.0 * i as f64 / 199.0;
+            worst = worst.max((cheb_eval(&coefs, 8.0, z) - logistic_lprime(z)).abs());
+        }
+        assert!(worst < 5e-3, "sup err {worst}");
+    }
+
+    #[test]
+    fn monomial_conversion_matches_clenshaw() {
+        let coefs = cheb_fit(logistic_lprime, 8.0, 15);
+        let mono = cheb_to_monomial(&coefs, 8.0);
+        for i in 0..100 {
+            let z = -7.5 + 15.0 * i as f64 / 99.0;
+            let horner = mono.iter().rev().fold(0.0f64, |acc, &m| acc * z + m);
+            let clen = cheb_eval(&coefs, 8.0, z);
+            assert!((horner - clen).abs() < 1e-6, "z={z} {horner} vs {clen}");
+        }
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.8427007).abs() < 1e-5);
+        assert!((erf(3.0) - 0.9999779).abs() < 1e-5);
+    }
+
+    #[test]
+    fn hinge_surrogate_limits() {
+        assert!((hinge_lprime_smoothed(-3.0, 0.2) + 1.0).abs() < 1e-6); // deep in margin
+        assert!(hinge_lprime_smoothed(5.0, 0.2).abs() < 1e-6); // well classified
+        assert!((hinge_lprime_smoothed(1.0, 0.2) + 0.5).abs() < 1e-9); // midpoint
+    }
+
+    #[test]
+    fn degree_grows_as_eps_shrinks() {
+        let d1 = degree_for_eps_logistic(8.0, 1e-1, 40).unwrap();
+        let d2 = degree_for_eps_logistic(8.0, 1e-3, 40).unwrap();
+        assert!(d2 > d1, "{d2} !> {d1}");
+    }
+}

@@ -1,0 +1,449 @@
+//! One regenerator per paper table/figure (DESIGN.md §5).
+//!
+//! Absolute numbers differ from the paper (synthetic data, simulated FPGA,
+//! CPU PJRT backend) but each function reproduces the *shape* of the
+//! corresponding result: who wins, by what factor, where crossovers fall.
+
+use anyhow::Result;
+
+use super::{Ctx, Report};
+use crate::data::{self, synthetic, Dataset, Task};
+use crate::fpga::{self, Precision};
+use crate::quant::{self, discretized_optimal_levels, optimal_levels, quantization_variance};
+use crate::rng::Rng;
+use crate::sgd::modes::RefetchStrategy;
+use crate::sgd::{self, deep, Mode, ModelKind, TrainConfig};
+
+/// Dataset by Table-1 name, scaled down in quick mode.
+fn dataset(ctx: &Ctx, name: &str) -> Result<Dataset> {
+    let row = data::TABLE1.iter().find(|r| r.0 == name).unwrap();
+    let (_, ktr, kte, n, task) = *row;
+    let (ktr, kte) = (ctx.k_scale(ktr), ctx.k_scale(kte).min(2048));
+    Ok(match task {
+        Task::Regression => synthetic::make_regression(name, ktr, kte, n, ctx.seed),
+        Task::Classification => synthetic::make_classification(name, ktr, kte, n, ctx.seed),
+    })
+}
+
+/// Train and return (label, per-epoch losses, result extras).
+fn run(
+    ctx: &Ctx,
+    ds: &Dataset,
+    model: ModelKind,
+    mode: Mode,
+    epochs: usize,
+    lr0: f32,
+) -> Result<sgd::TrainResult> {
+    let mut cfg = TrainConfig::new(model, mode);
+    cfg.epochs = epochs;
+    cfg.lr0 = lr0;
+    cfg.seed = ctx.seed;
+    cfg.eval_batches = if ctx.quick { 4 } else { 16 };
+    sgd::train(&ctx.rt, ds, &cfg)
+}
+
+/// Loss-curve report: one column per mode, one row per epoch.
+fn curve_report(id: &str, title: &str, runs: &[&sgd::TrainResult]) -> Report {
+    let mut cols = vec!["epoch".to_string()];
+    cols.extend(runs.iter().map(|r| r.mode_label.clone()));
+    let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut rep = Report::new(id, title, &cols_ref);
+    let max_len = runs.iter().map(|r| r.loss_curve.len()).max().unwrap_or(0);
+    for e in 0..max_len {
+        let mut cells = vec![e.to_string()];
+        for r in runs {
+            cells.push(
+                r.loss_curve
+                    .get(e)
+                    .map(|&v| super::report::fmt_g(v))
+                    .unwrap_or_else(|| "".into()),
+            );
+        }
+        rep.row(cells);
+    }
+    for r in runs {
+        rep.note(format!(
+            "{}: final={} bytes/epoch={:.2e}{}{}",
+            r.mode_label,
+            super::report::fmt_g(r.final_loss),
+            r.sample_bytes_per_epoch,
+            if r.refetch_fraction > 0.0 {
+                format!(" refetch={:.1}%", r.refetch_fraction * 100.0)
+            } else {
+                String::new()
+            },
+            if r.diverged { " DIVERGED" } else { "" },
+        ));
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------------
+
+pub fn table1(_ctx: &Ctx) -> Result<Vec<Report>> {
+    let mut rep = Report::new("table1", "Dataset statistics (Table 1 equivalents)",
+        &["dataset", "train", "test", "features", "task"]);
+    for (name, ktr, kte, n, task) in data::TABLE1 {
+        rep.row(vec![
+            name.to_string(),
+            ktr.to_string(),
+            kte.to_string(),
+            n.to_string(),
+            format!("{task:?}"),
+        ]);
+    }
+    rep.row(vec!["tomography".into(), "96 proj × 64 bins".into(), "10%".into(),
+        "4096 (64²)".into(), "Regression".into()]);
+    rep.note("paper sizes scaled where laptop-infeasible; see DESIGN.md §3");
+    Ok(vec![rep])
+}
+
+pub fn fig3(_ctx: &Ctx) -> Result<Vec<Report>> {
+    // bimodal mixture like the paper's illustration
+    let mut rng = Rng::new(3);
+    let mut pts: Vec<f32> = (0..4000).map(|_| (rng.normal() * 0.08 + 0.25).clamp(0.0, 1.0)).collect();
+    pts.extend((0..1000).map(|_| (rng.normal() * 0.05 + 0.75).clamp(0.0, 1.0)));
+    let nlevels = 8;
+    let uniform: Vec<f32> = (0..nlevels).map(|i| i as f32 / (nlevels - 1) as f32).collect();
+    let exact = optimal_levels(&pts, nlevels);
+    let disc = discretized_optimal_levels(&pts, nlevels, 128);
+    let greedy = quant::greedy::adaquant_levels(&pts, nlevels);
+    let mut rep = Report::new("fig3", "Quantization points on a bimodal distribution",
+        &["method", "levels", "mean_variance"]);
+    for (name, lv) in [("uniform", &uniform), ("optimal_dp", &exact),
+                       ("discretized_dp_M128", &disc), ("adaquant_2approx", &greedy)] {
+        rep.row(vec![
+            name.into(),
+            lv.iter().map(|v| format!("{v:.3}")).collect::<Vec<_>>().join(" "),
+            super::report::fmt_g(quantization_variance(&pts, lv)),
+        ]);
+    }
+    rep.note("optimal levels concentrate where the density is (paper Fig 3)");
+    Ok(vec![rep])
+}
+
+pub fn fig4(ctx: &Ctx) -> Result<Vec<Report>> {
+    let epochs = ctx.epochs(20);
+    // (a) linear regression on Synthetic 100
+    let ds = dataset(ctx, "synthetic100")?;
+    let fp = run(ctx, &ds, ModelKind::Linreg, Mode::Full, epochs, 0.05)?;
+    let ds3 = run(ctx, &ds, ModelKind::Linreg, Mode::DoubleSample { bits: 3 }, epochs, 0.05)?;
+    let ds5 = run(ctx, &ds, ModelKind::Linreg, Mode::DoubleSample { bits: 5 }, epochs, 0.05)?;
+    let a = curve_report("fig4a", "Linreg on synthetic100: FP32 vs double-sampled 3/5-bit",
+        &[&fp, &ds3, &ds5]);
+    // (b) LS-SVM on gisette-like
+    let dsg = dataset(ctx, "gisette")?;
+    let model = ModelKind::Lssvm { c: 1e-4 };
+    let fp_g = run(ctx, &dsg, model, Mode::Full, epochs, 0.5)?;
+    let q5 = run(ctx, &dsg, model, Mode::DoubleSample { bits: 5 }, epochs, 0.5)?;
+    let q6 = run(ctx, &dsg, model, Mode::DoubleSample { bits: 6 }, epochs, 0.5)?;
+    let b = curve_report("fig4b", "LS-SVM on gisette-like: FP32 vs 5/6-bit", &[&fp_g, &q5, &q6]);
+    Ok(vec![a, b])
+}
+
+pub fn fig5(ctx: &Ctx) -> Result<Vec<Report>> {
+    let epochs = ctx.epochs(20);
+    let ds = dataset(ctx, "synthetic100")?;
+    let (k, n) = (ds.k_train(), ds.n());
+    let fp = run(ctx, &ds, ModelKind::Linreg, Mode::Full, epochs, 0.05)?;
+    let q4 = run(ctx, &ds, ModelKind::Linreg, Mode::DoubleSample { bits: 4 }, epochs, 0.05)?;
+    let hw = fpga::hogwild_train(&ds, &fpga::HogwildConfig {
+        threads: 10.min(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)),
+        epochs, lr0: 0.05, seed: ctx.seed });
+    let t_f32 = fpga::epoch_seconds(Precision::Float, k, n);
+    let t_q4 = fpga::epoch_seconds(Precision::Q(4), k, n);
+    let t_hw = fpga::hogwild::hogwild_epoch_seconds(k, n, 10);
+    let mut rep = Report::new("fig5", "Loss vs (simulated) time: FPGA float / FPGA Q4 / Hogwild",
+        &["epoch", "t_fpga32_s", "loss_fpga32", "t_fpgaQ4_s", "loss_fpgaQ4", "t_hogwild_s", "loss_hogwild"]);
+    for e in 0..fp.loss_curve.len() {
+        rep.row(vec![
+            e.to_string(),
+            format!("{:.4e}", e as f64 * t_f32),
+            super::report::fmt_g(fp.loss_curve[e]),
+            format!("{:.4e}", e as f64 * t_q4),
+            super::report::fmt_g(q4.loss_curve[e]),
+            format!("{:.4e}", e as f64 * t_hw),
+            hw.loss_curve.get(e).map(|&v| super::report::fmt_g(v)).unwrap_or_default(),
+        ]);
+    }
+    rep.note(format!("FPGA speedup (epoch time float/Q4) = {:.2}x (paper: 6-7x)", t_f32 / t_q4));
+    rep.note(format!("Hogwild wallclock (real, {} upd): {:.2}s", hw.updates, hw.wall_secs));
+    Ok(vec![rep])
+}
+
+pub fn fig6(ctx: &Ctx) -> Result<Vec<Report>> {
+    let epochs = ctx.epochs(24);
+    let ds = dataset(ctx, "synthetic100")?;
+    let mut reports = Vec::new();
+    for batch in [16usize, 256] {
+        let mk = |mode: Mode| -> Result<sgd::TrainResult> {
+            let mut cfg = TrainConfig::new(ModelKind::Linreg, mode);
+            cfg.batch = batch;
+            cfg.epochs = epochs;
+            cfg.lr0 = 0.1;
+            cfg.seed = ctx.seed;
+            cfg.eval_batches = if ctx.quick { 4 } else { 16 };
+            sgd::train(&ctx.rt, &ds, &cfg)
+        };
+        let fp = mk(Mode::Full)?;
+        let q5 = mk(Mode::DoubleSample { bits: 5 })?;
+        reports.push(curve_report(
+            &format!("fig6_bs{batch}"),
+            &format!("Mini-batch size {batch}: FP32 vs 5-bit double sampling"),
+            &[&fp, &q5],
+        ));
+    }
+    Ok(reports)
+}
+
+pub fn fig7a(ctx: &Ctx) -> Result<Vec<Report>> {
+    let epochs = ctx.epochs(20);
+    let ds = dataset(ctx, "yearprediction")?;
+    let fp = run(ctx, &ds, ModelKind::Linreg, Mode::Full, epochs, 0.05)?;
+    let u3 = run(ctx, &ds, ModelKind::Linreg, Mode::DoubleSample { bits: 3 }, epochs, 0.05)?;
+    let u5 = run(ctx, &ds, ModelKind::Linreg, Mode::DoubleSample { bits: 5 }, epochs, 0.05)?;
+    let o3 = run(ctx, &ds, ModelKind::Linreg, Mode::OptimalDs { levels: 8 }, epochs, 0.05)?;
+    let o5 = run(ctx, &ds, ModelKind::Linreg, Mode::OptimalDs { levels: 32 }, epochs, 0.05)?;
+    let mut rep = curve_report("fig7a",
+        "YearPrediction-like: uniform vs variance-optimal quantization",
+        &[&fp, &u3, &u5, &o3, &o5]);
+    rep.note("paper: optimal 3-bit ≈ uniform 5-bit (1.7x bit saving)");
+    Ok(vec![rep])
+}
+
+pub fn fig7b(ctx: &Ctx) -> Result<Vec<Report>> {
+    // Data-limited regime (k ≪ capacity): this is where the weight-grid
+    // choice separates, mirroring CIFAR-10's difficulty relative to the
+    // paper's network (DESIGN.md §3). With k ≫ 8k the synthetic task
+    // saturates and all grids reach the same accuracy.
+    let (ktr, kte) = if ctx.quick { (1024, 512) } else { (2048, 2048) };
+    let epochs = ctx.epochs(10);
+    let data = deep::make_deep_dataset(ktr, kte, ctx.seed);
+    let fp = deep::train_mlp(&ctx.rt, &data, deep::WeightQuant::FullPrecision, epochs, 0.1, ctx.seed)?;
+    let xnor = deep::train_mlp(&ctx.rt, &data, deep::WeightQuant::Uniform { levels: 5 }, epochs, 0.1, ctx.seed)?;
+    let opt = deep::train_mlp(&ctx.rt, &data, deep::WeightQuant::Optimal { levels: 5 }, epochs, 0.1, ctx.seed)?;
+    let mut rep = Report::new("fig7b", "Quantized-model MLP: FP32 vs XNOR5 vs Optimal5",
+        &["epoch", "loss_fp32", "loss_xnor5", "loss_optimal5", "acc_fp32", "acc_xnor5", "acc_optimal5"]);
+    for e in 0..epochs {
+        rep.row(vec![
+            e.to_string(),
+            super::report::fmt_g(fp.train_loss_curve[e]),
+            super::report::fmt_g(xnor.train_loss_curve[e]),
+            super::report::fmt_g(opt.train_loss_curve[e]),
+            format!("{:.4}", fp.test_acc_curve[e]),
+            format!("{:.4}", xnor.test_acc_curve[e]),
+            format!("{:.4}", opt.test_acc_curve[e]),
+        ]);
+    }
+    rep.note(format!("final acc: fp32={:.3} xnor5={:.3} optimal5={:.3} (paper: optimal5 > xnor5 by >5 pts)",
+        fp.final_test_acc, xnor.final_test_acc, opt.final_test_acc));
+    Ok(vec![rep])
+}
+
+pub fn fig8(ctx: &Ctx) -> Result<Vec<Report>> {
+    let epochs = ctx.epochs(20);
+    let mut reports = Vec::new();
+    for (name, bits_lo, bits_hi) in [("synthetic10", 2, 4), ("synthetic100", 3, 5), ("synthetic1000", 4, 6)] {
+        let ds = dataset(ctx, name)?;
+        let fp = run(ctx, &ds, ModelKind::Linreg, Mode::Full, epochs, 0.05)?;
+        let lo = run(ctx, &ds, ModelKind::Linreg, Mode::DoubleSample { bits: bits_lo }, epochs, 0.05)?;
+        let hi = run(ctx, &ds, ModelKind::Linreg, Mode::DoubleSample { bits: bits_hi }, epochs, 0.05)?;
+        let olo = run(ctx, &ds, ModelKind::Linreg, Mode::OptimalDs { levels: 1 << bits_lo }, epochs, 0.05)?;
+        let mut rep = curve_report(&format!("fig8_{name}"),
+            &format!("{name}: uniform {bits_lo}/{bits_hi}-bit vs optimal {bits_lo}-bit"),
+            &[&fp, &lo, &hi, &olo]);
+        rep.note("higher n needs more bits (quantization variance grows with n)");
+        reports.push(rep);
+    }
+    Ok(reports)
+}
+
+pub fn fig9(ctx: &Ctx) -> Result<Vec<Report>> {
+    let epochs = ctx.epochs(16);
+    let mut reports = Vec::new();
+    for (name, model, lr) in [
+        ("gisette", ModelKind::Logistic, 0.5f32),
+        ("cod-rna", ModelKind::Logistic, 0.5),
+        ("cod-rna", ModelKind::Svm, 0.2),
+    ] {
+        let ds = dataset(ctx, name)?;
+        let fp = run(ctx, &ds, model, Mode::Full, epochs, lr)?;
+        let cheby = run(ctx, &ds, model, Mode::Cheby { bits: 4 }, epochs, lr)?;
+        let poly = run(ctx, &ds, model, Mode::PolyDs { bits: 4 }, epochs, lr)?;
+        let round = run(ctx, &ds, model, Mode::NearestRound { bits: 8 }, epochs, lr)?;
+        let naive = run(ctx, &ds, model, Mode::Naive { bits: 8 }, epochs, lr)?;
+        let id = format!("fig9_{}_{name}", match model { ModelKind::Svm => "svm", _ => "logistic" });
+        let mut rep = curve_report(&id,
+            &format!("{name} / {:?}: Chebyshev vs 8-bit rounding strawmen", model),
+            &[&fp, &cheby, &poly, &round, &naive]);
+        rep.note("the paper's NEGATIVE result: naive 8-bit rounding matches Chebyshev");
+        reports.push(rep);
+    }
+    Ok(reports)
+}
+
+pub fn fig10(ctx: &Ctx) -> Result<Vec<Report>> {
+    linear_sweep(ctx, ModelKind::Linreg, "fig10",
+        &["synthetic10", "synthetic100", "synthetic1000", "yearprediction", "cadata", "cpusmall"])
+}
+
+pub fn fig11(ctx: &Ctx) -> Result<Vec<Report>> {
+    linear_sweep(ctx, ModelKind::Lssvm { c: 1e-4 }, "fig11", &["cod-rna", "gisette"])
+}
+
+fn linear_sweep(ctx: &Ctx, model: ModelKind, id: &str, names: &[&str]) -> Result<Vec<Report>> {
+    let epochs = ctx.epochs(15);
+    let mut rep = Report::new(id, "End-to-end quantization across datasets",
+        &["dataset", "fp32_final", "e2e5_final", "e2e6_final", "ratio_e2e6/fp32", "bytes_saved_x"]);
+    for name in names {
+        let ds = dataset(ctx, name)?;
+        let lr = if model.is_classification() { 0.5 } else { 0.05 };
+        let fp = run(ctx, &ds, model, Mode::Full, epochs, lr)?;
+        let (m5, m6);
+        if matches!(model, ModelKind::Linreg) {
+            m5 = run(ctx, &ds, model, Mode::EndToEnd { bits_s: 5, bits_m: 8, bits_g: 8 }, epochs, lr)?;
+            m6 = run(ctx, &ds, model, Mode::EndToEnd { bits_s: 6, bits_m: 8, bits_g: 8 }, epochs, lr)?;
+        } else {
+            m5 = run(ctx, &ds, model, Mode::DoubleSample { bits: 5 }, epochs, lr)?;
+            m6 = run(ctx, &ds, model, Mode::DoubleSample { bits: 6 }, epochs, lr)?;
+        }
+        rep.row(vec![
+            name.to_string(),
+            super::report::fmt_g(fp.final_loss),
+            super::report::fmt_g(m5.final_loss),
+            super::report::fmt_g(m6.final_loss),
+            format!("{:.3}", m6.final_loss / fp.final_loss.max(1e-12)),
+            format!("{:.2}", fp.sample_bytes_per_epoch / m6.sample_bytes_per_epoch),
+        ]);
+    }
+    rep.note("5-6 bits suffices to match FP32 final loss (paper §J.1)");
+    Ok(vec![rep])
+}
+
+pub fn fig12(ctx: &Ctx) -> Result<Vec<Report>> {
+    let epochs = ctx.epochs(12);
+    let ds = dataset(ctx, "cod-rna")?;
+    let fp = run(ctx, &ds, ModelKind::Svm, Mode::Full, epochs, 0.2)?;
+    let mut runs = vec![fp];
+    for bits in [4u32, 6, 8] {
+        runs.push(run(ctx, &ds, ModelKind::Svm,
+            Mode::Refetch { bits, strategy: RefetchStrategy::L1 }, epochs, 0.2)?);
+    }
+    runs.push(run(ctx, &ds, ModelKind::Svm,
+        Mode::Refetch { bits: 8, strategy: RefetchStrategy::L2Jl { sketch_dim: 64, delta: 0.05 } },
+        epochs, 0.2)?);
+    let refs: Vec<&sgd::TrainResult> = runs.iter().collect();
+    let mut rep = curve_report("fig12", "SVM with refetching on cod-rna-like", &refs);
+    rep.note("paper: 8-bit refetches <5-6% of samples");
+    Ok(vec![rep])
+}
+
+pub fn fig13(_ctx: &Ctx) -> Result<Vec<Report>> {
+    let mut rep = Report::new("fig13", "Pipeline cycle model (paper Fig 13/14)",
+        &["precision", "latency_cycles", "width_B_per_cycle", "epoch_s_50k_x90", "speedup_vs_float"]);
+    let base = fpga::epoch_seconds(Precision::Float, 50_000, 90);
+    for p in [Precision::Float, Precision::Q(8), Precision::Q(4), Precision::Q(2), Precision::Q(1)] {
+        let spec = fpga::PipelineSpec::for_precision(p, 90);
+        let t = fpga::epoch_seconds(p, 50_000, 90);
+        rep.row(vec![
+            p.label(),
+            format!("{:.1}", spec.latency_cycles),
+            format!("{}", spec.width_bytes_per_cycle),
+            format!("{t:.4e}"),
+            format!("{:.2}", base / t),
+        ]);
+    }
+    Ok(vec![rep])
+}
+
+pub fn bias(ctx: &Ctx) -> Result<Vec<Report>> {
+    // §B.1's instance: a minimizer far from 0 makes D_a·x dominate.
+    let epochs = ctx.epochs(60);
+    let n = 10;
+    let mut rng = Rng::new(ctx.seed);
+    let k = ctx.k_scale(8000);
+    let mut a = crate::tensor::Matrix::zeros(k, n);
+    for r in 0..k {
+        for c in 0..n {
+            a.set(r, c, rng.normal());
+        }
+    }
+    let xstar: Vec<f32> = (0..n).map(|_| 3.0 + rng.f32()).collect(); // large minimizer
+    let b = a.matvec(&xstar);
+    let half = k / 2;
+    let ds = Dataset {
+        name: "bias_demo".into(),
+        task: Task::Regression,
+        train_a: a.gather_rows(&(0..half).collect::<Vec<_>>()),
+        train_b: b[..half].to_vec(),
+        test_a: a.gather_rows(&(half..k).collect::<Vec<_>>()),
+        test_b: b[half..].to_vec(),
+    };
+    let fp = run(ctx, &ds, ModelKind::Linreg, Mode::Full, epochs, 0.15)?;
+    let naive = run(ctx, &ds, ModelKind::Linreg, Mode::Naive { bits: 3 }, epochs, 0.15)?;
+    let dsq = run(ctx, &ds, ModelKind::Linreg, Mode::DoubleSample { bits: 3 }, epochs, 0.15)?;
+    let mut rep = curve_report("bias", "Naive 3-bit vs double-sampled 3-bit (large x*)",
+        &[&fp, &naive, &dsq]);
+    rep.note(format!(
+        "naive converges to a biased solution: final {} vs ds {} (fp {})",
+        super::report::fmt_g(naive.final_loss),
+        super::report::fmt_g(dsq.final_loss),
+        super::report::fmt_g(fp.final_loss)
+    ));
+    Ok(vec![rep])
+}
+
+pub fn bandwidth(ctx: &Ctx) -> Result<Vec<Report>> {
+    let mut rep = Report::new("bandwidth", "Wire bits/value and bytes per epoch (synthetic100)",
+        &["mode", "bits_per_value", "bytes_per_epoch", "saving_vs_fp32"]);
+    let ds = dataset(ctx, "synthetic100")?;
+    let (k, n) = (ds.k_train() / 64 * 64, ds.n());
+    for mode in [
+        Mode::Full,
+        Mode::Naive { bits: 8 },
+        Mode::DoubleSample { bits: 4 },
+        Mode::DoubleSample { bits: 6 },
+        Mode::DoubleSampleU8 { bits: 4 },
+        Mode::EndToEnd { bits_s: 5, bits_m: 8, bits_g: 8 },
+        Mode::PolyDs { bits: 4 },
+        Mode::OptimalDs { levels: 8 },
+    ] {
+        let bits = mode.wire_bits_per_value(sgd::driver::CHEBY_DEG);
+        let bytes = k as f64 * n as f64 * bits / 8.0;
+        let fp_bytes = k as f64 * n as f64 * 4.0;
+        rep.row(vec![
+            mode.label(),
+            format!("{bits}"),
+            format!("{bytes:.3e}"),
+            format!("{:.2}x", fp_bytes / bytes),
+        ]);
+    }
+    rep.note("paper §5.1: 6-8x bandwidth saving at 5-6 bits; tomography 2.7x at 8-bit+overhead");
+    Ok(vec![rep])
+}
+
+pub fn tomo(ctx: &Ctx) -> Result<Vec<Report>> {
+    // n = size² is baked into the artifacts, so quick mode shrinks the
+    // number of angles (rows), not the volume.
+    let size = 64;
+    let n_angles = if ctx.quick { 8 } else { 96 };
+    let epochs = ctx.epochs(30);
+    let (ds, truth) = crate::data::tomo::make_tomography(size, n_angles, ctx.seed);
+    let fp = run(ctx, &ds, ModelKind::Linreg, Mode::Full, epochs, 0.2)?;
+    let q8 = run(ctx, &ds, ModelKind::Linreg, Mode::DoubleSample { bits: 8 }, epochs, 0.2)?;
+    let q6 = run(ctx, &ds, ModelKind::Linreg, Mode::DoubleSample { bits: 6 }, epochs, 0.2)?;
+    let mut rep = Report::new("tomo",
+        &format!("Tomographic reconstruction {size}x{size}, {n_angles} angles"),
+        &["mode", "final_sino_mse", "recon_rmse", "bytes_per_epoch", "saving"]);
+    for r in [&fp, &q8, &q6] {
+        rep.row(vec![
+            r.mode_label.clone(),
+            super::report::fmt_g(r.final_loss),
+            super::report::fmt_g(crate::data::tomo::reconstruction_rmse(&r.final_model, &truth)),
+            format!("{:.3e}", r.sample_bytes_per_epoch),
+            format!("{:.2}x", fp.sample_bytes_per_epoch / r.sample_bytes_per_epoch),
+        ]);
+    }
+    rep.note("paper: 2.7x data-movement saving at negligible quality loss");
+    Ok(vec![rep])
+}

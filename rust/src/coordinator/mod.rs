@@ -1,0 +1,98 @@
+//! Experiment coordinator: a registry mapping every paper table/figure to
+//! the code that regenerates it (DESIGN.md §5's index, executable).
+
+pub mod figures;
+pub mod report;
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+pub use report::Report;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub rt: crate::runtime::Runtime,
+    /// Shrinks dataset sizes / epochs ~10x for CI and smoke runs.
+    pub quick: bool,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn new(quick: bool) -> Result<Self> {
+        Ok(Ctx {
+            rt: crate::runtime::Runtime::open_default()?,
+            quick,
+            out_dir: PathBuf::from("results"),
+            seed: 42,
+        })
+    }
+
+    pub fn epochs(&self, full: usize) -> usize {
+        if self.quick {
+            (full / 5).max(2)
+        } else {
+            full
+        }
+    }
+
+    pub fn k_scale(&self, k: usize) -> usize {
+        if self.quick {
+            (k / 10).max(256)
+        } else {
+            k
+        }
+    }
+}
+
+type FigureFn = fn(&Ctx) -> Result<Vec<Report>>;
+
+/// (id, description, regenerator) — one entry per paper table/figure plus
+/// the claim-level extras (bias, bandwidth, tomo).
+pub const FIGURES: &[(&str, &str, FigureFn)] = &[
+    ("table1", "Dataset statistics", figures::table1),
+    ("fig3", "Optimal quantization points vs data distribution", figures::fig3),
+    ("fig4", "Linear models, end-to-end low precision (linreg + LS-SVM)", figures::fig4),
+    ("fig5", "FPGA speedup: float vs quantized vs Hogwild!", figures::fig5),
+    ("fig6", "Impact of mini-batch size (16 vs 256)", figures::fig6),
+    ("fig7a", "Uniform vs optimal quantization (3/5-bit)", figures::fig7a),
+    ("fig7b", "Deep learning: FP32 vs XNOR5 vs Optimal5", figures::fig7b),
+    ("fig8", "Linreg with quantized data across dimensionalities", figures::fig8),
+    ("fig9", "Non-linear models: Chebyshev vs naive rounding (negative result)", figures::fig9),
+    ("fig10", "Supplement: linreg end-to-end across datasets", figures::fig10),
+    ("fig11", "Supplement: LS-SVM end-to-end across datasets", figures::fig11),
+    ("fig12", "SVM refetching on cod-rna", figures::fig12),
+    ("fig13", "FPGA pipeline cycle model (Fig 13/14 parameters)", figures::fig13),
+    ("bias", "Naive quantization is biased and diverges (§B.1)", figures::bias),
+    ("bandwidth", "Wire bytes per epoch per mode (§5.1 savings)", figures::bandwidth),
+    ("tomo", "Tomographic reconstruction under quantized data", figures::tomo),
+];
+
+pub fn run_figure(ctx: &Ctx, id: &str) -> Result<Vec<Report>> {
+    let (_, _, f) = FIGURES
+        .iter()
+        .find(|(fid, _, _)| *fid == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown figure {id}; see `zipml list`"))?;
+    let reports = f(ctx)?;
+    for r in &reports {
+        r.print();
+        let p = r.write_csv(&ctx.out_dir)?;
+        println!("  → {}", p.display());
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique() {
+        let mut ids: Vec<&str> = FIGURES.iter().map(|f| f.0).collect();
+        let before = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), before);
+        assert!(before >= 16);
+    }
+}

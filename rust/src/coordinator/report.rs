@@ -1,0 +1,145 @@
+//! Tabular experiment reports: printed as aligned text and written as CSV
+//! under `results/` so every paper figure has a machine-readable twin.
+
+use anyhow::Result;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Self {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.columns.len());
+        self.rows.push(cells);
+    }
+
+    pub fn row_f(&mut self, label: &str, values: &[f64]) {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|v| fmt_g(*v)));
+        self.row(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn print(&self) {
+        println!("\n## {} — {}", self.id, self.title);
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(c, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r.get(c).map_or(0, |s| s.len()))
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let line = |cells: &[String]| {
+            let joined: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(s, w)| format!("{s:>w$}", w = w))
+                .collect();
+            println!("  {}", joined.join("  "));
+        };
+        line(&self.columns);
+        for r in &self.rows {
+            line(r);
+        }
+        for n in &self.notes {
+            println!("  · {n}");
+        }
+    }
+
+    pub fn write_csv(&self, dir: &Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.id));
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            let esc: Vec<String> = r
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            out.push_str(&esc.join(","));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("# {n}\n"));
+        }
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+}
+
+/// Compact general-purpose float formatting for report cells.
+pub fn fmt_g(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    let a = v.abs();
+    if a == 0.0 {
+        "0".into()
+    } else if a >= 1e5 || a < 1e-3 {
+        format!("{v:.3e}")
+    } else if a >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrip_csv() {
+        let mut r = Report::new("t1", "test", &["mode", "loss"]);
+        r.row_f("fp32", &[0.123456]);
+        r.row(vec!["weird, cell".into(), "1".into()]);
+        r.note("a note");
+        let dir = std::env::temp_dir().join("zipml_report_test");
+        let p = r.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.starts_with("mode,loss\n"));
+        assert!(text.contains("\"weird, cell\""));
+        assert!(text.contains("# a note"));
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_g(0.0), "0");
+        assert_eq!(fmt_g(0.5), "0.5000");
+        assert_eq!(fmt_g(123.45), "123.5");
+        assert!(fmt_g(1.0e-9).contains('e'));
+        assert!(fmt_g(f64::NAN).contains("NaN"));
+    }
+}

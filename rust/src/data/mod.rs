@@ -1,0 +1,130 @@
+//! Dataset substrate (Table 1 equivalents).
+//!
+//! The paper's public datasets are replaced by controlled synthetic
+//! generators matched on (K, n, task) — see DESIGN.md §3 for why this
+//! preserves the quantization behaviour under study. Every generator is
+//! deterministic in its seed.
+
+pub mod synthetic;
+pub mod tomo;
+
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Regression,
+    /// ±1 labels.
+    Classification,
+}
+
+/// An in-memory labeled dataset with a train/test split.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub task: Task,
+    /// K_train × n
+    pub train_a: Matrix,
+    pub train_b: Vec<f32>,
+    /// K_test × n
+    pub test_a: Matrix,
+    pub test_b: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.train_a.cols
+    }
+
+    pub fn k_train(&self) -> usize {
+        self.train_a.rows
+    }
+
+    pub fn k_test(&self) -> usize {
+        self.test_a.rows
+    }
+
+    /// Mean squared residual on the training split (Eq. 3 objective).
+    pub fn train_mse(&self, x: &[f32]) -> f64 {
+        mse(&self.train_a, &self.train_b, x)
+    }
+
+    pub fn test_mse(&self, x: &[f32]) -> f64 {
+        mse(&self.test_a, &self.test_b, x)
+    }
+
+    /// Classification accuracy of sign(aᵀx) on the test split.
+    pub fn test_accuracy(&self, x: &[f32]) -> f64 {
+        debug_assert_eq!(self.task, Task::Classification);
+        let pred = self.test_a.matvec(x);
+        let correct = pred
+            .iter()
+            .zip(&self.test_b)
+            .filter(|(&p, &y)| (p >= 0.0) == (y >= 0.0))
+            .count();
+        correct as f64 / self.test_b.len().max(1) as f64
+    }
+}
+
+fn mse(a: &Matrix, b: &[f32], x: &[f32]) -> f64 {
+    let pred = a.matvec(x);
+    let mut acc = 0.0f64;
+    for (&p, &y) in pred.iter().zip(b) {
+        acc += ((p - y) as f64).powi(2);
+    }
+    acc / b.len().max(1) as f64
+}
+
+/// Table 1 rows: (name, K_train, K_test, n, task). Sizes are the paper's
+/// where laptop-feasible, scaled otherwise (documented in DESIGN.md §3).
+pub const TABLE1: &[(&str, usize, usize, usize, Task)] = &[
+    ("synthetic10", 10_000, 10_000, 10, Task::Regression),
+    ("synthetic100", 10_000, 10_000, 100, Task::Regression),
+    ("synthetic1000", 10_000, 10_000, 1_000, Task::Regression),
+    ("yearprediction", 46_371, 5_163, 90, Task::Regression), // 1/10 of paper's K
+    ("cadata", 10_000, 10_640, 8, Task::Regression),
+    ("cpusmall", 6_000, 2_192, 12, Task::Regression),
+    ("cod-rna", 20_000, 27_161, 8, Task::Classification), // 1/3 K_train, 1/10 K_test
+    ("gisette", 6_000, 1_000, 500, Task::Classification), // n 5000 → 500
+];
+
+/// Build a Table 1 dataset by name.
+pub fn by_name(name: &str, seed: u64) -> anyhow::Result<Dataset> {
+    let row = TABLE1
+        .iter()
+        .find(|r| r.0 == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+    let (_, ktr, kte, n, task) = *row;
+    Ok(match task {
+        Task::Regression => synthetic::make_regression(name, ktr, kte, n, seed),
+        Task::Classification => synthetic::make_classification(name, ktr, kte, n, seed),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_by_name_shapes() {
+        let d = by_name("cadata", 1).unwrap();
+        assert_eq!(d.n(), 8);
+        assert_eq!(d.k_train(), 10_000);
+        assert_eq!(d.k_test(), 10_640);
+        assert_eq!(d.task, Task::Regression);
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(by_name("nope", 1).is_err());
+    }
+
+    #[test]
+    fn mse_zero_model_is_label_power() {
+        let d = by_name("cpusmall", 2).unwrap();
+        let zero = vec![0.0f32; d.n()];
+        let mse = d.train_mse(&zero);
+        let mean_b2: f64 =
+            d.train_b.iter().map(|&b| (b as f64).powi(2)).sum::<f64>() / d.k_train() as f64;
+        assert!((mse - mean_b2).abs() < 1e-6 * mean_b2.max(1.0));
+    }
+}

@@ -1,0 +1,173 @@
+//! Tomographic-reconstruction workload (paper §1, Table 1 bottom row).
+//!
+//! A 2-D Shepp-Logan-style phantom is observed through a parallel-beam
+//! projector; reconstruction is least squares over the ray equations
+//! R·f = p, i.e. exactly the linear model of §2 with n = pixels. The
+//! paper's data-movement argument (quantize projection rows) applies
+//! unchanged; the 128³ volume becomes a 64² slice for laptop scale
+//! (DESIGN.md §3).
+
+use super::{Dataset, Task};
+use crate::tensor::Matrix;
+
+/// Ellipse in normalized [-1, 1]² coordinates.
+struct Ellipse {
+    x0: f32,
+    y0: f32,
+    a: f32,
+    b: f32,
+    angle_deg: f32,
+    value: f32,
+}
+
+/// The classic Shepp-Logan parameter set (standard contrast variant).
+const SHEPP_LOGAN: &[Ellipse] = &[
+    Ellipse { x0: 0.0, y0: 0.0, a: 0.69, b: 0.92, angle_deg: 0.0, value: 1.0 },
+    Ellipse { x0: 0.0, y0: -0.0184, a: 0.6624, b: 0.874, angle_deg: 0.0, value: -0.8 },
+    Ellipse { x0: 0.22, y0: 0.0, a: 0.11, b: 0.31, angle_deg: -18.0, value: -0.2 },
+    Ellipse { x0: -0.22, y0: 0.0, a: 0.16, b: 0.41, angle_deg: 18.0, value: -0.2 },
+    Ellipse { x0: 0.0, y0: 0.35, a: 0.21, b: 0.25, angle_deg: 0.0, value: 0.1 },
+    Ellipse { x0: 0.0, y0: 0.1, a: 0.046, b: 0.046, angle_deg: 0.0, value: 0.1 },
+    Ellipse { x0: 0.0, y0: -0.1, a: 0.046, b: 0.046, angle_deg: 0.0, value: 0.1 },
+    Ellipse { x0: -0.08, y0: -0.605, a: 0.046, b: 0.023, angle_deg: 0.0, value: 0.1 },
+    Ellipse { x0: 0.0, y0: -0.605, a: 0.023, b: 0.023, angle_deg: 0.0, value: 0.1 },
+    Ellipse { x0: 0.06, y0: -0.605, a: 0.023, b: 0.046, angle_deg: 0.0, value: 0.1 },
+];
+
+/// Rasterize the phantom at `size`×`size`.
+pub fn phantom(size: usize) -> Vec<f32> {
+    let mut img = vec![0.0f32; size * size];
+    for (i, px) in img.iter_mut().enumerate() {
+        let r = i / size;
+        let c = i % size;
+        let y = 1.0 - 2.0 * (r as f32 + 0.5) / size as f32;
+        let x = 2.0 * (c as f32 + 0.5) / size as f32 - 1.0;
+        for e in SHEPP_LOGAN {
+            let th = e.angle_deg.to_radians();
+            let (s, cth) = (th.sin(), th.cos());
+            let dx = x - e.x0;
+            let dy = y - e.y0;
+            let xr = dx * cth + dy * s;
+            let yr = -dx * s + dy * cth;
+            if (xr / e.a).powi(2) + (yr / e.b).powi(2) <= 1.0 {
+                *px += e.value;
+            }
+        }
+    }
+    img
+}
+
+/// Parallel-beam projector: `n_angles` uniformly spaced directions,
+/// `size` detector bins each; each ray is a length-weighted line integral
+/// sampled at sub-pixel steps. Returns the system matrix (rows = rays) —
+/// dense, because the quantized sample store is dense.
+pub fn projector(size: usize, n_angles: usize) -> Matrix {
+    let n = size * size;
+    let mut a = Matrix::zeros(n_angles * size, n);
+    let steps = size * 2;
+    let step_len = 2.0 * std::f32::consts::SQRT_2 / steps as f32;
+    for ai in 0..n_angles {
+        let theta = std::f32::consts::PI * ai as f32 / n_angles as f32;
+        let (dirx, diry) = (theta.cos(), theta.sin());
+        // detector axis ⊥ ray direction
+        let (px, py) = (-diry, dirx);
+        for det in 0..size {
+            let t = 2.0 * (det as f32 + 0.5) / size as f32 - 1.0;
+            let row = a.row_mut(ai * size + det);
+            // march along the ray through [-√2, √2]
+            for s in 0..steps {
+                let u = -std::f32::consts::SQRT_2 + (s as f32 + 0.5) * step_len;
+                let x = t * px + u * dirx;
+                let y = t * py + u * diry;
+                if !(-1.0..1.0).contains(&x) || !(-1.0..1.0).contains(&y) {
+                    continue;
+                }
+                let c = ((x + 1.0) * 0.5 * size as f32) as usize;
+                let r = ((1.0 - y) * 0.5 * size as f32) as usize;
+                let (c, r) = (c.min(size - 1), r.min(size - 1));
+                row[r * size + c] += step_len;
+            }
+        }
+    }
+    a
+}
+
+/// Full tomography dataset: rays as samples, sinogram as labels.
+/// Train = all rays; test = a held-out random 10% of rays re-used for
+/// generalization MSE (reconstruction error is reported separately).
+pub fn make_tomography(size: usize, n_angles: usize, seed: u64) -> (Dataset, Vec<f32>) {
+    let img = phantom(size);
+    let proj = projector(size, n_angles);
+    let sino = proj.matvec(&img);
+    let mut rng = crate::rng::Rng::new(seed);
+    let k = proj.rows;
+    let mut idx: Vec<usize> = (0..k).collect();
+    rng.shuffle(&mut idx);
+    let n_test = k / 10;
+    let test_idx = &idx[..n_test];
+    let train_idx = &idx[n_test..];
+    let ds = Dataset {
+        name: format!("tomo{size}x{size}_{n_angles}ang"),
+        task: Task::Regression,
+        train_a: proj.gather_rows(train_idx),
+        train_b: train_idx.iter().map(|&i| sino[i]).collect(),
+        test_a: proj.gather_rows(test_idx),
+        test_b: test_idx.iter().map(|&i| sino[i]).collect(),
+    };
+    (ds, img)
+}
+
+/// Pixel-space reconstruction RMSE against the phantom.
+pub fn reconstruction_rmse(recon: &[f32], truth: &[f32]) -> f64 {
+    let acc: f64 = recon
+        .iter()
+        .zip(truth)
+        .map(|(&r, &t)| ((r - t) as f64).powi(2))
+        .sum();
+    (acc / truth.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phantom_structure() {
+        let img = phantom(32);
+        assert_eq!(img.len(), 1024);
+        // center is inside the big ellipse + the darker inner one
+        let center = img[16 * 32 + 16];
+        assert!(center > 0.0 && center < 1.0, "center {center}");
+        // corners are empty
+        assert_eq!(img[0], 0.0);
+        assert_eq!(img[1023], 0.0);
+    }
+
+    #[test]
+    fn projector_row_mass_reasonable() {
+        let p = projector(16, 8);
+        assert_eq!(p.rows, 128);
+        assert_eq!(p.cols, 256);
+        // a central ray must traverse ~2 units of path length
+        let central = p.row(8); // angle 0, center detector
+        let mass: f32 = central.iter().sum();
+        assert!(mass > 1.0 && mass < 3.0, "mass {mass}");
+    }
+
+    #[test]
+    fn sinogram_consistent() {
+        let (ds, img) = make_tomography(16, 8, 1);
+        // labels equal projector × phantom by construction: verify on train
+        let pred = ds.train_a.matvec(&img);
+        for (p, b) in pred.iter().zip(&ds.train_b) {
+            assert!((p - b).abs() < 1e-4);
+        }
+        assert!(ds.train_mse(&img) < 1e-8);
+    }
+
+    #[test]
+    fn rmse_zero_for_perfect() {
+        let img = phantom(16);
+        assert_eq!(reconstruction_rmse(&img, &img), 0.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Cycle model of the FCCM'17 SGD pipelines (paper Fig 13/14).
+//!
+//! Published parameters:
+//! * float  — latency 36 cycles, data width 64 B, rate 64 B/cycle
+//! * Q2/4/8 — latency log₂(K)+5 cycles, width 64 B, rate 64 B/cycle
+//! * Q1     — latency 12 cycles, width 32 B, rate 32 B/cycle (the pipeline
+//!   does not scale out at 1 bit: Q1 is *compute-bound*, Fig 14b)
+//!
+//! Epoch time = max(memory time, compute time) + drain latency, where
+//! memory time = bytes / DRAM bandwidth and compute time = beats / clock.
+
+/// Memory bandwidth of the simulated platform (bytes/s). The FCCM target
+/// (Intel HARP-like) sustains ~15 GB/s to the accelerator.
+pub const MEM_BANDWIDTH_BYTES: f64 = 15.0e9;
+/// Accelerator clock (Hz).
+pub const FPGA_CLOCK_HZ: f64 = 200.0e6;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    Float,
+    /// Qb with b ∈ {1, 2, 4, 8}
+    Q(u32),
+}
+
+impl Precision {
+    pub fn bits(&self) -> u32 {
+        match self {
+            Precision::Float => 32,
+            Precision::Q(b) => *b,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Precision::Float => "float".into(),
+            Precision::Q(b) => format!("Q{b}"),
+        }
+    }
+}
+
+/// The pipeline spec from Fig 13/14.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineSpec {
+    pub latency_cycles: f64,
+    pub width_bytes_per_cycle: f64,
+}
+
+impl PipelineSpec {
+    pub fn for_precision(p: Precision, n_features: usize) -> Self {
+        // K in Fig 14a is the dot-product reduction fan-in ≈ values/line
+        let k = (512.0 / p.bits() as f64).max(2.0);
+        let _ = n_features;
+        match p {
+            Precision::Float => {
+                PipelineSpec { latency_cycles: 36.0, width_bytes_per_cycle: 64.0 }
+            }
+            Precision::Q(1) => PipelineSpec { latency_cycles: 12.0, width_bytes_per_cycle: 32.0 },
+            Precision::Q(_) => {
+                PipelineSpec { latency_cycles: k.log2() + 5.0, width_bytes_per_cycle: 64.0 }
+            }
+        }
+    }
+}
+
+/// Bytes per epoch for K samples × n features at this precision
+/// (+1 full-precision label per sample).
+pub fn epoch_bytes(p: Precision, k_samples: usize, n_features: usize) -> f64 {
+    let sample_bits = (n_features as u64 * p.bits() as u64) as f64;
+    k_samples as f64 * (sample_bits / 8.0 + 4.0)
+}
+
+/// Simulated wall-clock seconds for one SGD epoch.
+pub fn epoch_seconds(p: Precision, k_samples: usize, n_features: usize) -> f64 {
+    let spec = PipelineSpec::for_precision(p, n_features);
+    let bytes = epoch_bytes(p, k_samples, n_features);
+    let mem_time = bytes / MEM_BANDWIDTH_BYTES;
+    // the pipeline consumes width_bytes_per_cycle of *quantized* data/beat
+    let compute_time = bytes / spec.width_bytes_per_cycle / FPGA_CLOCK_HZ;
+    // per-sample drain latency (dependent updates serialize the drain)
+    let drain = spec.latency_cycles / FPGA_CLOCK_HZ * k_samples as f64 * 0.05;
+    mem_time.max(compute_time) + drain
+}
+
+/// Loss-vs-time series: pair per-epoch losses with the cumulative simulated
+/// epoch times — Fig 5's axes.
+pub fn loss_vs_time(p: Precision, k: usize, n: usize, losses: &[f64]) -> Vec<(f64, f64)> {
+    let dt = epoch_seconds(p, k, n);
+    losses
+        .iter()
+        .enumerate()
+        .map(|(e, &l)| (e as f64 * dt, l))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig13_float_params() {
+        let s = PipelineSpec::for_precision(Precision::Float, 100);
+        assert_eq!(s.latency_cycles, 36.0);
+        assert_eq!(s.width_bytes_per_cycle, 64.0);
+    }
+
+    #[test]
+    fn fig14_q_latency() {
+        // Q8: K = 512/8 = 64 values/line → latency log2(64)+5 = 11
+        let s = PipelineSpec::for_precision(Precision::Q(8), 100);
+        assert!((s.latency_cycles - 11.0).abs() < 1e-9);
+        // Q1 is half-width
+        let q1 = PipelineSpec::for_precision(Precision::Q(1), 100);
+        assert_eq!(q1.width_bytes_per_cycle, 32.0);
+    }
+
+    #[test]
+    fn bytes_scale_with_bits() {
+        let b32 = epoch_bytes(Precision::Float, 1000, 100);
+        let b4 = epoch_bytes(Precision::Q(4), 1000, 100);
+        assert!((b32 / b4 - 32.0 / 4.0).abs() < 0.7); // ≈8x minus label overhead
+    }
+
+    #[test]
+    fn monotone_in_precision() {
+        let mut prev = f64::INFINITY;
+        for p in [Precision::Float, Precision::Q(8), Precision::Q(4), Precision::Q(2)] {
+            let t = epoch_seconds(p, 50_000, 90);
+            assert!(t < prev, "{:?} not faster", p);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn q1_compute_bound() {
+        // At 1 bit the half-width pipeline, not memory, limits throughput:
+        // check compute time exceeds memory time.
+        let bytes = epoch_bytes(Precision::Q(1), 100_000, 1000);
+        let spec = PipelineSpec::for_precision(Precision::Q(1), 1000);
+        let mem = bytes / MEM_BANDWIDTH_BYTES;
+        let compute = bytes / spec.width_bytes_per_cycle / FPGA_CLOCK_HZ;
+        assert!(compute > mem, "Q1 should be compute-bound: {compute} vs {mem}");
+    }
+
+    #[test]
+    fn loss_time_series_monotone_time() {
+        let ts = loss_vs_time(Precision::Q(4), 1000, 100, &[1.0, 0.5, 0.25]);
+        assert_eq!(ts.len(), 3);
+        assert!(ts.windows(2).all(|w| w[1].0 > w[0].0));
+    }
+}

@@ -1,0 +1,28 @@
+//! # ZipML — end-to-end low-precision training with provable guarantees
+//!
+//! Rust + JAX + Pallas reproduction of Zhang et al. (2016), "The ZipML
+//! Framework for Training Models with End-to-End Low Precision".
+//!
+//! Three layers (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: quantized sample store,
+//!   variance-optimal level placement, SGD driver, refetch heuristics,
+//!   FPGA bandwidth simulator, experiment harness.
+//! * **L2 (python/compile/model.py)** — JAX step functions, AOT-lowered to
+//!   HLO text once at build time (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (stochastic
+//!   quantization, double-sampling gradient, Clenshaw) inside the L2 HLO.
+//!
+//! Python never runs at training time: [`runtime::Runtime`] executes the
+//! artifacts on the PJRT CPU client from the Rust hot loop.
+
+pub mod bench;
+pub mod cheby;
+pub mod coordinator;
+pub mod data;
+pub mod fpga;
+pub mod proptest;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod sgd;
+pub mod tensor;

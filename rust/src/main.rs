@@ -1,0 +1,205 @@
+//! `zipml` — leader entrypoint / CLI for the ZipML reproduction.
+//!
+//! Commands:
+//!   zipml list                         list figures/tables and artifacts
+//!   zipml figure <id>|all [--quick]    regenerate a paper figure (CSV + stdout)
+//!   zipml train [opts]                 train one model/mode combination
+//!   zipml fpga-sim [--k K --n N]       print the pipeline cycle model
+//!   zipml quantize-demo                optimal-vs-uniform levels demo
+//!
+//! (clap is not in the offline crate set — parsing is hand-rolled.)
+
+use anyhow::{bail, Result};
+
+use zipml::coordinator::{self, Ctx};
+use zipml::data;
+use zipml::sgd::{self, modes::RefetchStrategy, Mode, ModelKind, TrainConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        None | Some("help") | Some("--help") => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        Some("list") => cmd_list(),
+        Some("figure") => cmd_figure(&args[1..]),
+        Some("train") => cmd_train(&args[1..]),
+        Some("fpga-sim") => cmd_fpga(&args[1..]),
+        Some("quantize-demo") => cmd_quantize_demo(),
+        Some(other) => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "zipml — end-to-end low-precision training (ZipML reproduction)
+
+USAGE:
+  zipml list
+  zipml figure <id>|all [--quick] [--seed N]
+  zipml train --model linreg|lssvm|logistic|svm --mode MODE [--dataset D]
+              [--bits B] [--epochs E] [--lr F] [--batch N] [--seed N]
+       MODE: fp32 | naive | ds | dsu8 | e2e | mq | gq | optimal | round
+             | cheby | poly | refetch-l1 | refetch-jl
+  zipml fpga-sim [--k K] [--n N]
+  zipml quantize-demo";
+
+fn cmd_list() -> Result<()> {
+    println!("figures / tables:");
+    for (id, desc, _) in coordinator::FIGURES {
+        println!("  {id:10} {desc}");
+    }
+    if let Ok(rt) = zipml::runtime::Runtime::open_default() {
+        println!("\nartifacts ({}):", rt.manifest.artifacts.len());
+        for name in rt.manifest.artifacts.keys() {
+            println!("  {name}");
+        }
+    } else {
+        println!("\n(artifacts not built — run `make artifacts`)");
+    }
+    println!("\ndatasets:");
+    for (name, ktr, kte, n, task) in data::TABLE1 {
+        println!("  {name:16} train={ktr:7} test={kte:7} n={n:5} {task:?}");
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &[String]) -> Result<()> {
+    let id = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .map(String::as_str)
+        .unwrap_or("all");
+    let mut ctx = Ctx::new(flag(args, "--quick"))?;
+    if let Some(s) = opt(args, "--seed") {
+        ctx.seed = s.parse()?;
+    }
+    if id == "all" {
+        for (fid, _, _) in coordinator::FIGURES {
+            println!("\n##### running {fid} #####");
+            coordinator::run_figure(&ctx, fid)?;
+        }
+    } else {
+        coordinator::run_figure(&ctx, id)?;
+    }
+    Ok(())
+}
+
+fn parse_mode(mode: &str, bits: u32) -> Result<Mode> {
+    Ok(match mode {
+        "fp32" | "full" => Mode::Full,
+        "naive" => Mode::Naive { bits },
+        "ds" => Mode::DoubleSample { bits },
+        "dsu8" => Mode::DoubleSampleU8 { bits },
+        "e2e" => Mode::EndToEnd { bits_s: bits, bits_m: 8, bits_g: 8 },
+        "mq" => Mode::ModelQuant { bits },
+        "gq" => Mode::GradQuant { bits },
+        "optimal" => Mode::OptimalDs { levels: 1 << bits },
+        "round" => Mode::NearestRound { bits },
+        "cheby" => Mode::Cheby { bits },
+        "poly" => Mode::PolyDs { bits },
+        "refetch-l1" => Mode::Refetch { bits, strategy: RefetchStrategy::L1 },
+        "refetch-jl" => Mode::Refetch {
+            bits,
+            strategy: RefetchStrategy::L2Jl { sketch_dim: 64, delta: 0.05 },
+        },
+        other => bail!("unknown mode {other}"),
+    })
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let model = match opt(args, "--model").unwrap_or("linreg") {
+        "linreg" => ModelKind::Linreg,
+        "lssvm" => ModelKind::Lssvm { c: opt(args, "--c").map(|v| v.parse()).transpose()?.unwrap_or(1e-4) },
+        "logistic" => ModelKind::Logistic,
+        "svm" => ModelKind::Svm,
+        other => bail!("unknown model {other}"),
+    };
+    let bits: u32 = opt(args, "--bits").map(|v| v.parse()).transpose()?.unwrap_or(5);
+    let mode = parse_mode(opt(args, "--mode").unwrap_or("ds"), bits)?;
+    let dataset_name = opt(args, "--dataset").unwrap_or(if model.is_classification() {
+        "cod-rna"
+    } else {
+        "synthetic100"
+    });
+    let seed: u64 = opt(args, "--seed").map(|v| v.parse()).transpose()?.unwrap_or(42);
+
+    let ds = data::by_name(dataset_name, seed)?;
+    let rt = zipml::runtime::Runtime::open_default()?;
+    let mut cfg = TrainConfig::new(model, mode);
+    cfg.epochs = opt(args, "--epochs").map(|v| v.parse()).transpose()?.unwrap_or(15);
+    cfg.lr0 = opt(args, "--lr").map(|v| v.parse()).transpose()?.unwrap_or(0.05);
+    cfg.batch = opt(args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(64);
+    cfg.seed = seed;
+
+    println!("training {model:?} mode={} on {dataset_name} (n={}, K={})",
+        cfg.mode.label(), ds.n(), ds.k_train());
+    let r = sgd::train(&rt, &ds, &cfg)?;
+    for (e, l) in r.loss_curve.iter().enumerate() {
+        println!("  epoch {e:3}  loss {l:.6}");
+    }
+    println!(
+        "final={:.6} wall={:.2}s bytes/epoch={:.3e} refetch={:.2}%{}",
+        r.final_loss,
+        r.wall_secs,
+        r.sample_bytes_per_epoch,
+        r.refetch_fraction * 100.0,
+        if r.diverged { " DIVERGED" } else { "" }
+    );
+    let st = rt.stats();
+    println!("runtime: {} executions, {} compiles, {:.3}s in PJRT",
+        st.executions, st.compile_count, st.exec_nanos as f64 * 1e-9);
+    Ok(())
+}
+
+fn cmd_fpga(args: &[String]) -> Result<()> {
+    let k: usize = opt(args, "--k").map(|v| v.parse()).transpose()?.unwrap_or(50_000);
+    let n: usize = opt(args, "--n").map(|v| v.parse()).transpose()?.unwrap_or(90);
+    println!("FPGA pipeline model, K={k} samples, n={n} features:");
+    let base = zipml::fpga::epoch_seconds(zipml::fpga::Precision::Float, k, n);
+    for p in [
+        zipml::fpga::Precision::Float,
+        zipml::fpga::Precision::Q(8),
+        zipml::fpga::Precision::Q(4),
+        zipml::fpga::Precision::Q(2),
+        zipml::fpga::Precision::Q(1),
+    ] {
+        let t = zipml::fpga::epoch_seconds(p, k, n);
+        println!("  {:6}  epoch {:.4e}s   speedup {:.2}x", p.label(), t, base / t);
+    }
+    println!("  hogwild(10 cores) epoch {:.4e}s",
+        zipml::fpga::hogwild::hogwild_epoch_seconds(k, n, 10));
+    Ok(())
+}
+
+fn cmd_quantize_demo() -> Result<()> {
+    let mut rng = zipml::rng::Rng::new(7);
+    let mut pts: Vec<f32> = (0..3000).map(|_| (rng.normal() * 0.1 + 0.3).clamp(0.0, 1.0)).collect();
+    pts.extend((0..500).map(|_| (rng.normal() * 0.03 + 0.85).clamp(0.0, 1.0)));
+    for nlevels in [4usize, 8, 16] {
+        let uniform: Vec<f32> = (0..nlevels).map(|i| i as f32 / (nlevels - 1) as f32).collect();
+        let opt_lv = zipml::quant::optimal_levels(&pts, nlevels);
+        let mv_u = zipml::quant::quantization_variance(&pts, &uniform);
+        let mv_o = zipml::quant::quantization_variance(&pts, &opt_lv);
+        println!("levels={nlevels:2}  uniform MV={mv_u:.3e}  optimal MV={mv_o:.3e}  gain={:.2}x",
+            mv_u / mv_o);
+    }
+    Ok(())
+}

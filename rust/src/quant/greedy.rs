@@ -1,0 +1,174 @@
+//! ADAQUANT (supplementary §I, Algorithm 1): a near-linear-time greedy
+//! merge producing ≤ 2(1+γ)k + δ intervals whose total quantization error
+//! is at most (1 + 1/γ)·OPT_k (Theorem 9). Its endpoints then serve as DP
+//! candidates for a true k-level 2-approximation in O(N log N + k³).
+
+use super::optimal::quantization_variance;
+
+/// One contiguous run of sorted points, quantized to its own endpoints.
+#[derive(Clone, Copy, Debug)]
+struct Interval {
+    /// start index into the sorted point array (inclusive)
+    i0: usize,
+    /// end index (inclusive)
+    i1: usize,
+}
+
+/// err(Ω, I) with I spanning sorted points [i0, i1]: endpoints at the
+/// extreme points of the run.
+fn run_err(s1: &[f64], s2: &[f64], xs: &[f64], iv: Interval) -> f64 {
+    let (a, b) = (xs[iv.i0], xs[iv.i1]);
+    let cnt = (iv.i1 - iv.i0 + 1) as f64;
+    let p1 = s1[iv.i1 + 1] - s1[iv.i0];
+    let p2 = s2[iv.i1 + 1] - s2[iv.i0];
+    ((a + b) * p1 - p2 - a * b * cnt).max(0.0)
+}
+
+/// Run ADAQUANT: returns the *endpoints* (candidate levels) of the final
+/// partition, sorted ascending. `gamma` trades approximation for output
+/// size; `delta` is the loop slack (Algorithm 1's 2(1+γ)k + δ bound).
+pub fn adaquant(points: &[f32], k: usize, gamma: f64, delta: usize) -> Vec<f32> {
+    assert!(k >= 1);
+    let mut xs: Vec<f64> = points.iter().map(|&x| x as f64).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    let n = xs.len();
+    if n <= 2 * k + 2 {
+        return xs.iter().map(|&x| x as f32).collect();
+    }
+    let mut s1 = vec![0.0f64];
+    let mut s2 = vec![0.0f64];
+    for &x in &xs {
+        s1.push(s1.last().unwrap() + x);
+        s2.push(s2.last().unwrap() + x * x);
+    }
+
+    let keep = ((1.0 + gamma) * k as f64).ceil() as usize;
+    let target = 2 * keep + delta;
+    let mut ivs: Vec<Interval> = (0..n).map(|i| Interval { i0: i, i1: i }).collect();
+
+    while ivs.len() > target {
+        // Pair up consecutive intervals; the `keep` merged pairs with the
+        // largest error get split back (kept un-merged), the rest merge.
+        let mut merged: Vec<(f64, usize)> = Vec::with_capacity(ivs.len() / 2);
+        for pi in 0..ivs.len() / 2 {
+            let a = ivs[2 * pi];
+            let b = ivs[2 * pi + 1];
+            let m = Interval { i0: a.i0, i1: b.i1 };
+            merged.push((run_err(&s1, &s2, &xs, m), pi));
+        }
+        // indices of pairs to keep split (largest error)
+        let mut order: Vec<usize> = (0..merged.len()).collect();
+        order.sort_by(|&a, &b| merged[b].0.partial_cmp(&merged[a].0).unwrap());
+        let mut split = vec![false; merged.len()];
+        for &pi in order.iter().take(keep) {
+            split[pi] = true;
+        }
+        let mut next: Vec<Interval> = Vec::with_capacity(keep * 2 + merged.len());
+        for pi in 0..merged.len() {
+            if split[pi] {
+                next.push(ivs[2 * pi]);
+                next.push(ivs[2 * pi + 1]);
+            } else {
+                next.push(Interval { i0: ivs[2 * pi].i0, i1: ivs[2 * pi + 1].i1 });
+            }
+        }
+        if ivs.len() % 2 == 1 {
+            next.push(*ivs.last().unwrap());
+        }
+        if next.len() >= ivs.len() {
+            break; // cannot shrink further (all pairs kept)
+        }
+        ivs = next;
+    }
+
+    // endpoints of the partition = candidate quantization levels
+    let mut endpoints: Vec<f64> = Vec::with_capacity(ivs.len() + 1);
+    for iv in &ivs {
+        endpoints.push(xs[iv.i0]);
+        endpoints.push(xs[iv.i1]);
+    }
+    endpoints.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    endpoints.dedup();
+    endpoints.iter().map(|&x| x as f32).collect()
+}
+
+/// Full pipeline: ADAQUANT candidates → DP restricted to them → k levels.
+/// O(N log N + k³)-style 2-approximation (§3.2 "2-Approximation in
+/// Almost-Linear Time").
+pub fn adaquant_levels(points: &[f32], nlevels: usize) -> Vec<f32> {
+    let cands = adaquant(points, nlevels, 1.0, 2);
+    if cands.len() <= nlevels {
+        let mut lv = cands;
+        while lv.len() < nlevels {
+            lv.push(*lv.last().unwrap_or(&0.0));
+        }
+        return lv;
+    }
+    // Reuse the DP over the candidate set: emulate by calling the
+    // discretized DP with candidates = exact candidate values. The optimal
+    // module's DP wants a uniform grid, so we run its internal path by
+    // passing candidates through `optimal_levels` on a weighted proxy:
+    // simplest correct approach — DP over candidate values directly.
+    super::optimal::dp_on_candidates_public(points, &cands, nlevels)
+}
+
+/// Theorem-9-style quality check helper: total err of partitioning `points`
+/// onto the ADAQUANT endpoint grid.
+pub fn adaquant_quality(points: &[f32], k: usize, gamma: f64) -> (usize, f64) {
+    let cands = adaquant(points, k, gamma, 2);
+    (cands.len(), quantization_variance(points, &cands))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::optimal::{optimal_levels, quantization_variance};
+    use crate::rng::Rng;
+
+    #[test]
+    fn output_size_bounded() {
+        let mut rng = Rng::new(1);
+        let pts: Vec<f32> = (0..5000).map(|_| rng.f32()).collect();
+        for k in [2usize, 4, 8] {
+            let cands = adaquant(&pts, k, 1.0, 2);
+            // ≤ 2(1+γ)k + δ intervals, each contributing ≤ 2 endpoints
+            let bound = 2 * (2 * (2 * k) + 2);
+            assert!(cands.len() <= bound, "k={k}: {} > {}", cands.len(), bound);
+            assert!(cands.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn candidates_cover_range() {
+        let mut rng = Rng::new(2);
+        let pts: Vec<f32> = (0..1000).map(|_| rng.normal()).collect();
+        let cands = adaquant(&pts, 4, 1.0, 2);
+        let lo = pts.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = pts.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!((cands[0] - lo).abs() < 1e-6);
+        assert!((cands.last().unwrap() - hi).abs() < 1e-6);
+    }
+
+    #[test]
+    fn approximation_vs_exact_dp() {
+        // the (1 + 1/γ) guarantee with γ=1 ⇒ ≤ 2·OPT on the 4k-interval
+        // output; after the DP restriction we stay within a modest factor.
+        let mut rng = Rng::new(3);
+        let pts: Vec<f32> = (0..800)
+            .map(|_| if rng.f32() < 0.7 { rng.normal() * 0.1 } else { rng.normal() + 3.0 })
+            .collect();
+        for k in [4usize, 8] {
+            let exact = quantization_variance(&pts, &optimal_levels(&pts, k));
+            let greedy = quantization_variance(&pts, &adaquant_levels(&pts, k));
+            assert!(greedy <= 2.0 * exact + 1e-9, "k={k} greedy {greedy} exact {exact}");
+        }
+    }
+
+    #[test]
+    fn tiny_input_passthrough() {
+        let pts = [0.1f32, 0.5, 0.9];
+        let cands = adaquant(&pts, 4, 1.0, 2);
+        assert_eq!(cands, vec![0.1, 0.5, 0.9]);
+    }
+}

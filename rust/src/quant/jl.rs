@@ -1,0 +1,115 @@
+//! Low-randomness ±1 Johnson-Lindenstrauss sketches (§G.3.1, Theorem 5).
+//!
+//! Used by ℓ2-refetching: transmitter and receiver share a seed, both
+//! materialize the same r×n ±1 matrix row stream, and estimate
+//! aᵀx = (‖M a − M x‖² − ‖M a‖² − ‖M x‖²)/(−2) from sketches alone —
+//! detecting potential hinge-gradient sign flips with sublinear
+//! communication.
+
+use crate::rng::Rng;
+
+/// A seeded ±1/√r sketching matrix, materialized on demand.
+#[derive(Clone, Debug)]
+pub struct JlSketch {
+    pub r: usize,
+    pub n: usize,
+    seed: u64,
+}
+
+impl JlSketch {
+    pub fn new(r: usize, n: usize, seed: u64) -> Self {
+        JlSketch { r, n, seed }
+    }
+
+    /// Sketch s = M v, with M_ij ∈ {±1/√r} derived from the shared seed.
+    pub fn sketch(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.n);
+        let inv_sqrt_r = 1.0 / (self.r as f32).sqrt();
+        let mut out = vec![0.0f32; self.r];
+        // One RNG per sketch row keeps rows independent and allows the
+        // receiver to regenerate any row without storing the matrix.
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut rng = Rng::new(self.seed ^ ((i as u64 + 1) * 0x9E3779B97F4A7C15));
+            let mut acc = 0.0f32;
+            // draw 64 signs per u64
+            let mut j = 0;
+            while j < self.n {
+                let mut bits = rng.next_u64();
+                let lim = (self.n - j).min(64);
+                for _ in 0..lim {
+                    let sign = if bits & 1 == 0 { 1.0f32 } else { -1.0f32 };
+                    acc += sign * v[j];
+                    bits >>= 1;
+                    j += 1;
+                }
+            }
+            *o = acc * inv_sqrt_r;
+        }
+        out
+    }
+
+    /// Estimate ⟨a, x⟩ from the two sketches (Corollary 4's identity).
+    pub fn est_dot(sa: &[f32], sx: &[f32]) -> f32 {
+        crate::tensor::dot(sa, sx)
+    }
+
+    /// Communication cost of one sketched sample in bytes (r floats at
+    /// `bits_per_coord` precision).
+    pub fn sketch_bytes(&self, bits_per_coord: u32) -> usize {
+        (self.r * bits_per_coord as usize).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{dot, norm2};
+
+    #[test]
+    fn norm_preserved_within_factor() {
+        let mut rng = Rng::new(1);
+        let n = 512;
+        let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let jl = JlSketch::new(256, n, 42);
+        let s = jl.sketch(&v);
+        let ratio = norm2(&s) / norm2(&v);
+        assert!((0.8..1.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn dot_estimated() {
+        let mut rng = Rng::new(2);
+        let n = 256;
+        let a: Vec<f32> = (0..n).map(|_| rng.normal() / (n as f32).sqrt()).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() / (n as f32).sqrt()).collect();
+        let jl = JlSketch::new(512, n, 7);
+        let (sa, sx) = (jl.sketch(&a), jl.sketch(&x));
+        let est = JlSketch::est_dot(&sa, &sx);
+        let exact = dot(&a, &x);
+        assert!((est - exact).abs() < 0.25, "est {est} exact {exact}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let v: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let a = JlSketch::new(16, 64, 5).sketch(&v);
+        let b = JlSketch::new(16, 64, 5).sketch(&v);
+        assert_eq!(a, b);
+        let c = JlSketch::new(16, 64, 6).sketch(&v);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sketch_is_linear() {
+        let mut rng = Rng::new(3);
+        let n = 128;
+        let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let diff: Vec<f32> = a.iter().zip(&x).map(|(p, q)| p - q).collect();
+        let jl = JlSketch::new(64, n, 11);
+        let (sa, sx, sd) = (jl.sketch(&a), jl.sketch(&x), jl.sketch(&diff));
+        for i in 0..64 {
+            assert!((sd[i] - (sa[i] - sx[i])).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! The ZipML numeric-format library: stochastic quantization, scaling,
+//! bit-packed storage, and variance-optimal level placement.
+//!
+//! Layout:
+//! * [`scaling`]    — row / column scaling functions M(v) (§A.3)
+//! * [`stochastic`] — unbiased stochastic quantizer Q(v, s) (§2.1)
+//! * [`packing`]    — bit-packed sample store + the log₂k double-sample
+//!   encoding (§2.2 "Overhead of Storing Samples")
+//! * [`optimal`]    — exact & discretized dynamic programs for variance-
+//!   optimal quantization points (§3.1–3.2)
+//! * [`greedy`]     — ADAQUANT, the near-linear 2-approximation (§I)
+//! * [`jl`]         — low-randomness ±1 Johnson-Lindenstrauss sketches used
+//!   by ℓ2-refetching (§G.3)
+
+pub mod greedy;
+pub mod jl;
+pub mod optimal;
+pub mod packing;
+pub mod scaling;
+pub mod stochastic;
+
+pub use greedy::adaquant;
+pub use optimal::{discretized_optimal_levels, optimal_levels, quantization_variance};
+pub use packing::{DoubleSampleBlock, PackedMatrix};
+pub use scaling::ColumnScale;
+pub use stochastic::{dequantize_index, quantize_indices, quantize_values, uniform_levels};
+
+/// How quantization levels are placed within the scaled range.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LevelPlacement {
+    /// `s` uniform intervals over [-1, 1] (scaled) — the baseline every
+    /// low-precision system uses for >1 bit (§3.3 "State-of-the-art").
+    Uniform { intervals: u32 },
+    /// Explicit level grid (variance-optimal DP / ADAQUANT output),
+    /// in *absolute* (unscaled) coordinates.
+    Explicit(Vec<f32>),
+}
+
+impl LevelPlacement {
+    /// Number of distinct representable points (drives bits-per-value).
+    pub fn num_levels(&self) -> usize {
+        match self {
+            LevelPlacement::Uniform { intervals } => *intervals as usize + 1,
+            LevelPlacement::Explicit(l) => l.len(),
+        }
+    }
+
+    /// Bits needed to index a level.
+    pub fn bits(&self) -> u32 {
+        let n = self.num_levels().max(2);
+        (usize::BITS - (n - 1).leading_zeros()) as u32
+    }
+}
+
+/// Bits → number of uniform intervals s = 2^b − 1 (so all codes are used).
+pub fn intervals_for_bits(bits: u32) -> u32 {
+    (1u32 << bits) - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_roundtrip() {
+        assert_eq!(intervals_for_bits(1), 1);
+        assert_eq!(intervals_for_bits(4), 15);
+        assert_eq!(intervals_for_bits(8), 255);
+        assert_eq!(LevelPlacement::Uniform { intervals: 15 }.bits(), 4);
+        assert_eq!(LevelPlacement::Uniform { intervals: 255 }.bits(), 8);
+        assert_eq!(LevelPlacement::Explicit(vec![0.0, 0.5, 1.0]).bits(), 2);
+    }
+
+    #[test]
+    fn num_levels() {
+        assert_eq!(LevelPlacement::Uniform { intervals: 3 }.num_levels(), 4);
+        assert_eq!(LevelPlacement::Explicit(vec![0.1, 0.9]).num_levels(), 2);
+    }
+}

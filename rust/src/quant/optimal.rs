@@ -1,0 +1,334 @@
+//! Variance-optimal quantization points (§3, supplementary §H).
+//!
+//! Given points Ω = {x₁ ≤ … ≤ x_N} and a budget of L levels, choose levels
+//! minimizing MV = (1/N) Σᵢ err(xᵢ, Iᵢ) with err(x, [a,b]) = (b−x)(x−a),
+//! the variance of the unique two-point distribution on {a, b} with mean x.
+//!
+//! * [`optimal_levels`] — the exact O(L·N²) dynamic program (Lemma 3: some
+//!   optimum places levels at input points, so the search is combinatorial).
+//! * [`discretized_optimal_levels`] — the §3.2 heuristic: one O(N) pass
+//!   builds prefix statistics at M grid candidates, then the same DP runs
+//!   over candidates in O(L·M²) (Theorem 2 bounds the excess by
+//!   a²bk/4M³ + a²bc²/Mk).
+//! * [`quantization_variance`] — evaluate MV(levels) on a point set.
+
+/// Prefix statistics enabling O(1) interval-variance queries.
+///
+/// err(Ω, [a,b]) = Σ_{x∈(a,b)} (a+b)x − x² − ab
+///              = (a+b)·S1 − S2 − ab·cnt over the in-range points.
+struct Prefix {
+    /// sorted points
+    xs: Vec<f64>,
+    s1: Vec<f64>,
+    s2: Vec<f64>,
+}
+
+impl Prefix {
+    fn new(points: &[f32]) -> Self {
+        let mut xs: Vec<f64> = points.iter().map(|&x| x as f64).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut s1 = Vec::with_capacity(xs.len() + 1);
+        let mut s2 = Vec::with_capacity(xs.len() + 1);
+        s1.push(0.0);
+        s2.push(0.0);
+        for &x in &xs {
+            s1.push(s1.last().unwrap() + x);
+            s2.push(s2.last().unwrap() + x * x);
+        }
+        Prefix { xs, s1, s2 }
+    }
+
+    /// Total variance of points with index in [i, j] quantized to [a, b].
+    #[inline]
+    fn err_range(&self, i: usize, j: usize, a: f64, b: f64) -> f64 {
+        if i > j {
+            return 0.0;
+        }
+        let cnt = (j - i + 1) as f64;
+        let s1 = self.s1[j + 1] - self.s1[i];
+        let s2 = self.s2[j + 1] - self.s2[i];
+        ((a + b) * s1 - s2 - a * b * cnt).max(0.0)
+    }
+
+    /// First index with xs[idx] >= v.
+    #[inline]
+    fn lower_bound(&self, v: f64) -> usize {
+        self.xs.partition_point(|&x| x < v)
+    }
+}
+
+/// Exact variance-optimal levels via the §3.1 dynamic program.
+///
+/// Returns `levels.len() == nlevels` sorted ascending, with the first/last
+/// at the data min/max (required for the quantizer to cover the range).
+/// Complexity O(nlevels · N²) time, O(nlevels · N) memory (V is computed
+/// on the fly from prefix sums instead of materializing the N² matrix).
+pub fn optimal_levels(points: &[f32], nlevels: usize) -> Vec<f32> {
+    assert!(nlevels >= 2, "need at least 2 levels");
+    let p = Prefix::new(points);
+    let xs = &p.xs;
+    let n = xs.len();
+    if n == 0 {
+        return vec![0.0; nlevels];
+    }
+    // Collapse duplicates: DP over distinct values, weighted ranges handled
+    // by prefix sums over the full multiset.
+    let mut uniq: Vec<f64> = Vec::with_capacity(n);
+    for &x in xs.iter() {
+        if uniq.last().map_or(true, |&u| x > u) {
+            uniq.push(x);
+        }
+    }
+    let u = uniq.len();
+    if u <= nlevels {
+        // Every distinct value gets its own level: zero variance.
+        let mut levels: Vec<f32> = uniq.iter().map(|&x| x as f32).collect();
+        while levels.len() < nlevels {
+            levels.push(*levels.last().unwrap());
+        }
+        return levels;
+    }
+    dp_over_candidates(&p, &uniq, nlevels)
+}
+
+/// §3.2 heuristic: restrict candidates to an M-point uniform grid over the
+/// data range (plus min/max), computable with a single pass over the data.
+pub fn discretized_optimal_levels(points: &[f32], nlevels: usize, m_candidates: usize) -> Vec<f32> {
+    assert!(nlevels >= 2);
+    assert!(m_candidates >= nlevels);
+    let p = Prefix::new(points);
+    if p.xs.is_empty() {
+        return vec![0.0; nlevels];
+    }
+    let lo = p.xs[0];
+    let hi = *p.xs.last().unwrap();
+    if hi <= lo {
+        return vec![lo as f32; nlevels];
+    }
+    let mut cands: Vec<f64> = (0..=m_candidates)
+        .map(|i| lo + (hi - lo) * i as f64 / m_candidates as f64)
+        .collect();
+    cands.dedup();
+    dp_over_candidates(&p, &cands, nlevels)
+}
+
+/// Shared DP: choose `nlevels` of `cands` (first and last forced) to
+/// minimize total variance of `p`'s points.
+fn dp_over_candidates(p: &Prefix, cands: &[f64], nlevels: usize) -> Vec<f32> {
+    let m = cands.len();
+    if m <= nlevels {
+        let mut levels: Vec<f32> = cands.iter().map(|&x| x as f32).collect();
+        while levels.len() < nlevels {
+            levels.push(*levels.last().unwrap());
+        }
+        return levels;
+    }
+    // idx[c] = first point index ≥ cands[c]
+    let idx: Vec<usize> = cands.iter().map(|&c| p.lower_bound(c)).collect();
+    let inf = f64::INFINITY;
+    // cost[j][c]: min variance covering points ≤ cands[c] using j+1 levels,
+    // last level at cands[c].
+    let mut prev = vec![inf; m];
+    let mut parent = vec![vec![usize::MAX; m]; nlevels];
+    prev[0] = 0.0; // one level at cands[0] (= data min): no interval yet
+    for j in 1..nlevels {
+        let mut cur = vec![inf; m];
+        // last level of a j+1-level solution can sit anywhere after j
+        for c in j..m {
+            let b = cands[c];
+            let hi_pt = if c + 1 == m { p.xs.len() } else { idx[c + 1].max(idx[c]) };
+            let _ = hi_pt;
+            let mut best = inf;
+            let mut best_prev = usize::MAX;
+            for pc in (j - 1)..c {
+                if prev[pc] == inf {
+                    continue;
+                }
+                let a = cands[pc];
+                // points in (a, b): indices [idx[pc], idx[c]) — points equal
+                // to an endpoint contribute zero error either way.
+                let i0 = idx[pc];
+                let i1 = idx[c];
+                let v = p.err_range(i0, i1.saturating_sub(1).min(p.xs.len().saturating_sub(1)), a, b);
+                let v = if i0 >= i1 { 0.0 } else { v };
+                let tot = prev[pc] + v;
+                if tot < best {
+                    best = tot;
+                    best_prev = pc;
+                }
+            }
+            cur[c] = best;
+            parent[j][c] = best_prev;
+        }
+        prev = cur;
+    }
+    // The last level must cover the max point: force it at cands[m-1].
+    let mut levels_idx = Vec::with_capacity(nlevels);
+    let mut c = m - 1;
+    levels_idx.push(c);
+    for j in (1..nlevels).rev() {
+        c = parent[j][c];
+        debug_assert!(c != usize::MAX);
+        levels_idx.push(c);
+    }
+    levels_idx.reverse();
+    levels_idx.iter().map(|&i| cands[i] as f32).collect()
+}
+
+/// DP restricted to an arbitrary sorted candidate set (ADAQUANT pipeline).
+/// The data min/max are appended to the candidates so the grid covers Ω.
+pub fn dp_on_candidates_public(points: &[f32], candidates: &[f32], nlevels: usize) -> Vec<f32> {
+    let p = Prefix::new(points);
+    if p.xs.is_empty() {
+        return vec![0.0; nlevels];
+    }
+    let mut cands: Vec<f64> = candidates.iter().map(|&x| x as f64).collect();
+    cands.push(p.xs[0]);
+    cands.push(*p.xs.last().unwrap());
+    cands.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    cands.dedup();
+    // Clip candidates outside the data range (useless levels).
+    cands.retain(|&c| c >= p.xs[0] && c <= *p.xs.last().unwrap());
+    dp_over_candidates(&p, &cands, nlevels)
+}
+
+/// Mean variance MV(levels) of stochastically quantizing `points` onto the
+/// grid — the §3 objective, also used to compare uniform vs optimal (Fig 7).
+pub fn quantization_variance(points: &[f32], levels: &[f32]) -> f64 {
+    assert!(levels.len() >= 2);
+    let mut lv: Vec<f64> = levels.iter().map(|&x| x as f64).collect();
+    lv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut total = 0.0f64;
+    for &xf in points {
+        let x = (xf as f64).clamp(lv[0], *lv.last().unwrap());
+        let hi = lv.partition_point(|&l| l < x).min(lv.len() - 1).max(1);
+        let (a, b) = (lv[hi - 1], lv[hi]);
+        total += ((b - x) * (x - a)).max(0.0);
+    }
+    total / points.len() as f64
+}
+
+/// Brute-force optimum for tiny inputs — test oracle only.
+pub fn brute_force_optimal(points: &[f32], nlevels: usize) -> (Vec<f32>, f64) {
+    let mut xs: Vec<f32> = points.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    let n = xs.len();
+    assert!(n >= 2 && nlevels >= 2 && n <= 18, "oracle limits");
+    let mut best = (Vec::new(), f64::INFINITY);
+    // choose nlevels−2 interior levels among xs[1..n−1]
+    let interior: Vec<usize> = (1..n - 1).collect();
+    let mut combo = vec![0usize; nlevels.saturating_sub(2)];
+    fn rec(
+        interior: &[usize],
+        combo: &mut Vec<usize>,
+        pos: usize,
+        start: usize,
+        xs: &[f32],
+        points: &[f32],
+        best: &mut (Vec<f32>, f64),
+    ) {
+        if pos == combo.len() {
+            let mut levels = vec![xs[0]];
+            levels.extend(combo.iter().map(|&i| xs[i]));
+            levels.push(*xs.last().unwrap());
+            let mv = quantization_variance(points, &levels);
+            if mv < best.1 {
+                *best = (levels, mv);
+            }
+            return;
+        }
+        for i in start..interior.len() {
+            combo[pos] = interior[i];
+            rec(interior, combo, pos + 1, i + 1, xs, points, best);
+        }
+    }
+    if nlevels - 2 > interior.len() {
+        let mv = quantization_variance(points, &xs);
+        return (xs, mv);
+    }
+    rec(&interior, &mut combo, 0, 0, &xs, points, &mut best);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn exact_matches_brute_force_small() {
+        let mut rng = Rng::new(1);
+        for trial in 0..20 {
+            let n = 6 + (trial % 8);
+            let pts: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            for nlevels in 2..=4usize {
+                let dp = optimal_levels(&pts, nlevels);
+                let (_, bf_mv) = brute_force_optimal(&pts, nlevels);
+                let dp_mv = quantization_variance(&pts, &dp);
+                assert!(
+                    dp_mv <= bf_mv + 1e-9,
+                    "trial {trial} L={nlevels}: dp {dp_mv} > brute {bf_mv}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn optimal_beats_uniform_on_skewed_data() {
+        // Fig 3/7 story: clustered data → optimal ≪ uniform at equal levels.
+        let mut rng = Rng::new(2);
+        let mut pts: Vec<f32> = (0..500).map(|_| rng.normal() * 0.05 + 0.1).collect();
+        pts.extend((0..20).map(|_| 0.9 + rng.f32() * 0.1));
+        let pts: Vec<f32> = pts.iter().map(|&x| x.clamp(0.0, 1.0)).collect();
+        let nlevels = 8;
+        let lo = pts.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = pts.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let uniform: Vec<f32> = (0..nlevels)
+            .map(|i| lo + (hi - lo) * i as f32 / (nlevels - 1) as f32)
+            .collect();
+        let opt = optimal_levels(&pts, nlevels);
+        let mv_u = quantization_variance(&pts, &uniform);
+        let mv_o = quantization_variance(&pts, &opt);
+        assert!(mv_o < 0.5 * mv_u, "optimal {mv_o} vs uniform {mv_u}");
+    }
+
+    #[test]
+    fn discretized_converges_to_exact() {
+        let mut rng = Rng::new(3);
+        let pts: Vec<f32> = (0..400).map(|_| rng.f32().powi(2)).collect();
+        let exact = quantization_variance(&pts, &optimal_levels(&pts, 6));
+        let coarse = quantization_variance(&pts, &discretized_optimal_levels(&pts, 6, 16));
+        let fine = quantization_variance(&pts, &discretized_optimal_levels(&pts, 6, 256));
+        assert!(fine <= coarse + 1e-12);
+        assert!(fine <= exact * 1.25 + 1e-9, "fine {fine} exact {exact}");
+    }
+
+    #[test]
+    fn levels_cover_range_and_sorted() {
+        let mut rng = Rng::new(4);
+        let pts: Vec<f32> = (0..200).map(|_| rng.normal()).collect();
+        let lv = optimal_levels(&pts, 5);
+        assert_eq!(lv.len(), 5);
+        let lo = pts.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = pts.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!((lv[0] - lo).abs() < 1e-5);
+        assert!((lv[4] - hi).abs() < 1e-5);
+        assert!(lv.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn few_distinct_points_zero_variance() {
+        let pts = vec![0.25f32; 50].into_iter().chain(vec![0.75f32; 50]).collect::<Vec<_>>();
+        let lv = optimal_levels(&pts, 4);
+        assert!(quantization_variance(&pts, &lv) < 1e-12);
+    }
+
+    #[test]
+    fn variance_is_zero_on_levels() {
+        let levels = [0.0f32, 0.5, 1.0];
+        assert_eq!(quantization_variance(&[0.0, 0.5, 1.0], &levels), 0.0);
+        let mv = quantization_variance(&[0.25], &levels);
+        assert!((mv - 0.0625).abs() < 1e-9); // (0.5-0.25)(0.25-0)
+    }
+}

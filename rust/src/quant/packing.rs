@@ -1,0 +1,448 @@
+//! Bit-packed storage for quantized samples.
+//!
+//! [`PackedMatrix`] stores one level index per value at an arbitrary bit
+//! width (1..=16) in a contiguous little-endian bit stream — the
+//! "SampleStore" of the paper's computation model (Fig 2), and the unit of
+//! the bandwidth accounting used by the Fig 5 / bandwidth experiments.
+//!
+//! [`DoubleSampleBlock`] implements §2.2 "Overhead of Storing Samples":
+//! the k independent stochastic quantizations of a value all land on the
+//! two endpoints of the *same* grid interval, so we store the lower index
+//! once (b bits) plus one up/down bit per extra sample — and because the
+//! samples are used symmetrically, transmitting only the *count* of lows
+//! costs ⌈log₂(k+1)⌉ bits (`extra_bits_symmetric`).
+
+use crate::quant::scaling::ColumnScale;
+use crate::rng::Rng;
+
+/// Append-only little-endian bit writer over a `Vec<u8>`.
+#[derive(Clone, Debug, Default)]
+pub struct BitVec {
+    pub data: Vec<u8>,
+    len_bits: usize,
+}
+
+impl BitVec {
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        BitVec { data: Vec::with_capacity(bits.div_ceil(8)), len_bits: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, value: u32, width: u32) {
+        debug_assert!(width <= 32 && (width == 32 || value < (1u32 << width)));
+        let mut v = value as u64;
+        let mut w = width as usize;
+        while w > 0 {
+            let byte = self.len_bits / 8;
+            let off = self.len_bits % 8;
+            if byte == self.data.len() {
+                self.data.push(0);
+            }
+            let take = (8 - off).min(w);
+            self.data[byte] |= ((v & ((1u64 << take) - 1)) as u8) << off;
+            v >>= take;
+            w -= take;
+            self.len_bits += take;
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, bit_off: usize, width: u32) -> u32 {
+        let mut out = 0u64;
+        let mut got = 0usize;
+        let mut pos = bit_off;
+        while got < width as usize {
+            let byte = pos / 8;
+            let off = pos % 8;
+            let take = (8 - off).min(width as usize - got);
+            let bits = (self.data[byte] as u64 >> off) & ((1u64 << take) - 1);
+            out |= bits << got;
+            got += take;
+            pos += take;
+        }
+        out as u32
+    }
+
+    pub fn len_bits(&self) -> usize {
+        self.len_bits
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Word-at-a-time packer: ~10x the throughput of per-bit BitVec pushes
+/// (EXPERIMENTS.md §Perf L3-2). Little-endian bit order, compatible with
+/// `BitVec::get`.
+fn pack_indices(idx: &[u16], bits: u32) -> Vec<u8> {
+    let total_bits = idx.len() * bits as usize;
+    let mut data = vec![0u8; total_bits.div_ceil(8)];
+    let mut acc: u64 = 0;
+    let mut nbits: usize = 0;
+    let mut pos = 0usize;
+    for &i in idx {
+        acc |= (i as u64) << nbits;
+        nbits += bits as usize;
+        while nbits >= 8 {
+            data[pos] = acc as u8;
+            acc >>= 8;
+            nbits -= 8;
+            pos += 1;
+        }
+    }
+    if nbits > 0 {
+        data[pos] = acc as u8;
+    }
+    data
+}
+
+/// Word-at-a-time unpack of `count` values starting at `bit_off`; calls
+/// `out(i, idx)` for i in 0..count. Same bit order as `pack_indices`.
+#[inline]
+fn unpack_span(data: &[u8], bit_off: usize, bits: u32, count: usize, mut out: impl FnMut(usize, u16)) {
+    let w = bits as usize;
+    let mask = (1u64 << w) - 1;
+    let mut byte = bit_off / 8;
+    let mut acc: u64 = 0;
+    let mut nbits = 0usize;
+    let skip = bit_off % 8;
+    if skip > 0 {
+        acc = (data[byte] >> skip) as u64;
+        nbits = 8 - skip;
+        byte += 1;
+    }
+    for i in 0..count {
+        while nbits < w {
+            if byte < data.len() {
+                acc |= (data[byte] as u64) << nbits;
+                byte += 1;
+            }
+            nbits += 8;
+        }
+        out(i, (acc & mask) as u16);
+        acc >>= w;
+        nbits -= w;
+    }
+}
+
+/// A (rows × cols) matrix of level indices packed at `bits` per value.
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    /// Interval count s (levels are 0..=s on the symmetric grid).
+    pub s: u32,
+    pub scale: ColumnScale,
+    data: Vec<u8>,
+}
+
+impl PackedMatrix {
+    /// Quantize a dense matrix into packed indices (one stochastic draw).
+    pub fn quantize(
+        a: &crate::tensor::Matrix,
+        scale: &ColumnScale,
+        bits: u32,
+        rng: &mut Rng,
+    ) -> Self {
+        let s = crate::quant::intervals_for_bits(bits);
+        let mut idx = vec![0u16; a.rows * a.cols];
+        crate::quant::stochastic::quantize_indices(&a.data, a.cols, &scale.m, s, rng, &mut idx);
+        PackedMatrix {
+            rows: a.rows,
+            cols: a.cols,
+            bits,
+            s,
+            scale: scale.clone(),
+            data: pack_indices(&idx, bits),
+        }
+    }
+
+    #[inline]
+    pub fn index(&self, r: usize, c: usize) -> u16 {
+        let mut v = 0u16;
+        unpack_span(&self.data, (r * self.cols + c) * self.bits as usize, self.bits, 1, |_, x| v = x);
+        v
+    }
+
+    /// Dequantize row `r` into `out` (len == cols).
+    pub fn dequantize_row(&self, r: usize, out: &mut [f32]) {
+        let base = r * self.cols * self.bits as usize;
+        // hoist the per-column dequant constants (§Perf L3-2)
+        let inv_s2 = 2.0 / self.s as f32;
+        let m = &self.scale.m;
+        unpack_span(&self.data, base, self.bits, self.cols, |c, idx| {
+            out[c] = (idx as f32 * inv_s2 - 1.0) * m[c];
+        });
+    }
+
+    /// Raw u8 level indices for row `r` (bits ≤ 8) — feeds the u8 artifacts.
+    pub fn indices_row_u8(&self, r: usize, out: &mut [u8]) {
+        assert!(self.bits <= 8);
+        let base = r * self.cols * self.bits as usize;
+        unpack_span(&self.data, base, self.bits, self.cols, |c, idx| {
+            out[c] = idx as u8;
+        });
+    }
+
+    /// Stored payload size — the "memory traffic per epoch" unit.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// §2.2: k double-sampled quantizations of a sample batch, stored as base
+/// indices + one offset bit per (value, sample).
+#[derive(Clone, Debug)]
+pub struct DoubleSampleBlock {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    pub s: u32,
+    pub k: usize,
+    pub scale: ColumnScale,
+    base: Vec<u8>,
+    /// rows*cols*k bits, sample-major per value
+    offsets: Vec<u8>,
+}
+
+impl DoubleSampleBlock {
+    /// Quantize `a` with `k` independent draws sharing the base interval.
+    ///
+    /// Randomness is drawn as 24-bit integer lanes (two per `next_u64`) and
+    /// compared against a 24-bit threshold — exact to f32-uniform precision
+    /// at half the RNG cost (§Perf L3-3).
+    pub fn quantize(
+        a: &crate::tensor::Matrix,
+        scale: &ColumnScale,
+        bits: u32,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let s = crate::quant::intervals_for_bits(bits);
+        let sf = s as f32;
+        let nvals = a.rows * a.cols;
+        let cols = a.cols;
+        let inv_m: Vec<f32> = scale
+            .m
+            .iter()
+            .map(|&mc| if mc > 0.0 { 0.5 * sf / mc } else { 0.0 })
+            .collect();
+        let mut base_idx = vec![0u16; nvals];
+        let mut offsets = vec![0u8; (nvals * k).div_ceil(8)];
+        let mid = (s / 2) as u16;
+        let mut bit_pos = 0usize;
+        let mut vi = 0usize;
+        for vrow in a.data.chunks(cols) {
+            for (&x, &im) in vrow.iter().zip(&inv_m) {
+                let (lo, thr) = if im == 0.0 {
+                    (mid, 0u64)
+                } else {
+                    let t = (x * im + 0.5 * sf).clamp(0.0, sf);
+                    let lo = t.floor().min(sf - 1.0);
+                    // 24-bit threshold: P[lane < thr] == frac(t) exactly
+                    ((lo as u16), ((t - lo) as f64 * (1u64 << 24) as f64) as u64)
+                };
+                base_idx[vi] = lo;
+                vi += 1;
+                let mut j = 0usize;
+                while j < k {
+                    let r = rng.next_u64();
+                    let take = (k - j).min(2);
+                    for lane in 0..take {
+                        let bits24 = (r >> (24 * lane)) & 0xFF_FFFF;
+                        if bits24 < thr {
+                            offsets[bit_pos / 8] |= 1 << (bit_pos % 8);
+                        }
+                        bit_pos += 1;
+                    }
+                    j += take;
+                }
+            }
+        }
+        DoubleSampleBlock {
+            rows: a.rows,
+            cols: a.cols,
+            bits,
+            s,
+            k,
+            scale: scale.clone(),
+            base: pack_indices(&base_idx, bits),
+            offsets,
+        }
+    }
+
+    #[inline]
+    fn offset_bit(&self, value_idx: usize, j: usize) -> u16 {
+        let bit = value_idx * self.k + j;
+        ((self.offsets[bit / 8] >> (bit % 8)) & 1) as u16
+    }
+
+    /// Dequantize sample `j` (0..k) of row `r`.
+    pub fn dequantize_row(&self, r: usize, j: usize, out: &mut [f32]) {
+        assert!(j < self.k);
+        let row_base = r * self.cols;
+        let inv_s2 = 2.0 / self.s as f32;
+        let m = &self.scale.m;
+        unpack_span(&self.base, row_base * self.bits as usize, self.bits, self.cols, |c, lo| {
+            let idx = lo + self.offset_bit(row_base + c, j);
+            out[c] = (idx as f32 * inv_s2 - 1.0) * m[c];
+        });
+    }
+
+    /// Raw u8 level indices of sample `j` for row `r` (bits ≤ 8) — the
+    /// operands of the `*_ds_u8_step` artifacts (dequantize-in-kernel path).
+    pub fn indices_row_u8(&self, r: usize, j: usize, out: &mut [u8]) {
+        assert!(self.bits <= 8 && j < self.k);
+        let row_base = r * self.cols;
+        unpack_span(&self.base, row_base * self.bits as usize, self.bits, self.cols, |c, lo| {
+            out[c] = (lo + self.offset_bit(row_base + c, j)) as u8;
+        });
+    }
+
+    /// Payload bytes actually stored (base + per-sample offset bits).
+    pub fn bytes(&self) -> usize {
+        self.base.len() + self.offsets.len()
+    }
+
+    /// Bits per value on the wire with the symmetric-count encoding:
+    /// b + ⌈log₂(k+1)⌉ (§2.2, "sending k samples only requires log₂k more").
+    pub fn wire_bits_per_value(bits: u32, k: usize) -> u32 {
+        bits + extra_bits_symmetric(k)
+    }
+}
+
+/// ⌈log₂(k+1)⌉ — bits to transmit the count of "low" choices among k draws.
+pub fn extra_bits_symmetric(k: usize) -> u32 {
+    (usize::BITS - k.leading_zeros()) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    fn mk(rows: usize, cols: usize, seed: u64) -> (Matrix, ColumnScale) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let a = Matrix::from_vec(rows, cols, data);
+        let s = ColumnScale::from_data(&a);
+        (a, s)
+    }
+
+    #[test]
+    fn bitvec_roundtrip_mixed_widths() {
+        let mut bv = BitVec::default();
+        let vals = [(5u32, 3u32), (0, 1), (1, 1), (255, 8), (1023, 10), (7, 5)];
+        for &(v, w) in &vals {
+            bv.push(v, w);
+        }
+        let mut off = 0;
+        for &(v, w) in &vals {
+            assert_eq!(bv.get(off, w), v);
+            off += w as usize;
+        }
+    }
+
+    #[test]
+    fn packed_roundtrip_on_grid() {
+        let (a, sc) = mk(16, 10, 1);
+        let mut rng = Rng::new(2);
+        for bits in [1u32, 2, 3, 4, 5, 8] {
+            let p = PackedMatrix::quantize(&a, &sc, bits, &mut rng);
+            let mut row = vec![0.0f32; 10];
+            for r in 0..16 {
+                p.dequantize_row(r, &mut row);
+                for (c, &q) in row.iter().enumerate() {
+                    // value must be on the grid and within one interval of v
+                    let m = sc.m[c];
+                    let width = 2.0 * m / p.s as f32;
+                    assert!((q - a.get(r, c)).abs() <= width + 1e-5,
+                        "bits={bits} q={q} v={}", a.get(r, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_size_matches_bits() {
+        let (a, sc) = mk(32, 100, 3);
+        let mut rng = Rng::new(4);
+        let p4 = PackedMatrix::quantize(&a, &sc, 4, &mut rng);
+        let p8 = PackedMatrix::quantize(&a, &sc, 8, &mut rng);
+        assert_eq!(p4.bytes(), 32 * 100 * 4 / 8);
+        assert_eq!(p8.bytes(), 32 * 100);
+        // the headline saving: 8x fewer bytes than f32 at 4 bits
+        assert_eq!(32 * 100 * 4 / p4.bytes(), 8);
+    }
+
+    #[test]
+    fn u8_indices_match_dequant() {
+        let (a, sc) = mk(8, 12, 5);
+        let mut rng = Rng::new(6);
+        let p = PackedMatrix::quantize(&a, &sc, 4, &mut rng);
+        let mut idx = vec![0u8; 12];
+        let mut val = vec![0.0f32; 12];
+        for r in 0..8 {
+            p.indices_row_u8(r, &mut idx);
+            p.dequantize_row(r, &mut val);
+            for c in 0..12 {
+                let deq = crate::quant::stochastic::dequantize_index(idx[c] as u16, sc.m[c], p.s);
+                assert!((deq - val[c]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn double_sample_shares_interval() {
+        let (a, sc) = mk(8, 6, 7);
+        let mut rng = Rng::new(8);
+        let ds = DoubleSampleBlock::quantize(&a, &sc, 3, 2, &mut rng);
+        let (mut s0, mut s1) = (vec![0.0f32; 6], vec![0.0f32; 6]);
+        for r in 0..8 {
+            ds.dequantize_row(r, 0, &mut s0);
+            ds.dequantize_row(r, 1, &mut s1);
+            for c in 0..6 {
+                let width = 2.0 * sc.m[c] / ds.s as f32;
+                assert!((s0[c] - s1[c]).abs() <= width + 1e-5); // differ ≤ 1 level
+            }
+        }
+    }
+
+    #[test]
+    fn double_sample_unbiased() {
+        let a = Matrix::from_vec(1, 1, vec![0.37]);
+        let sc = ColumnScale { m: vec![1.0] };
+        let mut acc = 0.0f64;
+        let trials = 30_000;
+        let mut rng = Rng::new(9);
+        let mut buf = [0.0f32; 1];
+        for _ in 0..trials {
+            let ds = DoubleSampleBlock::quantize(&a, &sc, 2, 2, &mut rng);
+            for j in 0..2 {
+                ds.dequantize_row(0, j, &mut buf);
+                acc += buf[0] as f64;
+            }
+        }
+        assert!((acc / (2.0 * trials as f64) - 0.37).abs() < 0.01);
+    }
+
+    #[test]
+    fn wire_bits_accounting() {
+        assert_eq!(extra_bits_symmetric(1), 1);
+        assert_eq!(extra_bits_symmetric(2), 2); // ⌈log2(3)⌉
+        assert_eq!(extra_bits_symmetric(3), 2);
+        assert_eq!(extra_bits_symmetric(15), 4);
+        assert_eq!(DoubleSampleBlock::wire_bits_per_value(4, 2), 6);
+    }
+
+    #[test]
+    fn double_sample_storage_smaller_than_two_copies() {
+        let (a, sc) = mk(64, 100, 10);
+        let mut rng = Rng::new(11);
+        let ds = DoubleSampleBlock::quantize(&a, &sc, 4, 2, &mut rng);
+        let two_packed = 2 * PackedMatrix::quantize(&a, &sc, 4, &mut rng).bytes();
+        assert!(ds.bytes() < two_packed, "{} !< {}", ds.bytes(), two_packed);
+    }
+}

@@ -1,0 +1,88 @@
+//! Scaling functions M(v) (§A.3).
+//!
+//! * **Column scaling** — samples: M_i = max(|min_i|, |max_i|) per feature,
+//!   computed once over the dataset; constant during training, cache-
+//!   resident, shared by every sample.
+//! * **Row scaling** — gradients/models: M = ‖v‖₂ per vector (dynamic
+//!   range changes every step).
+
+use crate::tensor::Matrix;
+
+/// Per-feature symmetric scale for sample quantization.
+#[derive(Clone, Debug)]
+pub struct ColumnScale {
+    /// m[i] = max(|min_i|, |max_i|) ≥ 0.
+    pub m: Vec<f32>,
+}
+
+impl ColumnScale {
+    /// Compute the paper's column scaling over a dataset (K × n).
+    pub fn from_data(a: &Matrix) -> Self {
+        let (lo, hi) = a.col_min_max();
+        let m = lo
+            .iter()
+            .zip(&hi)
+            .map(|(&l, &h)| l.abs().max(h.abs()))
+            .collect();
+        ColumnScale { m }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.m.len()
+    }
+
+    /// Verify v/M ∈ [-1, 1] for every row of `a`.
+    pub fn covers(&self, a: &Matrix) -> bool {
+        for r in 0..a.rows {
+            for (c, &v) in a.row(r).iter().enumerate() {
+                let m = self.m[c];
+                if m == 0.0 {
+                    if v != 0.0 {
+                        return false;
+                    }
+                } else if v.abs() > m * (1.0 + 1e-6) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Row scaling M(v) = ‖v‖₂ (gradients / model vectors).
+pub fn row_scale(v: &[f32]) -> f32 {
+    crate::tensor::norm2(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_scale_covers_data() {
+        let a = Matrix::from_vec(3, 2, vec![1.0, -2.0, 0.5, 4.0, -3.0, 0.0]);
+        let s = ColumnScale::from_data(&a);
+        assert_eq!(s.m, vec![3.0, 4.0]);
+        assert!(s.covers(&a));
+    }
+
+    #[test]
+    fn zero_column_is_zero_scale() {
+        let a = Matrix::from_vec(2, 2, vec![0.0, 1.0, 0.0, -1.0]);
+        let s = ColumnScale::from_data(&a);
+        assert_eq!(s.m[0], 0.0);
+        assert!(s.covers(&a));
+    }
+
+    #[test]
+    fn covers_detects_violation() {
+        let a = Matrix::from_vec(1, 1, vec![1.0]);
+        let s = ColumnScale { m: vec![0.5] };
+        assert!(!s.covers(&a));
+    }
+
+    #[test]
+    fn row_scale_is_l2() {
+        assert!((row_scale(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,238 @@
+//! The unbiased stochastic quantizer Q(v, s) (§2.1, §A.3 Eq. 10).
+//!
+//! For value v with scale m, u = clip(v/m, -1, 1) lands in interval
+//! [ℓ/s, (ℓ+1)/s) of [-1, 1] (after the affine shift) and is rounded up
+//! with probability equal to its relative position — so E[Q(v)] = v as long
+//! as |v| ≤ m. Index-space form (`quantize_indices`) is what the bit-packed
+//! store holds; value-space form (`quantize_values`) feeds the f32 artifacts.
+
+use crate::rng::Rng;
+
+/// Quantize `v` (row-major, `cols` wide) to level indices in 0..=s.
+///
+/// `m[c]` is the per-column scale; a zero scale maps to the midpoint index
+/// (which dequantizes to 0 when m = 0).
+pub fn quantize_indices(v: &[f32], cols: usize, m: &[f32], s: u32, rng: &mut Rng, out: &mut [u16]) {
+    debug_assert_eq!(v.len(), out.len());
+    debug_assert_eq!(m.len(), cols);
+    let sf = s as f32;
+    let mid = (s / 2) as u16;
+    // Hot path: row-chunked with precomputed reciprocal scales — no modulo,
+    // no division in the inner loop (EXPERIMENTS.md §Perf L3-1).
+    let inv_m: Vec<f32> = m.iter().map(|&mc| if mc > 0.0 { 0.5 * sf / mc } else { 0.0 }).collect();
+    for (vrow, orow) in v.chunks(cols).zip(out.chunks_mut(cols)) {
+        for ((&x, o), &im) in vrow.iter().zip(orow.iter_mut()).zip(&inv_m) {
+            if im == 0.0 {
+                *o = mid;
+                continue;
+            }
+            let t = (x * im + 0.5 * sf).clamp(0.0, sf);
+            let lo = t.floor().min(sf - 1.0);
+            let idx = lo as u32 + u32::from(rng.f32() < t - lo);
+            *o = idx as u16;
+        }
+    }
+}
+
+/// Dequantize one index on the symmetric uniform grid.
+#[inline]
+pub fn dequantize_index(idx: u16, m: f32, s: u32) -> f32 {
+    (idx as f32 / s as f32 * 2.0 - 1.0) * m
+}
+
+/// One-shot value-space quantization: out[i] = dequant(quant(v[i])).
+pub fn quantize_values(v: &[f32], cols: usize, m: &[f32], s: u32, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(v.len(), out.len());
+    let sf = s as f32;
+    let inv_s2 = 2.0 / sf;
+    // precompute per-column forward/backward scales (§Perf L3-1)
+    let inv_m: Vec<f32> = m.iter().map(|&mc| if mc > 0.0 { 0.5 * sf / mc } else { 0.0 }).collect();
+    for (vrow, orow) in v.chunks(cols).zip(out.chunks_mut(cols)) {
+        for (c, (&x, o)) in vrow.iter().zip(orow.iter_mut()).enumerate() {
+            let im = inv_m[c];
+            if im == 0.0 {
+                *o = 0.0;
+                continue;
+            }
+            let t = (x * im + 0.5 * sf).clamp(0.0, sf);
+            let lo = t.floor().min(sf - 1.0);
+            let idx = lo + f32::from(rng.f32() < t - lo);
+            *o = (idx * inv_s2 - 1.0) * m[c];
+        }
+    }
+}
+
+/// Row-scaled (M = ‖v‖₂) quantization of a single vector, value space.
+pub fn quantize_vector_row_scaled(v: &[f32], s: u32, rng: &mut Rng) -> Vec<f32> {
+    let m = crate::tensor::norm2(v);
+    let mut out = vec![0.0f32; v.len()];
+    let scales = vec![m; 1];
+    // row scaling = every "column" shares one scale; reuse the column path
+    // with cols = 1 by treating the vector as one long column.
+    quantize_values(v, 1, &scales, s, rng, &mut out);
+    out
+}
+
+/// Stochastic rounding onto an arbitrary sorted level grid (value space).
+/// Used for the variance-optimal grids of §3; E[out] = clip(v, grid range).
+pub fn quantize_to_levels(v: &[f32], levels: &[f32], rng: &mut Rng, out: &mut [f32]) {
+    debug_assert!(levels.len() >= 2);
+    for (&x, o) in v.iter().zip(out.iter_mut()) {
+        *o = quantize_one_to_levels(x, levels, rng);
+    }
+}
+
+/// Index-space stochastic rounding onto a sorted grid.
+pub fn quantize_to_level_indices(v: &[f32], levels: &[f32], rng: &mut Rng, out: &mut [u16]) {
+    for (&x, o) in v.iter().zip(out.iter_mut()) {
+        *o = level_index(x, levels, rng);
+    }
+}
+
+#[inline]
+pub fn quantize_one_to_levels(x: f32, levels: &[f32], rng: &mut Rng) -> f32 {
+    levels[level_index(x, levels, rng) as usize]
+}
+
+/// Public single-value index-space rounding (OptimalDs store build).
+#[inline]
+pub fn quantize_one_to_level_index(x: f32, levels: &[f32], rng: &mut Rng) -> u16 {
+    level_index(x, levels, rng)
+}
+
+#[inline]
+fn level_index(x: f32, levels: &[f32], rng: &mut Rng) -> u16 {
+    let n = levels.len();
+    let xc = x.clamp(levels[0], levels[n - 1]);
+    // binary search for the bracketing interval
+    let hi_idx = match levels.binary_search_by(|l| l.partial_cmp(&xc).unwrap()) {
+        Ok(i) => return i as u16, // exactly on a level
+        Err(i) => i.min(n - 1).max(1),
+    };
+    let lo = levels[hi_idx - 1];
+    let hi = levels[hi_idx];
+    let width = hi - lo;
+    let p = if width > 0.0 { (xc - lo) / width } else { 0.0 };
+    if rng.f32() < p {
+        hi_idx as u16
+    } else {
+        (hi_idx - 1) as u16
+    }
+}
+
+/// The uniform level grid over [-m, m] with s intervals, as explicit points.
+pub fn uniform_levels(m: f32, s: u32) -> Vec<f32> {
+    (0..=s).map(|i| (i as f32 / s as f32 * 2.0 - 1.0) * m).collect()
+}
+
+/// Empirical quantization variance TV(v) = E‖Q(v) − v‖² (Lemma 1 quantity),
+/// estimated over `trials` draws. Test/diagnostic helper.
+pub fn empirical_tv(v: &[f32], cols: usize, m: &[f32], s: u32, trials: usize, rng: &mut Rng) -> f64 {
+    let mut buf = vec![0.0f32; v.len()];
+    let mut acc = 0.0f64;
+    for _ in 0..trials {
+        quantize_values(v, cols, m, s, rng, &mut buf);
+        let mut e = 0.0f64;
+        for (&q, &x) in buf.iter().zip(v) {
+            e += ((q - x) as f64).powi(2);
+        }
+        acc += e;
+    }
+    acc / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_lands_on_grid() {
+        let mut rng = Rng::new(1);
+        let v = [0.3f32, -0.7, 0.99, -1.0, 0.0];
+        let m = [1.0f32];
+        let mut out = [0.0f32; 5];
+        quantize_values(&v, 1, &m, 4, &mut rng, &mut out);
+        let grid = uniform_levels(1.0, 4);
+        for &q in &out {
+            assert!(grid.iter().any(|&g| (g - q).abs() < 1e-6), "{q} not on grid");
+        }
+    }
+
+    #[test]
+    fn unbiased_statistically() {
+        let mut rng = Rng::new(2);
+        let v = [0.37f32, -0.61, 0.05];
+        let m = [1.0f32];
+        let trials = 60_000;
+        let mut acc = [0.0f64; 3];
+        let mut out = [0.0f32; 3];
+        for _ in 0..trials {
+            quantize_values(&v, 1, &m, 3, &mut rng, &mut out);
+            for (a, &q) in acc.iter_mut().zip(&out) {
+                *a += q as f64;
+            }
+        }
+        for (a, &x) in acc.iter().zip(&v) {
+            let mean = *a / trials as f64;
+            assert!((mean - x as f64).abs() < 0.005, "mean {mean} vs {x}");
+        }
+    }
+
+    #[test]
+    fn indices_and_values_agree() {
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let v: Vec<f32> = (0..64).map(|i| (i as f32 / 32.0) - 1.0).collect();
+        let m = vec![1.0f32; 8];
+        let mut idx = vec![0u16; 64];
+        let mut val = vec![0.0f32; 64];
+        quantize_indices(&v, 8, &m, 15, &mut r1, &mut idx);
+        quantize_values(&v, 8, &m, 15, &mut r2, &mut val);
+        for (i, (&ix, &vv)) in idx.iter().zip(&val).enumerate() {
+            assert!((dequantize_index(ix, m[i % 8], 15) - vv).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn level_grid_rounding_unbiased() {
+        let mut rng = Rng::new(4);
+        let levels = [-1.0f32, -0.2, 0.1, 0.9];
+        let x = 0.4f32; // between 0.1 and 0.9
+        let trials = 60_000;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            acc += quantize_one_to_levels(x, &levels, &mut rng) as f64;
+        }
+        assert!((acc / trials as f64 - 0.4).abs() < 0.01);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let mut rng = Rng::new(5);
+        let levels = [0.0f32, 1.0];
+        assert_eq!(quantize_one_to_levels(5.0, &levels, &mut rng), 1.0);
+        assert_eq!(quantize_one_to_levels(-5.0, &levels, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn tv_decreases_with_levels() {
+        // Lemma 2: TV ∝ 1/s² — quadrupling s should cut TV ~16x.
+        let mut rng = Rng::new(6);
+        let v: Vec<f32> = (0..256).map(|_| rng.normal().clamp(-1.0, 1.0)).collect();
+        let m = vec![1.0f32];
+        let tv1 = empirical_tv(&v, 1, &m, 3, 300, &mut rng);
+        let tv2 = empirical_tv(&v, 1, &m, 12, 300, &mut rng);
+        let ratio = tv1 / tv2;
+        assert!(ratio > 8.0 && ratio < 32.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn zero_scale_maps_to_zero() {
+        let mut rng = Rng::new(7);
+        let v = [0.0f32, 0.0];
+        let m = [0.0f32, 0.0];
+        let mut out = [9.0f32; 2];
+        quantize_values(&v, 2, &m, 7, &mut rng, &mut out);
+        assert_eq!(out, [0.0, 0.0]);
+    }
+}

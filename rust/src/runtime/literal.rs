@@ -1,0 +1,99 @@
+//! Literal construction/extraction helpers over the xla crate.
+
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal};
+
+use super::manifest::DType;
+
+/// Build a literal of the given dtype/shape from raw host data.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let expected: usize = shape.iter().product();
+    if data.len() != expected {
+        bail!("lit_f32 shape {shape:?} wants {expected} elems, got {}", data.len());
+    }
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)?)
+}
+
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    let expected: usize = shape.iter().product();
+    if data.len() != expected {
+        bail!("lit_i32 shape {shape:?} wants {expected} elems, got {}", data.len());
+    }
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)?)
+}
+
+pub fn lit_u8(shape: &[usize], data: &[u8]) -> Result<Literal> {
+    let expected: usize = shape.iter().product();
+    if data.len() != expected {
+        bail!("lit_u8 shape {shape:?} wants {expected} elems, got {}", data.len());
+    }
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::U8, shape, data)?)
+}
+
+/// (1, 1) f32 scalar operand (lr, c, s, …).
+pub fn lit_scalar11(v: f32) -> Result<Literal> {
+    lit_f32(&[1, 1], &[v])
+}
+
+/// Validate raw byte length against an input spec and wrap.
+pub fn lit_for_spec(spec: &super::manifest::InputSpec, f32s: Option<&[f32]>, i32s: Option<&[i32]>, u8s: Option<&[u8]>) -> Result<Literal> {
+    match spec.dtype {
+        DType::F32 => lit_f32(&spec.shape, f32s.expect("f32 data")),
+        DType::I32 => lit_i32(&spec.shape, i32s.expect("i32 data")),
+        DType::U8 => lit_u8(&spec.shape, u8s.expect("u8 data")),
+    }
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract the single f32 from a (1,1) literal (loss outputs).
+pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    if v.len() != 1 {
+        bail!("expected scalar literal, got {} elems", v.len());
+    }
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&[2, 3], &data).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), data.to_vec());
+    }
+
+    #[test]
+    fn u8_roundtrip() {
+        let data = [0u8, 1, 2, 255];
+        let lit = lit_u8(&[4], &data).unwrap();
+        assert_eq!(lit.to_vec::<u8>().unwrap(), data.to_vec());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = [3i32, -7, 0];
+        let lit = lit_i32(&[3], &data).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data.to_vec());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[2, 2], &[1.0]).is_err());
+        assert!(lit_u8(&[3], &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let lit = lit_scalar11(0.25).unwrap();
+        assert_eq!(to_f32_scalar(&lit).unwrap(), 0.25);
+    }
+}

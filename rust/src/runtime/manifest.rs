@@ -1,0 +1,241 @@
+//! Parse `artifacts/manifest.tsv` — the compile-path contract with aot.py.
+//!
+//! Line format (tab-separated):
+//! ```text
+//! artifact  <name>  <file>  <num_outputs>
+//! input     <name>  <arg>   <dtype>  <d0,d1,...>
+//! meta      <name>  <key>   <value>
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u8" => DType::U8,
+            _ => bail!("unknown dtype {s}"),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub num_outputs: usize,
+    pub inputs: Vec<InputSpec>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn input(&self, name: &str) -> Option<&InputSpec> {
+        self.inputs.iter().find(|i| i.name == name)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut m = Manifest { artifacts: BTreeMap::new(), dir: dir.to_path_buf() };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            let err = || format!("manifest line {}: {line:?}", lineno + 1);
+            match fields[0] {
+                "artifact" => {
+                    if fields.len() != 4 {
+                        bail!("{}", err());
+                    }
+                    let name = fields[1].to_string();
+                    m.artifacts.insert(
+                        name.clone(),
+                        ArtifactSpec {
+                            name,
+                            file: dir.join(fields[2]),
+                            num_outputs: fields[3].parse().with_context(err)?,
+                            inputs: Vec::new(),
+                            meta: BTreeMap::new(),
+                        },
+                    );
+                }
+                "input" => {
+                    if fields.len() != 5 {
+                        bail!("{}", err());
+                    }
+                    let art = m
+                        .artifacts
+                        .get_mut(fields[1])
+                        .with_context(|| format!("input before artifact: {line}"))?;
+                    let shape = fields[4]
+                        .split(',')
+                        .filter(|s| !s.is_empty())
+                        .map(|s| s.parse::<usize>().map_err(anyhow::Error::from))
+                        .collect::<Result<Vec<_>>>()
+                        .with_context(err)?;
+                    art.inputs.push(InputSpec {
+                        name: fields[2].to_string(),
+                        dtype: DType::parse(fields[3])?,
+                        shape,
+                    });
+                }
+                "meta" => {
+                    if fields.len() != 4 {
+                        bail!("{}", err());
+                    }
+                    let art = m
+                        .artifacts
+                        .get_mut(fields[1])
+                        .with_context(|| format!("meta before artifact: {line}"))?;
+                    art.meta.insert(fields[2].to_string(), fields[3].to_string());
+                }
+                other => bail!("unknown record type {other:?} at line {}", lineno + 1),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest ({} known)", self.artifacts.len()))
+    }
+
+    /// Find e.g. `linreg_ds_step_n{n}` by kind + n metadata.
+    pub fn find_kind_n(&self, kind: &str, n: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .find(|a| {
+                a.meta.get("kind").map(String::as_str) == Some(kind)
+                    && a.meta_usize("n") == Some(n)
+                    && !a.meta.contains_key("num_batches")
+                    && a.meta_usize("batch") == self.default_batch_for(kind, n)
+            })
+            .with_context(|| format!("no artifact kind={kind} n={n}"))
+    }
+
+    fn default_batch_for(&self, kind: &str, n: usize) -> Option<usize> {
+        // prefer batch=64 (the default shape class) when several exist
+        let batches: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| {
+                a.meta.get("kind").map(String::as_str) == Some(kind) && a.meta_usize("n") == Some(n)
+            })
+            .filter_map(|a| a.meta_usize("batch"))
+            .collect();
+        if batches.contains(&64) {
+            Some(64)
+        } else {
+            batches.first().copied()
+        }
+    }
+
+    /// Variant with an explicit batch (Fig 6 uses batch 16 / 256).
+    pub fn find_kind_n_batch(&self, kind: &str, n: usize, batch: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .find(|a| {
+                a.meta.get("kind").map(String::as_str) == Some(kind)
+                    && a.meta_usize("n") == Some(n)
+                    && a.meta_usize("batch") == Some(batch)
+                    && !a.meta.contains_key("num_batches")
+            })
+            .with_context(|| format!("no artifact kind={kind} n={n} batch={batch}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "artifact\tfoo_n10\tfoo_n10.hlo.txt\t2\n\
+input\tfoo_n10\tx\tf32\t10,1\n\
+input\tfoo_n10\tidx\tu8\t64,10\n\
+meta\tfoo_n10\tkind\tfoo\n\
+meta\tfoo_n10\tn\t10\n\
+meta\tfoo_n10\tbatch\t64\n";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let a = m.get("foo_n10").unwrap();
+        assert_eq!(a.num_outputs, 2);
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![10, 1]);
+        assert_eq!(a.inputs[1].dtype, DType::U8);
+        assert_eq!(a.meta_usize("n"), Some(10));
+        assert_eq!(a.input("idx").unwrap().elements(), 640);
+        assert!(m.find_kind_n("foo", 10).is_ok());
+        assert!(m.find_kind_n("foo", 11).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus\tx", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("input\tmissing\tx\tf32\t1", Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() > 50);
+            let ds = m.find_kind_n("linreg_ds_step", 100).unwrap();
+            assert_eq!(ds.meta_usize("batch"), Some(64));
+            // Fig 6 variants resolvable by explicit batch
+            assert!(m.find_kind_n_batch("linreg_ds_step", 100, 16).is_ok());
+            assert!(m.find_kind_n_batch("linreg_ds_step", 100, 256).is_ok());
+        }
+    }
+}

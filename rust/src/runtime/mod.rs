@@ -1,0 +1,123 @@
+//! The PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the Rust hot loop. Python is never involved at this point.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`, with the
+//! root tuple decomposed into per-output literals.
+
+pub mod literal;
+pub mod manifest;
+
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub use literal::{lit_f32, lit_i32, lit_scalar11, lit_u8, to_f32_scalar, to_f32_vec};
+pub use manifest::{ArtifactSpec, DType, Manifest};
+
+/// Cumulative execution counters (perf accounting; see EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compile_count: u64,
+    pub exec_nanos: u64,
+}
+
+/// Owns the PJRT CPU client and a compiled-executable cache keyed by
+/// artifact name. One `Runtime` per process; cheap to share via `&`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default: `<repo>/artifacts`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Default artifact dir relative to the crate root.
+    pub fn default_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Self::open(&Self::default_dir())
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    /// Compile (or fetch cached) executable for `name`.
+    pub fn load(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        self.stats.borrow_mut().compile_count += 1;
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name`, returning the decomposed output tuple.
+    pub fn exec(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.get(name)?;
+        anyhow::ensure!(
+            args.len() == spec.inputs.len(),
+            "artifact {name} wants {} inputs, got {}",
+            spec.inputs.len(),
+            args.len()
+        );
+        let exe = self.load(name)?;
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(args)?;
+        let root = result[0][0].to_literal_sync()?;
+        let outs = root.to_tuple()?;
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.exec_nanos += t0.elapsed().as_nanos() as u64;
+        anyhow::ensure!(
+            outs.len() == spec.num_outputs,
+            "artifact {name} declared {} outputs, produced {}",
+            spec.num_outputs,
+            outs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Execute expecting a single output, extracted to f32.
+    pub fn exec1_f32(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        let outs = self.exec(name, args)?;
+        to_f32_vec(&outs[0])
+    }
+
+    /// Execute a loss artifact → scalar.
+    pub fn exec1_scalar(&self, name: &str, args: &[xla::Literal]) -> Result<f32> {
+        let outs = self.exec(name, args)?;
+        to_f32_scalar(&outs[0])
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,483 @@
+//! The SGD driver: epoch loop over the quantized sample store, executing
+//! AOT-compiled step artifacts on the PJRT runtime.
+//!
+//! Data is quantized ONCE into a bit-packed store (the paper quantizes
+//! "during the first epoch"); each step dequantizes a batch and dispatches
+//! one artifact execution. Loss is evaluated per epoch on full-precision
+//! data against the true objective.
+
+use anyhow::{bail, Context, Result};
+
+use crate::cheby;
+use crate::data::Dataset;
+use crate::quant::packing::{DoubleSampleBlock, PackedMatrix};
+use crate::quant::{discretized_optimal_levels, ColumnScale};
+use crate::rng::Rng;
+use crate::runtime::{lit_f32, lit_scalar11, lit_u8, Runtime};
+use crate::tensor::Matrix;
+
+use super::modes::{Mode, ModelKind};
+use super::refetch::RefetchState;
+
+/// Chebyshev settings shared with the artifacts (aot.py constants).
+pub const CHEBY_DEG: usize = 15;
+pub const RADIUS: f64 = 8.0;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: ModelKind,
+    pub mode: Mode,
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr0: f32,
+    pub seed: u64,
+    /// Number of 64-row batches used for the per-epoch loss evaluation.
+    pub eval_batches: usize,
+}
+
+impl TrainConfig {
+    pub fn new(model: ModelKind, mode: Mode) -> Self {
+        TrainConfig { model, mode, epochs: 20, batch: 64, lr0: 0.05, seed: 42, eval_batches: 16 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub mode_label: String,
+    /// loss_curve[e] = training loss after e epochs (index 0 = initial).
+    pub loss_curve: Vec<f64>,
+    pub final_loss: f64,
+    pub wall_secs: f64,
+    /// Sample bytes crossing the memory boundary per epoch (wire format).
+    pub sample_bytes_per_epoch: f64,
+    /// Fraction of samples refetched at full precision (refetch modes).
+    pub refetch_fraction: f64,
+    pub diverged: bool,
+    pub final_model: Vec<f32>,
+}
+
+/// Per-mode quantized representation of the training samples.
+enum Store {
+    Dense(Matrix),
+    Packed(PackedMatrix),
+    Double(DoubleSampleBlock),
+    /// per-feature variance-optimal grids + two pre-quantized index planes
+    /// (OptimalDs; "quantized during the first epoch", §Perf L3-4)
+    Levels {
+        grids: Vec<Vec<f32>>,
+        idx: [Vec<u8>; 2],
+    },
+}
+
+pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
+    let t0 = std::time::Instant::now();
+    let n = ds.n();
+    let b = cfg.batch;
+    let k = ds.k_train();
+    let nb = k / b;
+    if nb == 0 {
+        bail!("dataset smaller than one batch");
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let scale = ColumnScale::from_data(&ds.train_a);
+
+    // --- resolve artifacts -------------------------------------------------
+    let man = &rt.manifest;
+    let loss_art = man.find_kind_n(cfg.model.loss_kind(), n)?.name.clone();
+    let loss_batch = man.get(&loss_art)?.meta_usize("batch").unwrap_or(64);
+    let step_art: String = match (&cfg.mode, &cfg.model) {
+        (Mode::Full | Mode::Naive { .. } | Mode::NearestRound { .. }, m) => {
+            man.find_kind_n_batch(m.step_kind_fp(), n, b)?.name.clone()
+        }
+        (Mode::DoubleSample { .. } | Mode::OptimalDs { .. }, m) => {
+            let kind = m
+                .step_kind_ds()
+                .with_context(|| format!("mode {:?} unsupported for {:?}", cfg.mode, m))?;
+            man.find_kind_n_batch(kind, n, b)?.name.clone()
+        }
+        (Mode::DoubleSampleU8 { .. }, ModelKind::Linreg) => {
+            man.find_kind_n_batch("linreg_ds_u8_step", n, b)?.name.clone()
+        }
+        (Mode::EndToEnd { .. } | Mode::ModelQuant { .. } | Mode::GradQuant { .. }, ModelKind::Linreg) => {
+            man.find_kind_n_batch("e2e_step", n, b)?.name.clone()
+        }
+        (Mode::Cheby { .. }, m) if m.is_classification() => {
+            man.find_kind_n_batch("cheby_step", n, b)?.name.clone()
+        }
+        (Mode::PolyDs { .. }, m) if m.is_classification() => {
+            man.find_kind_n_batch("poly_ds_step", n, b)?.name.clone()
+        }
+        (Mode::Refetch { .. }, ModelKind::Svm) => {
+            man.find_kind_n_batch("svm_fp_step", n, b)?.name.clone()
+        }
+        (mode, m) => bail!("mode {mode:?} not supported for model {m:?}"),
+    };
+
+    // --- build the quantized store (the "first epoch" quantization) -------
+    let store = match cfg.mode {
+        // §C / §D: samples stay full precision
+        Mode::Full | Mode::ModelQuant { .. } | Mode::GradQuant { .. } => {
+            Store::Dense(ds.train_a.clone())
+        }
+        Mode::NearestRound { bits } => {
+            // deterministic nearest rounding of the data, once (§5.4 strawman)
+            let s = crate::quant::intervals_for_bits(bits);
+            let mut a = ds.train_a.clone();
+            for r in 0..a.rows {
+                for (c, v) in a.row_mut(r).iter_mut().enumerate() {
+                    let m = scale.m[c];
+                    if m <= 0.0 {
+                        *v = 0.0;
+                        continue;
+                    }
+                    let u = (*v / m).clamp(-1.0, 1.0);
+                    let idx = ((u + 1.0) * 0.5 * s as f32).round().min(s as f32);
+                    *v = (idx / s as f32 * 2.0 - 1.0) * m;
+                }
+            }
+            Store::Dense(a)
+        }
+        Mode::Naive { bits } | Mode::Refetch { bits, .. } => {
+            Store::Packed(PackedMatrix::quantize(&ds.train_a, &scale, bits, &mut rng))
+        }
+        Mode::DoubleSample { bits } | Mode::DoubleSampleU8 { bits } | Mode::EndToEnd { bits_s: bits, .. } => {
+            Store::Double(DoubleSampleBlock::quantize(&ds.train_a, &scale, bits, 2, &mut rng))
+        }
+        Mode::Cheby { bits } => {
+            Store::Double(DoubleSampleBlock::quantize(&ds.train_a, &scale, bits, 2, &mut rng))
+        }
+        Mode::PolyDs { bits } => Store::Double(DoubleSampleBlock::quantize(
+            &ds.train_a,
+            &scale,
+            bits,
+            CHEBY_DEG + 1,
+            &mut rng,
+        )),
+        Mode::OptimalDs { levels } => {
+            // per-feature grids from a column subsample (single data pass)
+            let sample_rows = k.min(2000);
+            let mut grids = Vec::with_capacity(n);
+            let mut col = vec![0.0f32; sample_rows];
+            for c in 0..n {
+                for (i, v) in col.iter_mut().enumerate() {
+                    *v = ds.train_a.get(i * (k / sample_rows).max(1) % k, c);
+                }
+                grids.push(discretized_optimal_levels(&col, levels, 64));
+            }
+            // pre-quantize both independent sample planes once
+            let mut idx = [vec![0u8; k * n], vec![0u8; k * n]];
+            for plane in idx.iter_mut() {
+                for (row, orow) in ds.train_a.data.chunks(n).zip(plane.chunks_mut(n)) {
+                    for ((&v, o), grid) in row.iter().zip(orow.iter_mut()).zip(&grids) {
+                        *o = crate::quant::stochastic::quantize_one_to_level_index(v, grid, &mut rng)
+                            as u8;
+                    }
+                }
+            }
+            Store::Levels { grids, idx }
+        }
+    };
+
+    // --- Chebyshev coefficients (classification approximations) -----------
+    let (coefs_lit, mono_lit) = if matches!(cfg.mode, Mode::Cheby { .. } | Mode::PolyDs { .. }) {
+        let f: Box<dyn Fn(f64) -> f64> = match cfg.model {
+            ModelKind::Logistic => Box::new(cheby::logistic_lprime),
+            ModelKind::Svm => Box::new(|z| cheby::hinge_lprime_smoothed(z, 0.25)),
+            _ => bail!("cheby modes need a classification model"),
+        };
+        let coefs = cheby::cheb_fit(&*f, RADIUS, CHEBY_DEG);
+        let mono = cheby::cheb_to_monomial(&coefs, RADIUS);
+        let cf: Vec<f32> = coefs.iter().map(|&c| c as f32).collect();
+        let mf: Vec<f32> = mono.iter().map(|&c| c as f32).collect();
+        (
+            Some(lit_f32(&[CHEBY_DEG + 1, 1], &cf)?),
+            Some(lit_f32(&[CHEBY_DEG + 1, 1], &mf)?),
+        )
+    } else {
+        (None, None)
+    };
+
+    // --- loss evaluation batches (full precision, fixed) -------------------
+    let eval_rows = (cfg.eval_batches * loss_batch).min(k / loss_batch * loss_batch);
+    let eval_nb = eval_rows / loss_batch;
+    let mut eval_lits = Vec::with_capacity(eval_nb);
+    for e in 0..eval_nb {
+        let rows: Vec<usize> = (e * loss_batch..(e + 1) * loss_batch).collect();
+        let a = ds.train_a.gather_rows(&rows);
+        let bv: Vec<f32> = rows.iter().map(|&r| ds.train_b[r]).collect();
+        eval_lits.push((lit_f32(&[loss_batch, n], &a.data)?, lit_f32(&[loss_batch, 1], &bv)?));
+    }
+    let c_reg = if let ModelKind::Lssvm { c } = cfg.model { c } else { 0.0 };
+    let eval_loss = |x: &[f32], rt: &Runtime| -> Result<f64> {
+        let xl = lit_f32(&[n, 1], x)?;
+        let mut acc = 0.0f64;
+        for (al, bl) in &eval_lits {
+            let args: Vec<xla::Literal> = match cfg.model {
+                ModelKind::Lssvm { .. } => vec![
+                    xl.clone(),
+                    al.clone(),
+                    bl.clone(),
+                    lit_scalar11(c_reg)?,
+                ],
+                _ => vec![xl.clone(), al.clone(), bl.clone()],
+            };
+            acc += rt.exec1_scalar(&loss_art, &args)? as f64;
+        }
+        Ok(acc / eval_nb as f64)
+    };
+
+    // --- refetch state ------------------------------------------------------
+    let mut refetch = if let Mode::Refetch { bits, strategy } = cfg.mode {
+        Some(RefetchState::new(ds, &scale, bits, strategy, cfg.seed ^ 0x5245_4645_5443_4821)?)
+    } else {
+        None
+    };
+
+    // --- epoch loop ---------------------------------------------------------
+    let mut x = vec![0.0f32; n];
+    let mut loss_curve = Vec::with_capacity(cfg.epochs + 1);
+    loss_curve.push(eval_loss(&x, rt)?);
+    let mut order: Vec<usize> = (0..nb * b).collect();
+    let mut diverged = false;
+
+    // reusable batch buffers
+    let mut a1 = Matrix::zeros(b, n);
+    let mut a2 = Matrix::zeros(b, n);
+    let mut bv = vec![0.0f32; b];
+    let mut idx1 = vec![0u8; b * n];
+    let mut idx2 = vec![0u8; b * n];
+    let mut aq_poly = vec![0.0f32; (CHEBY_DEG + 1) * b * n];
+    let mut rand_buf = vec![0.0f32; n];
+    let mut rand_buf2 = vec![0.0f32; n];
+
+    'outer: for epoch in 0..cfg.epochs {
+        let lr = super::lr_at_epoch(cfg.lr0, epoch);
+        let lr_lit = lit_scalar11(lr)?;
+        rng.shuffle(&mut order);
+        for bi in 0..nb {
+            let rows = &order[bi * b..(bi + 1) * b];
+            for (i, &r) in rows.iter().enumerate() {
+                bv[i] = ds.train_b[r];
+            }
+            let xl = lit_f32(&[n, 1], &x)?;
+            let bl = lit_f32(&[b, 1], &bv)?;
+
+            let out = match (&store, &cfg.mode) {
+                // §C (model-only) / §D (gradient-only) quantization reuse
+                // the e2e artifact with full-precision samples (a1 == a2 ==
+                // A makes the DS estimator exact) and the *other* quantizer
+                // at f32-resolution interval count.
+                (Store::Dense(a), Mode::ModelQuant { bits }) | (Store::Dense(a), Mode::GradQuant { bits }) => {
+                    gather_into(a, rows, &mut a1);
+                    rng.fill_uniform(&mut rand_buf);
+                    rng.fill_uniform(&mut rand_buf2);
+                    const FP_INTERVALS: f32 = ((1u32 << 23) - 1) as f32;
+                    let q = crate::quant::intervals_for_bits(*bits) as f32;
+                    let (s_m, s_g) = if matches!(cfg.mode, Mode::ModelQuant { .. }) {
+                        (q, FP_INTERVALS)
+                    } else {
+                        (FP_INTERVALS, q)
+                    };
+                    let al = lit_f32(&[b, n], &a1.data)?;
+                    let args = vec![
+                        xl,
+                        al.clone(),
+                        al,
+                        bl,
+                        lr_lit.clone(),
+                        lit_f32(&[1, n], &rand_buf)?,
+                        lit_f32(&[1, n], &rand_buf2)?,
+                        lit_scalar11(s_m)?,
+                        lit_scalar11(s_g)?,
+                    ];
+                    rt.exec(&step_art, &args)?
+                }
+                (Store::Dense(a), _) => {
+                    gather_into(a, rows, &mut a1);
+                    let al = lit_f32(&[b, n], &a1.data)?;
+                    let mut args = vec![xl, al, bl, lr_lit.clone()];
+                    if let ModelKind::Lssvm { c } = cfg.model {
+                        args.push(lit_scalar11(c)?);
+                    }
+                    rt.exec(&step_art, &args)?
+                }
+                (Store::Packed(p), Mode::Naive { .. }) => {
+                    for (i, &r) in rows.iter().enumerate() {
+                        p.dequantize_row(r, a1.row_mut(i));
+                    }
+                    let al = lit_f32(&[b, n], &a1.data)?;
+                    let mut args = vec![xl, al, bl, lr_lit.clone()];
+                    if let ModelKind::Lssvm { c } = cfg.model {
+                        args.push(lit_scalar11(c)?);
+                    }
+                    rt.exec(&step_art, &args)?
+                }
+                (Store::Packed(p), Mode::Refetch { .. }) => {
+                    let rf = refetch.as_mut().unwrap();
+                    rf.prepare_batch(rt, p, ds, rows, &x, &mut a1)?;
+                    let al = lit_f32(&[b, n], &a1.data)?;
+                    rt.exec(&step_art, &[xl, al, bl, lr_lit.clone()])?
+                }
+                (Store::Double(dsb), Mode::DoubleSampleU8 { bits }) => {
+                    for (i, &r) in rows.iter().enumerate() {
+                        dsb.indices_row_u8(r, 0, &mut idx1[i * n..(i + 1) * n]);
+                        dsb.indices_row_u8(r, 1, &mut idx2[i * n..(i + 1) * n]);
+                    }
+                    let s = crate::quant::intervals_for_bits(*bits) as f32;
+                    let args = vec![
+                        xl,
+                        lit_u8(&[b, n], &idx1)?,
+                        lit_u8(&[b, n], &idx2)?,
+                        lit_f32(&[1, n], &scale.m)?,
+                        lit_scalar11(s)?,
+                        bl,
+                        lr_lit.clone(),
+                    ];
+                    rt.exec(&step_art, &args)?
+                }
+                (Store::Double(dsb), Mode::EndToEnd { bits_m, bits_g, .. }) => {
+                    for (i, &r) in rows.iter().enumerate() {
+                        dsb.dequantize_row(r, 0, a1.row_mut(i));
+                        dsb.dequantize_row(r, 1, a2.row_mut(i));
+                    }
+                    rng.fill_uniform(&mut rand_buf);
+                    rng.fill_uniform(&mut rand_buf2);
+                    let s_m = crate::quant::intervals_for_bits(*bits_m) as f32;
+                    let s_g = crate::quant::intervals_for_bits(*bits_g) as f32;
+                    let args = vec![
+                        xl,
+                        lit_f32(&[b, n], &a1.data)?,
+                        lit_f32(&[b, n], &a2.data)?,
+                        bl,
+                        lr_lit.clone(),
+                        lit_f32(&[1, n], &rand_buf)?,
+                        lit_f32(&[1, n], &rand_buf2)?,
+                        lit_scalar11(s_m)?,
+                        lit_scalar11(s_g)?,
+                    ];
+                    rt.exec(&step_art, &args)?
+                }
+                (Store::Double(dsb), Mode::Cheby { .. }) => {
+                    for (i, &r) in rows.iter().enumerate() {
+                        dsb.dequantize_row(r, 0, a1.row_mut(i));
+                        dsb.dequantize_row(r, 1, a2.row_mut(i));
+                    }
+                    let args = vec![
+                        xl,
+                        lit_f32(&[b, n], &a1.data)?,
+                        lit_f32(&[b, n], &a2.data)?,
+                        bl,
+                        lr_lit.clone(),
+                        coefs_lit.as_ref().unwrap().clone(),
+                    ];
+                    rt.exec(&step_art, &args)?
+                }
+                (Store::Double(dsb), Mode::PolyDs { .. }) => {
+                    for j in 0..=CHEBY_DEG {
+                        for (i, &r) in rows.iter().enumerate() {
+                            let off = j * b * n + i * n;
+                            dsb.dequantize_row(r, j, &mut aq_poly[off..off + n]);
+                        }
+                    }
+                    let args = vec![
+                        xl,
+                        lit_f32(&[CHEBY_DEG + 1, b, n], &aq_poly)?,
+                        bl,
+                        lr_lit.clone(),
+                        mono_lit.as_ref().unwrap().clone(),
+                    ];
+                    rt.exec(&step_art, &args)?
+                }
+                (Store::Double(dsb), _) => {
+                    // plain double sampling
+                    for (i, &r) in rows.iter().enumerate() {
+                        dsb.dequantize_row(r, 0, a1.row_mut(i));
+                        dsb.dequantize_row(r, 1, a2.row_mut(i));
+                    }
+                    let mut args = vec![
+                        xl,
+                        lit_f32(&[b, n], &a1.data)?,
+                        lit_f32(&[b, n], &a2.data)?,
+                        bl,
+                        lr_lit.clone(),
+                    ];
+                    if let ModelKind::Lssvm { c } = cfg.model {
+                        args.push(lit_scalar11(c)?);
+                    }
+                    rt.exec(&step_art, &args)?
+                }
+                (Store::Packed(_), mode) => {
+                    bail!("packed store with incompatible mode {mode:?}")
+                }
+                (Store::Levels { grids, idx }, _) => {
+                    // variance-optimal grids: gather pre-quantized indices
+                    // and dequantize via grid lookup (§Perf L3-4)
+                    for (i, &r) in rows.iter().enumerate() {
+                        let (p0, p1) = (&idx[0][r * n..(r + 1) * n], &idx[1][r * n..(r + 1) * n]);
+                        for c in 0..n {
+                            a1.set(i, c, grids[c][p0[c] as usize]);
+                            a2.set(i, c, grids[c][p1[c] as usize]);
+                        }
+                    }
+                    let mut args = vec![
+                        xl,
+                        lit_f32(&[b, n], &a1.data)?,
+                        lit_f32(&[b, n], &a2.data)?,
+                        bl,
+                        lr_lit.clone(),
+                    ];
+                    if let ModelKind::Lssvm { c } = cfg.model {
+                        args.push(lit_scalar11(c)?);
+                    }
+                    rt.exec(&step_art, &args)?
+                }
+            };
+            let newx = crate::runtime::to_f32_vec(&out[0])?;
+            x.copy_from_slice(&newx);
+            // radius projection for polynomial-approximation modes
+            if matches!(cfg.mode, Mode::Cheby { .. } | Mode::PolyDs { .. }) {
+                let norm = crate::tensor::norm2(&x);
+                if norm > RADIUS as f32 {
+                    let f = RADIUS as f32 / norm;
+                    for v in x.iter_mut() {
+                        *v *= f;
+                    }
+                }
+            }
+        }
+        let loss = eval_loss(&x, rt)?;
+        loss_curve.push(loss);
+        if !loss.is_finite() || loss > 1e12 {
+            diverged = true;
+            break 'outer;
+        }
+    }
+
+    // --- bandwidth accounting ------------------------------------------------
+    let wire_bits = cfg.mode.wire_bits_per_value(CHEBY_DEG);
+    let mut sample_bytes = (nb * b * n) as f64 * wire_bits / 8.0;
+    let refetch_fraction = refetch
+        .as_ref()
+        .map(|r| r.fraction())
+        .unwrap_or(0.0);
+    if let Some(rf) = &refetch {
+        sample_bytes += rf.extra_bytes_per_epoch(nb * b, n);
+    }
+
+    Ok(TrainResult {
+        mode_label: cfg.mode.label(),
+        final_loss: *loss_curve.last().unwrap(),
+        loss_curve,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        sample_bytes_per_epoch: sample_bytes,
+        refetch_fraction,
+        diverged,
+        final_model: x,
+    })
+}
+
+fn gather_into(a: &Matrix, rows: &[usize], out: &mut Matrix) {
+    for (i, &r) in rows.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(a.row(r));
+    }
+}

@@ -1,0 +1,32 @@
+//! The ZipML training system: quantized sample store + SGD driver running
+//! AOT-compiled step artifacts on the PJRT runtime.
+//!
+//! * [`modes`]   — the quantization mode lattice (Fig 1's design space)
+//! * [`driver`]  — the epoch loop: store → batches → artifact execution
+//! * [`refetch`] — ℓ1 / ℓ2(JL) refetching for hinge loss (§G)
+//! * [`deep`]    — quantized-model MLP training (§3.3, Fig 7b)
+
+pub mod deep;
+pub mod driver;
+pub mod modes;
+pub mod refetch;
+
+pub use driver::{train, TrainConfig, TrainResult};
+pub use modes::{Mode, ModelKind};
+
+/// Diminishing step size α/k per epoch k (the paper's §5 schedule).
+pub fn lr_at_epoch(lr0: f32, epoch: usize) -> f32 {
+    lr0 / (epoch as f32 + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_diminishes() {
+        assert_eq!(lr_at_epoch(0.1, 0), 0.1);
+        assert_eq!(lr_at_epoch(0.1, 1), 0.05);
+        assert!(lr_at_epoch(0.1, 9) < lr_at_epoch(0.1, 8));
+    }
+}

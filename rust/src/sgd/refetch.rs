@@ -1,0 +1,202 @@
+//! Refetching for non-smooth losses (§G.3–G.4).
+//!
+//! Hinge-loss SGD on quantized samples can *flip* the subgradient: the sign
+//! of (1 − b·aᵀx) may differ between Q(a) and a. Two guards:
+//!
+//! * **ℓ1** (deterministic, §G.4): per-coordinate quantization error is at
+//!   most one grid interval, so |Q(a)ᵀx − aᵀx| ≤ Σ_c |x_c| · 2 m_c / s.
+//!   If [margin ± bound] brackets 1, refetch the full-precision row.
+//!   *Never* admits a flip — a property test pins this.
+//! * **ℓ2 / JL** (probabilistic, §G.3.1): transmitter and receiver share a
+//!   seed; the margin is estimated from r-dimensional ±1 sketches and rows
+//!   inside the 2δ gap are refetched. Communication per decision is r
+//!   floats instead of n.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::quant::jl::JlSketch;
+use crate::quant::packing::PackedMatrix;
+use crate::quant::ColumnScale;
+use crate::runtime::{lit_f32, Runtime};
+use crate::tensor::Matrix;
+
+use super::modes::RefetchStrategy;
+
+pub struct RefetchState {
+    strategy: RefetchStrategy,
+    s: u32,
+    scale_m: Vec<f32>,
+    /// cached sketches of the *full-precision* rows (computed once — the
+    /// transmitter-side half of the §G.3.1 protocol)
+    row_sketches: Vec<Vec<f32>>,
+    jl: Option<JlSketch>,
+    /// counters
+    refetched: u64,
+    total: u64,
+}
+
+impl RefetchState {
+    pub fn new(
+        ds: &Dataset,
+        scale: &ColumnScale,
+        bits: u32,
+        strategy: RefetchStrategy,
+        seed: u64,
+    ) -> Result<Self> {
+        let s = crate::quant::intervals_for_bits(bits);
+        let (jl, row_sketches) = match strategy {
+            RefetchStrategy::L1 => (None, Vec::new()),
+            RefetchStrategy::L2Jl { sketch_dim, .. } => {
+                let jl = JlSketch::new(sketch_dim, ds.n(), seed);
+                let sketches = (0..ds.k_train())
+                    .map(|r| jl.sketch(ds.train_a.row(r)))
+                    .collect();
+                (Some(jl), sketches)
+            }
+        };
+        Ok(RefetchState {
+            strategy,
+            s,
+            scale_m: scale.m.clone(),
+            row_sketches,
+            jl,
+            refetched: 0,
+            total: 0,
+        })
+    }
+
+    /// Fill `batch` with dequantized rows, replacing flagged rows by their
+    /// full-precision originals. `rows` are dataset indices.
+    pub fn prepare_batch(
+        &mut self,
+        rt: &Runtime,
+        packed: &PackedMatrix,
+        ds: &Dataset,
+        rows: &[usize],
+        x: &[f32],
+        batch: &mut Matrix,
+    ) -> Result<()> {
+        let n = ds.n();
+        let b = rows.len();
+        for (i, &r) in rows.iter().enumerate() {
+            packed.dequantize_row(r, batch.row_mut(i));
+        }
+        self.total += b as u64;
+        match self.strategy {
+            RefetchStrategy::L1 => {
+                // margins on the quantized batch via the margins artifact
+                let bv: Vec<f32> = rows.iter().map(|&r| ds.train_b[r]).collect();
+                let margins = rt.exec1_f32(
+                    &rt.manifest.find_kind_n("margins", n)?.name.clone(),
+                    &[
+                        lit_f32(&[n, 1], x)?,
+                        lit_f32(&[b, n], &batch.data)?,
+                        lit_f32(&[b, 1], &bv)?,
+                    ],
+                )?;
+                // worst-case |Q(a)ᵀx − aᵀx| under one-interval error/coord
+                let bound: f32 = x
+                    .iter()
+                    .zip(&self.scale_m)
+                    .map(|(&xc, &mc)| xc.abs() * 2.0 * mc / self.s as f32)
+                    .sum();
+                for (i, &r) in rows.iter().enumerate() {
+                    let gap = 1.0 - margins[i];
+                    if gap.abs() <= bound {
+                        batch.row_mut(i).copy_from_slice(ds.train_a.row(r));
+                        self.refetched += 1;
+                    }
+                }
+            }
+            RefetchStrategy::L2Jl { delta, .. } => {
+                let jl = self.jl.as_ref().unwrap();
+                let sx = jl.sketch(x);
+                for (i, &r) in rows.iter().enumerate() {
+                    let est = JlSketch::est_dot(&self.row_sketches[r], &sx);
+                    let c = 1.0 - ds.train_b[r] * est;
+                    if c.abs() <= 2.0 * delta {
+                        batch.row_mut(i).copy_from_slice(ds.train_a.row(r));
+                        self.refetched += 1;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn fraction(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.refetched as f64 / self.total as f64
+        }
+    }
+
+    /// Additional full-precision bytes fetched per epoch, amortized.
+    pub fn extra_bytes_per_epoch(&self, samples_per_epoch: usize, n: usize) -> f64 {
+        let per_sample = self.fraction() * (n * 4) as f64;
+        let jl_overhead = match self.strategy {
+            RefetchStrategy::L1 => 0.0,
+            // receiver ships its sketch of x once per *step*; amortized per
+            // sample it is r·4/B bytes — counted conservatively per sample
+            RefetchStrategy::L2Jl { sketch_dim, .. } => (sketch_dim * 4) as f64 / 64.0,
+        };
+        (per_sample + jl_overhead) * samples_per_epoch as f64
+    }
+}
+
+/// Pure helper used by tests: does the ℓ1 bound provably preclude a flip?
+pub fn l1_flip_impossible(margin_q: f32, x: &[f32], scale_m: &[f32], s: u32) -> bool {
+    let bound: f32 = x
+        .iter()
+        .zip(scale_m)
+        .map(|(&xc, &mc)| xc.abs() * 2.0 * mc / s as f32)
+        .sum();
+    (1.0 - margin_q).abs() > bound
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::Prop;
+    use crate::rng::Rng;
+    use crate::tensor::dot;
+
+    /// The ℓ1 guarantee: if the bound says "no flip possible", then for the
+    /// *true* full-precision margin the sign of (1 − z) must match.
+    #[test]
+    fn l1_bound_never_admits_flip() {
+        Prop::new(200).check("l1-no-flip", |rng: &mut Rng| {
+            let n = 1 + (rng.below(30));
+            let s = 1 + rng.below(15) as u32;
+            let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() * 0.5).collect();
+            let m: Vec<f32> = a.iter().map(|v| v.abs() + rng.f32() * 0.5 + 1e-3).collect();
+            let b = if rng.f32() < 0.5 { 1.0 } else { -1.0 };
+            // quantize a stochastically
+            let mut q = vec![0.0f32; n];
+            crate::quant::stochastic::quantize_values(&a, n, &m, s, rng, &mut q);
+            let zq = b * dot(&q, &x);
+            let z = b * dot(&a, &x);
+            if l1_flip_impossible(zq, &x, &m, s) {
+                let sq = (1.0 - zq) > 0.0;
+                let st = (1.0 - z) > 0.0;
+                if sq != st {
+                    return Err(format!("flip admitted: zq={zq} z={z}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn l1_bound_scales_with_bits() {
+        let x = [0.5f32, -0.5];
+        let m = [1.0f32, 1.0];
+        // higher s (more bits) → tighter bound → fewer refetches
+        let loose = !l1_flip_impossible(1.05, &x, &m, 1);
+        let tight = l1_flip_impossible(1.05, &x, &m, 255);
+        assert!(loose && tight);
+    }
+}

@@ -1,0 +1,172 @@
+//! Minimal dense row-major matrix used by the coordinator.
+//!
+//! The *heavy* math runs in the AOT-compiled XLA artifacts; this type covers
+//! host-side bookkeeping (dataset storage, reference gradients for tests,
+//! Hogwild baseline, refetch bounds).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// y = A x (x.len() == cols).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            y[r] = dot(self.row(r), x);
+        }
+        y
+    }
+
+    /// y = Aᵀ v (v.len() == rows).
+    pub fn tmatvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.rows);
+        let mut y = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            let vr = v[r];
+            if vr == 0.0 {
+                continue;
+            }
+            for (yc, &a) in y.iter_mut().zip(self.row(r)) {
+                *yc += vr * a;
+            }
+        }
+        y
+    }
+
+    /// Gather rows into a contiguous (idx.len() × cols) buffer.
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Per-column min/max — inputs to the paper's column scaling (§A.3).
+    pub fn col_min_max(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut lo = vec![f32::INFINITY; self.cols];
+        let mut hi = vec![f32::NEG_INFINITY; self.cols];
+        for r in 0..self.rows {
+            for (c, &v) in self.row(r).iter().enumerate() {
+                if v < lo[c] {
+                    lo[c] = v;
+                }
+                if v > hi[c] {
+                    hi[c] = v;
+                }
+            }
+        }
+        (lo, hi)
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: measurably faster than naive zip-sum and
+    // deterministic (fixed association order).
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * 4..a.len() {
+        tail += a[j] * b[j];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+pub fn norm1(x: &[f32]) -> f32 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_known() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.matvec(&[1., 1., 1.]), vec![6., 15.]);
+        assert_eq!(a.tmatvec(&[1., 1.]), vec![5., 7., 9.]);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..37).map(|i| (37 - i) as f32 * 0.25).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-2);
+    }
+
+    #[test]
+    fn gather_rows_copies() {
+        let a = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let g = a.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn col_min_max_correct() {
+        let a = Matrix::from_vec(2, 2, vec![1., -5., 3., 2.]);
+        let (lo, hi) = a.col_min_max();
+        assert_eq!(lo, vec![1., -5.]);
+        assert_eq!(hi, vec![3., 2.]);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm2(&[3., 4.]) - 5.0).abs() < 1e-6);
+        assert!((norm1(&[3., -4.]) - 7.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,262 @@
+//! Integration: every artifact class loads, compiles, executes, and agrees
+//! with Rust-side reference math. Requires `make artifacts`.
+
+use zipml::rng::Rng;
+use zipml::runtime::{lit_f32, lit_scalar11, lit_u8, Runtime};
+use zipml::tensor::{dot, Matrix};
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("run `make artifacts` first")
+}
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal()).collect())
+}
+
+/// linreg_fp_step == x − lr·Aᵀ(Ax−b)/B computed host-side.
+#[test]
+fn linreg_fp_step_matches_reference() {
+    let rt = runtime();
+    let mut rng = Rng::new(1);
+    let (b, n) = (64usize, 10usize);
+    let a = rand_mat(&mut rng, b, n);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let bv: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+    let lr = 0.05f32;
+    let out = rt
+        .exec1_f32(
+            "linreg_fp_step_n10",
+            &[
+                lit_f32(&[n, 1], &x).unwrap(),
+                lit_f32(&[b, n], &a.data).unwrap(),
+                lit_f32(&[b, 1], &bv).unwrap(),
+                lit_scalar11(lr).unwrap(),
+            ],
+        )
+        .unwrap();
+    let mut r = a.matvec(&x);
+    for (ri, &bi) in r.iter_mut().zip(&bv) {
+        *ri -= bi;
+    }
+    let g = a.tmatvec(&r);
+    for (i, &o) in out.iter().enumerate() {
+        let expect = x[i] - lr * g[i] / b as f32;
+        assert!((o - expect).abs() < 1e-4, "coord {i}: {o} vs {expect}");
+    }
+}
+
+/// The DS artifact with a1 == a2 == A equals the fp step.
+#[test]
+fn ds_step_reduces_to_fp_when_unquantized() {
+    let rt = runtime();
+    let mut rng = Rng::new(2);
+    let (b, n) = (64usize, 100usize);
+    let a = rand_mat(&mut rng, b, n);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let bv: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+    let args_fp = [
+        lit_f32(&[n, 1], &x).unwrap(),
+        lit_f32(&[b, n], &a.data).unwrap(),
+        lit_f32(&[b, 1], &bv).unwrap(),
+        lit_scalar11(0.1).unwrap(),
+    ];
+    let fp = rt.exec1_f32("linreg_fp_step_n100", &args_fp).unwrap();
+    let args_ds = [
+        lit_f32(&[n, 1], &x).unwrap(),
+        lit_f32(&[b, n], &a.data).unwrap(),
+        lit_f32(&[b, n], &a.data).unwrap(),
+        lit_f32(&[b, 1], &bv).unwrap(),
+        lit_scalar11(0.1).unwrap(),
+    ];
+    let ds = rt.exec1_f32("linreg_ds_step_n100", &args_ds).unwrap();
+    for (f, d) in fp.iter().zip(&ds) {
+        assert!((f - d).abs() < 1e-4, "{f} vs {d}");
+    }
+}
+
+/// u8 path: dequantize-in-kernel equals host-side dequantize + DS step.
+#[test]
+fn u8_step_matches_f32_ds_step() {
+    let rt = runtime();
+    let mut rng = Rng::new(3);
+    let (b, n, s) = (64usize, 100usize, 15u32);
+    let idx1: Vec<u8> = (0..b * n).map(|_| (rng.below(s as usize + 1)) as u8).collect();
+    let idx2: Vec<u8> = (0..b * n).map(|_| (rng.below(s as usize + 1)) as u8).collect();
+    let m: Vec<f32> = (0..n).map(|_| 0.5 + rng.f32()).collect();
+    let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let bv: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+    let out_u8 = rt
+        .exec1_f32(
+            "linreg_ds_u8_step_n100",
+            &[
+                lit_f32(&[n, 1], &x).unwrap(),
+                lit_u8(&[b, n], &idx1).unwrap(),
+                lit_u8(&[b, n], &idx2).unwrap(),
+                lit_f32(&[1, n], &m).unwrap(),
+                lit_scalar11(s as f32).unwrap(),
+                lit_f32(&[b, 1], &bv).unwrap(),
+                lit_scalar11(0.05).unwrap(),
+            ],
+        )
+        .unwrap();
+    let deq = |idx: &[u8]| -> Vec<f32> {
+        idx.iter()
+            .enumerate()
+            .map(|(i, &v)| (v as f32 / s as f32 * 2.0 - 1.0) * m[i % n])
+            .collect()
+    };
+    let a1 = deq(&idx1);
+    let a2 = deq(&idx2);
+    let out_f32 = rt
+        .exec1_f32(
+            "linreg_ds_step_n100",
+            &[
+                lit_f32(&[n, 1], &x).unwrap(),
+                lit_f32(&[b, n], &a1).unwrap(),
+                lit_f32(&[b, n], &a2).unwrap(),
+                lit_f32(&[b, 1], &bv).unwrap(),
+                lit_scalar11(0.05).unwrap(),
+            ],
+        )
+        .unwrap();
+    for (u, f) in out_u8.iter().zip(&out_f32) {
+        assert!((u - f).abs() < 1e-4, "{u} vs {f}");
+    }
+}
+
+/// quantize_v artifact is unbiased and lands on the grid.
+#[test]
+fn quantize_artifact_unbiased() {
+    let rt = runtime();
+    let mut rng = Rng::new(4);
+    let n = 100;
+    let v: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let m = vec![1.0f32; n];
+    let s = 7.0f32;
+    let trials = 400;
+    let mut acc = vec![0.0f64; n];
+    for _ in 0..trials {
+        let r: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let q = rt
+            .exec1_f32(
+                "quantize_v_n100",
+                &[
+                    lit_f32(&[1, n], &v).unwrap(),
+                    lit_f32(&[1, n], &r).unwrap(),
+                    lit_f32(&[1, n], &m).unwrap(),
+                    lit_scalar11(s).unwrap(),
+                ],
+            )
+            .unwrap();
+        for (a, &qi) in acc.iter_mut().zip(&q) {
+            *a += qi as f64;
+            let t = (qi + 1.0) / 2.0 * s;
+            assert!((t - t.round()).abs() < 1e-3, "{qi} off-grid");
+        }
+    }
+    let worst = acc
+        .iter()
+        .zip(&v)
+        .map(|(a, &x)| (a / trials as f64 - x as f64).abs())
+        .fold(0.0f64, f64::max);
+    assert!(worst < 0.05, "bias {worst}");
+}
+
+/// Loss artifacts agree with host math.
+#[test]
+fn loss_artifacts_match_host() {
+    let rt = runtime();
+    let mut rng = Rng::new(5);
+    let (b, n) = (64usize, 10usize);
+    let a = rand_mat(&mut rng, b, n);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let bv: Vec<f32> = (0..b).map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 }).collect();
+    let args = [
+        lit_f32(&[n, 1], &x).unwrap(),
+        lit_f32(&[b, n], &a.data).unwrap(),
+        lit_f32(&[b, 1], &bv).unwrap(),
+    ];
+    let mse = rt.exec1_scalar("linreg_loss_n10", &args).unwrap();
+    let host_mse: f32 = (0..b)
+        .map(|i| (dot(a.row(i), &x) - bv[i]).powi(2))
+        .sum::<f32>()
+        / b as f32;
+    assert!((mse - host_mse).abs() < 1e-3 * host_mse.max(1.0));
+
+    let a8 = rand_mat(&mut rng, b, 8);
+    let x8: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+    let hinge = rt
+        .exec1_scalar(
+            "hinge_loss_n8",
+            &[
+                lit_f32(&[8, 1], &x8).unwrap(),
+                lit_f32(&[b, 8], &a8.data).unwrap(),
+                lit_f32(&[b, 1], &bv).unwrap(),
+            ],
+        )
+        .unwrap();
+    let host_hinge: f32 = (0..b)
+        .map(|i| (1.0 - bv[i] * dot(a8.row(i), &x8)).max(0.0))
+        .sum::<f32>()
+        / b as f32;
+    assert!((hinge - host_hinge).abs() < 1e-3 * host_hinge.max(1.0));
+}
+
+/// margins artifact returns b ⊙ (A x).
+#[test]
+fn margins_artifact_matches_host() {
+    let rt = runtime();
+    let mut rng = Rng::new(6);
+    let (b, n) = (64usize, 8usize);
+    let a = rand_mat(&mut rng, b, n);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let bv: Vec<f32> = (0..b).map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 }).collect();
+    let out = rt
+        .exec1_f32(
+            "margins_n8",
+            &[
+                lit_f32(&[n, 1], &x).unwrap(),
+                lit_f32(&[b, n], &a.data).unwrap(),
+                lit_f32(&[b, 1], &bv).unwrap(),
+            ],
+        )
+        .unwrap();
+    for i in 0..b {
+        let host = bv[i] * dot(a.row(i), &x);
+        assert!((out[i] - host).abs() < 1e-4);
+    }
+}
+
+/// Executable cache: second load is free; stats track compiles.
+#[test]
+fn runtime_caches_executables() {
+    let rt = runtime();
+    let _ = rt.load("linreg_loss_n10").unwrap();
+    let c1 = rt.stats().compile_count;
+    let _ = rt.load("linreg_loss_n10").unwrap();
+    assert_eq!(rt.stats().compile_count, c1);
+    assert_eq!(rt.cached(), 1);
+}
+
+/// Manifest covers the artifact families the driver expects.
+#[test]
+fn manifest_families_complete() {
+    let rt = runtime();
+    let m = &rt.manifest;
+    for n in [8usize, 10, 12, 90, 100, 500, 1000, 4096] {
+        assert!(m.find_kind_n("linreg_fp_step", n).is_ok(), "linreg fp n={n}");
+        assert!(m.find_kind_n("linreg_ds_step", n).is_ok(), "linreg ds n={n}");
+        assert!(m.find_kind_n("linreg_loss", n).is_ok(), "linreg loss n={n}");
+        assert!(m.find_kind_n("lssvm_ds_step", n).is_ok(), "lssvm ds n={n}");
+    }
+    for n in [8usize, 100, 500] {
+        assert!(m.find_kind_n("logistic_fp_step", n).is_ok());
+        assert!(m.find_kind_n("svm_fp_step", n).is_ok());
+        assert!(m.find_kind_n("cheby_step", n).is_ok());
+        assert!(m.find_kind_n("poly_ds_step", n).is_ok());
+        assert!(m.find_kind_n("margins", n).is_ok());
+    }
+    assert!(m.get("mlp_fp_step").is_ok());
+    assert!(m.get("mlp_q_step").is_ok());
+    assert!(m.get("linreg_ds_epoch_n100").is_ok());
+}

@@ -1,0 +1,237 @@
+//! Integration: full training loops through the PJRT runtime per mode —
+//! the paper's headline claims at smoke scale. Requires `make artifacts`.
+
+use zipml::data::synthetic::{make_classification, make_regression};
+use zipml::runtime::Runtime;
+use zipml::sgd::modes::RefetchStrategy;
+use zipml::sgd::{self, deep, Mode, ModelKind, TrainConfig};
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("run `make artifacts` first")
+}
+
+fn cfg(model: ModelKind, mode: Mode, epochs: usize, lr: f32) -> TrainConfig {
+    let mut c = TrainConfig::new(model, mode);
+    c.epochs = epochs;
+    c.lr0 = lr;
+    c.eval_batches = 4;
+    c
+}
+
+/// Double-sampled 5-bit converges to ~the FP32 solution (Fig 4 claim).
+#[test]
+fn ds5_matches_fp32_linreg() {
+    let rt = runtime();
+    let ds = make_regression("it100", 2048, 256, 100, 7);
+    let fp = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::Full, 10, 0.05)).unwrap();
+    let q5 = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSample { bits: 5 }, 10, 0.05)).unwrap();
+    assert!(!fp.diverged && !q5.diverged);
+    assert!(fp.final_loss < 0.2 * fp.loss_curve[0], "fp did not converge");
+    // comparable convergence: within 2.5x of fp final (smoke tolerance)
+    assert!(
+        q5.final_loss < (2.5 * fp.final_loss).max(0.05 * q5.loss_curve[0]),
+        "ds5 {} vs fp {}",
+        q5.final_loss,
+        fp.final_loss
+    );
+    // and the bandwidth win is real
+    assert!(fp.sample_bytes_per_epoch / q5.sample_bytes_per_epoch > 4.0);
+}
+
+/// Naive quantization at low bits is measurably worse than double sampling
+/// on a large-minimizer instance (§B.1).
+#[test]
+fn naive_is_biased_ds_is_not() {
+    let rt = runtime();
+    // large x*: shift labels so minimizer is far from origin
+    let mut ds = make_regression("bias_it", 2048, 256, 10, 9);
+    let boost: Vec<f32> = ds.train_a.matvec(&vec![2.0; 10]);
+    for (b, add) in ds.train_b.iter_mut().zip(&boost) {
+        *b += add;
+    }
+    let boost_t: Vec<f32> = ds.test_a.matvec(&vec![2.0; 10]);
+    for (b, add) in ds.test_b.iter_mut().zip(&boost_t) {
+        *b += add;
+    }
+    let naive = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::Naive { bits: 2 }, 25, 0.1)).unwrap();
+    let dsq = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSample { bits: 2 }, 25, 0.1)).unwrap();
+    assert!(
+        naive.final_loss > 2.0 * dsq.final_loss,
+        "bias not visible: naive {} vs ds {}",
+        naive.final_loss,
+        dsq.final_loss
+    );
+}
+
+/// u8-index path trains equivalently to the f32 DS path.
+#[test]
+fn ds_u8_path_trains() {
+    let rt = runtime();
+    let ds = make_regression("u8run", 1024, 128, 100, 11);
+    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSampleU8 { bits: 4 }, 8, 0.05)).unwrap();
+    assert!(!r.diverged);
+    assert!(r.final_loss < 0.3 * r.loss_curve[0], "{:?}", r.loss_curve);
+}
+
+/// End-to-end quantization (samples+model+gradient) still converges (§E).
+#[test]
+fn end_to_end_converges() {
+    let rt = runtime();
+    let ds = make_regression("e2e", 2048, 128, 100, 13);
+    let r = sgd::train(
+        &rt,
+        &ds,
+        &cfg(ModelKind::Linreg, Mode::EndToEnd { bits_s: 6, bits_m: 8, bits_g: 8 }, 10, 0.05),
+    )
+    .unwrap();
+    assert!(!r.diverged);
+    assert!(r.final_loss < 0.3 * r.loss_curve[0], "{:?}", r.loss_curve);
+}
+
+/// §C: quantizing only the model (8-bit) is unbiased and converges.
+#[test]
+fn model_only_quant_converges() {
+    let rt = runtime();
+    let ds = make_regression("mq", 2048, 128, 100, 47);
+    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::ModelQuant { bits: 8 }, 10, 0.05)).unwrap();
+    assert!(!r.diverged);
+    assert!(r.final_loss < 0.3 * r.loss_curve[0], "{:?}", r.loss_curve);
+}
+
+/// §D: quantizing only the gradient (QSGD-style, 8-bit) converges.
+#[test]
+fn grad_only_quant_converges() {
+    let rt = runtime();
+    let ds = make_regression("gq", 2048, 128, 100, 53);
+    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::GradQuant { bits: 8 }, 10, 0.05)).unwrap();
+    assert!(!r.diverged);
+    assert!(r.final_loss < 0.3 * r.loss_curve[0], "{:?}", r.loss_curve);
+}
+
+/// Variance-optimal levels converge at least as well as uniform at equal
+/// level count (Fig 7a/8 claim, smoke scale).
+#[test]
+fn optimal_levels_at_least_as_good() {
+    let rt = runtime();
+    let ds = make_regression("yearprediction", 2048, 128, 90, 17);
+    let uni = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSample { bits: 3 }, 10, 0.05)).unwrap();
+    let opt = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::OptimalDs { levels: 8 }, 10, 0.05)).unwrap();
+    assert!(!opt.diverged);
+    assert!(
+        opt.final_loss < 1.5 * uni.final_loss,
+        "optimal {} vs uniform {}",
+        opt.final_loss,
+        uni.final_loss
+    );
+}
+
+/// LS-SVM with double sampling trains on classification data (§F.1).
+#[test]
+fn lssvm_ds_trains() {
+    let rt = runtime();
+    let ds = make_classification("lssvm", 2048, 512, 100, 19);
+    let r = sgd::train(
+        &rt,
+        &ds,
+        &cfg(ModelKind::Lssvm { c: 1e-4 }, Mode::DoubleSample { bits: 5 }, 10, 0.5),
+    )
+    .unwrap();
+    assert!(!r.diverged);
+    assert!(r.final_loss < r.loss_curve[0]);
+    // labels carry ~15% boundary noise by construction; 0.62 ≫ chance
+    assert!(ds.test_accuracy(&r.final_model) > 0.62, "acc {}", ds.test_accuracy(&r.final_model));
+}
+
+/// Logistic via Chebyshev approximation converges; naive rounding matches
+/// (the §5.4 negative result).
+#[test]
+fn cheby_and_rounding_both_work() {
+    let rt = runtime();
+    let ds = make_classification("cheb", 2048, 512, 100, 23);
+    let fp = sgd::train(&rt, &ds, &cfg(ModelKind::Logistic, Mode::Full, 10, 0.5)).unwrap();
+    let ch = sgd::train(&rt, &ds, &cfg(ModelKind::Logistic, Mode::Cheby { bits: 4 }, 10, 0.5)).unwrap();
+    let rd = sgd::train(&rt, &ds, &cfg(ModelKind::Logistic, Mode::NearestRound { bits: 8 }, 10, 0.5)).unwrap();
+    assert!(!ch.diverged && !rd.diverged);
+    let l0 = fp.loss_curve[0];
+    assert!(fp.final_loss < 0.9 * l0);
+    assert!(ch.final_loss < 0.95 * l0, "cheby didn't descend: {:?}", ch.loss_curve);
+    assert!(rd.final_loss < 0.95 * l0, "rounding didn't descend");
+    // negative result: rounding is no worse than chebyshev (tolerance 25%)
+    assert!(rd.final_loss < 1.25 * ch.final_loss.max(1e-6));
+}
+
+/// Unbiased polynomial (multi-sample) estimator descends (§4.1).
+#[test]
+fn poly_ds_descends() {
+    let rt = runtime();
+    let ds = make_classification("poly", 1024, 256, 100, 29);
+    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Logistic, Mode::PolyDs { bits: 4 }, 8, 0.2)).unwrap();
+    assert!(!r.diverged);
+    assert!(r.final_loss < 0.98 * r.loss_curve[0], "{:?}", r.loss_curve);
+}
+
+/// SVM refetching: converges and refetches a small fraction at 8 bits (§G).
+#[test]
+fn svm_refetch_small_fraction() {
+    let rt = runtime();
+    let ds = make_classification("refetch", 2048, 512, 100, 31);
+    let r = sgd::train(
+        &rt,
+        &ds,
+        &cfg(ModelKind::Svm, Mode::Refetch { bits: 8, strategy: RefetchStrategy::L1 }, 8, 0.2),
+    )
+    .unwrap();
+    assert!(!r.diverged);
+    assert!(r.final_loss < r.loss_curve[0]);
+    assert!(r.refetch_fraction < 0.35, "refetch fraction {}", r.refetch_fraction);
+    // fewer bits → more refetches
+    let r4 = sgd::train(
+        &rt,
+        &ds,
+        &cfg(ModelKind::Svm, Mode::Refetch { bits: 4, strategy: RefetchStrategy::L1 }, 4, 0.2),
+    )
+    .unwrap();
+    assert!(r4.refetch_fraction > r.refetch_fraction, "{} !> {}", r4.refetch_fraction, r.refetch_fraction);
+}
+
+/// JL-sketch refetch path runs end to end.
+#[test]
+fn svm_refetch_jl_runs() {
+    let rt = runtime();
+    let ds = make_classification("refetchjl", 1024, 128, 100, 37);
+    let r = sgd::train(
+        &rt,
+        &ds,
+        &cfg(
+            ModelKind::Svm,
+            Mode::Refetch { bits: 8, strategy: RefetchStrategy::L2Jl { sketch_dim: 64, delta: 0.05 } },
+            5,
+            0.2,
+        ),
+    )
+    .unwrap();
+    assert!(!r.diverged);
+}
+
+/// Quantized-model MLP training descends and evaluates (Fig 7b smoke).
+#[test]
+fn mlp_quantized_model_trains() {
+    let rt = runtime();
+    let data = deep::make_deep_dataset(512, 256, 41);
+    let fp = deep::train_mlp(&rt, &data, deep::WeightQuant::FullPrecision, 3, 0.1, 41).unwrap();
+    let opt = deep::train_mlp(&rt, &data, deep::WeightQuant::Optimal { levels: 5 }, 3, 0.1, 41).unwrap();
+    assert!(fp.train_loss_curve.last().unwrap() < &fp.train_loss_curve[0]);
+    assert!(opt.train_loss_curve.last().unwrap() < &opt.train_loss_curve[0]);
+    assert!(opt.final_test_acc > 0.15, "acc {}", opt.final_test_acc);
+}
+
+/// Determinism: same seed → bit-identical loss curves.
+#[test]
+fn training_is_deterministic() {
+    let rt = runtime();
+    let ds = make_regression("det", 1024, 128, 10, 43);
+    let c = cfg(ModelKind::Linreg, Mode::DoubleSample { bits: 4 }, 4, 0.05);
+    let a = sgd::train(&rt, &ds, &c).unwrap();
+    let b = sgd::train(&rt, &ds, &c).unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve);
+}

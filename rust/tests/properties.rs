@@ -1,0 +1,286 @@
+//! Property-based invariants over the quantization library (no artifacts
+//! needed — pure L3 math). Uses the in-repo `proptest` helper.
+
+use zipml::proptest::{small_size, sorted_floats, Prop};
+use zipml::quant::packing::{BitVec, DoubleSampleBlock, PackedMatrix};
+use zipml::quant::{
+    self, discretized_optimal_levels, optimal_levels, quantization_variance, ColumnScale,
+};
+use zipml::rng::Rng;
+use zipml::tensor::Matrix;
+
+fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Matrix {
+    Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal() * scale).collect())
+}
+
+/// BitVec: any sequence of (value, width) pushes reads back exactly.
+#[test]
+fn prop_bitvec_roundtrip() {
+    Prop::new(128).check("bitvec-roundtrip", |rng| {
+        let n = small_size(rng, 200);
+        let items: Vec<(u32, u32)> = (0..n)
+            .map(|_| {
+                let w = 1 + rng.below(16) as u32;
+                let v = (rng.next_u64() as u32) & ((1u32 << w) - 1);
+                (v, w)
+            })
+            .collect();
+        let mut bv = BitVec::default();
+        for &(v, w) in &items {
+            bv.push(v, w);
+        }
+        let mut off = 0usize;
+        for &(v, w) in &items {
+            let got = bv.get(off, w);
+            if got != v {
+                return Err(format!("at bit {off}: {got} != {v} (width {w})"));
+            }
+            off += w as usize;
+        }
+        Ok(())
+    });
+}
+
+/// PackedMatrix: every dequantized value is on the grid and within one
+/// interval of its source value.
+#[test]
+fn prop_packed_matrix_on_grid() {
+    Prop::new(48).check("packed-on-grid", |rng| {
+        let rows = small_size(rng, 24);
+        let cols = small_size(rng, 40);
+        let bits = 1 + rng.below(8) as u32;
+        let sc_f = 1.0 + rng.f32() * 3.0;
+        let a = rand_matrix(rng, rows, cols, sc_f);
+        let sc = ColumnScale::from_data(&a);
+        let p = PackedMatrix::quantize(&a, &sc, bits, rng);
+        let s = p.s as f32;
+        let mut row = vec![0.0f32; cols];
+        for r in 0..rows {
+            p.dequantize_row(r, &mut row);
+            for (c, &q) in row.iter().enumerate() {
+                let m = sc.m[c];
+                if m == 0.0 {
+                    if q != 0.0 {
+                        return Err(format!("zero-scale col produced {q}"));
+                    }
+                    continue;
+                }
+                let width = 2.0 * m / s;
+                let v = a.get(r, c);
+                if (q - v).abs() > width + 1e-4 {
+                    return Err(format!("bits={bits} q={q} v={v} width={width}"));
+                }
+                let t = (q / m + 1.0) / 2.0 * s;
+                if (t - t.round()).abs() > 1e-2 {
+                    return Err(format!("off grid: q={q} t={t}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// DoubleSampleBlock: all k samples share the base interval (≤ 1 level
+/// apart) and average ≈ source for large k.
+#[test]
+fn prop_double_sample_interval_sharing() {
+    Prop::new(32).check("ds-shared-interval", |rng| {
+        let rows = small_size(rng, 10);
+        let cols = small_size(rng, 12);
+        let bits = 1 + rng.below(6) as u32;
+        let k = 2 + rng.below(14);
+        let a = rand_matrix(rng, rows, cols, 2.0);
+        let sc = ColumnScale::from_data(&a);
+        let ds = DoubleSampleBlock::quantize(&a, &sc, bits, k, rng);
+        let mut bufs: Vec<Vec<f32>> = vec![vec![0.0; cols]; k];
+        for r in 0..rows {
+            for (j, buf) in bufs.iter_mut().enumerate() {
+                ds.dequantize_row(r, j, buf);
+            }
+            for c in 0..cols {
+                let width = 2.0 * sc.m[c] / ds.s as f32;
+                let lo = bufs.iter().map(|b| b[c]).fold(f32::INFINITY, f32::min);
+                let hi = bufs.iter().map(|b| b[c]).fold(f32::NEG_INFINITY, f32::max);
+                if hi - lo > width + 1e-4 {
+                    return Err(format!("samples span {} > interval {width}", hi - lo));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Exact DP is never worse than the brute-force oracle (tiny instances).
+#[test]
+fn prop_dp_matches_brute_force() {
+    Prop::new(40).check("dp-optimal", |rng| {
+        let n = 5 + rng.below(9);
+        let pts: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let nlevels = 2 + rng.below(3);
+        let dp = optimal_levels(&pts, nlevels);
+        let (_, bf) = quant::optimal::brute_force_optimal(&pts, nlevels);
+        let dpv = quantization_variance(&pts, &dp);
+        if dpv > bf + 1e-8 {
+            return Err(format!("dp {dpv} > brute {bf} (n={n}, L={nlevels})"));
+        }
+        Ok(())
+    });
+}
+
+/// Discretized DP converges monotonically-ish toward exact as M grows, and
+/// never beats the exact optimum.
+#[test]
+fn prop_discretized_bounded_by_exact() {
+    Prop::new(24).check("discretized-bounds", |rng| {
+        let n = 30 + rng.below(120);
+        let pts: Vec<f32> = (0..n).map(|_| rng.f32().powi(2)).collect();
+        let nlevels = 3 + rng.below(4);
+        let exact = quantization_variance(&pts, &optimal_levels(&pts, nlevels));
+        let coarse = quantization_variance(&pts, &discretized_optimal_levels(&pts, nlevels, nlevels + 2));
+        let fine = quantization_variance(&pts, &discretized_optimal_levels(&pts, nlevels, 512));
+        if exact > coarse + 1e-8 {
+            return Err(format!("exact {exact} > coarse {coarse}"));
+        }
+        if exact > fine + 1e-8 {
+            return Err(format!("exact {exact} > fine {fine}"));
+        }
+        if fine > coarse + 1e-8 {
+            return Err(format!("fine {fine} > coarse {coarse} (M monotonicity)"));
+        }
+        Ok(())
+    });
+}
+
+/// ADAQUANT's final levels stay within the Theorem-9-style factor of the
+/// exact DP (we assert a conservative 2x + eps).
+#[test]
+fn prop_adaquant_2_approx() {
+    Prop::new(16).check("adaquant-2approx", |rng| {
+        let n = 100 + rng.below(400);
+        let bimodal = rng.f32() < 0.5;
+        let pts: Vec<f32> = (0..n)
+            .map(|_| {
+                if bimodal && rng.f32() < 0.3 {
+                    rng.normal() * 0.1 + 2.0
+                } else {
+                    rng.normal() * 0.5
+                }
+            })
+            .collect();
+        let k = 3 + rng.below(6);
+        let exact = quantization_variance(&pts, &optimal_levels(&pts, k));
+        let greedy = quantization_variance(&pts, &quant::greedy::adaquant_levels(&pts, k));
+        if greedy > 2.0 * exact + 1e-7 {
+            return Err(format!("greedy {greedy} > 2x exact {exact} (k={k}, n={n})"));
+        }
+        Ok(())
+    });
+}
+
+/// Column scaling always covers the data it was computed from.
+#[test]
+fn prop_column_scale_covers() {
+    Prop::new(64).check("scale-covers", |rng| {
+        let rows = small_size(rng, 50);
+        let cols = small_size(rng, 30);
+        let sc_f = 1.0 + rng.f32() * 10.0;
+        let a = rand_matrix(rng, rows, cols, sc_f);
+        let sc = ColumnScale::from_data(&a);
+        if !sc.covers(&a) {
+            return Err("scale does not cover its own data".into());
+        }
+        Ok(())
+    });
+}
+
+/// Stochastic quantization is empirically unbiased for any (value, scale,
+/// s) combination.
+#[test]
+fn prop_quantizer_unbiased() {
+    Prop::new(12).check("quantizer-unbiased", |rng| {
+        let s = 1 + rng.below(30) as u32;
+        let m = 0.5 + rng.f32() * 3.0;
+        let v = (rng.f32() * 2.0 - 1.0) * m;
+        let trials = 20_000;
+        let mut acc = 0.0f64;
+        let vals = [v];
+        let scales = [m];
+        let mut out = [0.0f32];
+        for _ in 0..trials {
+            quant::stochastic::quantize_values(&vals, 1, &scales, s, rng, &mut out);
+            acc += out[0] as f64;
+        }
+        let mean = acc / trials as f64;
+        // interval width / sqrt(trials) * 5 sigma
+        let tol = (2.0 * m as f64 / s as f64) / (trials as f64).sqrt() * 5.0 + 1e-4;
+        if (mean - v as f64).abs() > tol {
+            return Err(format!("bias: mean {mean} vs {v} (tol {tol})"));
+        }
+        Ok(())
+    });
+}
+
+/// Level grids from the DP cover the data range and are sorted — required
+/// for the unbiased clamp-free quantization path.
+#[test]
+fn prop_levels_sorted_and_covering() {
+    Prop::new(48).check("levels-sorted", |rng| {
+        let n = 20 + rng.below(200);
+        let pts = sorted_floats(rng, n, -5.0, 5.0);
+        let nlevels = 2 + rng.below(6);
+        for lv in [
+            optimal_levels(&pts, nlevels),
+            discretized_optimal_levels(&pts, nlevels, 64),
+        ] {
+            if !lv.windows(2).all(|w| w[0] <= w[1]) {
+                return Err(format!("unsorted levels {lv:?}"));
+            }
+            let lo = pts.first().unwrap();
+            let hi = pts.last().unwrap();
+            if lv[0] > lo + 1e-5 || lv[lv.len() - 1] < hi - 1e-5 {
+                return Err(format!("levels {:?} don't cover [{lo}, {hi}]", lv));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// FPGA model: epoch time is monotone non-increasing in precision and the
+/// float/Q4 ratio stays in the paper's regime for bandwidth-bound shapes.
+#[test]
+fn prop_fpga_monotone() {
+    use zipml::fpga::{epoch_seconds, Precision};
+    Prop::new(64).check("fpga-monotone", |rng| {
+        let k = 1000 + rng.below(100_000);
+        let n = 10 + rng.below(2000);
+        let t32 = epoch_seconds(Precision::Float, k, n);
+        let t8 = epoch_seconds(Precision::Q(8), k, n);
+        let t4 = epoch_seconds(Precision::Q(4), k, n);
+        let t2 = epoch_seconds(Precision::Q(2), k, n);
+        if !(t32 >= t8 && t8 >= t4 && t4 >= t2) {
+            return Err(format!("not monotone: {t32} {t8} {t4} {t2}"));
+        }
+        let ratio = t32 / t4;
+        if !(2.0..=9.0).contains(&ratio) {
+            return Err(format!("float/Q4 ratio {ratio} outside plausible band"));
+        }
+        Ok(())
+    });
+}
+
+/// JL sketches preserve norms within the expected concentration band.
+#[test]
+fn prop_jl_norm_preservation() {
+    use zipml::quant::jl::JlSketch;
+    Prop::new(24).check("jl-norms", |rng| {
+        let n = 32 + rng.below(256);
+        let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let jl = JlSketch::new(512, n, rng.next_u64());
+        let s = jl.sketch(&v);
+        let ratio = zipml::tensor::norm2(&s) / zipml::tensor::norm2(&v).max(1e-9);
+        if !(0.7..1.3).contains(&ratio) {
+            return Err(format!("norm ratio {ratio}"));
+        }
+        Ok(())
+    });
+}
