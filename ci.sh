@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, then the tier-1 verify
+# (cargo build --release && cargo test -q). Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo fmt --check =="
+cargo fmt --all --check
+
+echo "== cargo clippy -D warnings =="
+cargo clippy --workspace --all-targets -- -D warnings
+
+echo "== tier-1 verify =="
+cargo build --release
+cargo test -q
+
+echo "CI OK"

@@ -1,0 +1,68 @@
+//! SampleStore benchmarks: weaved any-precision read throughput at
+//! p ∈ {1, 2, 4, 8} vs the full-width `PackedMatrix` accessors, plus
+//! sharded (parallel) vs single-shard ingestion.
+//! Run: cargo bench --bench store [-- --quick]
+
+use zipml::bench::{bench, black_box, section, BenchOpts};
+use zipml::quant::packing::PackedMatrix;
+use zipml::quant::ColumnScale;
+use zipml::rng::Rng;
+use zipml::store::{ShardedStore, WeavedMatrix};
+use zipml::tensor::Matrix;
+
+fn main() {
+    let opts = BenchOpts::from_env_and_args();
+    let mut rng = Rng::new(5);
+    let (rows, cols) = (2048usize, 512usize);
+    let a = Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal()).collect());
+    let scale = ColumnScale::from_data(&a);
+    let packed = PackedMatrix::quantize(&a, &scale, 8, &mut rng);
+    let weaved = WeavedMatrix::from_packed(&packed);
+
+    section("any-precision row reads (2048x512 store, 8-bit planes)");
+    let mut out = vec![0.0f32; cols];
+    let mut r = 0usize;
+    for p in [1u32, 2, 4, 8] {
+        let bytes = weaved.bytes_per_row(p) as f64;
+        let res = bench(&format!("weaved dequantize_row p={p} ({bytes} B/row)"), &opts, || {
+            r = (r + 1) % rows;
+            black_box(weaved.dequantize_row_at(r, p, &mut out));
+        });
+        println!("   {}", res.throughput_line("B", bytes));
+    }
+    let res = bench("packed dequantize_row (full width)", &opts, || {
+        r = (r + 1) % rows;
+        packed.dequantize_row(r, &mut out);
+        black_box(&out);
+    });
+    println!("   {}", res.throughput_line("B", packed.bytes() as f64 / rows as f64));
+    let mut acc = 0u32;
+    bench("packed PackedMatrix::index, one row", &opts, || {
+        r = (r + 1) % rows;
+        for c in 0..cols {
+            acc = acc.wrapping_add(packed.index(r, c) as u32);
+        }
+        black_box(acc);
+    });
+
+    section("ingestion: quantize + weave + shard (2048x512, 8-bit)");
+    for (shards, threads, label) in
+        [(1usize, 1usize, "single shard, 1 thread"), (16, 0, "16 shards, auto threads")]
+    {
+        bench(&format!("ingest {label}"), &opts, || {
+            black_box(ShardedStore::ingest(&a, &scale, 8, 42, shards, threads));
+        });
+    }
+
+    section("stored footprint");
+    let store = ShardedStore::ingest(&a, &scale, 8, 42, 16, 0);
+    println!(
+        "  one weaved copy: {} B  (f32: {} B; per-width packed copies at 1/2/4/8 bits: {} B)",
+        store.stored_bytes(),
+        rows * cols * 4,
+        (rows * cols) / 8 + (rows * cols) / 4 + (rows * cols) / 2 + rows * cols,
+    );
+    for p in [1u32, 2, 4, 8] {
+        println!("  epoch bytes @p={p}: {:.3e}", store.epoch_bytes(p));
+    }
+}

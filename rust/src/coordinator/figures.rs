@@ -343,7 +343,7 @@ pub fn fig13(_ctx: &Ctx) -> Result<Vec<Report>> {
         &["precision", "latency_cycles", "width_B_per_cycle", "epoch_s_50k_x90", "speedup_vs_float"]);
     let base = fpga::epoch_seconds(Precision::Float, 50_000, 90);
     for p in [Precision::Float, Precision::Q(8), Precision::Q(4), Precision::Q(2), Precision::Q(1)] {
-        let spec = fpga::PipelineSpec::for_precision(p, 90);
+        let spec = fpga::PipelineSpec::for_precision(p);
         let t = fpga::epoch_seconds(p, 50_000, 90);
         rep.row(vec![
             p.label(),

@@ -4,9 +4,10 @@
 //! Framework for Training Models with End-to-End Low Precision".
 //!
 //! Three layers (see DESIGN.md):
-//! * **L3 (this crate)** — the coordinator: quantized sample store,
-//!   variance-optimal level placement, SGD driver, refetch heuristics,
-//!   FPGA bandwidth simulator, experiment harness.
+//! * **L3 (this crate)** — the coordinator: quantized sample store
+//!   ([`quant::packing`] and the bit-weaved, sharded, any-precision
+//!   [`store`]), variance-optimal level placement, SGD driver, refetch
+//!   heuristics, FPGA bandwidth simulator, experiment harness.
 //! * **L2 (python/compile/model.py)** — JAX step functions, AOT-lowered to
 //!   HLO text once at build time (`make artifacts`).
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (stochastic
@@ -25,4 +26,5 @@ pub mod quant;
 pub mod rng;
 pub mod runtime;
 pub mod sgd;
+pub mod store;
 pub mod tensor;

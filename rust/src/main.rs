@@ -13,7 +13,8 @@ use anyhow::{bail, Result};
 
 use zipml::coordinator::{self, Ctx};
 use zipml::data;
-use zipml::sgd::{self, modes::RefetchStrategy, Mode, ModelKind, TrainConfig};
+use zipml::sgd::{self, modes::RefetchStrategy, Mode, ModelKind, StoreBackend, TrainConfig};
+use zipml::store::PrecisionSchedule;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -56,8 +57,10 @@ USAGE:
   zipml figure <id>|all [--quick] [--seed N]
   zipml train --model linreg|lssvm|logistic|svm --mode MODE [--dataset D]
               [--bits B] [--epochs E] [--lr F] [--batch N] [--seed N]
+              [--store legacy|weaved] [--shards N] [--schedule S]
        MODE: fp32 | naive | ds | dsu8 | e2e | mq | gq | optimal | round
              | cheby | poly | refetch-l1 | refetch-jl
+       S (weaved store, reads p planes/epoch): fixed | step | refetch
   zipml fpga-sim [--k K] [--n N]
   zipml quantize-demo";
 
@@ -148,6 +151,25 @@ fn cmd_train(args: &[String]) -> Result<()> {
     cfg.lr0 = opt(args, "--lr").map(|v| v.parse()).transpose()?.unwrap_or(0.05);
     cfg.batch = opt(args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(64);
     cfg.seed = seed;
+    match opt(args, "--store") {
+        None | Some("legacy") => {}
+        Some("weaved") => {}
+        Some(other) => bail!("unknown store backend {other} (legacy|weaved)"),
+    }
+    if let Some("weaved") = opt(args, "--store") {
+        let shards: usize = opt(args, "--shards").map(|v| v.parse()).transpose()?.unwrap_or(16);
+        let schedule = match opt(args, "--schedule").unwrap_or("fixed") {
+            "fixed" => PrecisionSchedule::Fixed(bits),
+            "step" => PrecisionSchedule::StepUp { start: 1.max(bits / 4), every: 3, max: bits },
+            "refetch" => PrecisionSchedule::RefetchTriggered {
+                start: 1.max(bits / 4),
+                max: bits,
+                min_rel_improve: 0.01,
+            },
+            other => bail!("unknown schedule {other}"),
+        };
+        cfg.store = StoreBackend::Weaved { shards, schedule };
+    }
 
     println!("training {model:?} mode={} on {dataset_name} (n={}, K={})",
         cfg.mode.label(), ds.n(), ds.k_train());

@@ -5,6 +5,13 @@
 //! "during the first epoch"); each step dequantizes a batch and dispatches
 //! one artifact execution. Loss is evaluated per epoch on full-precision
 //! data against the true objective.
+//!
+//! Two sample-store backends ([`StoreBackend`], selected in
+//! [`TrainConfig`]): the legacy per-mode stores, and the bit-weaved
+//! [`ShardedStore`] whose single stored copy serves any precision and
+//! whose per-epoch precision follows a [`PrecisionSchedule`]. The weaved
+//! path also has an artifact-free host twin ([`train_store_host`]) used by
+//! tests, benches, and the `store_weaving` example.
 
 use anyhow::{bail, Context, Result};
 
@@ -14,6 +21,7 @@ use crate::quant::packing::{DoubleSampleBlock, PackedMatrix};
 use crate::quant::{discretized_optimal_levels, ColumnScale};
 use crate::rng::Rng;
 use crate::runtime::{lit_f32, lit_scalar11, lit_u8, Runtime};
+use crate::store::{PrecisionSchedule, ScheduleState, ShardedStore};
 use crate::tensor::Matrix;
 
 use super::modes::{Mode, ModelKind};
@@ -22,6 +30,17 @@ use super::refetch::RefetchState;
 /// Chebyshev settings shared with the artifacts (aot.py constants).
 pub const CHEBY_DEG: usize = 15;
 pub const RADIUS: f64 = 8.0;
+
+/// Which sample-store implementation backs the epoch loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StoreBackend {
+    /// Per-mode stores: dense / `PackedMatrix` / `DoubleSampleBlock`.
+    Legacy,
+    /// Bit-weaved `ShardedStore`: one stored copy read at the precision the
+    /// schedule picks each epoch. Drives the packed-sample (`Mode::Naive`)
+    /// step; bandwidth is reported from the store's exact byte accounting.
+    Weaved { shards: usize, schedule: PrecisionSchedule },
+}
 
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -33,11 +52,21 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Number of 64-row batches used for the per-epoch loss evaluation.
     pub eval_batches: usize,
+    pub store: StoreBackend,
 }
 
 impl TrainConfig {
     pub fn new(model: ModelKind, mode: Mode) -> Self {
-        TrainConfig { model, mode, epochs: 20, batch: 64, lr0: 0.05, seed: 42, eval_batches: 16 }
+        TrainConfig {
+            model,
+            mode,
+            epochs: 20,
+            batch: 64,
+            lr0: 0.05,
+            seed: 42,
+            eval_batches: 16,
+            store: StoreBackend::Legacy,
+        }
     }
 }
 
@@ -67,6 +96,8 @@ enum Store {
         grids: Vec<Vec<f32>>,
         idx: [Vec<u8>; 2],
     },
+    /// bit-weaved sharded store: any precision from one copy
+    Weaved(ShardedStore),
 }
 
 pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
@@ -114,68 +145,31 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
     };
 
     // --- build the quantized store (the "first epoch" quantization) -------
-    let store = match cfg.mode {
-        // §C / §D: samples stay full precision
-        Mode::Full | Mode::ModelQuant { .. } | Mode::GradQuant { .. } => {
-            Store::Dense(ds.train_a.clone())
-        }
-        Mode::NearestRound { bits } => {
-            // deterministic nearest rounding of the data, once (§5.4 strawman)
-            let s = crate::quant::intervals_for_bits(bits);
-            let mut a = ds.train_a.clone();
-            for r in 0..a.rows {
-                for (c, v) in a.row_mut(r).iter_mut().enumerate() {
-                    let m = scale.m[c];
-                    if m <= 0.0 {
-                        *v = 0.0;
-                        continue;
-                    }
-                    let u = (*v / m).clamp(-1.0, 1.0);
-                    let idx = ((u + 1.0) * 0.5 * s as f32).round().min(s as f32);
-                    *v = (idx / s as f32 * 2.0 - 1.0) * m;
-                }
-            }
-            Store::Dense(a)
-        }
-        Mode::Naive { bits } | Mode::Refetch { bits, .. } => {
-            Store::Packed(PackedMatrix::quantize(&ds.train_a, &scale, bits, &mut rng))
-        }
-        Mode::DoubleSample { bits } | Mode::DoubleSampleU8 { bits } | Mode::EndToEnd { bits_s: bits, .. } => {
-            Store::Double(DoubleSampleBlock::quantize(&ds.train_a, &scale, bits, 2, &mut rng))
-        }
-        Mode::Cheby { bits } => {
-            Store::Double(DoubleSampleBlock::quantize(&ds.train_a, &scale, bits, 2, &mut rng))
-        }
-        Mode::PolyDs { bits } => Store::Double(DoubleSampleBlock::quantize(
+    let store = if let StoreBackend::Weaved { shards, .. } = cfg.store {
+        let Mode::Naive { bits } = cfg.mode else {
+            bail!(
+                "the weaved store backend drives the packed-sample step \
+                 (Mode::Naive); got mode {:?}",
+                cfg.mode
+            );
+        };
+        Store::Weaved(ShardedStore::ingest(
             &ds.train_a,
             &scale,
             bits,
-            CHEBY_DEG + 1,
-            &mut rng,
-        )),
-        Mode::OptimalDs { levels } => {
-            // per-feature grids from a column subsample (single data pass)
-            let sample_rows = k.min(2000);
-            let mut grids = Vec::with_capacity(n);
-            let mut col = vec![0.0f32; sample_rows];
-            for c in 0..n {
-                for (i, v) in col.iter_mut().enumerate() {
-                    *v = ds.train_a.get(i * (k / sample_rows).max(1) % k, c);
-                }
-                grids.push(discretized_optimal_levels(&col, levels, 64));
-            }
-            // pre-quantize both independent sample planes once
-            let mut idx = [vec![0u8; k * n], vec![0u8; k * n]];
-            for plane in idx.iter_mut() {
-                for (row, orow) in ds.train_a.data.chunks(n).zip(plane.chunks_mut(n)) {
-                    for ((&v, o), grid) in row.iter().zip(orow.iter_mut()).zip(&grids) {
-                        *o = crate::quant::stochastic::quantize_one_to_level_index(v, grid, &mut rng)
-                            as u8;
-                    }
-                }
-            }
-            Store::Levels { grids, idx }
+            cfg.seed ^ 0x5745_4156_4544, // "WEAVED"
+            shards,
+            0,
+        ))
+    } else {
+        build_legacy_store(ds, cfg, &scale, k, n, &mut rng)?
+    };
+    // per-epoch precision schedule (weaved backend only)
+    let mut sched = match (&cfg.store, &store) {
+        (StoreBackend::Weaved { schedule, .. }, Store::Weaved(ws)) => {
+            Some(ScheduleState::new(*schedule, ws.bits()))
         }
+        _ => None,
     };
 
     // --- Chebyshev coefficients (classification approximations) -----------
@@ -253,6 +247,11 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
     'outer: for epoch in 0..cfg.epochs {
         let lr = super::lr_at_epoch(cfg.lr0, epoch);
         let lr_lit = lit_scalar11(lr)?;
+        // weaved backend: pick this epoch's read precision from the schedule
+        let p_epoch = match sched.as_mut() {
+            Some(s) => s.precision_for_epoch(epoch, &loss_curve),
+            None => 0,
+        };
         rng.shuffle(&mut order);
         for bi in 0..nb {
             let rows = &order[bi * b..(bi + 1) * b];
@@ -317,6 +316,19 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
                     rf.prepare_batch(rt, p, ds, rows, &x, &mut a1)?;
                     let al = lit_f32(&[b, n], &a1.data)?;
                     rt.exec(&step_art, &[xl, al, bl, lr_lit.clone()])?
+                }
+                (Store::Weaved(ws), _) => {
+                    // any-precision read: only p_epoch bit planes are
+                    // touched; the store counts the exact bytes
+                    for (i, &r) in rows.iter().enumerate() {
+                        ws.dequantize_row(r, p_epoch, a1.row_mut(i));
+                    }
+                    let al = lit_f32(&[b, n], &a1.data)?;
+                    let mut args = vec![xl, al, bl, lr_lit.clone()];
+                    if let ModelKind::Lssvm { c } = cfg.model {
+                        args.push(lit_scalar11(c)?);
+                    }
+                    rt.exec(&step_art, &args)?
                 }
                 (Store::Double(dsb), Mode::DoubleSampleU8 { bits }) => {
                     for (i, &r) in rows.iter().enumerate() {
@@ -454,8 +466,15 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
     }
 
     // --- bandwidth accounting ------------------------------------------------
-    let wire_bits = cfg.mode.wire_bits_per_value(CHEBY_DEG);
-    let mut sample_bytes = (nb * b * n) as f64 * wire_bits / 8.0;
+    let epochs_run = loss_curve.len().saturating_sub(1).max(1);
+    let mut sample_bytes = match &store {
+        // exact bytes touched, measured by the store itself
+        Store::Weaved(ws) => ws.bytes_read() as f64 / epochs_run as f64,
+        _ => {
+            let wire_bits = cfg.mode.wire_bits_per_value(CHEBY_DEG);
+            (nb * b * n) as f64 * wire_bits / 8.0
+        }
+    };
     let refetch_fraction = refetch
         .as_ref()
         .map(|r| r.fraction())
@@ -476,8 +495,290 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
     })
 }
 
+/// Legacy per-mode store construction (the pre-weaving quantization).
+fn build_legacy_store(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    scale: &ColumnScale,
+    k: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> Result<Store> {
+    Ok(match cfg.mode {
+        // §C / §D: samples stay full precision
+        Mode::Full | Mode::ModelQuant { .. } | Mode::GradQuant { .. } => {
+            Store::Dense(ds.train_a.clone())
+        }
+        Mode::NearestRound { bits } => {
+            // deterministic nearest rounding of the data, once (§5.4 strawman)
+            let s = crate::quant::intervals_for_bits(bits);
+            let mut a = ds.train_a.clone();
+            for r in 0..a.rows {
+                for (c, v) in a.row_mut(r).iter_mut().enumerate() {
+                    let m = scale.m[c];
+                    if m <= 0.0 {
+                        *v = 0.0;
+                        continue;
+                    }
+                    let u = (*v / m).clamp(-1.0, 1.0);
+                    let idx = ((u + 1.0) * 0.5 * s as f32).round().min(s as f32);
+                    *v = (idx / s as f32 * 2.0 - 1.0) * m;
+                }
+            }
+            Store::Dense(a)
+        }
+        Mode::Naive { bits } | Mode::Refetch { bits, .. } => {
+            Store::Packed(PackedMatrix::quantize(&ds.train_a, scale, bits, rng))
+        }
+        Mode::DoubleSample { bits }
+        | Mode::DoubleSampleU8 { bits }
+        | Mode::EndToEnd { bits_s: bits, .. } => {
+            Store::Double(DoubleSampleBlock::quantize(&ds.train_a, scale, bits, 2, rng))
+        }
+        Mode::Cheby { bits } => {
+            Store::Double(DoubleSampleBlock::quantize(&ds.train_a, scale, bits, 2, rng))
+        }
+        Mode::PolyDs { bits } => Store::Double(DoubleSampleBlock::quantize(
+            &ds.train_a,
+            scale,
+            bits,
+            CHEBY_DEG + 1,
+            rng,
+        )),
+        Mode::OptimalDs { levels } => {
+            // per-feature grids from a column subsample (single data pass)
+            let sample_rows = k.min(2000);
+            let mut grids = Vec::with_capacity(n);
+            let mut col = vec![0.0f32; sample_rows];
+            for c in 0..n {
+                for (i, v) in col.iter_mut().enumerate() {
+                    *v = ds.train_a.get(i * (k / sample_rows).max(1) % k, c);
+                }
+                grids.push(discretized_optimal_levels(&col, levels, 64));
+            }
+            // pre-quantize both independent sample planes once
+            let mut idx = [vec![0u8; k * n], vec![0u8; k * n]];
+            for plane in idx.iter_mut() {
+                for (row, orow) in ds.train_a.data.chunks(n).zip(plane.chunks_mut(n)) {
+                    for ((&v, o), grid) in row.iter().zip(orow.iter_mut()).zip(&grids) {
+                        *o = crate::quant::stochastic::quantize_one_to_level_index(v, grid, rng)
+                            as u8;
+                    }
+                }
+            }
+            Store::Levels { grids, idx }
+        }
+    })
+}
+
 fn gather_into(a: &Matrix, rows: &[usize], out: &mut Matrix) {
     for (i, &r) in rows.iter().enumerate() {
         out.row_mut(i).copy_from_slice(a.row(r));
     }
 }
+
+// ---------------------------------------------------------------------------
+// Artifact-free host training path (linreg).
+//
+// The store-backed epoch loop distilled to pure host math: lets the
+// weaved/packed stores be compared end-to-end (loss curves, bandwidth)
+// without AOT artifacts or a PJRT client. Shared by tests, benches, the
+// Hogwild! substrate, and examples/store_weaving.rs.
+// ---------------------------------------------------------------------------
+
+/// Result of a host-path run ([`train_store_host`] / [`train_packed_host`]).
+#[derive(Clone, Debug)]
+pub struct HostTrainResult {
+    /// loss_curve[e] = full-precision training MSE after e epochs.
+    pub loss_curve: Vec<f64>,
+    pub final_model: Vec<f32>,
+    /// Store-accounted sample bytes per epoch (exact for the weaved path).
+    pub sample_bytes_per_epoch: f64,
+    /// Precision actually read at each epoch.
+    pub precisions: Vec<u32>,
+}
+
+/// Minibatch linreg SGD with rows supplied by `fetch(row, precision, out)`.
+/// Both host paths run *this* loop, so their float math is identical and
+/// loss curves are comparable bit for bit when fetches agree.
+fn host_sgd_linreg(
+    ds: &Dataset,
+    epochs: usize,
+    batch: usize,
+    lr0: f32,
+    seed: u64,
+    mut precision: impl FnMut(usize, &[f64]) -> u32,
+    mut fetch: impl FnMut(usize, u32, &mut [f32]),
+) -> (Vec<f64>, Vec<f32>, Vec<u32>) {
+    let n = ds.n();
+    let k = ds.k_train();
+    let nb = k / batch;
+    assert!(nb > 0, "dataset smaller than one batch");
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; n];
+    let mut loss_curve = vec![ds.train_mse(&x)];
+    let mut precisions = Vec::with_capacity(epochs);
+    let mut order: Vec<usize> = (0..nb * batch).collect();
+    let mut row = vec![0.0f32; n];
+    let mut grad = vec![0.0f32; n];
+    for epoch in 0..epochs {
+        let p = precision(epoch, &loss_curve);
+        precisions.push(p);
+        let lr = super::lr_at_epoch(lr0, epoch);
+        rng.shuffle(&mut order);
+        for bi in 0..nb {
+            grad.fill(0.0);
+            for &r in &order[bi * batch..(bi + 1) * batch] {
+                fetch(r, p, &mut row);
+                let err = crate::tensor::dot(&row, &x) - ds.train_b[r];
+                crate::tensor::axpy(err, &row, &mut grad);
+            }
+            crate::tensor::axpy(-lr / batch as f32, &grad, &mut x);
+        }
+        loss_curve.push(ds.train_mse(&x));
+    }
+    (loss_curve, x, precisions)
+}
+
+/// Host-path training over a weaved [`ShardedStore`] with a per-epoch
+/// [`PrecisionSchedule`]. Bandwidth is the store's exact accounting.
+pub fn train_store_host(
+    ds: &Dataset,
+    store: &ShardedStore,
+    schedule: PrecisionSchedule,
+    epochs: usize,
+    batch: usize,
+    lr0: f32,
+    seed: u64,
+) -> HostTrainResult {
+    assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
+    store.reset_bytes_read();
+    let mut sched = ScheduleState::new(schedule, store.bits());
+    let (loss_curve, final_model, precisions) = host_sgd_linreg(
+        ds,
+        epochs,
+        batch,
+        lr0,
+        seed,
+        |epoch, hist| sched.precision_for_epoch(epoch, hist),
+        |r, p, out| {
+            store.dequantize_row(r, p, out);
+        },
+    );
+    HostTrainResult {
+        loss_curve,
+        final_model,
+        sample_bytes_per_epoch: store.bytes_read() as f64 / epochs.max(1) as f64,
+        precisions,
+    }
+}
+
+/// Host-path twin over the legacy [`PackedMatrix`] (full stored width) —
+/// the baseline the weaved path is validated against.
+pub fn train_packed_host(
+    ds: &Dataset,
+    packed: &PackedMatrix,
+    epochs: usize,
+    batch: usize,
+    lr0: f32,
+    seed: u64,
+) -> HostTrainResult {
+    assert_eq!(packed.rows, ds.k_train(), "store/dataset row mismatch");
+    let bits = packed.bits;
+    let (loss_curve, final_model, precisions) = host_sgd_linreg(
+        ds,
+        epochs,
+        batch,
+        lr0,
+        seed,
+        |_, _| bits,
+        |r, _, out| packed.dequantize_row(r, out),
+    );
+    // rows actually read per epoch (tail partial batch dropped), so the
+    // figure is comparable with the weaved path's measured bytes
+    let rows_read = (packed.rows / batch) * batch;
+    let bytes_per_row = packed.bytes() as f64 / packed.rows as f64;
+    HostTrainResult {
+        loss_curve,
+        final_model,
+        sample_bytes_per_epoch: rows_read as f64 * bytes_per_row,
+        precisions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::make_regression;
+
+    fn packed_and_store(
+        ds: &Dataset,
+        bits: u32,
+        shards: usize,
+        seed: u64,
+    ) -> (PackedMatrix, ShardedStore) {
+        let scale = ColumnScale::from_data(&ds.train_a);
+        let mut rng = Rng::new(seed);
+        let packed = PackedMatrix::quantize(&ds.train_a, &scale, bits, &mut rng);
+        let store = ShardedStore::from_packed(&packed, shards);
+        (packed, store)
+    }
+
+    /// At p = stored width over identical indices, the weaved host path is
+    /// bit-identical to the packed host path (acceptance criterion).
+    #[test]
+    fn store_host_matches_packed_host_exactly_at_full_width() {
+        let ds = make_regression("host_eq", 512, 64, 24, 11);
+        let (packed, store) = packed_and_store(&ds, 8, 5, 13);
+        let a = train_packed_host(&ds, &packed, 6, 32, 0.05, 7);
+        let b = train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 6, 32, 0.05, 7);
+        assert_eq!(a.loss_curve, b.loss_curve);
+        assert_eq!(a.final_model, b.final_model);
+        assert_eq!(b.precisions, vec![8; 6]);
+    }
+
+    /// Independently ingested store (fresh stochastic draws) converges to
+    /// the same loss regime as the packed path at p=8 — tolerance form of
+    /// the acceptance criterion.
+    #[test]
+    fn ingested_store_matches_packed_loss_within_tolerance() {
+        let ds = make_regression("host_tol", 1024, 64, 32, 17);
+        let scale = ColumnScale::from_data(&ds.train_a);
+        let mut rng = Rng::new(19);
+        let packed = PackedMatrix::quantize(&ds.train_a, &scale, 8, &mut rng);
+        let store = ShardedStore::ingest(&ds.train_a, &scale, 8, 23, 8, 0);
+        let a = train_packed_host(&ds, &packed, 8, 32, 0.05, 7);
+        let b = train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 8, 32, 0.05, 7);
+        assert!(a.final_loss() < 0.5 * a.loss_curve[0], "packed did not converge");
+        let ratio = b.final_loss() / a.final_loss().max(1e-12);
+        assert!((0.5..2.0).contains(&ratio), "loss ratio {ratio}");
+    }
+
+    /// Step-up schedule reads coarse planes early, fine planes late, and
+    /// pays fewer bytes than a fixed full-width run.
+    #[test]
+    fn step_up_schedule_reads_fewer_bytes() {
+        let ds = make_regression("host_sched", 512, 64, 16, 29);
+        let (_, store) = packed_and_store(&ds, 8, 4, 31);
+        let full = train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 6, 32, 0.05, 3);
+        let step = train_store_host(
+            &ds,
+            &store,
+            PrecisionSchedule::StepUp { start: 2, every: 2, max: 8 },
+            6,
+            32,
+            0.05,
+            3,
+        );
+        assert_eq!(step.precisions, vec![2, 2, 4, 4, 8, 8]);
+        assert!(step.sample_bytes_per_epoch < full.sample_bytes_per_epoch);
+        assert!(step.loss_curve.last().unwrap().is_finite());
+    }
+
+    impl HostTrainResult {
+        fn final_loss(&self) -> f64 {
+            *self.loss_curve.last().unwrap()
+        }
+    }
+}
+

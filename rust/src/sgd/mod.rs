@@ -11,7 +11,10 @@ pub mod driver;
 pub mod modes;
 pub mod refetch;
 
-pub use driver::{train, TrainConfig, TrainResult};
+pub use driver::{
+    train, train_packed_host, train_store_host, HostTrainResult, StoreBackend, TrainConfig,
+    TrainResult,
+};
 pub use modes::{Mode, ModelKind};
 
 /// Diminishing step size α/k per epoch k (the paper's §5 schedule).

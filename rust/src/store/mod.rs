@@ -1,0 +1,31 @@
+//! The any-precision SampleStore subsystem (DESIGN.md §4).
+//!
+//! The paper's end-to-end speedup is a memory-bandwidth argument: epoch
+//! time scales with the bytes of quantized sample data read per epoch.
+//! The original [`crate::quant::packing::PackedMatrix`] bakes one bit
+//! width into the stored copy; retraining at another precision means
+//! re-quantizing and re-storing. This module stores the quantized data
+//! **once**, bit-plane interleaved, and lets every reader pick its own
+//! precision per read:
+//!
+//! * [`weave`] — [`WeavedMatrix`]: word-level bit-plane transpose with
+//!   `read_row(p)` at any `p ∈ 1..=bits` and exact bytes-touched
+//!   accounting (MLWeaving's layout).
+//! * [`shard`] — [`ShardedStore`]: cache-line-aligned row shards,
+//!   parallel deterministic ingestion ("quantize during the first
+//!   epoch"), concurrent readers, and the deterministic
+//!   [`MinibatchIter`] that partitions an epoch across workers.
+//! * [`precision_schedule`] — per-epoch precision policies (fixed,
+//!   step-up, refetch-triggered) consumed by the SGD driver.
+//!
+//! Consumers: `sgd::driver` (store-backed training path, selectable via
+//! `TrainConfig::store`), `fpga::pipeline` (epoch seconds from store-
+//! derived bytes), `fpga::hogwild` (lock-free multi-threaded shard reads).
+
+pub mod precision_schedule;
+pub mod shard;
+pub mod weave;
+
+pub use precision_schedule::{PrecisionSchedule, ScheduleState};
+pub use shard::{MinibatchIter, ShardedStore};
+pub use weave::WeavedMatrix;

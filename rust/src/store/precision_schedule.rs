@@ -1,0 +1,165 @@
+//! Per-epoch precision schedules for store-backed training.
+//!
+//! One weaved copy serves every precision (see [`super::weave`]), so the
+//! *reader* chooses how many bit planes to fetch each epoch. Three
+//! policies, in the spirit of HALP-style precision scheduling:
+//!
+//! * [`PrecisionSchedule::Fixed`] — constant p (the classic single-width
+//!   run, now without a per-width copy).
+//! * [`PrecisionSchedule::StepUp`] — start coarse, double p every `every`
+//!   epochs: early epochs are bandwidth-cheap while gradients are large,
+//!   late epochs refine near the optimum.
+//! * [`PrecisionSchedule::RefetchTriggered`] — double p whenever the
+//!   relative loss improvement stalls below `min_rel_improve`: the
+//!   quantization noise floor has been reached, so refetch more planes
+//!   (the store-level analogue of §G's per-sample refetching).
+//!
+//! All schedules are clamped to `[1, store.bits()]`.
+
+/// Which per-epoch precision policy to run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PrecisionSchedule {
+    /// Constant precision.
+    Fixed(u32),
+    /// Start at `start` bits, double every `every` epochs, cap at `max`.
+    StepUp { start: u32, every: usize, max: u32 },
+    /// Start at `start`; double (up to `max`) whenever the last epoch's
+    /// relative loss improvement drops below `min_rel_improve`.
+    RefetchTriggered { start: u32, max: u32, min_rel_improve: f64 },
+}
+
+impl PrecisionSchedule {
+    pub fn label(&self) -> String {
+        match *self {
+            PrecisionSchedule::Fixed(p) => format!("p{p}"),
+            PrecisionSchedule::StepUp { start, every, max } => {
+                format!("step{start}-{max}every{every}")
+            }
+            PrecisionSchedule::RefetchTriggered { start, max, .. } => {
+                format!("refetch{start}-{max}")
+            }
+        }
+    }
+}
+
+/// Stateful schedule evaluator (the trigger policy is monotone in p).
+#[derive(Clone, Debug)]
+pub struct ScheduleState {
+    schedule: PrecisionSchedule,
+    store_bits: u32,
+    current: u32,
+}
+
+impl ScheduleState {
+    pub fn new(schedule: PrecisionSchedule, store_bits: u32) -> Self {
+        assert!(store_bits >= 1);
+        let start = match schedule {
+            PrecisionSchedule::Fixed(p) => p,
+            PrecisionSchedule::StepUp { start, .. }
+            | PrecisionSchedule::RefetchTriggered { start, .. } => start,
+        };
+        ScheduleState { schedule, store_bits, current: start.clamp(1, store_bits) }
+    }
+
+    /// Precision to read this epoch. `loss_history` holds per-epoch losses
+    /// so far, `loss_history[0]` being the pre-training loss.
+    pub fn precision_for_epoch(&mut self, epoch: usize, loss_history: &[f64]) -> u32 {
+        let p = match self.schedule {
+            PrecisionSchedule::Fixed(p) => p,
+            PrecisionSchedule::StepUp { start, every, max } => {
+                let doublings = if every == 0 { 0 } else { (epoch / every).min(16) as u32 };
+                start.saturating_mul(1u32 << doublings).min(max)
+            }
+            PrecisionSchedule::RefetchTriggered { max, min_rel_improve, .. } => {
+                if loss_history.len() >= 2 {
+                    let prev = loss_history[loss_history.len() - 2];
+                    let last = loss_history[loss_history.len() - 1];
+                    let rel = (prev - last) / prev.abs().max(1e-12);
+                    if rel < min_rel_improve {
+                        // never step down, even if max < start
+                        self.current =
+                            self.current.saturating_mul(2).min(max).max(self.current);
+                    }
+                }
+                self.current
+            }
+        };
+        self.current = p.clamp(1, self.store_bits);
+        self.current
+    }
+
+    /// Precision most recently returned (the store's max width initially).
+    pub fn current(&self) -> u32 {
+        self.current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_fixed_and_clamped() {
+        let mut s = ScheduleState::new(PrecisionSchedule::Fixed(12), 8);
+        for e in 0..5 {
+            assert_eq!(s.precision_for_epoch(e, &[]), 8);
+        }
+        let mut s = ScheduleState::new(PrecisionSchedule::Fixed(3), 8);
+        assert_eq!(s.precision_for_epoch(0, &[]), 3);
+    }
+
+    #[test]
+    fn step_up_doubles_and_caps() {
+        let mut s =
+            ScheduleState::new(PrecisionSchedule::StepUp { start: 1, every: 2, max: 8 }, 8);
+        let ps: Vec<u32> = (0..8).map(|e| s.precision_for_epoch(e, &[])).collect();
+        assert_eq!(ps, vec![1, 1, 2, 2, 4, 4, 8, 8]);
+        // stays capped far beyond the last doubling
+        assert_eq!(s.precision_for_epoch(40, &[]), 8);
+    }
+
+    #[test]
+    fn refetch_trigger_fires_on_plateau_only() {
+        let sched =
+            PrecisionSchedule::RefetchTriggered { start: 2, max: 8, min_rel_improve: 0.05 };
+        let mut s = ScheduleState::new(sched, 8);
+        // strong improvement: stay at 2
+        assert_eq!(s.precision_for_epoch(0, &[1.0]), 2);
+        assert_eq!(s.precision_for_epoch(1, &[1.0, 0.5]), 2);
+        // plateau: double
+        assert_eq!(s.precision_for_epoch(2, &[1.0, 0.5, 0.499]), 4);
+        // plateau again: double to the cap
+        assert_eq!(s.precision_for_epoch(3, &[1.0, 0.5, 0.499, 0.498]), 8);
+        assert_eq!(s.precision_for_epoch(4, &[1.0, 0.5, 0.499, 0.498, 0.4979]), 8);
+    }
+
+    #[test]
+    fn monotone_and_bounded_always() {
+        let mut s = ScheduleState::new(
+            PrecisionSchedule::RefetchTriggered { start: 1, max: 16, min_rel_improve: 1.0 },
+            6, // store narrower than max
+        );
+        let mut prev = 0;
+        let mut hist = vec![1.0f64];
+        for e in 0..10 {
+            let p = s.precision_for_epoch(e, &hist);
+            assert!((1..=6).contains(&p));
+            assert!(p >= prev);
+            prev = p;
+            hist.push(hist.last().unwrap() * 0.999); // always a plateau
+        }
+        assert_eq!(prev, 6);
+    }
+
+    #[test]
+    fn labels_distinct() {
+        let labels = [
+            PrecisionSchedule::Fixed(4).label(),
+            PrecisionSchedule::StepUp { start: 1, every: 2, max: 8 }.label(),
+            PrecisionSchedule::RefetchTriggered { start: 2, max: 8, min_rel_improve: 0.01 }
+                .label(),
+        ];
+        assert_ne!(labels[0], labels[1]);
+        assert_ne!(labels[1], labels[2]);
+    }
+}

@@ -1,0 +1,381 @@
+//! Sharded any-precision sample store: the serving-grade data plane over
+//! [`WeavedMatrix`].
+//!
+//! Rows are split into fixed-size shards, each an independently allocated
+//! weaved block. Shard row counts are rounded to multiples of 8 so every
+//! shard payload is a whole number of 64-byte cache lines (row plane spans
+//! are multiples of 8 bytes) — parallel ingestion writers and concurrent
+//! readers never share a line across shards.
+//!
+//! * **Ingestion** realizes the paper's "quantize during the first epoch":
+//!   each shard quantizes its row slice with an independent, seed-derived
+//!   RNG stream, so the result is bit-identical regardless of how many
+//!   threads ingest.
+//! * **Reads** route a global row to its shard and add the exact bytes
+//!   touched to a shared relaxed atomic — the accounting the FPGA
+//!   bandwidth model consumes ([`crate::fpga::pipeline`]).
+//! * **[`MinibatchIter`]** hands out deterministic shuffled minibatches;
+//!   the strided form partitions one epoch's batches across N workers
+//!   without coordination (used by the Hogwild! shard readers).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::quant::packing::PackedMatrix;
+use crate::quant::scaling::ColumnScale;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+use super::weave::WeavedMatrix;
+
+/// Rows per shard are rounded up to this so shard payloads are whole
+/// cache lines (8 rows × ≥8 B/row-plane = ≥64 B).
+const SHARD_ROW_ALIGN: usize = 8;
+
+/// A row-sharded, bit-weaved, any-precision sample store.
+#[derive(Debug)]
+pub struct ShardedStore {
+    rows: usize,
+    cols: usize,
+    bits: u32,
+    shard_rows: usize,
+    shards: Vec<WeavedMatrix>,
+    /// Exact bytes touched by reads since the last reset (relaxed).
+    bytes_read: AtomicU64,
+}
+
+impl ShardedStore {
+    /// Quantize `a` into `num_shards` shards, `threads` at a time
+    /// (0 = available parallelism). Deterministic in `seed` regardless of
+    /// thread count.
+    pub fn ingest(
+        a: &Matrix,
+        scale: &ColumnScale,
+        bits: u32,
+        seed: u64,
+        num_shards: usize,
+        threads: usize,
+    ) -> Self {
+        assert!(a.rows > 0, "cannot ingest an empty matrix");
+        let num_shards = num_shards.clamp(1, a.rows);
+        let shard_rows = shard_rows_for(a.rows, num_shards);
+        let ns = a.rows.div_ceil(shard_rows);
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(ns)
+        } else {
+            threads.min(ns)
+        };
+        let cols = a.cols;
+        let build = |si: usize| -> WeavedMatrix {
+            let r0 = si * shard_rows;
+            let r1 = (r0 + shard_rows).min(a.rows);
+            // per-shard RNG stream: identical under any thread schedule
+            let mut rng = Rng::new(seed ^ (si as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            WeavedMatrix::quantize_rows(
+                &a.data[r0 * cols..r1 * cols],
+                r1 - r0,
+                cols,
+                scale,
+                bits,
+                &mut rng,
+            )
+        };
+        let shards: Vec<WeavedMatrix> = if threads <= 1 {
+            (0..ns).map(build).collect()
+        } else {
+            std::thread::scope(|scope| {
+                let build = &build;
+                let handles: Vec<_> = (0..threads)
+                    .map(|t| {
+                        scope.spawn(move || {
+                            let mut done = Vec::new();
+                            let mut si = t;
+                            while si < ns {
+                                done.push((si, build(si)));
+                                si += threads;
+                            }
+                            done
+                        })
+                    })
+                    .collect();
+                let mut slots: Vec<Option<WeavedMatrix>> = (0..ns).map(|_| None).collect();
+                for h in handles {
+                    for (si, w) in h.join().expect("shard ingestion thread panicked") {
+                        slots[si] = Some(w);
+                    }
+                }
+                slots.into_iter().map(|s| s.expect("missing shard")).collect()
+            })
+        };
+        ShardedStore { rows: a.rows, cols, bits, shard_rows, shards, bytes_read: AtomicU64::new(0) }
+    }
+
+    /// Re-shard an existing packed store without re-drawing randomness —
+    /// reads reproduce `PackedMatrix` values exactly (equivalence tests).
+    pub fn from_packed(p: &PackedMatrix, num_shards: usize) -> Self {
+        assert!(p.rows > 0);
+        let num_shards = num_shards.clamp(1, p.rows);
+        let shard_rows = shard_rows_for(p.rows, num_shards);
+        let ns = p.rows.div_ceil(shard_rows);
+        let mut shards = Vec::with_capacity(ns);
+        let mut idx_buf = Vec::new();
+        for si in 0..ns {
+            let r0 = si * shard_rows;
+            let r1 = (r0 + shard_rows).min(p.rows);
+            idx_buf.clear();
+            idx_buf.resize((r1 - r0) * p.cols, 0u16);
+            for r in r0..r1 {
+                for (c, o) in idx_buf[(r - r0) * p.cols..(r - r0 + 1) * p.cols]
+                    .iter_mut()
+                    .enumerate()
+                {
+                    *o = p.index(r, c);
+                }
+            }
+            shards.push(WeavedMatrix::from_indices(
+                r1 - r0,
+                p.cols,
+                p.bits,
+                p.s,
+                p.scale.clone(),
+                &idx_buf,
+            ));
+        }
+        ShardedStore {
+            rows: p.rows,
+            cols: p.cols,
+            bits: p.bits,
+            shard_rows,
+            shards,
+            bytes_read: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn locate(&self, r: usize) -> (&WeavedMatrix, usize) {
+        debug_assert!(r < self.rows);
+        (&self.shards[r / self.shard_rows], r % self.shard_rows)
+    }
+
+    /// Read the level indices of global row `r` at precision `p`; counts
+    /// the exact bytes touched. Returns those bytes.
+    pub fn read_row(&self, r: usize, p: u32, out: &mut [u16]) -> usize {
+        let (shard, local) = self.locate(r);
+        let bytes = shard.read_row(local, p, out);
+        self.bytes_read.fetch_add(bytes as u64, Ordering::Relaxed);
+        bytes
+    }
+
+    /// Dequantize global row `r` at precision `p`; counts bytes touched.
+    pub fn dequantize_row(&self, r: usize, p: u32, out: &mut [f32]) -> usize {
+        let (shard, local) = self.locate(r);
+        let bytes = shard.dequantize_row_at(local, p, out);
+        self.bytes_read.fetch_add(bytes as u64, Ordering::Relaxed);
+        bytes
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored (maximum readable) precision.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard_rows(&self) -> usize {
+        self.shard_rows
+    }
+
+    pub fn scale(&self) -> &ColumnScale {
+        &self.shards[0].scale
+    }
+
+    /// Bytes one precision-`p` row read touches (uniform across shards).
+    pub fn bytes_per_row(&self, p: u32) -> usize {
+        self.shards[0].bytes_per_row(p)
+    }
+
+    /// Bytes touched by one full pass over all rows at precision `p` —
+    /// the store-derived quantity the FPGA model consumes.
+    pub fn epoch_bytes(&self, p: u32) -> f64 {
+        self.rows as f64 * self.bytes_per_row(p) as f64
+    }
+
+    /// Total stored payload across shards (one copy, every precision).
+    pub fn stored_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Exact bytes touched by reads since construction / last reset.
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_bytes_read(&self) {
+        self.bytes_read.store(0, Ordering::Relaxed);
+    }
+}
+
+fn shard_rows_for(rows: usize, num_shards: usize) -> usize {
+    let raw = rows.div_ceil(num_shards);
+    raw.div_ceil(SHARD_ROW_ALIGN) * SHARD_ROW_ALIGN
+}
+
+/// Deterministic shuffled minibatch iterator over a store's rows.
+///
+/// All workers sharing (rows, batch, seed) see the same shuffled order;
+/// [`MinibatchIter::strided`] gives worker w batches w, w+W, w+2W, … so W
+/// workers partition the epoch exactly, without coordination. The tail
+/// partial batch is dropped (matching the SGD driver's `k / b` batches).
+pub struct MinibatchIter {
+    order: Vec<u32>,
+    batch: usize,
+    next_batch: usize,
+    stride: usize,
+    num_batches: usize,
+}
+
+impl MinibatchIter {
+    pub fn new(rows: usize, batch: usize, seed: u64) -> Self {
+        Self::strided(rows, batch, seed, 0, 1)
+    }
+
+    pub fn strided(rows: usize, batch: usize, seed: u64, worker: usize, num_workers: usize) -> Self {
+        assert!(batch >= 1);
+        assert!(num_workers >= 1 && worker < num_workers, "worker {worker} of {num_workers}");
+        let mut order: Vec<u32> = (0..rows as u32).collect();
+        Rng::new(seed).shuffle(&mut order);
+        MinibatchIter {
+            order,
+            batch,
+            next_batch: worker,
+            stride: num_workers,
+            num_batches: rows / batch,
+        }
+    }
+
+    /// Next batch of row indices for this worker, or `None` at epoch end.
+    pub fn next_batch(&mut self) -> Option<&[u32]> {
+        if self.next_batch >= self.num_batches {
+            return None;
+        }
+        let b = self.next_batch;
+        self.next_batch += self.stride;
+        Some(&self.order[b * self.batch..(b + 1) * self.batch])
+    }
+
+    /// Total batches in the epoch (across all workers).
+    pub fn num_batches(&self) -> usize {
+        self.num_batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(rows: usize, cols: usize, seed: u64) -> (Matrix, ColumnScale) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let a = Matrix::from_vec(rows, cols, data);
+        let s = ColumnScale::from_data(&a);
+        (a, s)
+    }
+
+    #[test]
+    fn ingest_deterministic_across_thread_counts() {
+        let (a, sc) = mk(100, 17, 1);
+        let s1 = ShardedStore::ingest(&a, &sc, 6, 42, 7, 1);
+        let s4 = ShardedStore::ingest(&a, &sc, 6, 42, 7, 4);
+        assert_eq!(s1.num_shards(), s4.num_shards());
+        let (mut i1, mut i4) = (vec![0u16; 17], vec![0u16; 17]);
+        for r in 0..100 {
+            s1.read_row(r, 6, &mut i1);
+            s4.read_row(r, 6, &mut i4);
+            assert_eq!(i1, i4, "row {r}");
+        }
+    }
+
+    #[test]
+    fn from_packed_routes_rows_exactly() {
+        let (a, sc) = mk(50, 40, 2);
+        let mut rng = Rng::new(3);
+        let packed = PackedMatrix::quantize(&a, &sc, 8, &mut rng);
+        for num_shards in [1usize, 3, 7, 50] {
+            let store = ShardedStore::from_packed(&packed, num_shards);
+            let (mut dq, mut dp) = (vec![0.0f32; 40], vec![0.0f32; 40]);
+            for r in 0..50 {
+                store.dequantize_row(r, 8, &mut dq);
+                packed.dequantize_row(r, &mut dp);
+                assert_eq!(dq, dp, "shards={num_shards} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_payloads_are_cache_line_multiples() {
+        let (a, sc) = mk(1000, 100, 4);
+        let store = ShardedStore::ingest(&a, &sc, 8, 7, 13, 1);
+        assert_eq!(store.shard_rows() % SHARD_ROW_ALIGN, 0);
+        // every full shard's payload is a whole number of 64 B lines
+        assert_eq!(store.shard_rows() * store.bits() as usize * 8 * 2 % 64, 0);
+    }
+
+    #[test]
+    fn bytes_accounting_is_exact() {
+        let (a, sc) = mk(64, 100, 5);
+        let store = ShardedStore::ingest(&a, &sc, 8, 9, 4, 1);
+        let mut out = vec![0.0f32; 100];
+        store.reset_bytes_read();
+        for r in 0..64 {
+            store.dequantize_row(r, 4, &mut out);
+        }
+        // 100 cols → 2 words/plane → 4 planes × 16 B × 64 rows
+        assert_eq!(store.bytes_read(), 64 * 4 * 2 * 8);
+        assert_eq!(store.bytes_read(), store.epoch_bytes(4) as u64);
+        // monotone in precision, below one f32 epoch
+        let fp_bytes = 64.0 * 100.0 * 4.0;
+        let mut prev = 0.0;
+        for p in [1u32, 2, 4, 8] {
+            let b = store.epoch_bytes(p);
+            assert!(b > prev);
+            assert!(b < fp_bytes, "Q{p} {b} !< f32 {fp_bytes}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn minibatch_iter_is_partition() {
+        let rows = 103usize;
+        let batch = 10usize;
+        let mut seen = vec![0u32; rows];
+        let workers = 3usize;
+        let mut total_batches = 0;
+        for w in 0..workers {
+            let mut it = MinibatchIter::strided(rows, batch, 77, w, workers);
+            while let Some(b) = it.next_batch() {
+                total_batches += 1;
+                assert_eq!(b.len(), batch);
+                for &r in b {
+                    seen[r as usize] += 1;
+                }
+            }
+        }
+        assert_eq!(total_batches, rows / batch);
+        // every row appears at most once; exactly batch*num_batches rows once
+        assert!(seen.iter().all(|&c| c <= 1));
+        assert_eq!(seen.iter().sum::<u32>() as usize, batch * (rows / batch));
+        // deterministic: same seed, same first batch
+        let mut a = MinibatchIter::new(rows, batch, 77);
+        let mut b = MinibatchIter::new(rows, batch, 77);
+        assert_eq!(a.next_batch(), b.next_batch());
+    }
+}

@@ -1,0 +1,312 @@
+//! Bit-plane-interleaved ("weaved") sample storage — MLWeaving's layout
+//! applied to the ZipML sample store.
+//!
+//! [`crate::quant::packing::PackedMatrix`] stores the b-bit level index of
+//! every value contiguously, so a reader pays for all b bits regardless of
+//! the precision it actually wants. [`WeavedMatrix`] transposes each row at
+//! word granularity: plane t holds bit (b−1−t) — MSB first — of every
+//! value's index, packed 64 columns per `u64`. A reader at precision
+//! `p ≤ b` touches only the first `p` planes of a row and reconstructs the
+//! top-p truncation `index >> (b − p)` — any precision, one stored copy,
+//! and the bytes crossing the memory boundary scale with `p` exactly
+//! (the paper's Fig 5 bandwidth argument, now per-read instead of
+//! per-stored-copy).
+//!
+//! Truncation semantics: the p-bit index addresses the uniform grid with
+//! s_p = 2^p − 1 intervals, so a full-width read (p = b) reproduces the
+//! `PackedMatrix` dequantization bit for bit. Lower p behaves like
+//! deterministic nearest-down rounding of the stored draw — unbiasedness
+//! degrades gracefully (one stochastic draw is still inside) and the
+//! precision schedules (see [`super::precision_schedule`]) step p up when
+//! the induced noise floor is reached.
+
+use crate::quant::packing::PackedMatrix;
+use crate::quant::scaling::ColumnScale;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// A (rows × cols) matrix of b-bit level indices stored as bit planes.
+///
+/// Planes are packed at `u64` word granularity, so each plane of a row
+/// costs `8·⌈cols/64⌉` bytes. The layout targets wide sample matrices;
+/// for very narrow ones (cols ≤ 16) the per-plane word rounding can erase
+/// the bandwidth advantage over f32 rows.
+#[derive(Clone, Debug)]
+pub struct WeavedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Stored (maximum readable) bit width, 1..=16.
+    pub bits: u32,
+    /// Interval count of the full-width grid: s = 2^bits − 1.
+    pub s: u32,
+    pub scale: ColumnScale,
+    /// `u64` words per bit plane: ceil(cols / 64).
+    words_per_plane: usize,
+    /// rows × bits planes, row-major then plane-major (MSB plane first).
+    data: Vec<u64>,
+}
+
+impl WeavedMatrix {
+    /// Quantize a dense matrix (one stochastic draw) and weave it.
+    pub fn quantize(a: &Matrix, scale: &ColumnScale, bits: u32, rng: &mut Rng) -> Self {
+        Self::quantize_rows(&a.data, a.rows, a.cols, scale, bits, rng)
+    }
+
+    /// Quantize a row-major slice (`data.len() == rows * cols`) — the
+    /// per-shard ingestion entry point (no intermediate Matrix copy).
+    pub fn quantize_rows(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        scale: &ColumnScale,
+        bits: u32,
+        rng: &mut Rng,
+    ) -> Self {
+        let s = crate::quant::intervals_for_bits(bits);
+        let mut idx = vec![0u16; rows * cols];
+        crate::quant::stochastic::quantize_indices(data, cols, &scale.m, s, rng, &mut idx);
+        Self::from_indices(rows, cols, bits, s, scale.clone(), &idx)
+    }
+
+    /// Weave pre-quantized level indices (each < 2^bits).
+    pub fn from_indices(
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        s: u32,
+        scale: ColumnScale,
+        idx: &[u16],
+    ) -> Self {
+        assert!((1..=16).contains(&bits), "weaved width must be 1..=16, got {bits}");
+        assert_eq!(idx.len(), rows * cols);
+        let wpp = cols.div_ceil(64);
+        let stride = bits as usize * wpp;
+        let mut data = vec![0u64; rows * stride];
+        for r in 0..rows {
+            let row = &mut data[r * stride..(r + 1) * stride];
+            for (c, &v) in idx[r * cols..(r + 1) * cols].iter().enumerate() {
+                debug_assert!((v as u32) <= s, "index {v} exceeds grid {s}");
+                let (w, j) = (c / 64, c % 64);
+                for t in 0..bits as usize {
+                    let bit = (v >> (bits as usize - 1 - t)) & 1;
+                    if bit != 0 {
+                        row[t * wpp + w] |= 1u64 << j;
+                    }
+                }
+            }
+        }
+        WeavedMatrix { rows, cols, bits, s, scale, words_per_plane: wpp, data }
+    }
+
+    /// Re-weave an existing packed store (identical indices, new layout).
+    pub fn from_packed(p: &PackedMatrix) -> Self {
+        let mut idx = vec![0u16; p.rows * p.cols];
+        for r in 0..p.rows {
+            for (c, o) in idx[r * p.cols..(r + 1) * p.cols].iter_mut().enumerate() {
+                *o = p.index(r, c);
+            }
+        }
+        Self::from_indices(p.rows, p.cols, p.bits, p.s, p.scale.clone(), &idx)
+    }
+
+    /// The core gather kernel: reconstruct the top-p truncated indices of
+    /// word-column `w` of the row at plane offset `base`, into `out`
+    /// (sliced to the live columns of this word). Shared by every reader.
+    #[inline]
+    fn gather_word(&self, base: usize, w: usize, p: u32, out: &mut [u16]) {
+        out.fill(0);
+        let wpp = self.words_per_plane;
+        for t in 0..p as usize {
+            let word = self.data[base + t * wpp + w];
+            if word == 0 {
+                continue;
+            }
+            let shift = p as usize - 1 - t;
+            for (j, o) in out.iter_mut().enumerate() {
+                *o |= (((word >> j) & 1) as u16) << shift;
+            }
+        }
+    }
+
+    /// Read row `r` at precision `p` (1..=bits): `out[c]` gets the top-p
+    /// truncation `index(r, c) >> (bits − p)`. Returns the bytes touched —
+    /// exactly the p plane spans of this row.
+    pub fn read_row(&self, r: usize, p: u32, out: &mut [u16]) -> usize {
+        assert!(p >= 1 && p <= self.bits, "precision {p} outside 1..={}", self.bits);
+        let base = r * self.bits as usize * self.words_per_plane;
+        for (w, chunk) in out[..self.cols].chunks_mut(64).enumerate() {
+            self.gather_word(base, w, p, chunk);
+        }
+        self.bytes_per_row(p)
+    }
+
+    /// Dequantize row `r` read at precision `p` onto the 2^p−1-interval
+    /// grid. At p = bits this is bit-identical to
+    /// `PackedMatrix::dequantize_row` over the same indices. Returns bytes
+    /// touched.
+    pub fn dequantize_row_at(&self, r: usize, p: u32, out: &mut [f32]) -> usize {
+        assert!(p >= 1 && p <= self.bits, "precision {p} outside 1..={}", self.bits);
+        let sp = (1u32 << p) - 1;
+        let inv_s2 = 2.0 / sp as f32;
+        let m = &self.scale.m;
+        let wpp = self.words_per_plane;
+        let base = r * self.bits as usize * wpp;
+        let mut idx = [0u16; 64];
+        for w in 0..wpp {
+            let c0 = w * 64;
+            let lim = (self.cols - c0).min(64);
+            self.gather_word(base, w, p, &mut idx[..lim]);
+            for (j, &v) in idx[..lim].iter().enumerate() {
+                out[c0 + j] = (v as f32 * inv_s2 - 1.0) * m[c0 + j];
+            }
+        }
+        self.bytes_per_row(p)
+    }
+
+    /// Single-element read at precision `p` (diagnostics/tests).
+    pub fn index_at(&self, r: usize, c: usize, p: u32) -> u16 {
+        assert!(p >= 1 && p <= self.bits);
+        let wpp = self.words_per_plane;
+        let base = r * self.bits as usize * wpp;
+        let (w, j) = (c / 64, c % 64);
+        let mut v = 0u16;
+        for t in 0..p as usize {
+            let bit = ((self.data[base + t * wpp + w] >> j) & 1) as u16;
+            v |= bit << (p as usize - 1 - t);
+        }
+        v
+    }
+
+    /// Bytes a precision-`p` row read touches: p plane spans of this row.
+    pub fn bytes_per_row(&self, p: u32) -> usize {
+        p as usize * self.words_per_plane * 8
+    }
+
+    /// Total stored payload (all planes; one copy serves every precision).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+
+    pub fn words_per_plane(&self) -> usize {
+        self.words_per_plane
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(rows: usize, cols: usize, seed: u64) -> (Matrix, ColumnScale) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let a = Matrix::from_vec(rows, cols, data);
+        let s = ColumnScale::from_data(&a);
+        (a, s)
+    }
+
+    #[test]
+    fn full_width_read_matches_packed_indices() {
+        let (a, sc) = mk(9, 70, 1);
+        for bits in [1u32, 3, 8, 12, 16] {
+            let mut rng = Rng::new(2);
+            let p = PackedMatrix::quantize(&a, &sc, bits, &mut rng);
+            let w = WeavedMatrix::from_packed(&p);
+            let mut idx = vec![0u16; 70];
+            for r in 0..9 {
+                w.read_row(r, bits, &mut idx);
+                for c in 0..70 {
+                    assert_eq!(idx[c], p.index(r, c), "bits={bits} r={r} c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_read_is_top_planes() {
+        let (a, sc) = mk(6, 130, 3);
+        let mut rng = Rng::new(4);
+        let packed = PackedMatrix::quantize(&a, &sc, 8, &mut rng);
+        let w = WeavedMatrix::from_packed(&packed);
+        let mut idx = vec![0u16; 130];
+        for p in 1..=8u32 {
+            for r in 0..6 {
+                w.read_row(r, p, &mut idx);
+                for c in 0..130 {
+                    assert_eq!(idx[c], packed.index(r, c) >> (8 - p), "p={p} r={r} c={c}");
+                    assert_eq!(idx[c], w.index_at(r, c, p));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_width_dequantize_bit_identical_to_packed() {
+        let (a, sc) = mk(12, 33, 5);
+        let mut rng = Rng::new(6);
+        let packed = PackedMatrix::quantize(&a, &sc, 7, &mut rng);
+        let w = WeavedMatrix::from_packed(&packed);
+        let (mut dp, mut dw) = (vec![0.0f32; 33], vec![0.0f32; 33]);
+        for r in 0..12 {
+            packed.dequantize_row(r, &mut dp);
+            w.dequantize_row_at(r, 7, &mut dw);
+            assert_eq!(dp, dw, "row {r}");
+        }
+    }
+
+    #[test]
+    fn bytes_scale_linearly_with_precision() {
+        let (a, sc) = mk(4, 100, 7);
+        let mut rng = Rng::new(8);
+        let w = WeavedMatrix::quantize(&a, &sc, 8, &mut rng);
+        // 100 cols → 2 words/plane → 16 B per plane per row
+        assert_eq!(w.bytes_per_row(1), 16);
+        assert_eq!(w.bytes_per_row(4), 64);
+        assert_eq!(w.bytes_per_row(8), 128);
+        let mut out = vec![0.0f32; 100];
+        assert_eq!(w.dequantize_row_at(0, 2, &mut out), 32);
+        // one stored copy = the full-width payload
+        assert_eq!(w.bytes(), 4 * 8 * 2 * 8);
+    }
+
+    #[test]
+    fn low_precision_read_stays_near_value() {
+        // top-p truncation is at worst one coarse-grid interval away
+        let (a, sc) = mk(16, 24, 9);
+        let mut rng = Rng::new(10);
+        let w = WeavedMatrix::quantize(&a, &sc, 8, &mut rng);
+        let mut out = vec![0.0f32; 24];
+        for p in [2u32, 4] {
+            let sp = (1u32 << p) - 1;
+            for r in 0..16 {
+                w.dequantize_row_at(r, p, &mut out);
+                for (c, &q) in out.iter().enumerate() {
+                    let m = w.scale.m[c];
+                    if m == 0.0 {
+                        assert_eq!(q, 0.0);
+                        continue;
+                    }
+                    // coarse interval + one fine interval of slack
+                    let width = 2.0 * m / sp as f32 + 2.0 * m / w.s as f32;
+                    let v = a.get(r, c);
+                    assert!((q - v).abs() <= width + 1e-4, "p={p} q={q} v={v} width={width}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_scale_columns_read_zero() {
+        let a = Matrix::from_vec(2, 3, vec![0.0, 1.0, -1.0, 0.0, 0.5, 0.25]);
+        let sc = ColumnScale::from_data(&a);
+        assert_eq!(sc.m[0], 0.0);
+        let mut rng = Rng::new(11);
+        let w = WeavedMatrix::quantize(&a, &sc, 6, &mut rng);
+        let mut out = vec![0.0f32; 3];
+        for p in 1..=6u32 {
+            for r in 0..2 {
+                w.dequantize_row_at(r, p, &mut out);
+                assert_eq!(out[0], 0.0);
+            }
+        }
+    }
+}

@@ -7,6 +7,7 @@ use zipml::quant::{
     self, discretized_optimal_levels, optimal_levels, quantization_variance, ColumnScale,
 };
 use zipml::rng::Rng;
+use zipml::store::{MinibatchIter, PrecisionSchedule, ScheduleState, ShardedStore, WeavedMatrix};
 use zipml::tensor::Matrix;
 
 fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Matrix {
@@ -263,6 +264,189 @@ fn prop_fpga_monotone() {
         let ratio = t32 / t4;
         if !(2.0..=9.0).contains(&ratio) {
             return Err(format!("float/Q4 ratio {ratio} outside plausible band"));
+        }
+        Ok(())
+    });
+}
+
+/// WeavedMatrix::read_row(p) equals the PackedMatrix values truncated to
+/// the top p bit-planes, for widths 1..=16 and random shapes; full-width
+/// dequantization is bit-identical to the packed path.
+#[test]
+fn prop_weaved_read_is_packed_truncation() {
+    Prop::new(48).check("weave-truncation", |rng| {
+        let rows = small_size(rng, 24);
+        let cols = small_size(rng, 80);
+        let bits = 1 + rng.below(16) as u32;
+        let a = rand_matrix(rng, rows, cols, 1.0 + rng.f32() * 3.0);
+        let sc = ColumnScale::from_data(&a);
+        let packed = PackedMatrix::quantize(&a, &sc, bits, rng);
+        let weaved = WeavedMatrix::from_packed(&packed);
+        let mut idx = vec![0u16; cols];
+        for p in 1..=bits {
+            for r in 0..rows {
+                let bytes = weaved.read_row(r, p, &mut idx);
+                if bytes != p as usize * cols.div_ceil(64) * 8 {
+                    return Err(format!("bytes accounting off: {bytes} (p={p} cols={cols})"));
+                }
+                for (c, &got) in idx.iter().enumerate() {
+                    let expect = packed.index(r, c) >> (bits - p);
+                    if got != expect {
+                        return Err(format!(
+                            "bits={bits} p={p} ({r},{c}): {got} != {expect}"
+                        ));
+                    }
+                }
+            }
+        }
+        // full-width dequantization must match the packed path exactly
+        let (mut dw, mut dp) = (vec![0.0f32; cols], vec![0.0f32; cols]);
+        for r in 0..rows {
+            weaved.dequantize_row_at(r, bits, &mut dw);
+            packed.dequantize_row(r, &mut dp);
+            if dw != dp {
+                return Err(format!("dequant mismatch at row {r} (bits={bits})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Sharded routing is transparent: any shard count reproduces the
+/// unsharded weaved reads, and the byte accounting matches epoch_bytes.
+#[test]
+fn prop_sharded_store_routes_transparently() {
+    Prop::new(32).check("shard-routing", |rng| {
+        let rows = 1 + small_size(rng, 60);
+        let cols = small_size(rng, 50);
+        let bits = 1 + rng.below(8) as u32;
+        let a = rand_matrix(rng, rows, cols, 2.0);
+        let sc = ColumnScale::from_data(&a);
+        let packed = PackedMatrix::quantize(&a, &sc, bits, rng);
+        let whole = WeavedMatrix::from_packed(&packed);
+        let shards = 1 + rng.below(rows);
+        let store = ShardedStore::from_packed(&packed, shards);
+        let p = 1 + rng.below(bits as usize) as u32;
+        let (mut iw, mut is) = (vec![0u16; cols], vec![0u16; cols]);
+        store.reset_bytes_read();
+        for r in 0..rows {
+            whole.read_row(r, p, &mut iw);
+            store.read_row(r, p, &mut is);
+            if iw != is {
+                return Err(format!("row {r} differs (shards={shards} p={p})"));
+            }
+        }
+        if store.bytes_read() as f64 != store.epoch_bytes(p) {
+            return Err(format!(
+                "accounting: read {} vs epoch_bytes {}",
+                store.bytes_read(),
+                store.epoch_bytes(p)
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Store bytes/epoch are strictly increasing in precision and below the
+/// f32 epoch (the Fig 5 ordering, from the store's own accounting).
+#[test]
+fn prop_store_bytes_ordering() {
+    Prop::new(32).check("store-bytes-ordering", |rng| {
+        let rows = 8 + small_size(rng, 100);
+        // cols > 16: below that, word-granularity plane padding makes the
+        // 8-plane read as large as the f32 row (see weave.rs docs)
+        let cols = 17 + small_size(rng, 200);
+        let a = rand_matrix(rng, rows, cols, 1.0);
+        let sc = ColumnScale::from_data(&a);
+        let store = ShardedStore::ingest(&a, &sc, 8, rng.next_u64(), 1 + rng.below(8), 1);
+        let f32_bytes = (rows * cols * 4) as f64;
+        let mut prev = 0.0;
+        for p in [1u32, 2, 4, 8] {
+            let b = store.epoch_bytes(p);
+            if b <= prev {
+                return Err(format!("Q{p} bytes {b} not > {prev}"));
+            }
+            if b >= f32_bytes {
+                return Err(format!("Q{p} bytes {b} not < f32 {f32_bytes} (cols={cols})"));
+            }
+            prev = b;
+        }
+        Ok(())
+    });
+}
+
+/// The strided minibatch iterator partitions an epoch across any worker
+/// count: batches are disjoint, cover ⌊rows/batch⌋·batch rows, and the
+/// union is independent of the number of workers.
+#[test]
+fn prop_minibatch_iter_partitions() {
+    Prop::new(48).check("minibatch-partition", |rng| {
+        let rows = 2 + small_size(rng, 300);
+        let batch = 1 + rng.below(rows.min(16));
+        let workers = 1 + rng.below(6);
+        let seed = rng.next_u64();
+        let mut seen = vec![0u32; rows];
+        for w in 0..workers {
+            let mut it = MinibatchIter::strided(rows, batch, seed, w, workers);
+            while let Some(b) = it.next_batch() {
+                for &r in b {
+                    seen[r as usize] += 1;
+                }
+            }
+        }
+        if seen.iter().any(|&c| c > 1) {
+            return Err("a row was assigned twice".into());
+        }
+        let covered: usize = seen.iter().map(|&c| c as usize).sum();
+        if covered != (rows / batch) * batch {
+            return Err(format!("covered {covered} of {}", (rows / batch) * batch));
+        }
+        // worker-count independence of the union
+        let mut single = vec![0u32; rows];
+        let mut it = MinibatchIter::new(rows, batch, seed);
+        while let Some(b) = it.next_batch() {
+            for &r in b {
+                single[r as usize] += 1;
+            }
+        }
+        if single != seen {
+            return Err("union differs from single-worker epoch".into());
+        }
+        Ok(())
+    });
+}
+
+/// Precision schedules always emit p within [1, store_bits] and are
+/// non-decreasing over any loss history.
+#[test]
+fn prop_schedules_bounded_and_monotone() {
+    Prop::new(48).check("schedule-bounds", |rng| {
+        let store_bits = 1 + rng.below(16) as u32;
+        let start = 1 + rng.below(16) as u32;
+        let max = 1 + rng.below(16) as u32;
+        let sched = match rng.below(3) {
+            0 => PrecisionSchedule::Fixed(start),
+            1 => PrecisionSchedule::StepUp { start, every: 1 + rng.below(4), max },
+            _ => PrecisionSchedule::RefetchTriggered {
+                start,
+                max,
+                min_rel_improve: rng.f64() * 0.2,
+            },
+        };
+        let mut state = ScheduleState::new(sched, store_bits);
+        let mut hist = vec![1.0f64];
+        let mut prev = 0u32;
+        for e in 0..20 {
+            let p = state.precision_for_epoch(e, &hist);
+            if !(1..=store_bits).contains(&p) {
+                return Err(format!("{sched:?}: p={p} outside 1..={store_bits}"));
+            }
+            if p < prev {
+                return Err(format!("{sched:?}: p decreased {prev} -> {p}"));
+            }
+            prev = p;
+            let last = *hist.last().unwrap();
+            hist.push(last * (0.5 + rng.f64() * 0.6)); // noisy descent
         }
         Ok(())
     });
