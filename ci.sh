@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints, then the tier-1 verify
-# (cargo build --release && cargo test -q). Run from anywhere.
+# CI gate: formatting, lints, the tier-1 verify
+# (cargo build --release && cargo test -q), then an artifact-free
+# end-to-end smoke run of the weaved-store example. Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -13,5 +14,8 @@ cargo clippy --workspace --all-targets -- -D warnings
 echo "== tier-1 verify =="
 cargo build --release
 cargo test -q
+
+echo "== example smoke: store_weaving (fused host path, no artifacts) =="
+cargo run --release --example store_weaving > /dev/null
 
 echo "CI OK"

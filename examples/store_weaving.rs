@@ -1,7 +1,9 @@
 //! One stored copy, any precision: quantize a dataset ONCE into the
 //! bit-weaved sharded store, then train at 2, 4, and 8 bits — and with a
 //! step-up schedule — by reading only the needed bit planes per epoch.
-//! Artifact-free (host training path); runs in every checkout.
+//! Training runs on the fused weaved-domain kernels (store/kernel.rs):
+//! dot products and gradients come straight from the bit planes, no f32
+//! row materialization. Artifact-free; runs in every checkout.
 //!
 //!   cargo run --release --example store_weaving
 

@@ -1,0 +1,93 @@
+//! Acceptance bench for the weaved-domain fused kernels: on a 64-dim,
+//! 100k-row, 8-bit store, fused `dot_row` must beat dequantize-row-then-dot
+//! at p ≤ 8, with byte accounting identical to the row-read path.
+//! Run: cargo bench --bench fused_dot [-- --quick]
+
+use zipml::bench::{bench, black_box, section, BenchOpts};
+use zipml::quant::ColumnScale;
+use zipml::rng::Rng;
+use zipml::store::{kernel, ShardedStore, StepKernel};
+use zipml::tensor::{dot, Matrix};
+
+fn main() {
+    let opts = BenchOpts::from_env_and_args();
+    let mut rng = Rng::new(7);
+    let (rows, cols) = (100_000usize, 64usize);
+    let a = Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal()).collect());
+    let scale = ColumnScale::from_data(&a);
+    let store = ShardedStore::ingest(&a, &scale, 8, 42, 64, 0);
+    let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+    let mut k = StepKernel::new(cols);
+    k.refresh(&scale.m, &x);
+
+    section("dot: fused weaved-domain vs dequantize-row-then-dot (100k x 64, 8-bit store)");
+    let mut row = vec![0.0f32; cols];
+    let mut r = 0usize;
+    let mut acc = 0.0f32;
+    for p in [1u32, 2, 4, 8] {
+        let deq = bench(&format!("dequantize+dot p={p}"), &opts, || {
+            r = (r + 1) % rows;
+            store.dequantize_row(r, p, &mut row);
+            acc += dot(&row, &x);
+            black_box(acc);
+        });
+        let fus = bench(&format!("fused dot_row   p={p}"), &opts, || {
+            r = (r + 1) % rows;
+            acc += store.dot_row_fused(r, p, &k);
+            black_box(acc);
+        });
+        let verdict = if deq.mean_ns / fus.mean_ns >= 2.0 { "PASS (>= 2x)" } else { "below 2x" };
+        println!(
+            "   {} — {verdict}",
+            zipml::bench::speedup_line(&format!("fused dot p={p}"), &deq, &fus)
+        );
+    }
+
+    section("full fused SGD gradient batch vs dequantize path (batch 64)");
+    let b = 64usize;
+    let batch: Vec<usize> = (0..b).map(|i| (i * 1543) % rows).collect();
+    let targets: Vec<f32> = (0..b).map(|i| i as f32 * 0.01).collect();
+    let mut grad = vec![0.0f32; cols];
+    for p in [2u32, 8] {
+        bench(&format!("dequant grad batch p={p}"), &opts, || {
+            grad.fill(0.0);
+            for (&ri, &t) in batch.iter().zip(&targets) {
+                store.dequantize_row(ri, p, &mut row);
+                let err = dot(&row, &x) - t;
+                zipml::tensor::axpy(err, &row, &mut grad);
+            }
+            black_box(&grad);
+        });
+        bench(&format!("fused  grad batch p={p}"), &opts, || {
+            grad.fill(0.0);
+            store.fused_grad_batch(&batch, p, &k, &targets, &mut grad);
+            black_box(&grad);
+        });
+    }
+
+    section("byte accounting: fused == row-read path, per epoch");
+    for p in [2u32, 8] {
+        store.reset_bytes_read();
+        for ri in 0..rows {
+            store.dequantize_row(ri, p, &mut row);
+        }
+        let dequant_bytes = store.bytes_read();
+        store.reset_bytes_read();
+        for ri in 0..rows {
+            black_box(store.dot_row_fused(ri, p, &k));
+        }
+        let fused_bytes = store.bytes_read();
+        println!(
+            "  p={p}: dequant epoch {dequant_bytes} B, fused epoch {fused_bytes} B — {}",
+            if dequant_bytes == fused_bytes { "identical" } else { "MISMATCH" }
+        );
+        assert_eq!(dequant_bytes, fused_bytes, "accounting must not drift");
+    }
+
+    // keep the kernel module reachable for per-row axpy shape too
+    let (shard, local) = store.locate_row(0);
+    bench("fused axpy_row p=8", &opts, || {
+        kernel::axpy_row(shard, local, 8, 0.01, &mut grad);
+        black_box(&grad);
+    });
+}

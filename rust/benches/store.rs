@@ -7,7 +7,7 @@ use zipml::bench::{bench, black_box, section, BenchOpts};
 use zipml::quant::packing::PackedMatrix;
 use zipml::quant::ColumnScale;
 use zipml::rng::Rng;
-use zipml::store::{ShardedStore, WeavedMatrix};
+use zipml::store::{kernel, ShardedStore, StepKernel, WeavedMatrix};
 use zipml::tensor::Matrix;
 
 fn main() {
@@ -44,6 +44,30 @@ fn main() {
         }
         black_box(acc);
     });
+
+    // (benches/fused_dot.rs is the 100k x 64 acceptance bench on the
+    // ShardedStore accounting path; this section exercises the raw
+    // WeavedMatrix kernel on a wide 512-col store.)
+    section("fused weaved-domain dot vs dequantize-then-dot (2048x512)");
+    let mut rngx = Rng::new(9);
+    let x: Vec<f32> = (0..cols).map(|_| rngx.normal()).collect();
+    let mut k = StepKernel::new(cols);
+    k.refresh(&scale.m, &x);
+    let mut acc = 0.0f32;
+    for p in [1u32, 2, 4, 8] {
+        let deq = bench(&format!("dequantize+dot p={p}"), &opts, || {
+            r = (r + 1) % rows;
+            weaved.dequantize_row_at(r, p, &mut out);
+            acc += zipml::tensor::dot(&out, &x);
+            black_box(acc);
+        });
+        let fus = bench(&format!("fused dot_row   p={p}"), &opts, || {
+            r = (r + 1) % rows;
+            acc += kernel::dot_row(&weaved, r, p, &k);
+            black_box(acc);
+        });
+        println!("   {}", zipml::bench::speedup_line(&format!("fused dot p={p}"), &deq, &fus));
+    }
 
     section("ingestion: quantize + weave + shard (2048x512, 8-bit)");
     for (shards, threads, label) in

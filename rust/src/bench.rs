@@ -102,6 +102,17 @@ pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult 
     r
 }
 
+/// One-line speedup summary for an A/B comparison (shared by the fused-dot
+/// benches so the two call sites can't drift in how they report ratios).
+pub fn speedup_line(name: &str, baseline: &BenchResult, fast: &BenchResult) -> String {
+    let speedup = baseline.mean_ns / fast.mean_ns;
+    format!(
+        "{name}: {speedup:.2}x ({} -> {})",
+        fmt_ns(baseline.mean_ns),
+        fmt_ns(fast.mean_ns)
+    )
+}
+
 /// Prevent the optimizer from discarding a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {

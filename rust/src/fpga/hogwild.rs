@@ -9,7 +9,7 @@ use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::data::Dataset;
-use crate::store::{MinibatchIter, ShardedStore};
+use crate::store::{kernel, MinibatchIter, ShardedStore, StepKernel};
 
 #[derive(Clone, Debug)]
 pub struct HogwildConfig {
@@ -97,14 +97,18 @@ pub fn hogwild_train(ds: &Dataset, cfg: &HogwildConfig) -> HogwildResult {
     }
 }
 
-/// Hogwild! over the weaved sample store: every worker reads rows straight
-/// out of the shared [`ShardedStore`] at precision `p` — concurrent
-/// lock-free shard reads (the store only touches a relaxed byte counter) —
-/// and races updates on the shared model exactly like [`hogwild_train`].
+/// Hogwild! over the weaved sample store: every worker computes its dot
+/// products and model updates **in the weaved domain** — the fused kernels
+/// ([`crate::store::kernel`]) walk only the set bits of the p requested
+/// planes, so no worker ever materializes an f32 row. Shard reads stay
+/// lock-free (the store only touches a relaxed byte counter) and updates
+/// race on the shared model exactly like [`hogwild_train`].
 ///
 /// Work is partitioned by the deterministic strided minibatch iterator, so
 /// the set of (row, worker) assignments is reproducible even though the
-/// update interleaving is racy.
+/// update interleaving is racy. Bytes are counted once per row visit (the
+/// update pass reuses the planes the dot just fetched), identical to the
+/// row-read accounting.
 pub fn hogwild_train_store(
     ds: &Dataset,
     store: &ShardedStore,
@@ -132,20 +136,35 @@ pub fn hogwild_train_store(
                 let updates = Arc::clone(&updates);
                 scope.spawn(move || {
                     let mut it = MinibatchIter::strided(k, BATCH, epoch_seed, t, cfg.threads);
-                    let mut row = vec![0.0f32; n];
                     let mut local = vec![0.0f32; n];
+                    let mut delta = vec![0.0f32; n];
+                    let mut kern = StepKernel::new(n);
+                    let m = &store.scale().m;
                     while let Some(batch) = it.next_batch() {
                         for &r in batch {
                             let r = r as usize;
-                            store.dequantize_row(r, p, &mut row);
+                            let (shard, sr) = store.locate_row(r);
+                            // racy model snapshot → per-update g = m ⊙ x
                             for (l, xa) in local.iter_mut().zip(x.iter()) {
                                 *l = load_f32(xa);
                             }
-                            let err = crate::tensor::dot(&row, &local) - ds.train_b[r];
-                            let g = lr * err;
-                            for (xa, &a) in x.iter().zip(&row) {
-                                if a != 0.0 {
-                                    add_f32(xa, -g * a);
+                            kern.refresh(m, &local);
+                            // fused dot: touches p planes, counts bytes once
+                            store.note_bytes_read(shard.bytes_per_row(p));
+                            let err = kernel::dot_row(shard, sr, p, &kern) - ds.train_b[r];
+                            let coef = -lr * err;
+                            // plane part of the update into the thread-local
+                            // scratch (the planes are still cache-resident;
+                            // not re-counted); the publish pass folds the
+                            // affine term −coef·m[c], re-zeros the scratch,
+                            // and issues ONE racy add per live column — the
+                            // pre-fusion contention profile
+                            kernel::axpy_row_planes(shard, sr, p, coef, &mut delta);
+                            for ((xa, d), &mc) in x.iter().zip(delta.iter_mut()).zip(m.iter()) {
+                                let upd = *d - coef * mc;
+                                *d = 0.0;
+                                if upd != 0.0 {
+                                    add_f32(xa, upd);
                                 }
                             }
                             updates.fetch_add(1, Ordering::Relaxed);

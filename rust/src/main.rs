@@ -130,7 +130,9 @@ fn parse_mode(mode: &str, bits: u32) -> Result<Mode> {
 fn cmd_train(args: &[String]) -> Result<()> {
     let model = match opt(args, "--model").unwrap_or("linreg") {
         "linreg" => ModelKind::Linreg,
-        "lssvm" => ModelKind::Lssvm { c: opt(args, "--c").map(|v| v.parse()).transpose()?.unwrap_or(1e-4) },
+        "lssvm" => ModelKind::Lssvm {
+            c: opt(args, "--c").map(|v| v.parse()).transpose()?.unwrap_or(1e-4),
+        },
         "logistic" => ModelKind::Logistic,
         "svm" => ModelKind::Svm,
         other => bail!("unknown model {other}"),

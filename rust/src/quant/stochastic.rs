@@ -103,9 +103,14 @@ pub fn quantize_one_to_level_index(x: f32, levels: &[f32], rng: &mut Rng) -> u16
 #[inline]
 fn level_index(x: f32, levels: &[f32], rng: &mut Rng) -> u16 {
     let n = levels.len();
+    // Route non-finite samples deterministically: NaN ↦ 0.0 (then clamped
+    // into the grid like any out-of-range value); ±inf clamp to the grid
+    // ends. Without this, OptimalDs ingestion of a single non-finite
+    // sample panicked via `partial_cmp().unwrap()`.
+    let x = if x.is_nan() { 0.0 } else { x };
     let xc = x.clamp(levels[0], levels[n - 1]);
-    // binary search for the bracketing interval
-    let hi_idx = match levels.binary_search_by(|l| l.partial_cmp(&xc).unwrap()) {
+    // binary search for the bracketing interval (total_cmp: never panics)
+    let hi_idx = match levels.binary_search_by(|l| l.total_cmp(&xc)) {
         Ok(i) => return i as u16, // exactly on a level
         Err(i) => i.min(n - 1).max(1),
     };
@@ -127,7 +132,14 @@ pub fn uniform_levels(m: f32, s: u32) -> Vec<f32> {
 
 /// Empirical quantization variance TV(v) = E‖Q(v) − v‖² (Lemma 1 quantity),
 /// estimated over `trials` draws. Test/diagnostic helper.
-pub fn empirical_tv(v: &[f32], cols: usize, m: &[f32], s: u32, trials: usize, rng: &mut Rng) -> f64 {
+pub fn empirical_tv(
+    v: &[f32],
+    cols: usize,
+    m: &[f32],
+    s: u32,
+    trials: usize,
+    rng: &mut Rng,
+) -> f64 {
     let mut buf = vec![0.0f32; v.len()];
     let mut acc = 0.0f64;
     for _ in 0..trials {
@@ -224,6 +236,28 @@ mod tests {
         let tv2 = empirical_tv(&v, 1, &m, 12, 300, &mut rng);
         let ratio = tv1 / tv2;
         assert!(ratio > 8.0 && ratio < 32.0, "ratio {ratio}");
+    }
+
+    /// Non-finite samples route deterministically instead of panicking
+    /// (the OptimalDs-ingestion crash): ±inf clamp to the grid ends, NaN
+    /// behaves like 0.0 and stays inside its bracketing interval.
+    #[test]
+    fn non_finite_samples_route_deterministically() {
+        let mut rng = Rng::new(8);
+        let levels = [-1.0f32, -0.25, 0.5, 2.0];
+        assert_eq!(quantize_one_to_level_index(f32::INFINITY, &levels, &mut rng), 3);
+        assert_eq!(quantize_one_to_level_index(f32::NEG_INFINITY, &levels, &mut rng), 0);
+        for _ in 0..100 {
+            // NaN ↦ 0.0 ∈ (-0.25, 0.5): stochastic between indices 1 and 2
+            let i = quantize_one_to_level_index(f32::NAN, &levels, &mut rng);
+            assert!(i == 1 || i == 2, "NaN routed to index {i}");
+        }
+        // value-space path lands on a real grid level, never NaN
+        let q = quantize_one_to_levels(f32::NAN, &levels, &mut rng);
+        assert!(q == -0.25 || q == 0.5, "NaN dequantized to {q}");
+        // grid containing 0.0 exactly: NaN maps to it deterministically
+        let levels0 = [-1.0f32, 0.0, 1.0];
+        assert_eq!(quantize_one_to_level_index(f32::NAN, &levels0, &mut rng), 1);
     }
 
     #[test]

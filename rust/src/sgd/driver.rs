@@ -21,7 +21,7 @@ use crate::quant::packing::{DoubleSampleBlock, PackedMatrix};
 use crate::quant::{discretized_optimal_levels, ColumnScale};
 use crate::rng::Rng;
 use crate::runtime::{lit_f32, lit_scalar11, lit_u8, Runtime};
-use crate::store::{PrecisionSchedule, ScheduleState, ShardedStore};
+use crate::store::{PrecisionSchedule, ScheduleState, ShardedStore, StepKernel};
 use crate::tensor::Matrix;
 
 use super::modes::{Mode, ModelKind};
@@ -129,9 +129,10 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
         (Mode::DoubleSampleU8 { .. }, ModelKind::Linreg) => {
             man.find_kind_n_batch("linreg_ds_u8_step", n, b)?.name.clone()
         }
-        (Mode::EndToEnd { .. } | Mode::ModelQuant { .. } | Mode::GradQuant { .. }, ModelKind::Linreg) => {
-            man.find_kind_n_batch("e2e_step", n, b)?.name.clone()
-        }
+        (
+            Mode::EndToEnd { .. } | Mode::ModelQuant { .. } | Mode::GradQuant { .. },
+            ModelKind::Linreg,
+        ) => man.find_kind_n_batch("e2e_step", n, b)?.name.clone(),
         (Mode::Cheby { .. }, m) if m.is_classification() => {
             man.find_kind_n_batch("cheby_step", n, b)?.name.clone()
         }
@@ -192,8 +193,7 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
     };
 
     // --- loss evaluation batches (full precision, fixed) -------------------
-    let eval_rows = (cfg.eval_batches * loss_batch).min(k / loss_batch * loss_batch);
-    let eval_nb = eval_rows / loss_batch;
+    let eval_nb = eval_batch_count(cfg.eval_batches, loss_batch, k)?;
     let mut eval_lits = Vec::with_capacity(eval_nb);
     for e in 0..eval_nb {
         let rows: Vec<usize> = (e * loss_batch..(e + 1) * loss_batch).collect();
@@ -266,7 +266,8 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
                 // the e2e artifact with full-precision samples (a1 == a2 ==
                 // A makes the DS estimator exact) and the *other* quantizer
                 // at f32-resolution interval count.
-                (Store::Dense(a), Mode::ModelQuant { bits }) | (Store::Dense(a), Mode::GradQuant { bits }) => {
+                (Store::Dense(a), Mode::ModelQuant { bits })
+                | (Store::Dense(a), Mode::GradQuant { bits }) => {
                     gather_into(a, rows, &mut a1);
                     rng.fill_uniform(&mut rand_buf);
                     rng.fill_uniform(&mut rand_buf2);
@@ -577,6 +578,24 @@ fn gather_into(a: &Matrix, rows: &[usize], out: &mut Matrix) {
     }
 }
 
+/// Number of per-epoch loss-evaluation batches: the requested count clamped
+/// to what the training split can fill. Errors instead of silently building
+/// zero batches — with `eval_nb == 0` the per-epoch loss would divide by
+/// zero and report NaN as "diverged".
+fn eval_batch_count(requested: usize, loss_batch: usize, k: usize) -> Result<usize> {
+    if loss_batch == 0 {
+        bail!("loss artifact declares batch=0");
+    }
+    let nb = requested.min(k / loss_batch);
+    if nb == 0 {
+        bail!(
+            "cannot evaluate loss: {k} training rows fill no {loss_batch}-row eval batch \
+             (need k >= {loss_batch} and eval_batches >= 1)"
+        );
+    }
+    Ok(nb)
+}
+
 // ---------------------------------------------------------------------------
 // Artifact-free host training path (linreg).
 //
@@ -584,6 +603,15 @@ fn gather_into(a: &Matrix, rows: &[usize], out: &mut Matrix) {
 // weaved/packed stores be compared end-to-end (loss curves, bandwidth)
 // without AOT artifacts or a PJRT client. Shared by tests, benches, the
 // Hogwild! substrate, and examples/store_weaving.rs.
+//
+// Three batch kernels run the same epoch skeleton:
+//   * train_store_host         — fused weaved-domain kernels (no f32 row)
+//   * train_store_host_dequant — dequantize-row oracle over the store
+//   * train_packed_host        — dequantize-row oracle over PackedMatrix
+// The two oracle paths execute identical float ops, so their loss curves
+// are comparable bit for bit when fetches agree; the fused path sums in
+// plane order (different f32 rounding) and is pinned to the oracle by
+// tolerance + determinism tests instead.
 // ---------------------------------------------------------------------------
 
 /// Result of a host-path run ([`train_store_host`] / [`train_packed_host`]).
@@ -598,9 +626,10 @@ pub struct HostTrainResult {
     pub precisions: Vec<u32>,
 }
 
-/// Minibatch linreg SGD with rows supplied by `fetch(row, precision, out)`.
-/// Both host paths run *this* loop, so their float math is identical and
-/// loss curves are comparable bit for bit when fetches agree.
+/// Minibatch linreg SGD epoch skeleton. `step_batch(p, rows, x, grad)`
+/// accumulates the un-scaled minibatch gradient Σ err_i·a_i into `grad`;
+/// the skeleton owns shuffling, the lr schedule, the model update, and the
+/// per-epoch loss, so every host path shares them exactly.
 fn host_sgd_linreg(
     ds: &Dataset,
     epochs: usize,
@@ -608,7 +637,7 @@ fn host_sgd_linreg(
     lr0: f32,
     seed: u64,
     mut precision: impl FnMut(usize, &[f64]) -> u32,
-    mut fetch: impl FnMut(usize, u32, &mut [f32]),
+    mut step_batch: impl FnMut(u32, &[usize], &[f32], &mut [f32]),
 ) -> (Vec<f64>, Vec<f32>, Vec<u32>) {
     let n = ds.n();
     let k = ds.k_train();
@@ -619,7 +648,6 @@ fn host_sgd_linreg(
     let mut loss_curve = vec![ds.train_mse(&x)];
     let mut precisions = Vec::with_capacity(epochs);
     let mut order: Vec<usize> = (0..nb * batch).collect();
-    let mut row = vec![0.0f32; n];
     let mut grad = vec![0.0f32; n];
     for epoch in 0..epochs {
         let p = precision(epoch, &loss_curve);
@@ -628,11 +656,7 @@ fn host_sgd_linreg(
         rng.shuffle(&mut order);
         for bi in 0..nb {
             grad.fill(0.0);
-            for &r in &order[bi * batch..(bi + 1) * batch] {
-                fetch(r, p, &mut row);
-                let err = crate::tensor::dot(&row, &x) - ds.train_b[r];
-                crate::tensor::axpy(err, &row, &mut grad);
-            }
+            step_batch(p, &order[bi * batch..(bi + 1) * batch], &x, &mut grad);
             crate::tensor::axpy(-lr / batch as f32, &grad, &mut x);
         }
         loss_curve.push(ds.train_mse(&x));
@@ -641,8 +665,56 @@ fn host_sgd_linreg(
 }
 
 /// Host-path training over a weaved [`ShardedStore`] with a per-epoch
-/// [`PrecisionSchedule`]. Bandwidth is the store's exact accounting.
+/// [`PrecisionSchedule`], on the **fused weaved-domain kernels**: per step,
+/// `g = m⊙x` is refreshed once ([`StepKernel`]), then the whole minibatch
+/// gradient is computed straight from bit planes, batched per shard visit
+/// (`ShardedStore::fused_grad_batch`) — no f32 row is ever materialized.
+/// Bandwidth is the store's exact accounting, identical to the row-read
+/// path. [`train_store_host_dequant`] is the dequantize-row oracle.
 pub fn train_store_host(
+    ds: &Dataset,
+    store: &ShardedStore,
+    schedule: PrecisionSchedule,
+    epochs: usize,
+    batch: usize,
+    lr0: f32,
+    seed: u64,
+) -> HostTrainResult {
+    assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
+    assert_eq!(store.cols(), ds.n(), "store/dataset col mismatch");
+    store.reset_bytes_read();
+    let mut sched = ScheduleState::new(schedule, store.bits());
+    let m = store.scale().m.clone();
+    let mut k = StepKernel::new(store.cols());
+    let mut targets = vec![0.0f32; batch];
+    let (loss_curve, final_model, precisions) = host_sgd_linreg(
+        ds,
+        epochs,
+        batch,
+        lr0,
+        seed,
+        |epoch, hist| sched.precision_for_epoch(epoch, hist),
+        |p, rows, x, grad| {
+            k.refresh(&m, x);
+            for (t, &r) in targets.iter_mut().zip(rows) {
+                *t = ds.train_b[r];
+            }
+            store.fused_grad_batch(rows, p, &k, &targets, grad);
+        },
+    );
+    HostTrainResult {
+        loss_curve,
+        final_model,
+        sample_bytes_per_epoch: store.bytes_read() as f64 / epochs.max(1) as f64,
+        precisions,
+    }
+}
+
+/// Dequantize-row oracle over the weaved store: materializes each row via
+/// `ShardedStore::dequantize_row` and runs the classic dot/axpy step —
+/// the pre-fusion host path, kept as the validation baseline. Bit-for-bit
+/// comparable with [`train_packed_host`] at p = stored width.
+pub fn train_store_host_dequant(
     ds: &Dataset,
     store: &ShardedStore,
     schedule: PrecisionSchedule,
@@ -654,6 +726,7 @@ pub fn train_store_host(
     assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
     store.reset_bytes_read();
     let mut sched = ScheduleState::new(schedule, store.bits());
+    let mut row = vec![0.0f32; store.cols()];
     let (loss_curve, final_model, precisions) = host_sgd_linreg(
         ds,
         epochs,
@@ -661,8 +734,12 @@ pub fn train_store_host(
         lr0,
         seed,
         |epoch, hist| sched.precision_for_epoch(epoch, hist),
-        |r, p, out| {
-            store.dequantize_row(r, p, out);
+        |p, rows, x, grad| {
+            for &r in rows {
+                store.dequantize_row(r, p, &mut row);
+                let err = crate::tensor::dot(&row, x) - ds.train_b[r];
+                crate::tensor::axpy(err, &row, grad);
+            }
         },
     );
     HostTrainResult {
@@ -674,7 +751,7 @@ pub fn train_store_host(
 }
 
 /// Host-path twin over the legacy [`PackedMatrix`] (full stored width) —
-/// the baseline the weaved path is validated against.
+/// the baseline the weaved paths are validated against.
 pub fn train_packed_host(
     ds: &Dataset,
     packed: &PackedMatrix,
@@ -685,6 +762,7 @@ pub fn train_packed_host(
 ) -> HostTrainResult {
     assert_eq!(packed.rows, ds.k_train(), "store/dataset row mismatch");
     let bits = packed.bits;
+    let mut row = vec![0.0f32; packed.cols];
     let (loss_curve, final_model, precisions) = host_sgd_linreg(
         ds,
         epochs,
@@ -692,7 +770,13 @@ pub fn train_packed_host(
         lr0,
         seed,
         |_, _| bits,
-        |r, _, out| packed.dequantize_row(r, out),
+        |_, rows, x, grad| {
+            for &r in rows {
+                packed.dequantize_row(r, &mut row);
+                let err = crate::tensor::dot(&row, x) - ds.train_b[r];
+                crate::tensor::axpy(err, &row, grad);
+            }
+        },
     );
     // rows actually read per epoch (tail partial batch dropped), so the
     // figure is comparable with the weaved path's measured bytes
@@ -724,17 +808,65 @@ mod tests {
         (packed, store)
     }
 
-    /// At p = stored width over identical indices, the weaved host path is
-    /// bit-identical to the packed host path (acceptance criterion).
+    /// At p = stored width over identical indices, the weaved dequantize
+    /// oracle is bit-identical to the packed host path (the pre-fusion
+    /// guarantee, preserved).
     #[test]
     fn store_host_matches_packed_host_exactly_at_full_width() {
         let ds = make_regression("host_eq", 512, 64, 24, 11);
         let (packed, store) = packed_and_store(&ds, 8, 5, 13);
         let a = train_packed_host(&ds, &packed, 6, 32, 0.05, 7);
-        let b = train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 6, 32, 0.05, 7);
+        let b = train_store_host_dequant(&ds, &store, PrecisionSchedule::Fixed(8), 6, 32, 0.05, 7);
         assert_eq!(a.loss_curve, b.loss_curve);
         assert_eq!(a.final_model, b.final_model);
         assert_eq!(b.precisions, vec![8; 6]);
+    }
+
+    /// Loss-curve equivalence of the fused path: `train_store_host` (fused
+    /// kernels, no f32 rows) tracks the pre-fusion dequantize oracle at
+    /// every epoch, reads the same precisions, accounts identical bytes —
+    /// and is itself deterministic bit for bit. (Exact f32 equality with
+    /// the oracle is impossible: the fused path sums in plane order.)
+    #[test]
+    fn fused_host_path_tracks_dequant_oracle_curve() {
+        let ds = make_regression("host_fused", 512, 64, 24, 11);
+        let (_, store) = packed_and_store(&ds, 8, 5, 13);
+        for sched in [
+            PrecisionSchedule::Fixed(8),
+            PrecisionSchedule::Fixed(3),
+            PrecisionSchedule::StepUp { start: 2, every: 2, max: 8 },
+        ] {
+            let oracle = train_store_host_dequant(&ds, &store, sched, 6, 32, 0.05, 7);
+            let fused = train_store_host(&ds, &store, sched, 6, 32, 0.05, 7);
+            assert_eq!(oracle.precisions, fused.precisions, "{sched:?}");
+            assert_eq!(
+                oracle.sample_bytes_per_epoch, fused.sample_bytes_per_epoch,
+                "{sched:?}: byte accounting must be identical to the row-read path"
+            );
+            for (e, (a, b)) in oracle.loss_curve.iter().zip(&fused.loss_curve).enumerate() {
+                assert!(
+                    (a - b).abs() <= 2e-2 * (1.0 + a.abs()),
+                    "{sched:?} epoch {e}: oracle {a} vs fused {b}"
+                );
+            }
+            let again = train_store_host(&ds, &store, sched, 6, 32, 0.05, 7);
+            assert_eq!(fused.loss_curve, again.loss_curve, "{sched:?} not deterministic");
+            assert_eq!(fused.final_model, again.final_model);
+        }
+    }
+
+    /// Regression for the eval_nb == 0 divide-by-zero: too few rows for
+    /// one loss batch must error out instead of reporting NaN loss.
+    #[test]
+    fn eval_batch_count_rejects_empty_eval() {
+        assert!(eval_batch_count(16, 64, 40).is_err());
+        assert!(eval_batch_count(0, 64, 1000).is_err());
+        assert!(eval_batch_count(16, 0, 1000).is_err());
+        assert_eq!(eval_batch_count(16, 64, 64).unwrap(), 1);
+        assert_eq!(eval_batch_count(16, 64, 10_000).unwrap(), 16);
+        assert_eq!(eval_batch_count(4, 64, 200).unwrap(), 3);
+        let msg = format!("{:#}", eval_batch_count(16, 64, 40).unwrap_err());
+        assert!(msg.contains("64-row"), "unhelpful error: {msg}");
     }
 
     /// Independently ingested store (fresh stochastic draws) converges to

@@ -1,0 +1,352 @@
+//! Word-parallel, plane-major fused kernels over the weaved layout —
+//! computing *in the weaved domain* (MLWeaving, arXiv 1903.03404) so the
+//! training hot loop never materializes an f32 row.
+//!
+//! Two layers:
+//!
+//! * **Gather** — [`spread_word`] scatters one plane word into the `u16`
+//!   index outputs without a 64-iteration dependent loop: sparse words walk
+//!   their set bits via `trailing_zeros`, dense words spread a byte at a
+//!   time through a 256-entry lookup table. `WeavedMatrix::read_row` is
+//!   built on this.
+//! * **Fused compute** — [`dot_row`] and [`axpy_row`] evaluate dot products
+//!   and gradient accumulations straight from the bit planes using the
+//!   identity (DESIGN.md §4, "weaved-domain kernels"):
+//!
+//!   ```text
+//!   dequant_p(row)[c] = (idx_p[c] · 2/s_p − 1) · m[c]
+//!   idx_p[c]          = Σ_t 2^(p−1−t) · bit_t[c]
+//!   dot(dequant_p(row), x)
+//!       = (2/s_p) · Σ_t 2^(p−1−t) · maskedsum(plane_t, g) − Σ_c g[c]
+//!   ```
+//!
+//!   with `g[c] = m[c]·x[c]` precomputed once per SGD step ([`StepKernel`]).
+//!   Only the set bits of the p requested planes are touched; zero-scale
+//!   columns contribute exactly 0 through `g`. FLOPs per row ≈ popcount of
+//!   the touched planes plus one fused multiply-add per plane — versus
+//!   gather + per-column dequant + dot for the materializing path.
+//!
+//! Accumulation order is fixed (plane-major, then word, then ascending bit)
+//! and plane sums are carried in f64, so results are deterministic and
+//! within ~1e-7 relative of the dequantize-then-`tensor::dot` oracle (the
+//! property suite pins ≤ 1e-4). Exact bit-equality with the oracle is not
+//! possible — the two paths round in different summation orders — which is
+//! why `WeavedMatrix::dequantize_row_at` stays as the validation oracle.
+
+use super::weave::WeavedMatrix;
+
+/// Per-plane-word spread LUT: `SPREAD8[b][j] = (b >> j) & 1`.
+static SPREAD8: [[u16; 8]; 256] = build_spread8();
+
+const fn build_spread8() -> [[u16; 8]; 256] {
+    let mut t = [[0u16; 8]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut j = 0usize;
+        while j < 8 {
+            t[b][j] = ((b >> j) & 1) as u16;
+            j += 1;
+        }
+        b += 1;
+    }
+    t
+}
+
+/// Below this popcount a word is "sparse": walking set bits beats spreading
+/// every byte.
+const SPARSE_BITS: u32 = 8;
+
+/// OR bit `j` of `word` into `out[j] << shift` for every set bit, without a
+/// per-bit dependent loop. Bits at or beyond `out.len()` are ignored (tail
+/// words of a ragged row store them as 0 anyway).
+#[inline]
+pub fn spread_word(word: u64, shift: u32, out: &mut [u16]) {
+    if word == 0 {
+        return;
+    }
+    if word.count_ones() <= SPARSE_BITS {
+        let mut m = word;
+        while m != 0 {
+            let j = m.trailing_zeros() as usize;
+            if j >= out.len() {
+                break;
+            }
+            out[j] |= 1 << shift;
+            m &= m - 1;
+        }
+    } else {
+        for (chunk, byte) in out.chunks_mut(8).zip(word.to_le_bytes()) {
+            if byte == 0 {
+                continue;
+            }
+            for (o, &b) in chunk.iter_mut().zip(&SPREAD8[byte as usize]) {
+                *o |= b << shift;
+            }
+        }
+    }
+}
+
+/// Σ g[j] over the set bits of `word`. Bits beyond `g.len()` must be zero
+/// (guaranteed for weaved tail words). Two alternating accumulators break
+/// the f32 add-latency chain on dense planes (~32 set bits/word); the
+/// summation order stays fixed, so results are deterministic.
+#[inline]
+fn masked_sum(mut word: u64, g: &[f32]) -> f32 {
+    let (mut acc0, mut acc1) = (0.0f32, 0.0f32);
+    while word != 0 {
+        let j = word.trailing_zeros() as usize;
+        acc0 += g[j];
+        word &= word - 1;
+        if word == 0 {
+            break;
+        }
+        let j = word.trailing_zeros() as usize;
+        acc1 += g[j];
+        word &= word - 1;
+    }
+    acc0 + acc1
+}
+
+/// Per-SGD-step context for the fused kernels: `g = m ⊙ x` and its sum,
+/// valid until the model `x` changes (refresh once per step — the same
+/// amortization the ISSUE's identity assumes).
+#[derive(Clone, Debug)]
+pub struct StepKernel {
+    g: Vec<f32>,
+    sum_g: f32,
+}
+
+impl StepKernel {
+    pub fn new(cols: usize) -> Self {
+        StepKernel { g: vec![0.0; cols], sum_g: 0.0 }
+    }
+
+    /// Recompute `g[c] = m[c]·x[c]` and `Σ g` for the current model.
+    pub fn refresh(&mut self, m: &[f32], x: &[f32]) {
+        debug_assert_eq!(m.len(), self.g.len());
+        debug_assert_eq!(x.len(), self.g.len());
+        let mut acc = 0.0f64;
+        for ((g, &mc), &xc) in self.g.iter_mut().zip(m).zip(x) {
+            *g = mc * xc;
+            acc += *g as f64;
+        }
+        self.sum_g = acc as f32;
+    }
+
+    pub fn g(&self) -> &[f32] {
+        &self.g
+    }
+
+    pub fn sum_g(&self) -> f32 {
+        self.sum_g
+    }
+}
+
+/// Fused weaved-domain dot product: `dot(dequant_p(row r), x)` where `k`
+/// was refreshed with (`scale.m`, `x`). Touches only the p requested bit
+/// planes; never materializes indices or an f32 row.
+pub fn dot_row(w: &WeavedMatrix, r: usize, p: u32, k: &StepKernel) -> f32 {
+    assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
+    assert_eq!(k.g.len(), w.cols, "StepKernel built for {} cols, store has {}", k.g.len(), w.cols);
+    let planes = w.row_planes(r);
+    let wpp = w.words_per_plane();
+    let inv_s2 = 2.0 / ((1u32 << p) - 1) as f32;
+    let mut acc = 0.0f64;
+    for t in 0..p as usize {
+        let weight = (1u64 << (p as usize - 1 - t)) as f64;
+        let mut psum = 0.0f64;
+        for (wi, &word) in planes[t * wpp..(t + 1) * wpp].iter().enumerate() {
+            if word != 0 {
+                psum += masked_sum(word, &k.g[wi * 64..]) as f64;
+            }
+        }
+        acc += weight * psum;
+    }
+    (inv_s2 as f64 * acc - k.sum_g as f64) as f32
+}
+
+/// Plane part of the fused axpy: for every set bit of the p planes of row
+/// `r`, add `coef · 2^(p−1−t) · (2/s_p) · m[c]` into `sink(c, delta)`.
+#[inline]
+fn plane_walk(w: &WeavedMatrix, r: usize, p: u32, coef: f32, mut sink: impl FnMut(usize, f32)) {
+    assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
+    let planes = w.row_planes(r);
+    let wpp = w.words_per_plane();
+    let m = &w.scale.m;
+    let inv_s2 = 2.0 / ((1u32 << p) - 1) as f32;
+    for t in 0..p as usize {
+        let wgt = coef * inv_s2 * (1u64 << (p as usize - 1 - t)) as f32;
+        for (wi, &word) in planes[t * wpp..(t + 1) * wpp].iter().enumerate() {
+            let c0 = wi * 64;
+            let mut bits = word;
+            while bits != 0 {
+                let j = c0 + bits.trailing_zeros() as usize;
+                sink(j, wgt * m[j]);
+                bits &= bits - 1;
+            }
+        }
+    }
+}
+
+/// Plane part of `out[c] += coef · dequant_p(row)[c]`; callers batching
+/// many rows defer the shared affine term to one [`axpy_affine`] call.
+pub fn axpy_row_planes(w: &WeavedMatrix, r: usize, p: u32, coef: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), w.cols);
+    plane_walk(w, r, p, coef, |c, d| out[c] += d);
+}
+
+/// The affine term of the dequant identity: `out[c] -= coef_sum · m[c]`.
+/// For a batch, `coef_sum` is the sum of the per-row axpy coefficients.
+pub fn axpy_affine(coef_sum: f32, m: &[f32], out: &mut [f32]) {
+    for (o, &mc) in out.iter_mut().zip(m) {
+        *o -= coef_sum * mc;
+    }
+}
+
+/// Full fused axpy for one row: `out[c] += coef · dequant_p(row)[c]`,
+/// computed from bit planes (plane part + affine part), no f32 row.
+pub fn axpy_row(w: &WeavedMatrix, r: usize, p: u32, coef: f32, out: &mut [f32]) {
+    axpy_row_planes(w, r, p, coef, out);
+    axpy_affine(coef, &w.scale.m, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scaling::ColumnScale;
+    use crate::rng::Rng;
+    use crate::tensor::{dot, Matrix};
+
+    fn mk(rows: usize, cols: usize, bits: u32, seed: u64) -> (Matrix, WeavedMatrix) {
+        let mut rng = Rng::new(seed);
+        let mut data: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        if cols > 2 {
+            // plant a zero-scale column
+            for r in 0..rows {
+                data[r * cols + 1] = 0.0;
+            }
+        }
+        let a = Matrix::from_vec(rows, cols, data);
+        let sc = ColumnScale::from_data(&a);
+        let w = WeavedMatrix::quantize(&a, &sc, bits, &mut rng);
+        (a, w)
+    }
+
+    fn rel_err(got: f64, want: f64, scale: f64) -> f64 {
+        (got - want).abs() / (1.0 + want.abs() + scale)
+    }
+
+    /// Fused dot == dequantize-then-dot (≤1e-4 relative) for bits 1..=16,
+    /// the ragged column counts the ISSUE names, and zero-scale columns.
+    #[test]
+    fn fused_dot_matches_dequant_oracle() {
+        for &cols in &[63usize, 64, 65, 130] {
+            for bits in [1u32, 2, 5, 8, 12, 16] {
+                let (_, w) = mk(6, cols, bits, 11 + bits as u64);
+                let mut rng = Rng::new(99 + cols as u64);
+                let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+                let mut k = StepKernel::new(cols);
+                k.refresh(&w.scale.m, &x);
+                let mut row = vec![0.0f32; cols];
+                for p in 1..=bits {
+                    for r in 0..6 {
+                        w.dequantize_row_at(r, p, &mut row);
+                        let want = dot(&row, &x) as f64;
+                        let got = dot_row(&w, r, p, &k) as f64;
+                        let scale: f64 =
+                            row.iter().zip(&x).map(|(&a, &b)| (a as f64 * b as f64).abs()).sum();
+                        assert!(
+                            rel_err(got, want, scale) < 1e-4,
+                            "cols={cols} bits={bits} p={p} r={r}: {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fused axpy (plane + affine) == dequantize-then-`tensor::axpy`.
+    #[test]
+    fn fused_axpy_matches_dequant_oracle() {
+        for &cols in &[63usize, 64, 65, 130] {
+            for bits in [1u32, 4, 9, 16] {
+                let (_, w) = mk(5, cols, bits, 7 + bits as u64);
+                let mut rng = Rng::new(3);
+                let mut row = vec![0.0f32; cols];
+                for p in [1, bits] {
+                    let mut gf = vec![0.0f32; cols];
+                    let mut gr = vec![0.0f64; cols];
+                    let mut mag = vec![0.0f64; cols];
+                    for r in 0..5 {
+                        let coef = rng.normal();
+                        axpy_row(&w, r, p, coef, &mut gf);
+                        w.dequantize_row_at(r, p, &mut row);
+                        for ((o, g), &v) in gr.iter_mut().zip(mag.iter_mut()).zip(&row) {
+                            *o += coef as f64 * v as f64;
+                            *g += (coef as f64 * v as f64).abs();
+                        }
+                    }
+                    for c in 0..cols {
+                        assert!(
+                            rel_err(gf[c] as f64, gr[c], mag[c]) < 1e-4,
+                            "cols={cols} bits={bits} p={p} c={c}: {} vs {}",
+                            gf[c],
+                            gr[c]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Zero-scale columns: dot ignores them, axpy leaves them untouched.
+    #[test]
+    fn zero_scale_columns_are_inert() {
+        let (_, w) = mk(4, 10, 8, 21);
+        assert_eq!(w.scale.m[1], 0.0);
+        let x = vec![1.0f32; 10];
+        let mut k = StepKernel::new(10);
+        k.refresh(&w.scale.m, &x);
+        assert_eq!(k.g()[1], 0.0);
+        let mut grad = vec![0.0f32; 10];
+        for r in 0..4 {
+            let _ = dot_row(&w, r, 8, &k);
+            axpy_row(&w, r, 8, 1.5, &mut grad);
+        }
+        assert_eq!(grad[1], 0.0);
+    }
+
+    /// spread_word: LUT (dense) and trailing_zeros (sparse) paths agree
+    /// with the reference bit extraction, including short tail outputs.
+    #[test]
+    fn spread_word_paths_match_reference() {
+        let mut rng = Rng::new(17);
+        for lim in [64usize, 63, 17, 8, 3, 1] {
+            for _ in 0..50 {
+                let dense = rng.next_u64();
+                let sparse = dense & rng.next_u64() & rng.next_u64() & rng.next_u64();
+                for word in [dense, sparse, 0, u64::MAX] {
+                    let masked = if lim == 64 { word } else { word & ((1u64 << lim) - 1) };
+                    let mut out = vec![0u16; lim];
+                    spread_word(masked, 3, &mut out);
+                    for (j, &o) in out.iter().enumerate() {
+                        assert_eq!(o, (((masked >> j) & 1) as u16) << 3, "lim={lim} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Deterministic: identical inputs give bit-identical fused results.
+    #[test]
+    fn fused_kernels_deterministic() {
+        let (_, w) = mk(8, 130, 8, 31);
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..130).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(130);
+        k.refresh(&w.scale.m, &x);
+        for r in 0..8 {
+            assert_eq!(dot_row(&w, r, 5, &k).to_bits(), dot_row(&w, r, 5, &k).to_bits());
+        }
+    }
+}

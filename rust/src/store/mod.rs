@@ -17,15 +17,22 @@
 //!   [`MinibatchIter`] that partitions an epoch across workers.
 //! * [`precision_schedule`] — per-epoch precision policies (fixed,
 //!   step-up, refetch-triggered) consumed by the SGD driver.
+//! * [`kernel`] — word-parallel fused kernels computing dot products and
+//!   gradient accumulations *in the weaved domain* (no f32 row
+//!   materialization); [`StepKernel`] holds the per-step `g = m ⊙ x`
+//!   precompute.
 //!
 //! Consumers: `sgd::driver` (store-backed training path, selectable via
-//! `TrainConfig::store`), `fpga::pipeline` (epoch seconds from store-
-//! derived bytes), `fpga::hogwild` (lock-free multi-threaded shard reads).
+//! `TrainConfig::store`; the host twins run the fused path), `fpga::pipeline`
+//! (epoch seconds from store-derived bytes), `fpga::hogwild` (lock-free
+//! multi-threaded fused shard reads).
 
+pub mod kernel;
 pub mod precision_schedule;
 pub mod shard;
 pub mod weave;
 
+pub use kernel::StepKernel;
 pub use precision_schedule::{PrecisionSchedule, ScheduleState};
 pub use shard::{MinibatchIter, ShardedStore};
 pub use weave::WeavedMatrix;

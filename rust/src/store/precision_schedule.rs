@@ -88,7 +88,9 @@ impl ScheduleState {
         self.current
     }
 
-    /// Precision most recently returned (the store's max width initially).
+    /// Precision most recently returned by `precision_for_epoch`; before
+    /// the first epoch this is the schedule's start value, clamped to
+    /// `[1, store_bits]`.
     pub fn current(&self) -> u32 {
         self.current
     }

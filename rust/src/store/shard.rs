@@ -25,6 +25,7 @@ use crate::quant::scaling::ColumnScale;
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
+use super::kernel::{self, StepKernel};
 use super::weave::WeavedMatrix;
 
 /// Rows per shard are rounded up to this so shard payloads are whole
@@ -173,6 +174,83 @@ impl ShardedStore {
         bytes
     }
 
+    /// Route global row `r` to `(shard, local row)` for direct fused-kernel
+    /// access ([`super::kernel`]). Does NOT count bytes — compose with
+    /// [`ShardedStore::note_bytes_read`] so each row visit is accounted
+    /// exactly once however many kernel passes reuse the cached planes.
+    pub fn locate_row(&self, r: usize) -> (&WeavedMatrix, usize) {
+        self.locate(r)
+    }
+
+    /// Add `bytes` to the read counter (fused readers account one plane
+    /// fetch per row visit, like the row-read path).
+    pub fn note_bytes_read(&self, bytes: usize) {
+        self.bytes_read.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Fused weaved-domain dot product of global row `r` at precision `p`;
+    /// counts the same bytes a `read_row`/`dequantize_row` of that row
+    /// would. No f32 row is materialized.
+    pub fn dot_row_fused(&self, r: usize, p: u32, k: &StepKernel) -> f32 {
+        let (shard, local) = self.locate(r);
+        self.note_bytes_read(shard.bytes_per_row(p));
+        kernel::dot_row(shard, local, p, k)
+    }
+
+    /// One fused minibatch gradient pass, batched per shard visit: rows are
+    /// grouped by shard (each shard is visited once, its rows processed
+    /// back to back), and for each row
+    ///
+    /// ```text
+    /// err_i = dot(dequant_p(row_i), x) − targets[i]
+    /// grad += err_i · dequant_p(row_i)
+    /// ```
+    ///
+    /// is evaluated straight from the bit planes (`k` must hold `g = m⊙x`
+    /// for the current model). The shared affine term −(Σ err_i)·m is
+    /// applied once per batch. Byte accounting is identical to the
+    /// row-read path — p plane spans per row, counted once per row visit;
+    /// the axpy pass reuses the planes the dot pass just fetched (they are
+    /// cache-resident, not a second DRAM crossing). Returns the bytes
+    /// counted.
+    pub fn fused_grad_batch(
+        &self,
+        rows: &[usize],
+        p: u32,
+        k: &StepKernel,
+        targets: &[f32],
+        grad: &mut [f32],
+    ) -> usize {
+        assert_eq!(rows.len(), targets.len(), "one target per row");
+        // Group rows by shard: one shard visit each. Typical minibatches
+        // fit the stack scratch, so the hot loop allocates nothing; the
+        // unstable sort is deterministic (fixed algorithm, no randomness),
+        // which is all the equivalence/determinism guarantees need.
+        let mut stack = [0u32; 256];
+        let mut heap: Vec<u32>;
+        let order: &mut [u32] = if rows.len() <= 256 {
+            &mut stack[..rows.len()]
+        } else {
+            heap = vec![0u32; rows.len()];
+            &mut heap
+        };
+        for (i, o) in order.iter_mut().enumerate() {
+            *o = i as u32;
+        }
+        order.sort_unstable_by_key(|&i| rows[i as usize] / self.shard_rows);
+        let mut err_sum = 0.0f32;
+        for &i in order.iter() {
+            let (shard, local) = self.locate(rows[i as usize]);
+            let err = kernel::dot_row(shard, local, p, k) - targets[i as usize];
+            kernel::axpy_row_planes(shard, local, p, err, grad);
+            err_sum += err;
+        }
+        kernel::axpy_affine(err_sum, &self.scale().m, grad);
+        let bytes = rows.len() * self.bytes_per_row(p);
+        self.note_bytes_read(bytes);
+        bytes
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -248,7 +326,13 @@ impl MinibatchIter {
         Self::strided(rows, batch, seed, 0, 1)
     }
 
-    pub fn strided(rows: usize, batch: usize, seed: u64, worker: usize, num_workers: usize) -> Self {
+    pub fn strided(
+        rows: usize,
+        batch: usize,
+        seed: u64,
+        worker: usize,
+        num_workers: usize,
+    ) -> Self {
         assert!(batch >= 1);
         assert!(num_workers >= 1 && worker < num_workers, "worker {worker} of {num_workers}");
         let mut order: Vec<u32> = (0..rows as u32).collect();
@@ -350,6 +434,74 @@ mod tests {
             assert!(b < fp_bytes, "Q{p} {b} !< f32 {fp_bytes}");
             prev = b;
         }
+    }
+
+    /// Fused per-shard batch gradient equals the dequantize-row reference
+    /// within tolerance, and accounts exactly the bytes the row-read path
+    /// would for the same rows.
+    #[test]
+    fn fused_grad_batch_matches_dequant_and_accounting() {
+        let (a, sc) = mk(96, 70, 6);
+        let store = ShardedStore::ingest(&a, &sc, 8, 13, 5, 1);
+        let mut rng = crate::rng::Rng::new(9);
+        let x: Vec<f32> = (0..70).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(70);
+        k.refresh(&sc.m, &x);
+        // a shard-crossing minibatch in shuffled order
+        let rows: Vec<usize> = vec![95, 3, 40, 41, 0, 77, 12, 63];
+        let targets: Vec<f32> = rows.iter().map(|&r| r as f32 * 0.1).collect();
+        for p in [2u32, 8] {
+            store.reset_bytes_read();
+            let mut grad = vec![0.0f32; 70];
+            let bytes = store.fused_grad_batch(&rows, p, &k, &targets, &mut grad);
+            assert_eq!(bytes, rows.len() * store.bytes_per_row(p));
+            assert_eq!(store.bytes_read(), bytes as u64);
+
+            // reference: dequantize each row, dot, axpy (the oracle path)
+            store.reset_bytes_read();
+            let mut want = vec![0.0f64; 70];
+            let mut mag = vec![0.0f64; 70];
+            let mut row = vec![0.0f32; 70];
+            for (&r, &t) in rows.iter().zip(&targets) {
+                store.dequantize_row(r, p, &mut row);
+                let err = crate::tensor::dot(&row, &x) - t;
+                for ((o, g), &v) in want.iter_mut().zip(mag.iter_mut()).zip(&row) {
+                    *o += err as f64 * v as f64;
+                    *g += (err as f64 * v as f64).abs();
+                }
+            }
+            // identical byte accounting across the two paths
+            assert_eq!(store.bytes_read(), bytes as u64);
+            for c in 0..70 {
+                let w = want[c];
+                assert!(
+                    (grad[c] as f64 - w).abs() <= 1e-4 * (1.0 + mag[c]),
+                    "p={p} c={c}: {} vs {w}",
+                    grad[c]
+                );
+            }
+        }
+    }
+
+    /// dot_row_fused counts bytes like read_row and matches the oracle.
+    #[test]
+    fn dot_row_fused_accounts_and_matches() {
+        let (a, sc) = mk(40, 33, 8);
+        let store = ShardedStore::ingest(&a, &sc, 6, 17, 4, 1);
+        let mut rng = crate::rng::Rng::new(2);
+        let x: Vec<f32> = (0..33).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(33);
+        k.refresh(&sc.m, &x);
+        let mut row = vec![0.0f32; 33];
+        store.reset_bytes_read();
+        for r in 0..40 {
+            let d = store.dot_row_fused(r, 3, &k);
+            store.dequantize_row(r, 3, &mut row);
+            let want = crate::tensor::dot(&row, &x);
+            assert!((d - want).abs() <= 1e-4 * (1.0 + want.abs()), "row {r}: {d} vs {want}");
+        }
+        // both paths counted: 2 passes × 40 rows × bytes_per_row(3)
+        assert_eq!(store.bytes_read(), (2 * 40 * store.bytes_per_row(3)) as u64);
     }
 
     #[test]

@@ -112,20 +112,25 @@ impl WeavedMatrix {
     /// The core gather kernel: reconstruct the top-p truncated indices of
     /// word-column `w` of the row at plane offset `base`, into `out`
     /// (sliced to the live columns of this word). Shared by every reader.
+    /// Word-parallel via [`super::kernel::spread_word`] — sparse planes
+    /// walk set bits, dense planes spread a byte at a time; no per-bit
+    /// 64-iteration loop.
     #[inline]
     fn gather_word(&self, base: usize, w: usize, p: u32, out: &mut [u16]) {
         out.fill(0);
         let wpp = self.words_per_plane;
         for t in 0..p as usize {
             let word = self.data[base + t * wpp + w];
-            if word == 0 {
-                continue;
-            }
-            let shift = p as usize - 1 - t;
-            for (j, o) in out.iter_mut().enumerate() {
-                *o |= (((word >> j) & 1) as u16) << shift;
-            }
+            super::kernel::spread_word(word, p - 1 - t as u32, out);
         }
+    }
+
+    /// All bit planes of row `r` (plane-major, `bits × words_per_plane`
+    /// words) — the raw operand of the fused weaved-domain kernels.
+    #[inline]
+    pub(crate) fn row_planes(&self, r: usize) -> &[u64] {
+        let stride = self.bits as usize * self.words_per_plane;
+        &self.data[r * stride..(r + 1) * stride]
     }
 
     /// Read row `r` at precision `p` (1..=bits): `out[c]` gets the top-p

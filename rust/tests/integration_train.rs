@@ -38,7 +38,8 @@ fn ds5_matches_fp32_linreg() {
     let Some(rt) = runtime() else { return };
     let ds = make_regression("it100", 2048, 256, 100, 7);
     let fp = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::Full, 10, 0.05)).unwrap();
-    let q5 = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSample { bits: 5 }, 10, 0.05)).unwrap();
+    let q5 = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSample { bits: 5 }, 10, 0.05))
+        .unwrap();
     assert!(!fp.diverged && !q5.diverged);
     assert!(fp.final_loss < 0.2 * fp.loss_curve[0], "fp did not converge");
     // comparable convergence: within 2.5x of fp final (smoke tolerance)
@@ -67,8 +68,10 @@ fn naive_is_biased_ds_is_not() {
     for (b, add) in ds.test_b.iter_mut().zip(&boost_t) {
         *b += add;
     }
-    let naive = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::Naive { bits: 2 }, 25, 0.1)).unwrap();
-    let dsq = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSample { bits: 2 }, 25, 0.1)).unwrap();
+    let naive = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::Naive { bits: 2 }, 25, 0.1))
+        .unwrap();
+    let dsq = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSample { bits: 2 }, 25, 0.1))
+        .unwrap();
     assert!(
         naive.final_loss > 2.0 * dsq.final_loss,
         "bias not visible: naive {} vs ds {}",
@@ -82,7 +85,8 @@ fn naive_is_biased_ds_is_not() {
 fn ds_u8_path_trains() {
     let Some(rt) = runtime() else { return };
     let ds = make_regression("u8run", 1024, 128, 100, 11);
-    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSampleU8 { bits: 4 }, 8, 0.05)).unwrap();
+    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSampleU8 { bits: 4 }, 8, 0.05))
+        .unwrap();
     assert!(!r.diverged);
     assert!(r.final_loss < 0.3 * r.loss_curve[0], "{:?}", r.loss_curve);
 }
@@ -107,7 +111,8 @@ fn end_to_end_converges() {
 fn model_only_quant_converges() {
     let Some(rt) = runtime() else { return };
     let ds = make_regression("mq", 2048, 128, 100, 47);
-    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::ModelQuant { bits: 8 }, 10, 0.05)).unwrap();
+    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::ModelQuant { bits: 8 }, 10, 0.05))
+        .unwrap();
     assert!(!r.diverged);
     assert!(r.final_loss < 0.3 * r.loss_curve[0], "{:?}", r.loss_curve);
 }
@@ -117,7 +122,8 @@ fn model_only_quant_converges() {
 fn grad_only_quant_converges() {
     let Some(rt) = runtime() else { return };
     let ds = make_regression("gq", 2048, 128, 100, 53);
-    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::GradQuant { bits: 8 }, 10, 0.05)).unwrap();
+    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::GradQuant { bits: 8 }, 10, 0.05))
+        .unwrap();
     assert!(!r.diverged);
     assert!(r.final_loss < 0.3 * r.loss_curve[0], "{:?}", r.loss_curve);
 }
@@ -128,8 +134,11 @@ fn grad_only_quant_converges() {
 fn optimal_levels_at_least_as_good() {
     let Some(rt) = runtime() else { return };
     let ds = make_regression("yearprediction", 2048, 128, 90, 17);
-    let uni = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSample { bits: 3 }, 10, 0.05)).unwrap();
-    let opt = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::OptimalDs { levels: 8 }, 10, 0.05)).unwrap();
+    let uni =
+        sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::DoubleSample { bits: 3 }, 10, 0.05))
+            .unwrap();
+    let opt = sgd::train(&rt, &ds, &cfg(ModelKind::Linreg, Mode::OptimalDs { levels: 8 }, 10, 0.05))
+        .unwrap();
     assert!(!opt.diverged);
     assert!(
         opt.final_loss < 1.5 * uni.final_loss,
@@ -163,8 +172,11 @@ fn cheby_and_rounding_both_work() {
     let Some(rt) = runtime() else { return };
     let ds = make_classification("cheb", 2048, 512, 100, 23);
     let fp = sgd::train(&rt, &ds, &cfg(ModelKind::Logistic, Mode::Full, 10, 0.5)).unwrap();
-    let ch = sgd::train(&rt, &ds, &cfg(ModelKind::Logistic, Mode::Cheby { bits: 4 }, 10, 0.5)).unwrap();
-    let rd = sgd::train(&rt, &ds, &cfg(ModelKind::Logistic, Mode::NearestRound { bits: 8 }, 10, 0.5)).unwrap();
+    let ch = sgd::train(&rt, &ds, &cfg(ModelKind::Logistic, Mode::Cheby { bits: 4 }, 10, 0.5))
+        .unwrap();
+    let rd =
+        sgd::train(&rt, &ds, &cfg(ModelKind::Logistic, Mode::NearestRound { bits: 8 }, 10, 0.5))
+            .unwrap();
     assert!(!ch.diverged && !rd.diverged);
     let l0 = fp.loss_curve[0];
     assert!(fp.final_loss < 0.9 * l0);
@@ -179,7 +191,8 @@ fn cheby_and_rounding_both_work() {
 fn poly_ds_descends() {
     let Some(rt) = runtime() else { return };
     let ds = make_classification("poly", 1024, 256, 100, 29);
-    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Logistic, Mode::PolyDs { bits: 4 }, 8, 0.2)).unwrap();
+    let r = sgd::train(&rt, &ds, &cfg(ModelKind::Logistic, Mode::PolyDs { bits: 4 }, 8, 0.2))
+        .unwrap();
     assert!(!r.diverged);
     assert!(r.final_loss < 0.98 * r.loss_curve[0], "{:?}", r.loss_curve);
 }
@@ -205,7 +218,12 @@ fn svm_refetch_small_fraction() {
         &cfg(ModelKind::Svm, Mode::Refetch { bits: 4, strategy: RefetchStrategy::L1 }, 4, 0.2),
     )
     .unwrap();
-    assert!(r4.refetch_fraction > r.refetch_fraction, "{} !> {}", r4.refetch_fraction, r.refetch_fraction);
+    assert!(
+        r4.refetch_fraction > r.refetch_fraction,
+        "{} !> {}",
+        r4.refetch_fraction,
+        r.refetch_fraction
+    );
 }
 
 /// JL-sketch refetch path runs end to end.
@@ -218,7 +236,10 @@ fn svm_refetch_jl_runs() {
         &ds,
         &cfg(
             ModelKind::Svm,
-            Mode::Refetch { bits: 8, strategy: RefetchStrategy::L2Jl { sketch_dim: 64, delta: 0.05 } },
+            Mode::Refetch {
+                bits: 8,
+                strategy: RefetchStrategy::L2Jl { sketch_dim: 64, delta: 0.05 },
+            },
             5,
             0.2,
         ),
@@ -233,7 +254,8 @@ fn mlp_quantized_model_trains() {
     let Some(rt) = runtime() else { return };
     let data = deep::make_deep_dataset(512, 256, 41);
     let fp = deep::train_mlp(&rt, &data, deep::WeightQuant::FullPrecision, 3, 0.1, 41).unwrap();
-    let opt = deep::train_mlp(&rt, &data, deep::WeightQuant::Optimal { levels: 5 }, 3, 0.1, 41).unwrap();
+    let opt = deep::train_mlp(&rt, &data, deep::WeightQuant::Optimal { levels: 5 }, 3, 0.1, 41)
+        .unwrap();
     assert!(fp.train_loss_curve.last().unwrap() < &fp.train_loss_curve[0]);
     assert!(opt.train_loss_curve.last().unwrap() < &opt.train_loss_curve[0]);
     assert!(opt.final_test_acc > 0.15, "acc {}", opt.final_test_acc);
@@ -259,8 +281,10 @@ fn weaved_store_backend_matches_packed_path() {
     assert!(weaved.sample_bytes_per_epoch < 2048.0 * 100.0 * 4.0, "not below f32 bytes");
 }
 
-/// The weaved host path (no artifacts needed) reproduces the packed host
-/// path bit for bit at full width — runs in every checkout.
+/// The weaved host paths (no artifacts needed) run in every checkout: the
+/// dequantize oracle reproduces the packed host path bit for bit at full
+/// width, and the fused weaved-domain path tracks the oracle with
+/// identical byte accounting.
 #[test]
 fn weaved_host_path_matches_packed_exactly() {
     let ds = make_regression("weaved_host_it", 1024, 128, 48, 61);
@@ -269,12 +293,18 @@ fn weaved_host_path_matches_packed_exactly() {
     let packed = PackedMatrix::quantize(&ds.train_a, &scale, 8, &mut rng);
     let store = ShardedStore::from_packed(&packed, 16);
     let a = sgd::train_packed_host(&ds, &packed, 8, 64, 0.05, 9);
-    let b = sgd::train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 8, 64, 0.05, 9);
+    let b = sgd::train_store_host_dequant(&ds, &store, PrecisionSchedule::Fixed(8), 8, 64, 0.05, 9);
     assert_eq!(a.loss_curve, b.loss_curve);
     assert!(b.loss_curve.last().unwrap() < &(0.5 * b.loss_curve[0]), "no convergence");
+    // the fused path (no f32 row materialization) tracks the oracle and
+    // accounts exactly the same bytes
+    let f = sgd::train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 8, 64, 0.05, 9);
+    assert_eq!(f.sample_bytes_per_epoch, b.sample_bytes_per_epoch);
+    for (x, y) in b.loss_curve.iter().zip(&f.loss_curve) {
+        assert!((x - y).abs() <= 2e-2 * (1.0 + x.abs()), "oracle {x} vs fused {y}");
+    }
     // one stored copy at 8 bits serves a 2-bit reader at a quarter of the
     // row bytes (Fig 5's bandwidth knob, post-ingestion)
-    store.reset_bytes_read();
     let c = sgd::train_store_host(&ds, &store, PrecisionSchedule::Fixed(2), 8, 64, 0.05, 9);
     assert!(c.sample_bytes_per_epoch * 3.9 < b.sample_bytes_per_epoch * 1.01);
 }

@@ -7,7 +7,10 @@ use zipml::quant::{
     self, discretized_optimal_levels, optimal_levels, quantization_variance, ColumnScale,
 };
 use zipml::rng::Rng;
-use zipml::store::{MinibatchIter, PrecisionSchedule, ScheduleState, ShardedStore, WeavedMatrix};
+use zipml::store::{
+    kernel, MinibatchIter, PrecisionSchedule, ScheduleState, ShardedStore, StepKernel,
+    WeavedMatrix,
+};
 use zipml::tensor::Matrix;
 
 fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Matrix {
@@ -137,7 +140,8 @@ fn prop_discretized_bounded_by_exact() {
         let pts: Vec<f32> = (0..n).map(|_| rng.f32().powi(2)).collect();
         let nlevels = 3 + rng.below(4);
         let exact = quantization_variance(&pts, &optimal_levels(&pts, nlevels));
-        let coarse = quantization_variance(&pts, &discretized_optimal_levels(&pts, nlevels, nlevels + 2));
+        let coarse =
+            quantization_variance(&pts, &discretized_optimal_levels(&pts, nlevels, nlevels + 2));
         let fine = quantization_variance(&pts, &discretized_optimal_levels(&pts, nlevels, 512));
         if exact > coarse + 1e-8 {
             return Err(format!("exact {exact} > coarse {coarse}"));
@@ -306,6 +310,118 @@ fn prop_weaved_read_is_packed_truncation() {
             packed.dequantize_row(r, &mut dp);
             if dw != dp {
                 return Err(format!("dequant mismatch at row {r} (bits={bits})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Fused weaved-domain kernels match dequantize-then-dot/axpy within 1e-4
+/// relative, for widths 1..=16 (random p per case), ragged column counts
+/// biased toward the word boundaries (63/64/65/130), and zero-scale
+/// columns — the tentpole's correctness pin.
+#[test]
+fn prop_fused_kernels_match_dequant_oracle() {
+    Prop::new(48).check("fused-vs-dequant", |rng| {
+        let rows = 1 + small_size(rng, 12);
+        // bias the shape toward word-boundary raggedness
+        let cols = match rng.below(6) {
+            0 => 63,
+            1 => 64,
+            2 => 65,
+            3 => 130,
+            _ => small_size(rng, 150),
+        };
+        let bits = 1 + rng.below(16) as u32;
+        let mut a = rand_matrix(rng, rows, cols, 1.0 + rng.f32() * 3.0);
+        if cols > 2 {
+            // plant a zero-scale column
+            for r in 0..rows {
+                a.set(r, 1, 0.0);
+            }
+        }
+        let sc = ColumnScale::from_data(&a);
+        let w = WeavedMatrix::quantize(&a, &sc, bits, rng);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(cols);
+        k.refresh(&sc.m, &x);
+        let p = 1 + rng.below(bits as usize) as u32;
+        let mut row = vec![0.0f32; cols];
+        let mut grad_f = vec![0.0f32; cols];
+        let mut grad_r = vec![0.0f64; cols];
+        let mut mag = vec![0.0f64; cols];
+        for r in 0..rows {
+            w.dequantize_row_at(r, p, &mut row);
+            // dot
+            let want = zipml::tensor::dot(&row, &x) as f64;
+            let got = kernel::dot_row(&w, r, p, &k) as f64;
+            let scale: f64 = row.iter().zip(&x).map(|(&u, &v)| (u as f64 * v as f64).abs()).sum();
+            if (got - want).abs() > 1e-4 * (1.0 + want.abs() + scale) {
+                return Err(format!("dot bits={bits} p={p} r={r}: {got} vs {want}"));
+            }
+            // axpy
+            let coef = rng.normal();
+            kernel::axpy_row(&w, r, p, coef, &mut grad_f);
+            for ((o, g), &v) in grad_r.iter_mut().zip(mag.iter_mut()).zip(&row) {
+                *o += coef as f64 * v as f64;
+                *g += (coef as f64 * v as f64).abs();
+            }
+        }
+        for c in 0..cols {
+            if (grad_f[c] as f64 - grad_r[c]).abs() > 1e-4 * (1.0 + mag[c]) {
+                return Err(format!(
+                    "axpy bits={bits} p={p} c={c}: {} vs {}",
+                    grad_f[c], grad_r[c]
+                ));
+            }
+        }
+        // zero-scale column is inert through both kernels
+        if cols > 2 && grad_f[1] != 0.0 {
+            return Err(format!("zero-scale column accumulated {}", grad_f[1]));
+        }
+        Ok(())
+    });
+}
+
+/// The fused per-shard batch gradient agrees with the per-row fused
+/// kernels and accounts exactly rows × bytes_per_row(p).
+#[test]
+fn prop_fused_grad_batch_consistent() {
+    Prop::new(24).check("fused-batch", |rng| {
+        let rows = 9 + small_size(rng, 80);
+        let cols = small_size(rng, 100);
+        let bits = 1 + rng.below(8) as u32;
+        let a = rand_matrix(rng, rows, cols, 2.0);
+        let sc = ColumnScale::from_data(&a);
+        let store = ShardedStore::ingest(&a, &sc, bits, rng.next_u64(), 1 + rng.below(6), 1);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(cols);
+        k.refresh(&sc.m, &x);
+        let p = 1 + rng.below(bits as usize) as u32;
+        let batch: Vec<usize> = (0..8).map(|_| rng.below(rows)).collect();
+        let targets: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        store.reset_bytes_read();
+        let mut grad = vec![0.0f32; cols];
+        let bytes = store.fused_grad_batch(&batch, p, &k, &targets, &mut grad);
+        if bytes != batch.len() * store.bytes_per_row(p) {
+            return Err(format!("bytes {bytes} != rows × bytes_per_row"));
+        }
+        if store.bytes_read() != bytes as u64 {
+            return Err("counter disagrees with returned bytes".into());
+        }
+        // per-row fused reference
+        let mut want = vec![0.0f32; cols];
+        let mut err_sum = 0.0f32;
+        for (&r, &t) in batch.iter().zip(&targets) {
+            let (shard, local) = store.locate_row(r);
+            let err = kernel::dot_row(shard, local, p, &k) - t;
+            kernel::axpy_row_planes(shard, local, p, err, &mut want);
+            err_sum += err;
+        }
+        kernel::axpy_affine(err_sum, &sc.m, &mut want);
+        for c in 0..cols {
+            if (grad[c] - want[c]).abs() > 1e-3 * (1.0 + want[c].abs()) {
+                return Err(format!("c={c}: batch {} vs per-row {}", grad[c], want[c]));
             }
         }
         Ok(())
