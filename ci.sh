@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # CI gate: formatting, lints, the tier-1 verify
-# (cargo build --release && cargo test -q), then an artifact-free
-# end-to-end smoke run of the weaved-store example. Run from anywhere.
+# (cargo build --release && cargo test -q), then artifact-free end-to-end
+# smoke runs: the weaved-store example (truncating + double-sampled host
+# paths) and the fused-dot bench in --quick mode, whose assertions pin the
+# double-sampling byte accounting to exactly 2x the truncating path.
+# Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -15,7 +18,10 @@ echo "== tier-1 verify =="
 cargo build --release
 cargo test -q
 
-echo "== example smoke: store_weaving (fused host path, no artifacts) =="
+echo "== example smoke: store_weaving (fused + DS host paths, no artifacts) =="
 cargo run --release --example store_weaving > /dev/null
+
+echo "== bench smoke: fused_dot --quick (asserts DS bytes == 2x truncation) =="
+cargo bench --bench fused_dot -- --quick > /dev/null
 
 echo "CI OK"

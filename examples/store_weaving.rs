@@ -10,7 +10,7 @@
 use zipml::data::synthetic::make_regression;
 use zipml::fpga::pipeline::{epoch_bytes, epoch_seconds, store_epoch_seconds, Precision};
 use zipml::quant::ColumnScale;
-use zipml::sgd::train_store_host;
+use zipml::sgd::{train_store_host, train_store_host_ds};
 use zipml::store::{PrecisionSchedule, ShardedStore};
 
 fn main() {
@@ -31,9 +31,10 @@ fn main() {
     );
 
     let (epochs, batch, lr0, seed) = (12usize, 64usize, 0.05f32, 7u64);
-    println!("\n{:>12} {:>12} {:>14} {:>16}", "schedule", "final_loss", "bytes/epoch", "fpga_epoch_s");
+    println!("\n{:>12} {:>12} {:>14} {:>16}", "schedule", "final_loss", "bytes/epoch", "epoch_s");
     for p in [2u32, 4, 8] {
-        let r = train_store_host(&ds, &store, PrecisionSchedule::Fixed(p), epochs, batch, lr0, seed);
+        let sched = PrecisionSchedule::Fixed(p);
+        let r = train_store_host(&ds, &store, sched, epochs, batch, lr0, seed);
         println!(
             "{:>12} {:>12.6} {:>14.3e} {:>16.3e}",
             format!("fixed p={p}"),
@@ -51,6 +52,21 @@ fn main() {
         r.sample_bytes_per_epoch,
         r.precisions,
     );
+
+    // double sampling (§2.2) from the SAME stored copy: two unbiased
+    // stochastic p-plane draws per row visit — the carry comes from the
+    // residual planes — so low-precision reads stay unbiased where the
+    // truncating reads above are not; both fetches are in the accounting
+    for p in [2u32, 4] {
+        let sched = PrecisionSchedule::Fixed(p);
+        let r = train_store_host_ds(&ds, &store, sched, epochs, batch, lr0, seed);
+        println!(
+            "{:>12} {:>12.6} {:>14.3e}   (2 draws/row: bytes exactly 2x p={p})",
+            format!("ds p={p}"),
+            r.loss_curve.last().unwrap(),
+            r.sample_bytes_per_epoch,
+        );
+    }
 
     // the Fig 5 argument, from the store's own accounting
     let (k, n) = (store.rows(), store.cols());

@@ -90,4 +90,57 @@ fn main() {
         kernel::axpy_row(shard, local, 8, 0.01, &mut grad);
         black_box(&grad);
     });
+
+    section("double sampling: stochastic draws vs truncating reads");
+    let mut ds_rng = Rng::new(11);
+    for p in [2u32, 4] {
+        bench(&format!("fused dot_row    p={p} (trunc)"), &opts, || {
+            r = (r + 1) % rows;
+            acc += store.dot_row_fused(r, p, &k);
+            black_box(acc);
+        });
+        bench(&format!("fused dot_row_ds p={p} (1 draw)"), &opts, || {
+            r = (r + 1) % rows;
+            let (shard, local) = store.locate_row(r);
+            acc += kernel::dot_row_ds(shard, local, p, &k, &mut ds_rng);
+            black_box(acc);
+        });
+        bench(&format!("ds grad batch    p={p} (2 draws/row)"), &opts, || {
+            grad.fill(0.0);
+            store.ds_grad_batch(&batch, p, &k, &targets, &mut ds_rng, &mut grad);
+            black_box(&grad);
+        });
+    }
+
+    section("byte accounting: DS epoch == exactly 2x the truncation epoch");
+    let epoch_rows: Vec<usize> = (0..rows).collect();
+    let epoch_targets = vec![0.0f32; rows];
+    for p in [2u32, 8] {
+        store.reset_bytes_read();
+        for chunk in epoch_rows.chunks(64) {
+            store.fused_grad_batch(chunk, p, &k, &epoch_targets[..chunk.len()], &mut grad);
+        }
+        let trunc_bytes = store.bytes_read();
+        store.reset_bytes_read();
+        for chunk in epoch_rows.chunks(64) {
+            store.ds_grad_batch(
+                chunk,
+                p,
+                &k,
+                &epoch_targets[..chunk.len()],
+                &mut ds_rng,
+                &mut grad,
+            );
+        }
+        let ds_bytes = store.bytes_read();
+        println!(
+            "  p={p}: truncation epoch {trunc_bytes} B, double-sampled epoch {ds_bytes} B — {}",
+            if ds_bytes == 2 * trunc_bytes { "exactly 2x" } else { "MISMATCH" }
+        );
+        assert_eq!(
+            ds_bytes,
+            2 * trunc_bytes,
+            "the DS path must account exactly 2x the truncation path per epoch"
+        );
+    }
 }

@@ -1,4 +1,4 @@
-//! One regenerator per paper table/figure (DESIGN.md §5).
+//! One regenerator per paper table/figure (DESIGN.md §6).
 //!
 //! Absolute numbers differ from the paper (synthetic data, simulated FPGA,
 //! CPU PJRT backend) but each function reproduces the *shape* of the

@@ -1,5 +1,5 @@
 //! Experiment coordinator: a registry mapping every paper table/figure to
-//! the code that regenerates it (DESIGN.md §5's index, executable).
+//! the code that regenerates it (DESIGN.md §6's index, executable).
 
 pub mod figures;
 pub mod report;

@@ -9,7 +9,8 @@ use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::data::Dataset;
-use crate::store::{kernel, MinibatchIter, ShardedStore, StepKernel};
+use crate::rng::Rng;
+use crate::store::{kernel, MinibatchIter, ShardedStore, StepKernel, WeavedMatrix};
 
 #[derive(Clone, Debug)]
 pub struct HogwildConfig {
@@ -97,23 +98,30 @@ pub fn hogwild_train(ds: &Dataset, cfg: &HogwildConfig) -> HogwildResult {
     }
 }
 
-/// Hogwild! over the weaved sample store: every worker computes its dot
-/// products and model updates **in the weaved domain** — the fused kernels
-/// ([`crate::store::kernel`]) walk only the set bits of the p requested
-/// planes, so no worker ever materializes an f32 row. Shard reads stay
-/// lock-free (the store only touches a relaxed byte counter) and updates
-/// race on the shared model exactly like [`hogwild_train`].
-///
-/// Work is partitioned by the deterministic strided minibatch iterator, so
-/// the set of (row, worker) assignments is reproducible even though the
-/// update interleaving is racy. Bytes are counted once per row visit (the
-/// update pass reuses the planes the dot just fetched), identical to the
-/// row-read accounting.
-pub fn hogwild_train_store(
+/// Per-row-visit hook of [`hogwild_store_run`]: given (shard, local row,
+/// step kernel, target, lr, worker rng, delta scratch), compute the row's
+/// error, write the *plane part* of the update into `delta`, and return
+/// the update coefficient; the skeleton folds the affine term −coef·m and
+/// publishes. Must be `Sync` — one reference is shared by all workers.
+type RowVisit = dyn Fn(&WeavedMatrix, usize, &StepKernel, f32, f32, &mut Rng, &mut [f32]) -> f32
+    + Sync;
+
+/// Shared skeleton of the weaved-store Hogwild! paths: per epoch, every
+/// worker walks its strided row partition ([`MinibatchIter::strided`] at
+/// batch 1, so the (row, worker) assignment is reproducible), takes a racy
+/// model snapshot, refreshes `g = m ⊙ x`, asks `visit` for the row's
+/// update coefficient and plane-part delta, then publishes `delta −
+/// coef·m[c]` as ONE racy add per live column (re-zeroing the scratch) —
+/// the pre-fusion contention profile. `bytes_per_visit` is counted once
+/// per row visit; `visit` gets a per-(epoch, worker) RNG stream derived
+/// via [`crate::rng::Rng::new_stream`], so stochastic variants never share
+/// randomness across racy threads (deterministic variants ignore it).
+fn hogwild_store_run(
     ds: &Dataset,
     store: &ShardedStore,
-    p: u32,
     cfg: &HogwildConfig,
+    bytes_per_visit: usize,
+    visit: &RowVisit,
 ) -> HogwildResult {
     assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
     let t0 = std::time::Instant::now();
@@ -136,6 +144,8 @@ pub fn hogwild_train_store(
                 let updates = Arc::clone(&updates);
                 scope.spawn(move || {
                     let mut it = MinibatchIter::strided(k, BATCH, epoch_seed, t, cfg.threads);
+                    let mut rng =
+                        Rng::new_stream(cfg.seed, (epoch as u64) * cfg.threads as u64 + t as u64);
                     let mut local = vec![0.0f32; n];
                     let mut delta = vec![0.0f32; n];
                     let mut kern = StepKernel::new(n);
@@ -149,17 +159,9 @@ pub fn hogwild_train_store(
                                 *l = load_f32(xa);
                             }
                             kern.refresh(m, &local);
-                            // fused dot: touches p planes, counts bytes once
-                            store.note_bytes_read(shard.bytes_per_row(p));
-                            let err = kernel::dot_row(shard, sr, p, &kern) - ds.train_b[r];
-                            let coef = -lr * err;
-                            // plane part of the update into the thread-local
-                            // scratch (the planes are still cache-resident;
-                            // not re-counted); the publish pass folds the
-                            // affine term −coef·m[c], re-zeros the scratch,
-                            // and issues ONE racy add per live column — the
-                            // pre-fusion contention profile
-                            kernel::axpy_row_planes(shard, sr, p, coef, &mut delta);
+                            store.note_bytes_read(bytes_per_visit);
+                            let coef =
+                                visit(shard, sr, &kern, ds.train_b[r], lr, &mut rng, &mut delta);
                             for ((xa, d), &mc) in x.iter().zip(delta.iter_mut()).zip(m.iter()) {
                                 let upd = *d - coef * mc;
                                 *d = 0.0;
@@ -182,6 +184,66 @@ pub fn hogwild_train_store(
         wall_secs: t0.elapsed().as_secs_f64(),
         updates: updates.load(Ordering::Relaxed),
     }
+}
+
+/// Hogwild! over the weaved sample store: every worker computes its dot
+/// products and model updates **in the weaved domain** — the fused kernels
+/// ([`crate::store::kernel`]) walk only the set bits of the p requested
+/// planes, so no worker ever materializes an f32 row. Shard reads stay
+/// lock-free (the store only touches a relaxed byte counter) and updates
+/// race on the shared model exactly like [`hogwild_train`]. Bytes are
+/// counted once per row visit (the update pass reuses the planes the dot
+/// just fetched), identical to the row-read accounting.
+pub fn hogwild_train_store(
+    ds: &Dataset,
+    store: &ShardedStore,
+    p: u32,
+    cfg: &HogwildConfig,
+) -> HogwildResult {
+    hogwild_store_run(
+        ds,
+        store,
+        cfg,
+        store.bytes_per_row(p),
+        &|shard, sr, kern, target, lr, _rng, delta| {
+            let err = kernel::dot_row(shard, sr, p, kern) - target;
+            let coef = -lr * err;
+            kernel::axpy_row_planes(shard, sr, p, coef, delta);
+            coef
+        },
+    )
+}
+
+/// Hogwild! over the weaved store with **double-sampled** reads: every
+/// worker takes two independent unbiased stochastic p-plane draws per row
+/// visit — draw one for the fused dot, draw two for the racy model update
+/// — implementing the §2.2 estimator concurrently from the single stored
+/// copy (DESIGN.md §5). Each worker owns a carry-randomness stream derived
+/// from (seed, epoch, worker) via [`crate::rng::Rng::new_stream`], so the
+/// *set* of draws is reproducible even though update interleaving is racy.
+/// Both fetches are counted: 2·p plane spans per row visit, exactly 2× the
+/// truncating [`hogwild_train_store`].
+pub fn hogwild_train_store_ds(
+    ds: &Dataset,
+    store: &ShardedStore,
+    p: u32,
+    cfg: &HogwildConfig,
+) -> HogwildResult {
+    hogwild_store_run(
+        ds,
+        store,
+        cfg,
+        // two independent draws: both fetches counted
+        2 * store.bytes_per_row(p),
+        &|shard, sr, kern, target, lr, rng, delta| {
+            let err = kernel::dot_row_ds(shard, sr, p, kern, rng) - target;
+            let coef = -lr * err;
+            // draw two accumulates the plane part; the skeleton's publish
+            // pass folds the affine term and issues the racy adds
+            kernel::axpy_row_planes_ds(shard, sr, p, coef, rng, delta);
+            coef
+        },
+    )
 }
 
 /// Simulated epoch time for the 10-core Hogwild baseline of Fig 5: CPU
@@ -251,6 +313,28 @@ mod tests {
         assert_eq!(
             store.bytes_read(),
             (8 * 4000 * store.bytes_per_row(2)) as u64
+        );
+    }
+
+    /// Double-sampled Hogwild!: racy workers draw two unbiased stochastic
+    /// samples per visit, converge at a low read precision, and the store
+    /// counts exactly 2× the truncating path's bytes.
+    #[test]
+    fn hogwild_ds_over_weaved_store_converges_and_counts_double() {
+        use crate::quant::ColumnScale;
+        let ds = make_regression("hw_ds", 4000, 100, 20, 3);
+        let scale = ColumnScale::from_data(&ds.train_a);
+        let store = crate::store::ShardedStore::ingest(&ds.train_a, &scale, 8, 11, 8, 0);
+        let cfg = HogwildConfig { threads: 4, epochs: 8, lr0: 0.02, seed: 1 };
+        let r = hogwild_train_store_ds(&ds, &store, 4, &cfg);
+        let first = r.loss_curve[0];
+        let last = *r.loss_curve.last().unwrap();
+        assert!(last < 0.3 * first, "no convergence: {first} -> {last}");
+        assert_eq!(r.updates, 8 * 4000);
+        // both draws of every (epoch × row) visit were counted
+        assert_eq!(
+            store.bytes_read(),
+            (8 * 4000 * 2 * store.bytes_per_row(4)) as u64
         );
     }
 }

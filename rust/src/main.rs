@@ -57,10 +57,17 @@ USAGE:
   zipml figure <id>|all [--quick] [--seed N]
   zipml train --model linreg|lssvm|logistic|svm --mode MODE [--dataset D]
               [--bits B] [--epochs E] [--lr F] [--batch N] [--seed N]
-              [--store legacy|weaved] [--shards N] [--schedule S]
+              [--store legacy|weaved|weaved-ds] [--shards N] [--schedule S]
+              [--store-bits W]
        MODE: fp32 | naive | ds | dsu8 | e2e | mq | gq | optimal | round
              | cheby | poly | refetch-l1 | refetch-jl
-       S (weaved store, reads p planes/epoch): fixed | step | refetch
+       S (weaved stores, reads p planes/epoch): fixed | step | refetch
+       weaved    reads truncate to the top p = --bits planes (--mode naive)
+       weaved-ds reads draw two unbiased stochastic p = --bits plane
+                 samples per row — §2.2 double sampling from one copy
+                 (--mode ds); the store is ingested at --store-bits W
+                 (default min(2·bits, 16)), and W > p keeps the carry
+                 planes live
   zipml fpga-sim [--k K] [--n N]
   zipml quantize-demo";
 
@@ -153,12 +160,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
     cfg.lr0 = opt(args, "--lr").map(|v| v.parse()).transpose()?.unwrap_or(0.05);
     cfg.batch = opt(args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(64);
     cfg.seed = seed;
-    match opt(args, "--store") {
-        None | Some("legacy") => {}
-        Some("weaved") => {}
-        Some(other) => bail!("unknown store backend {other} (legacy|weaved)"),
+    let store_kind = opt(args, "--store").unwrap_or("legacy");
+    if !matches!(store_kind, "legacy" | "weaved" | "weaved-ds") {
+        bail!("unknown store backend {store_kind} (legacy|weaved|weaved-ds)");
     }
-    if let Some("weaved") = opt(args, "--store") {
+    if store_kind != "legacy" {
         let shards: usize = opt(args, "--shards").map(|v| v.parse()).transpose()?.unwrap_or(16);
         let schedule = match opt(args, "--schedule").unwrap_or("fixed") {
             "fixed" => PrecisionSchedule::Fixed(bits),
@@ -170,7 +176,27 @@ fn cmd_train(args: &[String]) -> Result<()> {
             },
             other => bail!("unknown schedule {other}"),
         };
-        cfg.store = StoreBackend::Weaved { shards, schedule };
+        cfg.store = if store_kind == "weaved-ds" {
+            if !matches!(cfg.mode, Mode::DoubleSample { .. }) {
+                bail!("--store weaved-ds runs the double-sampling step: use --mode ds");
+            }
+            // the store must be wider than the read precision, or the
+            // carry planes are empty and the "stochastic" draw degenerates
+            // to the deterministic truncation
+            let store_bits: u32 = opt(args, "--store-bits")
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or_else(|| (2 * bits).min(16));
+            if store_bits <= bits {
+                eprintln!(
+                    "warning: --store-bits {store_bits} <= read precision {bits}: \
+                     double-sampled reads degenerate to exact truncation"
+                );
+            }
+            StoreBackend::WeavedDs { shards, schedule, store_bits }
+        } else {
+            StoreBackend::Weaved { shards, schedule }
+        };
     }
 
     println!("training {model:?} mode={} on {dataset_name} (n={}, K={})",

@@ -40,6 +40,15 @@ pub enum StoreBackend {
     /// schedule picks each epoch. Drives the packed-sample (`Mode::Naive`)
     /// step; bandwidth is reported from the store's exact byte accounting.
     Weaved { shards: usize, schedule: PrecisionSchedule },
+    /// Bit-weaved store read with *stochastic* (unbiased) p-plane draws:
+    /// two independent draws per row visit feed the double-sampling step
+    /// (`Mode::DoubleSample`), implementing §2.2 from the single stored
+    /// copy. Both fetches enter the exact byte accounting (DESIGN.md §5).
+    /// `store_bits` is the *ingested* width (1..=16) and must exceed the
+    /// schedule's read precision for the carry to be live — at p ==
+    /// store_bits the draw degenerates to the exact (deterministic) read,
+    /// which defeats double sampling.
+    WeavedDs { shards: usize, schedule: PrecisionSchedule, store_bits: u32 },
 }
 
 #[derive(Clone, Debug)]
@@ -105,10 +114,13 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
     let n = ds.n();
     let b = cfg.batch;
     let k = ds.k_train();
-    let nb = k / b;
-    if nb == 0 {
+    if k < b {
         bail!("dataset smaller than one batch");
     }
+    // batches per epoch: every row is visited, so the ragged tail adds one
+    // wrap-padded batch (see fill_wrapped_batch); the bandwidth accounting
+    // below counts the padded rows too — they are genuinely fetched
+    let nb = k.div_ceil(b);
     let mut rng = Rng::new(cfg.seed);
     let scale = ColumnScale::from_data(&ds.train_a);
 
@@ -146,32 +158,58 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
     };
 
     // --- build the quantized store (the "first epoch" quantization) -------
-    let store = if let StoreBackend::Weaved { shards, .. } = cfg.store {
-        let Mode::Naive { bits } = cfg.mode else {
-            bail!(
-                "the weaved store backend drives the packed-sample step \
-                 (Mode::Naive); got mode {:?}",
-                cfg.mode
-            );
-        };
-        Store::Weaved(ShardedStore::ingest(
-            &ds.train_a,
-            &scale,
-            bits,
-            cfg.seed ^ 0x5745_4156_4544, // "WEAVED"
-            shards,
-            0,
-        ))
-    } else {
-        build_legacy_store(ds, cfg, &scale, k, n, &mut rng)?
-    };
-    // per-epoch precision schedule (weaved backend only)
-    let mut sched = match (&cfg.store, &store) {
-        (StoreBackend::Weaved { schedule, .. }, Store::Weaved(ws)) => {
-            Some(ScheduleState::new(*schedule, ws.bits()))
+    let store = match cfg.store {
+        StoreBackend::Weaved { shards, .. } => {
+            let Mode::Naive { bits } = cfg.mode else {
+                bail!(
+                    "the weaved store backend drives the packed-sample step \
+                     (Mode::Naive); got mode {:?}",
+                    cfg.mode
+                );
+            };
+            Store::Weaved(ShardedStore::ingest(
+                &ds.train_a,
+                &scale,
+                bits,
+                cfg.seed ^ 0x5745_4156_4544, // "WEAVED"
+                shards,
+                0,
+            ))
         }
+        StoreBackend::WeavedDs { shards, store_bits, .. } => {
+            if !matches!(cfg.mode, Mode::DoubleSample { .. }) {
+                bail!(
+                    "the weaved-ds store backend drives the double-sampling \
+                     step (Mode::DoubleSample); got mode {:?}",
+                    cfg.mode
+                );
+            }
+            if !(1..=16).contains(&store_bits) {
+                bail!("weaved-ds store_bits must be 1..=16, got {store_bits}");
+            }
+            Store::Weaved(ShardedStore::ingest(
+                &ds.train_a,
+                &scale,
+                store_bits,
+                cfg.seed ^ 0x5745_4156_4544, // "WEAVED"
+                shards,
+                0,
+            ))
+        }
+        StoreBackend::Legacy => build_legacy_store(ds, cfg, &scale, k, n, &mut rng)?,
+    };
+    // per-epoch precision schedule (weaved backends only)
+    let mut sched = match (&cfg.store, &store) {
+        (
+            StoreBackend::Weaved { schedule, .. } | StoreBackend::WeavedDs { schedule, .. },
+            Store::Weaved(ws),
+        ) => Some(ScheduleState::new(*schedule, ws.bits())),
         _ => None,
     };
+    // carry-randomness stream for stochastic store reads (independent of
+    // the shuffle stream, so Naive and DS runs share visit orders)
+    let mut ds_rng = Rng::new_stream(cfg.seed, 0x4453); // "DS"
+    let weaved_ds = matches!(cfg.store, StoreBackend::WeavedDs { .. });
 
     // --- Chebyshev coefficients (classification approximations) -----------
     let (coefs_lit, mono_lit) = if matches!(cfg.mode, Mode::Cheby { .. } | Mode::PolyDs { .. }) {
@@ -231,7 +269,11 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
     let mut x = vec![0.0f32; n];
     let mut loss_curve = Vec::with_capacity(cfg.epochs + 1);
     loss_curve.push(eval_loss(&x, rt)?);
-    let mut order: Vec<usize> = (0..nb * b).collect();
+    // every training row is visited: the final ragged batch (artifacts are
+    // fixed-shape, so it cannot simply be short) wraps around to rows from
+    // the front of this epoch's permutation
+    let mut order: Vec<usize> = (0..k).collect();
+    let mut batch_rows = vec![0usize; b];
     let mut diverged = false;
 
     // reusable batch buffers
@@ -254,7 +296,8 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
         };
         rng.shuffle(&mut order);
         for bi in 0..nb {
-            let rows = &order[bi * b..(bi + 1) * b];
+            fill_wrapped_batch(&order, bi, b, &mut batch_rows);
+            let rows: &[usize] = &batch_rows;
             for (i, &r) in rows.iter().enumerate() {
                 bv[i] = ds.train_b[r];
             }
@@ -317,6 +360,25 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
                     rf.prepare_batch(rt, p, ds, rows, &x, &mut a1)?;
                     let al = lit_f32(&[b, n], &a1.data)?;
                     rt.exec(&step_art, &[xl, al, bl, lr_lit.clone()])?
+                }
+                (Store::Weaved(ws), Mode::DoubleSample { .. }) if weaved_ds => {
+                    // §2.2 from one stored copy: two independent unbiased
+                    // p_epoch-plane draws per row; both fetches counted
+                    for (i, &r) in rows.iter().enumerate() {
+                        ws.dequantize_row_ds(r, p_epoch, &mut ds_rng, a1.row_mut(i));
+                        ws.dequantize_row_ds(r, p_epoch, &mut ds_rng, a2.row_mut(i));
+                    }
+                    let mut args = vec![
+                        xl,
+                        lit_f32(&[b, n], &a1.data)?,
+                        lit_f32(&[b, n], &a2.data)?,
+                        bl,
+                        lr_lit.clone(),
+                    ];
+                    if let ModelKind::Lssvm { c } = cfg.model {
+                        args.push(lit_scalar11(c)?);
+                    }
+                    rt.exec(&step_art, &args)?
                 }
                 (Store::Weaved(ws), _) => {
                     // any-precision read: only p_epoch bit planes are
@@ -578,6 +640,22 @@ fn gather_into(a: &Matrix, rows: &[usize], out: &mut Matrix) {
     }
 }
 
+/// Fill fixed-size batch `bi` from a shuffled visit order, wrapping the
+/// final ragged batch around to the front of the permutation: every row of
+/// `order` is visited at least once per epoch (the wrapped rows twice).
+/// Fixed-shape artifact steps cannot take a short batch, so this is the
+/// artifact path's tail policy; the host paths run a genuinely short final
+/// batch instead. Requires `order.len() >= out.len()`.
+fn fill_wrapped_batch(order: &[usize], bi: usize, b: usize, out: &mut [usize]) {
+    debug_assert_eq!(out.len(), b);
+    debug_assert!(order.len() >= b);
+    let start = bi * b;
+    let end = (start + b).min(order.len());
+    let live = end - start;
+    out[..live].copy_from_slice(&order[start..end]);
+    out[live..].copy_from_slice(&order[..b - live]);
+}
+
 /// Number of per-epoch loss-evaluation batches: the requested count clamped
 /// to what the training split can fill. Errors instead of silently building
 /// zero batches — with `eval_nb == 0` the per-epoch loss would divide by
@@ -604,8 +682,11 @@ fn eval_batch_count(requested: usize, loss_batch: usize, k: usize) -> Result<usi
 // without AOT artifacts or a PJRT client. Shared by tests, benches, the
 // Hogwild! substrate, and examples/store_weaving.rs.
 //
-// Three batch kernels run the same epoch skeleton:
+// Four batch kernels run the same epoch skeleton:
 //   * train_store_host         — fused weaved-domain kernels (no f32 row)
+//   * train_store_host_ds      — fused *double-sampled* kernels: two
+//                                unbiased stochastic draws per row visit
+//                                (§2.2 host-native, DESIGN.md §5)
 //   * train_store_host_dequant — dequantize-row oracle over the store
 //   * train_packed_host        — dequantize-row oracle over PackedMatrix
 // The two oracle paths execute identical float ops, so their loss curves
@@ -629,7 +710,9 @@ pub struct HostTrainResult {
 /// Minibatch linreg SGD epoch skeleton. `step_batch(p, rows, x, grad)`
 /// accumulates the un-scaled minibatch gradient Σ err_i·a_i into `grad`;
 /// the skeleton owns shuffling, the lr schedule, the model update, and the
-/// per-epoch loss, so every host path shares them exactly.
+/// per-epoch loss, so every host path shares them exactly. Every training
+/// row is visited each epoch: when `k % batch != 0` the final batch is
+/// genuinely short and its update is scaled by its own row count.
 fn host_sgd_linreg(
     ds: &Dataset,
     epochs: usize,
@@ -641,13 +724,13 @@ fn host_sgd_linreg(
 ) -> (Vec<f64>, Vec<f32>, Vec<u32>) {
     let n = ds.n();
     let k = ds.k_train();
-    let nb = k / batch;
-    assert!(nb > 0, "dataset smaller than one batch");
+    assert!(k > 0, "empty training split");
+    let nb = k.div_ceil(batch);
     let mut rng = Rng::new(seed);
     let mut x = vec![0.0f32; n];
     let mut loss_curve = vec![ds.train_mse(&x)];
     let mut precisions = Vec::with_capacity(epochs);
-    let mut order: Vec<usize> = (0..nb * batch).collect();
+    let mut order: Vec<usize> = (0..k).collect();
     let mut grad = vec![0.0f32; n];
     for epoch in 0..epochs {
         let p = precision(epoch, &loss_curve);
@@ -655,9 +738,10 @@ fn host_sgd_linreg(
         let lr = super::lr_at_epoch(lr0, epoch);
         rng.shuffle(&mut order);
         for bi in 0..nb {
+            let rows = &order[bi * batch..((bi + 1) * batch).min(k)];
             grad.fill(0.0);
-            step_batch(p, &order[bi * batch..(bi + 1) * batch], &x, &mut grad);
-            crate::tensor::axpy(-lr / batch as f32, &grad, &mut x);
+            step_batch(p, rows, &x, &mut grad);
+            crate::tensor::axpy(-lr / rows.len() as f32, &grad, &mut x);
         }
         loss_curve.push(ds.train_mse(&x));
     }
@@ -696,10 +780,60 @@ pub fn train_store_host(
         |epoch, hist| sched.precision_for_epoch(epoch, hist),
         |p, rows, x, grad| {
             k.refresh(&m, x);
-            for (t, &r) in targets.iter_mut().zip(rows) {
+            let t = &mut targets[..rows.len()];
+            for (t, &r) in t.iter_mut().zip(rows) {
                 *t = ds.train_b[r];
             }
-            store.fused_grad_batch(rows, p, &k, &targets, grad);
+            store.fused_grad_batch(rows, p, &k, t, grad);
+        },
+    );
+    HostTrainResult {
+        loss_curve,
+        final_model,
+        sample_bytes_per_epoch: store.bytes_read() as f64 / epochs.max(1) as f64,
+        precisions,
+    }
+}
+
+/// Host-path **double-sampled** training over the weaved store: per step,
+/// `g = m⊙x` is refreshed once, then the minibatch gradient is computed
+/// from two independent unbiased p-plane draws per row
+/// ([`ShardedStore::ds_grad_batch`]) — the §2.2 estimator, host-native,
+/// straight from bit planes, from the single stored copy. Unbiased at any
+/// read precision where [`train_store_host`]'s truncating reads are not;
+/// bandwidth is the store's exact accounting, 2× the truncating path.
+/// Deterministic bit for bit in (seed, store contents).
+pub fn train_store_host_ds(
+    ds: &Dataset,
+    store: &ShardedStore,
+    schedule: PrecisionSchedule,
+    epochs: usize,
+    batch: usize,
+    lr0: f32,
+    seed: u64,
+) -> HostTrainResult {
+    assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
+    assert_eq!(store.cols(), ds.n(), "store/dataset col mismatch");
+    store.reset_bytes_read();
+    let mut sched = ScheduleState::new(schedule, store.bits());
+    let m = store.scale().m.clone();
+    let mut k = StepKernel::new(store.cols());
+    let mut targets = vec![0.0f32; batch];
+    let mut ds_rng = Rng::new_stream(seed, 0x4453); // "DS"
+    let (loss_curve, final_model, precisions) = host_sgd_linreg(
+        ds,
+        epochs,
+        batch,
+        lr0,
+        seed,
+        |epoch, hist| sched.precision_for_epoch(epoch, hist),
+        |p, rows, x, grad| {
+            k.refresh(&m, x);
+            let t = &mut targets[..rows.len()];
+            for (t, &r) in t.iter_mut().zip(rows) {
+                *t = ds.train_b[r];
+            }
+            store.ds_grad_batch(rows, p, &k, t, &mut ds_rng, grad);
         },
     );
     HostTrainResult {
@@ -778,14 +912,13 @@ pub fn train_packed_host(
             }
         },
     );
-    // rows actually read per epoch (tail partial batch dropped), so the
-    // figure is comparable with the weaved path's measured bytes
-    let rows_read = (packed.rows / batch) * batch;
+    // every row is read once per epoch (the final batch runs short), so
+    // the figure is comparable with the weaved path's measured bytes
     let bytes_per_row = packed.bytes() as f64 / packed.rows as f64;
     HostTrainResult {
         loss_curve,
         final_model,
-        sample_bytes_per_epoch: rows_read as f64 * bytes_per_row,
+        sample_bytes_per_epoch: packed.rows as f64 * bytes_per_row,
         precisions,
     }
 }
@@ -911,6 +1044,97 @@ mod tests {
         fn final_loss(&self) -> f64 {
             *self.loss_curve.last().unwrap()
         }
+    }
+
+    /// Regression for the ragged-tail drop: with k % batch != 0 the host
+    /// skeleton must visit every training row exactly once per epoch, in
+    /// one genuinely short final batch.
+    #[test]
+    fn host_skeleton_visits_ragged_tail() {
+        let ds = make_regression("host_tail", 70, 8, 6, 41);
+        let mut seen = vec![0u32; 70];
+        let mut batch_sizes = Vec::new();
+        host_sgd_linreg(
+            &ds,
+            1,
+            32,
+            0.0,
+            5,
+            |_, _| 1,
+            |_, rows, _, _| {
+                batch_sizes.push(rows.len());
+                for &r in rows {
+                    seen[r] += 1;
+                }
+            },
+        );
+        assert_eq!(batch_sizes, vec![32, 32, 6]);
+        assert!(seen.iter().all(|&c| c == 1), "rows missed or repeated: {seen:?}");
+    }
+
+    /// The artifact path's fixed-shape batches wrap the ragged tail around
+    /// to the front of the permutation: all rows covered, shapes constant.
+    #[test]
+    fn fill_wrapped_batch_covers_all_rows() {
+        let order: Vec<usize> = (0..70).rev().collect();
+        let b = 32;
+        let mut out = vec![0usize; b];
+        let mut seen = vec![0u32; 70];
+        for bi in 0..70usize.div_ceil(b) {
+            fill_wrapped_batch(&order, bi, b, &mut out);
+            assert_eq!(out.len(), b);
+            for &r in &out {
+                seen[r] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c >= 1), "a row was never visited");
+        // the wrapped rows are revisited: 3 batches × 32 = 96 slots, 70 rows
+        assert_eq!(seen.iter().sum::<u32>(), 96);
+        // exact-fit epochs have no duplicates
+        let order2: Vec<usize> = (0..64).collect();
+        let mut seen2 = vec![0u32; 64];
+        for bi in 0..2 {
+            fill_wrapped_batch(&order2, bi, b, &mut out);
+            for &r in &out {
+                seen2[r] += 1;
+            }
+        }
+        assert!(seen2.iter().all(|&c| c == 1));
+    }
+
+    /// Ragged-tail byte accounting over the store paths: with k % batch
+    /// != 0 every row is fetched once per epoch (truncation) and twice per
+    /// epoch (double sampling) — the DS path's bytes are *exactly* 2×.
+    #[test]
+    fn ragged_store_paths_account_every_row() {
+        let ds = make_regression("host_tail_store", 100, 16, 12, 43);
+        let (_, store) = packed_and_store(&ds, 8, 3, 19);
+        let tr = train_store_host(&ds, &store, PrecisionSchedule::Fixed(4), 3, 32, 0.05, 7);
+        assert_eq!(tr.sample_bytes_per_epoch, (100 * store.bytes_per_row(4)) as f64);
+        let dsr = train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(4), 3, 32, 0.05, 7);
+        assert_eq!(dsr.sample_bytes_per_epoch, 2.0 * tr.sample_bytes_per_epoch);
+    }
+
+    /// The DS host path is deterministic bit for bit and degenerates to
+    /// the truncating fused path at p = stored width (carry-free draws).
+    #[test]
+    fn ds_host_path_deterministic_and_exact_at_full_width() {
+        let ds = make_regression("host_ds", 256, 32, 16, 47);
+        let (_, store) = packed_and_store(&ds, 8, 4, 23);
+        let a = train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(8), 5, 32, 0.05, 7);
+        let b = train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(8), 5, 32, 0.05, 7);
+        assert_eq!(a.loss_curve, b.loss_curve);
+        assert_eq!(a.final_model, b.final_model);
+        // at p = bits both draws are the exact stored row, so the loss
+        // curve tracks the truncating fused path epoch for epoch
+        let t = train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 5, 32, 0.05, 7);
+        for (e, (u, v)) in a.loss_curve.iter().zip(&t.loss_curve).enumerate() {
+            assert!((u - v).abs() <= 2e-2 * (1.0 + u.abs()), "epoch {e}: ds {u} vs trunc {v}");
+        }
+        // distinct seeds draw distinct carries below full width
+        let c = train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(3), 5, 32, 0.05, 7);
+        let d = train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(3), 5, 32, 0.05, 8);
+        assert_ne!(c.final_model, d.final_model);
     }
 }
 

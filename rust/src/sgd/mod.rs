@@ -12,8 +12,8 @@ pub mod modes;
 pub mod refetch;
 
 pub use driver::{
-    train, train_packed_host, train_store_host, train_store_host_dequant, HostTrainResult,
-    StoreBackend, TrainConfig, TrainResult,
+    train, train_packed_host, train_store_host, train_store_host_dequant, train_store_host_ds,
+    HostTrainResult, StoreBackend, TrainConfig, TrainResult,
 };
 pub use modes::{Mode, ModelKind};
 

@@ -32,6 +32,34 @@
 //! property suite pins ≤ 1e-4). Exact bit-equality with the oracle is not
 //! possible — the two paths round in different summation orders — which is
 //! why `WeavedMatrix::dequantize_row_at` stays as the validation oracle.
+//!
+//! * **Stochastic (double-sampling) reads** — [`carry_mask_word`] turns the
+//!   *residual* planes (the b−p low planes a truncating reader discards)
+//!   into an exact per-column Bernoulli carry: column c gains one coarse
+//!   ulp with probability r_c / 2^(b−p), where r_c is its residual. The
+//!   augmented sample `(h_c + C_c)·2^(b−p)` is a fine-grid index with
+//!   expectation exactly the stored index (DESIGN.md §5), so a p-plane
+//!   stochastic read is *unbiased* for the stored value — the host-native
+//!   form of the paper's §2.2 sampling, serving both independent draws of
+//!   a double-sampled gradient from the single stored copy.
+//!   [`dot_row_ds`] and [`axpy_row_planes_ds`] fuse it: the carry mask
+//!   acts as one extra plane with weight 2^(b−p) under the *full-width*
+//!   dequant scale 2/s:
+//!
+//!   ```text
+//!   dot(dequant_ds(row), x)
+//!       = (2/s)·[Σ_{t<p} 2^(b−1−t)·maskedsum(plane_t, g)
+//!                + 2^(b−p)·maskedsum(carry, g)] − Σ_c g[c]
+//!   ```
+//!
+//!   RNG contract: every DS reader consumes carry randomness in the same
+//!   order — word 0..wpp, and per word the residual planes MSB→LSB with an
+//!   early stop once all 64 comparisons are decided — so fused and
+//!   materializing DS readers given equal RNG states draw identical
+//!   samples (property-tested), and any DS path is deterministic in
+//!   (seed, store contents, visit order).
+
+use crate::rng::Rng;
 
 use super::weave::WeavedMatrix;
 
@@ -163,6 +191,112 @@ pub fn dot_row(w: &WeavedMatrix, r: usize, p: u32, k: &StepKernel) -> f32 {
         acc += weight * psum;
     }
     (inv_s2 as f64 * acc - k.sum_g as f64) as f32
+}
+
+/// Draw the stochastic-carry mask for word-column `wi` of a row's planes:
+/// bit j of the result is 1 with probability r_j / 2^(bits−p), where r_j
+/// is the residual of column wi·64+j — the integer spelled by its low
+/// bits−p planes. Exact Bernoulli via a bit-sliced comparison of the
+/// residual against fresh uniform threshold bits, MSB first: 64 columns
+/// decide in ≤ bits−p bitwise steps, one `next_u64` each, stopping early
+/// once every lane's comparison is settled. At p == bits the mask is zero
+/// and no randomness is consumed. Tail bits beyond the live columns stay
+/// 0 (their residual planes store 0).
+#[inline]
+pub fn carry_mask_word(
+    planes: &[u64],
+    wpp: usize,
+    bits: u32,
+    p: u32,
+    wi: usize,
+    rng: &mut Rng,
+) -> u64 {
+    debug_assert!(p >= 1 && p <= bits);
+    let mut gt = 0u64;
+    let mut eq = !0u64;
+    for t in p as usize..bits as usize {
+        let r = planes[t * wpp + wi];
+        let thresh = rng.next_u64();
+        gt |= eq & r & !thresh;
+        eq &= !(r ^ thresh);
+        if eq == 0 {
+            break;
+        }
+    }
+    gt
+}
+
+/// Fused stochastic (double-sampling) dot product: one unbiased p-plane
+/// draw of row `r`, dotted with `x` straight from the bit planes. The
+/// draw's fine-grid index is `Σ_{t<p} 2^(b−1−t)·bit_t + 2^(b−p)·C`, so
+/// plane weights are the *fine-grid* ones and the carry mask enters as one
+/// extra plane; the affine term reuses `k.sum_g`. Each call consumes fresh
+/// carry randomness — two successive calls are the two independent draws
+/// of a §2.2 double-sampled gradient.
+pub fn dot_row_ds(w: &WeavedMatrix, r: usize, p: u32, k: &StepKernel, rng: &mut Rng) -> f32 {
+    assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
+    assert_eq!(k.g.len(), w.cols, "StepKernel built for {} cols, store has {}", k.g.len(), w.cols);
+    let planes = w.row_planes(r);
+    let wpp = w.words_per_plane();
+    let bits = w.bits as usize;
+    let inv_s2 = 2.0 / w.s as f32;
+    let carry_w = (1u64 << (bits - p as usize)) as f64;
+    let mut acc = 0.0f64;
+    for wi in 0..wpp {
+        let g = &k.g[wi * 64..];
+        for t in 0..p as usize {
+            let word = planes[t * wpp + wi];
+            if word != 0 {
+                acc += (1u64 << (bits - 1 - t)) as f64 * masked_sum(word, g) as f64;
+            }
+        }
+        let carry = carry_mask_word(planes, wpp, w.bits, p, wi, rng);
+        if carry != 0 {
+            acc += carry_w * masked_sum(carry, g) as f64;
+        }
+    }
+    (inv_s2 as f64 * acc - k.sum_g as f64) as f32
+}
+
+/// Plane + carry part of the stochastic axpy: draw one unbiased p-plane
+/// sample of row `r` and add `coef · dequant_ds(row)[c]` into `out`,
+/// *without* the shared affine term — callers batching rows defer
+/// `−(Σ coef)·m` to one [`axpy_affine`] pass, exactly like
+/// [`axpy_row_planes`]. Consumes carry randomness in the shared DS order.
+pub fn axpy_row_planes_ds(
+    w: &WeavedMatrix,
+    r: usize,
+    p: u32,
+    coef: f32,
+    rng: &mut Rng,
+    out: &mut [f32],
+) {
+    assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
+    debug_assert_eq!(out.len(), w.cols);
+    let planes = w.row_planes(r);
+    let wpp = w.words_per_plane();
+    let bits = w.bits as usize;
+    let m = &w.scale.m;
+    let inv_s2 = 2.0 / w.s as f32;
+    let carry_wgt = coef * inv_s2 * (1u64 << (bits - p as usize)) as f32;
+    for wi in 0..wpp {
+        let c0 = wi * 64;
+        for t in 0..p as usize {
+            let wgt = coef * inv_s2 * (1u64 << (bits - 1 - t)) as f32;
+            let mut word = planes[t * wpp + wi];
+            while word != 0 {
+                let j = c0 + word.trailing_zeros() as usize;
+                out[j] += wgt * m[j];
+                word &= word - 1;
+            }
+        }
+        let mut carry = carry_mask_word(planes, wpp, w.bits, p, wi, rng);
+        while carry != 0 {
+            let j = c0 + carry.trailing_zeros() as usize;
+            out[j] += carry_wgt * m[j];
+            carry &= carry - 1;
+        }
+    }
 }
 
 /// Plane part of the fused axpy: for every set bit of the p planes of row
@@ -335,6 +469,125 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The carry mask is exactly Bernoulli(residual / 2^(b−p)): degenerate
+    /// residuals are deterministic, generic ones match their probability
+    /// statistically, and p == bits consumes no randomness.
+    #[test]
+    fn carry_mask_distribution() {
+        let (bits, cols) = (8u32, 64usize);
+        // residual of column j is j itself at p = 2 (residual width 6)
+        let idx: Vec<u16> = (0..cols as u16).collect();
+        let w = WeavedMatrix::from_indices(
+            1,
+            cols,
+            bits,
+            255,
+            ColumnScale { m: vec![1.0; cols] },
+            &idx,
+        );
+        let planes = w.row_planes(0);
+        let p = 2u32;
+        let q = 1u64 << (bits - p); // 64
+        let trials = 40_000;
+        let mut counts = [0u32; 64];
+        let mut rng = Rng::new(5);
+        for _ in 0..trials {
+            let mask = carry_mask_word(planes, w.words_per_plane(), bits, p, 0, &mut rng);
+            for (j, c) in counts.iter_mut().enumerate() {
+                *c += ((mask >> j) & 1) as u32;
+            }
+        }
+        // residual 0 never carries; residual j carries w.p. j/64
+        assert_eq!(counts[0], 0);
+        for (j, &c) in counts.iter().enumerate() {
+            let want = j as f64 / q as f64;
+            let got = c as f64 / trials as f64;
+            let tol = 5.0 * (want * (1.0 - want) / trials as f64).sqrt() + 1e-9;
+            assert!((got - want).abs() <= tol, "col {j}: p̂ {got} vs {want} (tol {tol})");
+        }
+        // p == bits: no residual planes, mask identically zero, rng intact
+        let mut a = Rng::new(9);
+        let before = a.clone().next_u64();
+        assert_eq!(carry_mask_word(planes, w.words_per_plane(), bits, bits, 0, &mut a), 0);
+        assert_eq!(a.next_u64(), before, "full-width mask consumed randomness");
+    }
+
+    /// Fused DS kernels and the materializing DS oracle consume carry
+    /// randomness in the same order: equal RNG states draw the same
+    /// sample, so fused dot/axpy match dequantize_row_ds within tolerance.
+    #[test]
+    fn fused_ds_matches_dequant_ds_oracle_same_seed() {
+        for &cols in &[63usize, 64, 65, 130] {
+            for bits in [2u32, 5, 8, 12, 16] {
+                let (_, w) = mk(5, cols, bits, 77 + bits as u64);
+                let mut rng = Rng::new(3 + cols as u64);
+                let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+                let mut k = StepKernel::new(cols);
+                k.refresh(&w.scale.m, &x);
+                let mut row = vec![0.0f32; cols];
+                for p in [1u32, bits / 2 + 1, bits] {
+                    for r in 0..5 {
+                        let seed = 1000 + (p as u64) * 31 + r as u64;
+                        let got = dot_row_ds(&w, r, p, &k, &mut Rng::new(seed)) as f64;
+                        w.dequantize_row_ds(r, p, &mut Rng::new(seed), &mut row);
+                        let want = dot(&row, &x) as f64;
+                        let scale: f64 =
+                            row.iter().zip(&x).map(|(&a, &b)| (a as f64 * b as f64).abs()).sum();
+                        assert!(
+                            rel_err(got, want, scale) < 1e-4,
+                            "dot cols={cols} bits={bits} p={p} r={r}: {got} vs {want}"
+                        );
+                        // axpy against the same draw
+                        let mut gf = vec![0.0f32; cols];
+                        axpy_row_planes_ds(&w, r, p, 0.7, &mut Rng::new(seed), &mut gf);
+                        axpy_affine(0.7, &w.scale.m, &mut gf);
+                        for c in 0..cols {
+                            let want = 0.7 * row[c];
+                            assert!(
+                                rel_err(gf[c] as f64, want as f64, want.abs() as f64) < 1e-4,
+                                "axpy cols={cols} bits={bits} p={p} r={r} c={c}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// At p = stored width the DS draw is carry-free: dot_row_ds equals
+    /// the truncating dot_row (same sample, different summation order).
+    #[test]
+    fn ds_dot_degenerates_to_truncation_at_full_width() {
+        let (_, w) = mk(6, 100, 9, 13);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..100).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(100);
+        k.refresh(&w.scale.m, &x);
+        for r in 0..6 {
+            let ds = dot_row_ds(&w, r, 9, &k, &mut rng) as f64;
+            let tr = dot_row(&w, r, 9, &k) as f64;
+            assert!(rel_err(ds, tr, tr.abs()) < 1e-4, "r={r}: {ds} vs {tr}");
+        }
+    }
+
+    /// Zero-scale columns stay inert through the stochastic kernels too.
+    #[test]
+    fn ds_kernels_zero_scale_inert() {
+        let (_, w) = mk(4, 10, 8, 21);
+        assert_eq!(w.scale.m[1], 0.0);
+        let x = vec![1.0f32; 10];
+        let mut k = StepKernel::new(10);
+        k.refresh(&w.scale.m, &x);
+        let mut rng = Rng::new(6);
+        let mut grad = vec![0.0f32; 10];
+        for r in 0..4 {
+            let _ = dot_row_ds(&w, r, 3, &k, &mut rng);
+            axpy_row_planes_ds(&w, r, 3, 1.5, &mut rng, &mut grad);
+            axpy_affine(1.5, &w.scale.m, &mut grad);
+        }
+        assert_eq!(grad[1], 0.0);
     }
 
     /// Deterministic: identical inputs give bit-identical fused results.

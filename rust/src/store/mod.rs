@@ -20,12 +20,18 @@
 //! * [`kernel`] — word-parallel fused kernels computing dot products and
 //!   gradient accumulations *in the weaved domain* (no f32 row
 //!   materialization); [`StepKernel`] holds the per-step `g = m ⊙ x`
-//!   precompute.
+//!   precompute. Reads come in two flavors: deterministic top-p
+//!   *truncation* (biased below the stored width) and *stochastic* draws
+//!   whose Bernoulli carry is sourced from the residual planes — exactly
+//!   unbiased for the stored value at any p, serving both independent
+//!   draws of the paper's §2.2 double-sampled gradient from the single
+//!   stored copy (DESIGN.md §5).
 //!
 //! Consumers: `sgd::driver` (store-backed training path, selectable via
-//! `TrainConfig::store`; the host twins run the fused path), `fpga::pipeline`
-//! (epoch seconds from store-derived bytes), `fpga::hogwild` (lock-free
-//! multi-threaded fused shard reads).
+//! `TrainConfig::store`; the host twins run the fused truncating and
+//! double-sampling paths), `fpga::pipeline` (epoch seconds from
+//! store-derived bytes), `fpga::hogwild` (lock-free multi-threaded fused
+//! shard reads, truncating and double-sampled).
 
 pub mod kernel;
 pub mod precision_schedule;

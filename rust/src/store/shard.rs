@@ -174,6 +174,16 @@ impl ShardedStore {
         bytes
     }
 
+    /// Dequantize one stochastic (unbiased) p-plane draw of global row `r`
+    /// ([`WeavedMatrix::dequantize_row_ds`]); counts the draw's wire bytes
+    /// — the same p plane spans a truncating read moves, see DESIGN.md §5.
+    pub fn dequantize_row_ds(&self, r: usize, p: u32, rng: &mut Rng, out: &mut [f32]) -> usize {
+        let (shard, local) = self.locate(r);
+        let bytes = shard.dequantize_row_ds(local, p, rng, out);
+        self.bytes_read.fetch_add(bytes as u64, Ordering::Relaxed);
+        bytes
+    }
+
     /// Route global row `r` to `(shard, local row)` for direct fused-kernel
     /// access ([`super::kernel`]). Does NOT count bytes — compose with
     /// [`ShardedStore::note_bytes_read`] so each row visit is accounted
@@ -197,9 +207,33 @@ impl ShardedStore {
         kernel::dot_row(shard, local, p, k)
     }
 
-    /// One fused minibatch gradient pass, batched per shard visit: rows are
-    /// grouped by shard (each shard is visited once, its rows processed
-    /// back to back), and for each row
+    /// Visit `rows` grouped by shard — each shard visited once, its rows
+    /// processed back to back, in a deterministic order (the unstable sort
+    /// has a fixed algorithm and no randomness). Typical minibatches fit
+    /// the stack scratch, so the hot loop allocates nothing. `f` receives
+    /// `(position in rows, shard, local row)`. Shared grouping scaffold of
+    /// the truncating and double-sampled batch kernels.
+    fn for_rows_by_shard(&self, rows: &[usize], mut f: impl FnMut(usize, &WeavedMatrix, usize)) {
+        let mut stack = [0u32; 256];
+        let mut heap: Vec<u32>;
+        let order: &mut [u32] = if rows.len() <= 256 {
+            &mut stack[..rows.len()]
+        } else {
+            heap = vec![0u32; rows.len()];
+            &mut heap
+        };
+        for (i, o) in order.iter_mut().enumerate() {
+            *o = i as u32;
+        }
+        order.sort_unstable_by_key(|&i| rows[i as usize] / self.shard_rows);
+        for &i in order.iter() {
+            let (shard, local) = self.locate(rows[i as usize]);
+            f(i as usize, shard, local);
+        }
+    }
+
+    /// One fused minibatch gradient pass, batched per shard visit
+    /// ([`ShardedStore::for_rows_by_shard`]): for each row
     ///
     /// ```text
     /// err_i = dot(dequant_p(row_i), x) − targets[i]
@@ -222,31 +256,53 @@ impl ShardedStore {
         grad: &mut [f32],
     ) -> usize {
         assert_eq!(rows.len(), targets.len(), "one target per row");
-        // Group rows by shard: one shard visit each. Typical minibatches
-        // fit the stack scratch, so the hot loop allocates nothing; the
-        // unstable sort is deterministic (fixed algorithm, no randomness),
-        // which is all the equivalence/determinism guarantees need.
-        let mut stack = [0u32; 256];
-        let mut heap: Vec<u32>;
-        let order: &mut [u32] = if rows.len() <= 256 {
-            &mut stack[..rows.len()]
-        } else {
-            heap = vec![0u32; rows.len()];
-            &mut heap
-        };
-        for (i, o) in order.iter_mut().enumerate() {
-            *o = i as u32;
-        }
-        order.sort_unstable_by_key(|&i| rows[i as usize] / self.shard_rows);
         let mut err_sum = 0.0f32;
-        for &i in order.iter() {
-            let (shard, local) = self.locate(rows[i as usize]);
-            let err = kernel::dot_row(shard, local, p, k) - targets[i as usize];
+        self.for_rows_by_shard(rows, |i, shard, local| {
+            let err = kernel::dot_row(shard, local, p, k) - targets[i];
             kernel::axpy_row_planes(shard, local, p, err, grad);
             err_sum += err;
-        }
+        });
         kernel::axpy_affine(err_sum, &self.scale().m, grad);
         let bytes = rows.len() * self.bytes_per_row(p);
+        self.note_bytes_read(bytes);
+        bytes
+    }
+
+    /// One *double-sampled* fused minibatch gradient pass (§2.2), batched
+    /// per shard visit like [`ShardedStore::fused_grad_batch`]: for each
+    /// row, two independent unbiased p-plane draws are taken straight from
+    /// the bit planes — draw one feeds the residual
+    ///
+    /// ```text
+    /// err_i = dot(draw1_i, x) − targets[i]
+    /// grad += err_i · draw2_i
+    /// ```
+    ///
+    /// and draw two the accumulation, so E[grad] is the gradient on the
+    /// stored full-width values at *any* read precision — the unbiased
+    /// estimator naive truncation is not. The shared affine term
+    /// −(Σ err_i)·m is applied once per batch. Byte accounting: both
+    /// fetches count, 2·p plane spans per row visit — exactly 2× the
+    /// truncating path (DESIGN.md §5). Deterministic in (rng state, store
+    /// contents, batch order). Returns the bytes counted.
+    pub fn ds_grad_batch(
+        &self,
+        rows: &[usize],
+        p: u32,
+        k: &StepKernel,
+        targets: &[f32],
+        rng: &mut Rng,
+        grad: &mut [f32],
+    ) -> usize {
+        assert_eq!(rows.len(), targets.len(), "one target per row");
+        let mut err_sum = 0.0f32;
+        self.for_rows_by_shard(rows, |i, shard, local| {
+            let err = kernel::dot_row_ds(shard, local, p, k, rng) - targets[i];
+            kernel::axpy_row_planes_ds(shard, local, p, err, rng, grad);
+            err_sum += err;
+        });
+        kernel::axpy_affine(err_sum, &self.scale().m, grad);
+        let bytes = 2 * rows.len() * self.bytes_per_row(p);
         self.note_bytes_read(bytes);
         bytes
     }
@@ -312,7 +368,9 @@ fn shard_rows_for(rows: usize, num_shards: usize) -> usize {
 /// All workers sharing (rows, batch, seed) see the same shuffled order;
 /// [`MinibatchIter::strided`] gives worker w batches w, w+W, w+2W, … so W
 /// workers partition the epoch exactly, without coordination. The tail
-/// partial batch is dropped (matching the SGD driver's `k / b` batches).
+/// partial batch is dropped — full batches keep the worker partition
+/// coordination-free; the single-threaded SGD drivers visit the ragged
+/// tail themselves (see `sgd::driver::host_sgd_linreg`).
 pub struct MinibatchIter {
     order: Vec<u32>,
     batch: usize,
@@ -480,6 +538,52 @@ mod tests {
                     grad[c]
                 );
             }
+        }
+    }
+
+    /// ds_grad_batch: counts exactly 2× the truncating batch's bytes, is
+    /// deterministic in the rng state, and at p = stored width reproduces
+    /// the truncating fused batch (carry-free draws) within tolerance.
+    #[test]
+    fn ds_grad_batch_accounting_and_full_width_degeneration() {
+        let (a, sc) = mk(96, 70, 26);
+        let store = ShardedStore::ingest(&a, &sc, 8, 13, 5, 1);
+        let mut rng = crate::rng::Rng::new(9);
+        let x: Vec<f32> = (0..70).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(70);
+        k.refresh(&sc.m, &x);
+        let rows: Vec<usize> = vec![95, 3, 40, 41, 0, 77, 12, 63];
+        let targets: Vec<f32> = rows.iter().map(|&r| r as f32 * 0.1).collect();
+        for p in [2u32, 8] {
+            store.reset_bytes_read();
+            let mut g1 = vec![0.0f32; 70];
+            let bytes =
+                store.ds_grad_batch(&rows, p, &k, &targets, &mut crate::rng::Rng::new(4), &mut g1);
+            assert_eq!(bytes, 2 * rows.len() * store.bytes_per_row(p), "both draws count");
+            assert_eq!(store.bytes_read(), bytes as u64);
+            // deterministic: same rng state, bit-identical gradient
+            let mut g2 = vec![0.0f32; 70];
+            store.ds_grad_batch(&rows, p, &k, &targets, &mut crate::rng::Rng::new(4), &mut g2);
+            assert_eq!(g1, g2);
+            // different stream, different draws below full width
+            let mut g3 = vec![0.0f32; 70];
+            store.ds_grad_batch(&rows, p, &k, &targets, &mut crate::rng::Rng::new(5), &mut g3);
+            if p < 8 {
+                assert_ne!(g1, g3, "p={p}: carry draws ignored the rng");
+            }
+        }
+        // full width: equals the truncating fused batch within tolerance
+        let mut gds = vec![0.0f32; 70];
+        let mut gtr = vec![0.0f32; 70];
+        store.ds_grad_batch(&rows, 8, &k, &targets, &mut crate::rng::Rng::new(4), &mut gds);
+        store.fused_grad_batch(&rows, 8, &k, &targets, &mut gtr);
+        for c in 0..70 {
+            assert!(
+                (gds[c] - gtr[c]).abs() <= 1e-3 * (1.0 + gtr[c].abs()),
+                "c={c}: ds {} vs trunc {}",
+                gds[c],
+                gtr[c]
+            );
         }
     }
 

@@ -168,6 +168,64 @@ impl WeavedMatrix {
         self.bytes_per_row(p)
     }
 
+    /// Stochastic (double-sampling) read of row `r` at precision `p`:
+    /// `out[c]` gets the *augmented coarse* sample `h + C ∈ 0..=2^p`, where
+    /// `h` is the top-p truncation and `C` is a Bernoulli carry with
+    /// probability `residual / 2^(bits−p)` drawn from the discarded low
+    /// planes ([`super::kernel::carry_mask_word`]). The sample dequantizes
+    /// on the *fine* grid as `(h+C)·2^(bits−p)`, whose expectation is
+    /// exactly the stored index — an unbiased any-precision read from the
+    /// single stored copy (DESIGN.md §5). At p = bits the carry is zero
+    /// and the read degenerates to the exact full-width read. Returns the
+    /// wire bytes of the draw: the p plane spans a truncating read of this
+    /// row would move (see DESIGN.md §5 on the accounting boundary).
+    pub fn read_row_ds(&self, r: usize, p: u32, rng: &mut Rng, out: &mut [u16]) -> usize {
+        assert!(p >= 1 && p <= self.bits, "precision {p} outside 1..={}", self.bits);
+        let wpp = self.words_per_plane;
+        let stride = self.bits as usize * wpp;
+        let base = r * stride;
+        let planes = &self.data[base..base + stride];
+        for (w, chunk) in out[..self.cols].chunks_mut(64).enumerate() {
+            self.gather_word(base, w, p, chunk);
+            let mut carry = super::kernel::carry_mask_word(planes, wpp, self.bits, p, w, rng);
+            while carry != 0 {
+                let j = carry.trailing_zeros() as usize;
+                // tail carry bits can't exist: residual planes store 0 there
+                chunk[j] += 1;
+                carry &= carry - 1;
+            }
+        }
+        self.bytes_per_row(p)
+    }
+
+    /// Dequantize one stochastic p-plane draw of row `r` onto the stored
+    /// (full-width) grid: `out[c] = ((h+C)·2^(bits−p) · 2/s − 1) · m[c]`.
+    /// Unbiased for [`WeavedMatrix::dequantize_row_at`] at p = bits — the
+    /// materializing oracle of the fused DS kernels, consuming carry
+    /// randomness in the same order. Returns the wire bytes of the draw.
+    pub fn dequantize_row_ds(&self, r: usize, p: u32, rng: &mut Rng, out: &mut [f32]) -> usize {
+        assert!(p >= 1 && p <= self.bits, "precision {p} outside 1..={}", self.bits);
+        let wpp = self.words_per_plane;
+        let stride = self.bits as usize * wpp;
+        let base = r * stride;
+        let planes = &self.data[base..base + stride];
+        let q = (1u32 << (self.bits - p)) as f32;
+        let inv_s2 = 2.0 / self.s as f32;
+        let m = &self.scale.m;
+        let mut idx = [0u16; 64];
+        for w in 0..wpp {
+            let c0 = w * 64;
+            let lim = (self.cols - c0).min(64);
+            self.gather_word(base, w, p, &mut idx[..lim]);
+            let carry = super::kernel::carry_mask_word(planes, wpp, self.bits, p, w, rng);
+            for (j, &h) in idx[..lim].iter().enumerate() {
+                let fine = (h as f32 + ((carry >> j) & 1) as f32) * q;
+                out[c0 + j] = (fine * inv_s2 - 1.0) * m[c0 + j];
+            }
+        }
+        self.bytes_per_row(p)
+    }
+
     /// Single-element read at precision `p` (diagnostics/tests).
     pub fn index_at(&self, r: usize, c: usize, p: u32) -> u16 {
         assert!(p >= 1 && p <= self.bits);
@@ -296,6 +354,90 @@ mod tests {
                     assert!((q - v).abs() <= width + 1e-4, "p={p} q={q} v={v} width={width}");
                 }
             }
+        }
+    }
+
+    /// Stochastic reads: every draw is the truncation or one coarse ulp
+    /// above it, the dequantized draw brackets the stored value within one
+    /// coarse interval, and p = bits degenerates to the exact read without
+    /// consuming randomness.
+    #[test]
+    fn ds_read_brackets_stored_value() {
+        let (a, sc) = mk(10, 70, 13);
+        let mut rng = Rng::new(14);
+        let packed = PackedMatrix::quantize(&a, &sc, 8, &mut rng);
+        let w = WeavedMatrix::from_packed(&packed);
+        let mut idx = vec![0u16; 70];
+        let mut val = vec![0.0f32; 70];
+        let mut stored = vec![0.0f32; 70];
+        for p in 1..=8u32 {
+            let q = 1u32 << (8 - p);
+            for r in 0..10 {
+                let bytes = w.read_row_ds(r, p, &mut rng, &mut idx);
+                assert_eq!(bytes, w.bytes_per_row(p), "wire bytes = p plane spans");
+                w.dequantize_row_ds(r, p, &mut rng, &mut val);
+                w.dequantize_row_at(r, 8, &mut stored);
+                for c in 0..70 {
+                    let h = packed.index(r, c) >> (8 - p);
+                    assert!(
+                        idx[c] == h || idx[c] == h + 1,
+                        "p={p} r={r} c={c}: draw {} vs truncation {h}",
+                        idx[c]
+                    );
+                    // residual 0 never carries
+                    if packed.index(r, c) % q as u16 == 0 {
+                        assert_eq!(idx[c], h, "carry on zero residual");
+                    }
+                    // one coarse interval brackets the stored value
+                    let coarse = q as f32 * 2.0 * sc.m[c] / w.s as f32;
+                    assert!(
+                        (val[c] - stored[c]).abs() <= coarse + 1e-5,
+                        "p={p} r={r} c={c}: {} vs stored {}",
+                        val[c],
+                        stored[c]
+                    );
+                }
+            }
+        }
+        // p = bits: exact, bit-identical to the deterministic read
+        let mut exact = vec![0.0f32; 70];
+        for r in 0..10 {
+            w.dequantize_row_ds(r, 8, &mut rng, &mut val);
+            w.dequantize_row_at(r, 8, &mut exact);
+            assert_eq!(val, exact, "row {r}");
+        }
+    }
+
+    /// The mean stochastic draw converges to the stored value (the §2.2
+    /// unbiasedness this layer must provide; the full CLT-budgeted harness
+    /// lives in tests/ds_statistics.rs).
+    #[test]
+    fn ds_read_unbiased_smoke() {
+        let (a, sc) = mk(2, 20, 15);
+        let mut rng = Rng::new(16);
+        let w = WeavedMatrix::quantize(&a, &sc, 8, &mut rng);
+        let p = 3u32;
+        let n = 4000;
+        let mut val = vec![0.0f32; 20];
+        let mut acc = vec![0.0f64; 20];
+        let mut stored = vec![0.0f32; 20];
+        for _ in 0..n {
+            w.dequantize_row_ds(0, p, &mut rng, &mut val);
+            for (a, &v) in acc.iter_mut().zip(&val) {
+                *a += v as f64;
+            }
+        }
+        w.dequantize_row_at(0, 8, &mut stored);
+        let q = (1u32 << (8 - p)) as f64;
+        for c in 0..20 {
+            let mean = acc[c] / n as f64;
+            let coarse = q * 2.0 * sc.m[c] as f64 / w.s as f64;
+            let tol = 5.0 * (coarse / 2.0) / (n as f64).sqrt() + 1e-6;
+            assert!(
+                (mean - stored[c] as f64).abs() <= tol,
+                "c={c}: mean {mean} vs stored {} (tol {tol})",
+                stored[c]
+            );
         }
     }
 

@@ -428,6 +428,106 @@ fn prop_fused_grad_batch_consistent() {
     });
 }
 
+/// Stochastic (double-sampling) reads: every draw is the truncation plus
+/// an at-most-one-ulp carry on the coarse grid, p = stored width is exact,
+/// and the fused DS kernels given the same RNG state reproduce the
+/// materializing dequantize_row_ds oracle — the DS tentpole's correctness
+/// pin, over random widths and word-boundary-ragged shapes.
+#[test]
+fn prop_ds_draws_bracket_and_fused_matches_oracle() {
+    Prop::new(48).check("ds-draws", |rng| {
+        let rows = 1 + small_size(rng, 10);
+        let cols = match rng.below(6) {
+            0 => 63,
+            1 => 64,
+            2 => 65,
+            3 => 130,
+            _ => small_size(rng, 150),
+        };
+        let bits = 1 + rng.below(16) as u32;
+        let a = rand_matrix(rng, rows, cols, 1.0 + rng.f32() * 3.0);
+        let sc = ColumnScale::from_data(&a);
+        let packed = PackedMatrix::quantize(&a, &sc, bits, rng);
+        let w = WeavedMatrix::from_packed(&packed);
+        let p = 1 + rng.below(bits as usize) as u32;
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(cols);
+        k.refresh(&sc.m, &x);
+        let mut idx = vec![0u16; cols];
+        let mut row = vec![0.0f32; cols];
+        for r in 0..rows {
+            let seed = rng.next_u64();
+            let bytes = w.read_row_ds(r, p, &mut Rng::new(seed), &mut idx);
+            if bytes != p as usize * cols.div_ceil(64) * 8 {
+                return Err(format!("ds wire bytes {bytes} != p plane spans"));
+            }
+            for (c, &got) in idx.iter().enumerate() {
+                // compare in u32: h + 1 can hit 2^16 at full width
+                let h = (packed.index(r, c) >> (bits - p)) as u32;
+                if (got as u32) != h && (got as u32) != h + 1 {
+                    return Err(format!("bits={bits} p={p} ({r},{c}): draw {got} vs trunc {h}"));
+                }
+                if p == bits && got as u32 != h {
+                    return Err(format!("full-width draw carried at ({r},{c})"));
+                }
+            }
+            // same seed: materializing oracle and fused dot share the draw
+            w.dequantize_row_ds(r, p, &mut Rng::new(seed), &mut row);
+            for (c, (&v, &i)) in row.iter().zip(&idx).enumerate() {
+                let fine = i as f32 * (1u32 << (bits - p)) as f32;
+                let want = (fine * 2.0 / w.s as f32 - 1.0) * sc.m[c];
+                if (v - want).abs() > 1e-5 * (1.0 + want.abs()) {
+                    return Err(format!("read/dequant draw mismatch at ({r},{c})"));
+                }
+            }
+            let got = kernel::dot_row_ds(&w, r, p, &k, &mut Rng::new(seed)) as f64;
+            let want = zipml::tensor::dot(&row, &x) as f64;
+            let scale: f64 = row.iter().zip(&x).map(|(&u, &v)| (u as f64 * v as f64).abs()).sum();
+            if (got - want).abs() > 1e-4 * (1.0 + want.abs() + scale) {
+                return Err(format!("fused ds dot bits={bits} p={p} r={r}: {got} vs {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The double-sampled batch gradient accounts exactly 2× rows ×
+/// bytes_per_row(p) — both independent fetches — and is deterministic in
+/// the RNG state.
+#[test]
+fn prop_ds_grad_batch_accounting() {
+    Prop::new(24).check("ds-batch", |rng| {
+        let rows = 9 + small_size(rng, 80);
+        let cols = small_size(rng, 100);
+        let bits = 1 + rng.below(8) as u32;
+        let a = rand_matrix(rng, rows, cols, 2.0);
+        let sc = ColumnScale::from_data(&a);
+        let store = ShardedStore::ingest(&a, &sc, bits, rng.next_u64(), 1 + rng.below(6), 1);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(cols);
+        k.refresh(&sc.m, &x);
+        let p = 1 + rng.below(bits as usize) as u32;
+        let batch: Vec<usize> = (0..8).map(|_| rng.below(rows)).collect();
+        let targets: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        let seed = rng.next_u64();
+        store.reset_bytes_read();
+        let mut g1 = vec![0.0f32; cols];
+        let bytes = store.ds_grad_batch(&batch, p, &k, &targets, &mut Rng::new(seed), &mut g1);
+        if bytes != 2 * batch.len() * store.bytes_per_row(p) {
+            return Err(format!("bytes {bytes} != 2 × rows × bytes_per_row"));
+        }
+        if store.bytes_read() != bytes as u64 {
+            return Err("counter disagrees with returned bytes".into());
+        }
+        let mut g2 = vec![0.0f32; cols];
+        store.ds_grad_batch(&batch, p, &k, &targets, &mut Rng::new(seed), &mut g2);
+        if g1 != g2 {
+            return Err("ds_grad_batch not deterministic in the rng state".into());
+        }
+        Ok(())
+    });
+}
+
 /// Sharded routing is transparent: any shard count reproduces the
 /// unsharded weaved reads, and the byte accounting matches epoch_bytes.
 #[test]
