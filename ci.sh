@@ -3,10 +3,36 @@
 # (cargo build --release && cargo test -q), then artifact-free end-to-end
 # smoke runs: the weaved-store example (truncating + double-sampled host
 # paths) and the fused-dot bench in --quick mode, whose assertions pin the
-# double-sampling byte accounting to exactly 2x the truncating path.
+# blocked/per-row byte accounting equality and DS bytes == 2x truncation
+# (the perf-ratio acceptance asserts — blocked >= 2x per-row, popcount
+# beating f32 at q <= 4 — enforce only at full budgets, i.e. under
+# `ci.sh --bench`; quick smoke runs warn instead of failing on noisy
+# shared runners) — and which writes the machine-readable perf trajectory
+# BENCH_kernels.json at the repo root (uploaded as a CI artifact).
+#
+# Usage: ci.sh [--quick|--bench]
+#   (default) full gate; the bench smoke runs with --quick budgets
+#   --quick   alias for the default gate (kept for muscle memory)
+#   --bench   build + run the fused-dot bench at FULL measurement budgets,
+#             refreshing BENCH_kernels.json with trajectory-quality numbers
 # Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")"
+
+MODE="${1:-gate}"
+case "$MODE" in
+  gate|--quick|--bench) ;;
+  *) echo "usage: ci.sh [--quick|--bench]  (got: $MODE)" >&2; exit 2 ;;
+esac
+
+if [[ "$MODE" == "--bench" ]]; then
+  echo "== cargo build --release =="
+  cargo build --release
+  echo "== bench: fused_dot (full budgets, writes BENCH_kernels.json) =="
+  cargo bench --bench fused_dot
+  echo "BENCH OK — trajectory in BENCH_kernels.json"
+  exit 0
+fi
 
 echo "== cargo fmt --check =="
 cargo fmt --all --check
@@ -21,7 +47,7 @@ cargo test -q
 echo "== example smoke: store_weaving (fused + DS host paths, no artifacts) =="
 cargo run --release --example store_weaving > /dev/null
 
-echo "== bench smoke: fused_dot --quick (asserts DS bytes == 2x truncation) =="
+echo "== bench smoke: fused_dot --quick (blocked/popcount/accounting asserts; writes BENCH_kernels.json) =="
 cargo bench --bench fused_dot -- --quick > /dev/null
 
 echo "CI OK"

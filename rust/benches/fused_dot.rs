@@ -1,55 +1,135 @@
-//! Acceptance bench for the weaved-domain fused kernels: on a 64-dim,
-//! 100k-row, 8-bit store, fused `dot_row` must beat dequantize-row-then-dot
-//! at p ≤ 8, with byte accounting identical to the row-read path.
+//! Acceptance + trajectory bench for the weaved-domain fused kernels on
+//! the 100k-row × 64-col workload (stored at 16 bits so the p sweep spans
+//! 1..=16). Sections:
+//!
+//!   * dot: dequantize-row oracle vs per-row fused vs blocked fused
+//!   * grad batch: per-row fused vs blocked (ASSERT: blocked ≥ 2× per-row
+//!     at p = 8 — at full budgets; --quick warns instead of failing)
+//!   * popcount fast path: dot_row_q vs the f32 masked-sum dot (ASSERT:
+//!     popcount wins at q ≤ 4 — full budgets; --quick warns)
+//!   * sparse/dense crossover: per-popcount timings of both masked_sum
+//!     and spread_word paths — the data behind SPARSE_BITS /
+//!     MASKED_SUM_SPARSE_BITS
+//!   * byte accounting: blocked == per-row == row-read path; DS == 2×
+//!
+//! Every section is also recorded machine-readably in
+//! `BENCH_kernels.json` (repo root; env `ZIPML_BENCH_JSON` overrides) —
+//! the repo's persistent perf trajectory, uploaded as a CI artifact.
 //! Run: cargo bench --bench fused_dot [-- --quick]
 
-use zipml::bench::{bench, black_box, section, BenchOpts};
+use zipml::bench::{bench, black_box, section, BenchJson, BenchOpts};
 use zipml::quant::ColumnScale;
 use zipml::rng::Rng;
-use zipml::store::{kernel, ShardedStore, StepKernel};
+use zipml::store::{kernel, QuantStepKernel, ShardedStore, StepKernel};
 use zipml::tensor::{dot, Matrix};
+
+/// The pre-blocking per-row fused gradient batch (dot_row + bit-walk
+/// axpy_row_planes per row over the shard-grouped order, one affine pass)
+/// — the baseline the blocked path must beat 2×. `order` is precomputed
+/// OUTSIDE the timed loop, while the blocked contender re-groups and
+/// counts bytes inside `fused_grad_batch` on every call — the measured
+/// ratio therefore under-reports the blocked path's kernel-level win,
+/// making the ≥ 2× acceptance assert conservative.
+fn per_row_grad_batch(
+    store: &ShardedStore,
+    order: &[usize],
+    rows: &[usize],
+    p: u32,
+    k: &StepKernel,
+    targets: &[f32],
+    grad: &mut [f32],
+) {
+    let mut err_sum = 0.0f32;
+    for &i in order {
+        let (shard, local) = store.locate_row(rows[i]);
+        let err = kernel::dot_row(shard, local, p, k) - targets[i];
+        kernel::axpy_row_planes(shard, local, p, err, grad);
+        err_sum += err;
+    }
+    kernel::axpy_affine(err_sum, &store.scale().m, grad);
+}
 
 fn main() {
     let opts = BenchOpts::from_env_and_args();
+    let quick = opts.quick;
+    let mut js = BenchJson::new("fused_dot", quick);
+
     let mut rng = Rng::new(7);
-    let (rows, cols) = (100_000usize, 64usize);
+    let (rows, cols, store_bits) = (100_000usize, 64usize, 16u32);
     let a = Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal()).collect());
     let scale = ColumnScale::from_data(&a);
-    let store = ShardedStore::ingest(&a, &scale, 8, 42, 64, 0);
+    let store = ShardedStore::ingest(&a, &scale, store_bits, 42, 64, 0);
     let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
     let mut k = StepKernel::new(cols);
     k.refresh(&scale.m, &x);
+    js.meta("rows", rows);
+    js.meta("cols", cols);
+    js.meta("store_bits", store_bits);
+    js.meta("shards", store.num_shards());
+    js.meta("masked_sum_sparse_bits", kernel::MASKED_SUM_SPARSE_BITS);
+    js.meta("spread_word_sparse_bits", kernel::SPARSE_BITS);
 
-    section("dot: fused weaved-domain vs dequantize-row-then-dot (100k x 64, 8-bit store)");
-    let mut row = vec![0.0f32; cols];
-    let mut r = 0usize;
-    let mut acc = 0.0f32;
-    for p in [1u32, 2, 4, 8] {
-        let deq = bench(&format!("dequantize+dot p={p}"), &opts, || {
-            r = (r + 1) % rows;
-            store.dequantize_row(r, p, &mut row);
-            acc += dot(&row, &x);
-            black_box(acc);
-        });
-        let fus = bench(&format!("fused dot_row   p={p}"), &opts, || {
-            r = (r + 1) % rows;
-            acc += store.dot_row_fused(r, p, &k);
-            black_box(acc);
-        });
-        let verdict = if deq.mean_ns / fus.mean_ns >= 2.0 { "PASS (>= 2x)" } else { "below 2x" };
-        println!(
-            "   {} — {verdict}",
-            zipml::bench::speedup_line(&format!("fused dot p={p}"), &deq, &fus)
-        );
-    }
-
-    section("full fused SGD gradient batch vs dequantize path (batch 64)");
+    // a shard-crossing 64-row minibatch, fixed across all batch benches
     let b = 64usize;
     let batch: Vec<usize> = (0..b).map(|i| (i * 1543) % rows).collect();
     let targets: Vec<f32> = (0..b).map(|i| i as f32 * 0.01).collect();
+    let mut order: Vec<usize> = (0..b).collect();
+    order.sort_by_key(|&i| batch[i] / store.shard_rows());
     let mut grad = vec![0.0f32; cols];
+    let mut dots = vec![0.0f32; b];
+
+    // the oracle and per-row contenders run kernel-level after the same
+    // locate_row (no per-call byte-counter atomic on either); the blocked
+    // contender is the full store entry point, so its ns/row INCLUDES the
+    // per-batch grouping and one per-batch counter add — real overhead it
+    // pays in production, amortized over the 64-row block
+    section("dot: dequantize oracle vs per-row fused vs blocked (100k x 64, 16-bit store)");
+    let mut row = vec![0.0f32; cols];
+    let mut r = 0usize;
+    let mut acc = 0.0f32;
+    for p in [1u32, 2, 4, 8, 16] {
+        let deq = bench(&format!("dequantize+dot    p={p}"), &opts, || {
+            r = (r + 1) % rows;
+            let (shard, local) = store.locate_row(r);
+            shard.dequantize_row_at(local, p, &mut row);
+            acc += dot(&row, &x);
+            black_box(acc);
+        });
+        let fus = bench(&format!("fused dot_row     p={p}"), &opts, || {
+            r = (r + 1) % rows;
+            let (shard, local) = store.locate_row(r);
+            acc += kernel::dot_row(shard, local, p, &k);
+            black_box(acc);
+        });
+        let blk = bench(&format!("blocked dots (64) p={p}"), &opts, || {
+            store.dot_rows_fused(&batch, p, &k, &mut dots);
+            black_box(&dots);
+        });
+        let blk_per_row = blk.mean_ns / b as f64;
+        let verdict = if deq.mean_ns / fus.mean_ns >= 2.0 { "PASS (>= 2x)" } else { "below 2x" };
+        println!(
+            "   {} — {verdict}; blocked {:.1} ns/row",
+            zipml::bench::speedup_line(&format!("fused dot p={p}"), &deq, &fus),
+            blk_per_row
+        );
+        js.push(
+            "dot",
+            vec![
+                ("p", p.into()),
+                ("oracle_ns", deq.mean_ns.into()),
+                ("per_row_ns", fus.mean_ns.into()),
+                ("blocked_ns_per_row", blk_per_row.into()),
+                ("rows_per_sec_blocked", (1e9 / blk_per_row).into()),
+                ("bytes_per_row", store.bytes_per_row(p).into()),
+                ("speedup_per_row_vs_oracle", (deq.mean_ns / fus.mean_ns).into()),
+                ("speedup_blocked_vs_per_row", (fus.mean_ns / blk_per_row).into()),
+            ],
+        );
+    }
+
+    section("grad batch: per-row fused vs blocked batch kernels (batch 64)");
     for p in [2u32, 8] {
-        bench(&format!("dequant grad batch p={p}"), &opts, || {
+        let deq = bench(&format!("dequant grad batch p={p}"), &opts, || {
             grad.fill(0.0);
             for (&ri, &t) in batch.iter().zip(&targets) {
                 store.dequantize_row(ri, p, &mut row);
@@ -58,14 +138,154 @@ fn main() {
             }
             black_box(&grad);
         });
-        bench(&format!("fused  grad batch p={p}"), &opts, || {
+        let per_row = bench(&format!("per-row grad batch p={p}"), &opts, || {
+            grad.fill(0.0);
+            per_row_grad_batch(&store, &order, &batch, p, &k, &targets, &mut grad);
+            black_box(&grad);
+        });
+        let blocked = bench(&format!("blocked grad batch p={p}"), &opts, || {
             grad.fill(0.0);
             store.fused_grad_batch(&batch, p, &k, &targets, &mut grad);
             black_box(&grad);
         });
+        let speedup = per_row.mean_ns / blocked.mean_ns;
+        println!(
+            "   {}",
+            zipml::bench::speedup_line(&format!("blocked grad p={p}"), &per_row, &blocked)
+        );
+        js.push(
+            "grad_batch",
+            vec![
+                ("p", p.into()),
+                ("batch", b.into()),
+                ("oracle_ns", deq.mean_ns.into()),
+                ("per_row_ns", per_row.mean_ns.into()),
+                ("blocked_ns", blocked.mean_ns.into()),
+                ("rows_per_sec_blocked", (b as f64 * 1e9 / blocked.mean_ns).into()),
+                ("bytes_per_row", store.bytes_per_row(p).into()),
+                ("speedup_blocked_vs_per_row", speedup.into()),
+                ("speedup_blocked_vs_oracle", (deq.mean_ns / blocked.mean_ns).into()),
+            ],
+        );
+        if p == 8 {
+            // perf-ratio acceptance: enforced at full measurement budgets
+            // only — quick-mode smoke runs (200 ms budgets on shared CI
+            // runners) are too noisy to gate on and warn instead
+            if quick {
+                if speedup < 2.0 {
+                    println!("   WARNING: blocked < 2x per-row ({speedup:.2}x) in quick mode");
+                }
+            } else {
+                assert!(
+                    speedup >= 2.0,
+                    "ACCEPTANCE: blocked grad batch must be >= 2x the per-row fused path \
+                     at p=8 (got {speedup:.2}x)"
+                );
+            }
+        }
     }
 
-    section("byte accounting: fused == row-read path, per epoch");
+    section("popcount fast path: integer AND+POPCNT dot vs f32 masked-sum dot (p=8)");
+    // baseline and candidate are symmetric: both locate the row and run
+    // the bare kernel, neither touches the byte-counter atomic
+    let p_q = 8u32;
+    let f32_dot = bench("fused dot_row f32  p=8", &opts, || {
+        r = (r + 1) % rows;
+        let (shard, local) = store.locate_row(r);
+        acc += kernel::dot_row(shard, local, p_q, &k);
+        black_box(acc);
+    });
+    let mut q_rng = Rng::new(29);
+    for q in [1u32, 2, 4, 8] {
+        let mut qk = QuantStepKernel::new(cols, q);
+        qk.refresh(&scale.m, &x, &mut q_rng);
+        let qb = bench(&format!("popcount dot_row_q q={q}"), &opts, || {
+            r = (r + 1) % rows;
+            let (shard, local) = store.locate_row(r);
+            acc += kernel::dot_row_q(shard, local, p_q, &qk);
+            black_box(acc);
+        });
+        let speedup = f32_dot.mean_ns / qb.mean_ns;
+        println!(
+            "   {}",
+            zipml::bench::speedup_line(&format!("popcount q={q}"), &f32_dot, &qb)
+        );
+        js.push(
+            "popcount",
+            vec![
+                ("q", q.into()),
+                ("p", p_q.into()),
+                ("dot_f32_ns", f32_dot.mean_ns.into()),
+                ("dot_q_ns", qb.mean_ns.into()),
+                ("speedup", speedup.into()),
+            ],
+        );
+        if q <= 4 {
+            if quick {
+                if speedup <= 1.0 {
+                    println!("   WARNING: popcount q={q} not ahead ({speedup:.2}x) in quick mode");
+                }
+            } else {
+                assert!(
+                    speedup > 1.0,
+                    "ACCEPTANCE: the popcount path must beat the f32 masked-sum path \
+                     at q={q} (got {speedup:.2}x)"
+                );
+            }
+        }
+    }
+
+    section("sparse/dense crossover: per-popcount path timings (64-word cycles)");
+    let g64: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+    let mut out16 = vec![0u16; 64];
+    let mut lanes: Vec<u32> = (0..64).collect();
+    for pc in [1usize, 2, 4, 6, 8, 12, 16, 24, 32, 48] {
+        // 256 words with exactly pc set bits each
+        let words: Vec<u64> = (0..256)
+            .map(|_| {
+                rng.shuffle(&mut lanes);
+                lanes[..pc].iter().fold(0u64, |w, &j| w | (1u64 << j))
+            })
+            .collect();
+        let mut wi = 0usize;
+        let ms_walk = bench(&format!("masked_sum walk  pc={pc:2}"), &opts, || {
+            wi = (wi + 1) & 255;
+            acc += kernel::masked_sum_sparse(words[wi], &g64);
+            black_box(acc);
+        });
+        let ms_lane = bench(&format!("masked_sum lanes pc={pc:2}"), &opts, || {
+            wi = (wi + 1) & 255;
+            acc += kernel::masked_sum_dense(words[wi], &g64);
+            black_box(acc);
+        });
+        let sp_walk = bench(&format!("spread walk      pc={pc:2}"), &opts, || {
+            wi = (wi + 1) & 255;
+            kernel::spread_word_sparse(words[wi], 3, &mut out16);
+            black_box(&out16);
+        });
+        let sp_lut = bench(&format!("spread LUT       pc={pc:2}"), &opts, || {
+            wi = (wi + 1) & 255;
+            kernel::spread_word_dense(words[wi], 3, &mut out16);
+            black_box(&out16);
+        });
+        js.push(
+            "sparse_crossover",
+            vec![
+                ("popcount", pc.into()),
+                ("masked_sum_walk_ns", ms_walk.mean_ns.into()),
+                ("masked_sum_lanes_ns", ms_lane.mean_ns.into()),
+                ("spread_walk_ns", sp_walk.mean_ns.into()),
+                ("spread_lut_ns", sp_lut.mean_ns.into()),
+            ],
+        );
+        println!(
+            "   pc={pc:2}: masked_sum walk/lanes {:.2} — spread walk/LUT {:.2}",
+            ms_walk.mean_ns / ms_lane.mean_ns,
+            sp_walk.mean_ns / sp_lut.mean_ns
+        );
+    }
+
+    section("byte accounting: blocked == per-row == row-read path, per epoch");
     for p in [2u32, 8] {
         store.reset_bytes_read();
         for ri in 0..rows {
@@ -77,14 +297,40 @@ fn main() {
             black_box(store.dot_row_fused(ri, p, &k));
         }
         let fused_bytes = store.bytes_read();
+        store.reset_bytes_read();
+        let epoch_rows: Vec<usize> = (0..rows).collect();
+        let epoch_targets = vec![0.0f32; b];
+        for chunk in epoch_rows.chunks(b) {
+            grad.fill(0.0);
+            store.fused_grad_batch(chunk, p, &k, &epoch_targets[..chunk.len()], &mut grad);
+        }
+        let blocked_bytes = store.bytes_read();
         println!(
-            "  p={p}: dequant epoch {dequant_bytes} B, fused epoch {fused_bytes} B — {}",
-            if dequant_bytes == fused_bytes { "identical" } else { "MISMATCH" }
+            "  p={p}: dequant {dequant_bytes} B, per-row fused {fused_bytes} B, \
+             blocked {blocked_bytes} B — {}",
+            if dequant_bytes == fused_bytes && fused_bytes == blocked_bytes {
+                "identical"
+            } else {
+                "MISMATCH"
+            }
         );
         assert_eq!(dequant_bytes, fused_bytes, "accounting must not drift");
+        assert_eq!(
+            fused_bytes, blocked_bytes,
+            "ACCEPTANCE: blocked and per-row byte accounting must be equal"
+        );
+        js.push(
+            "accounting",
+            vec![
+                ("p", p.into()),
+                ("dequant_epoch_bytes", (dequant_bytes as f64).into()),
+                ("per_row_epoch_bytes", (fused_bytes as f64).into()),
+                ("blocked_epoch_bytes", (blocked_bytes as f64).into()),
+            ],
+        );
     }
 
-    // keep the kernel module reachable for per-row axpy shape too
+    // keep the per-row axpy shape reachable too
     let (shard, local) = store.locate_row(0);
     bench("fused axpy_row p=8", &opts, || {
         kernel::axpy_row(shard, local, 8, 0.01, &mut grad);
@@ -94,22 +340,33 @@ fn main() {
     section("double sampling: stochastic draws vs truncating reads");
     let mut ds_rng = Rng::new(11);
     for p in [2u32, 4] {
-        bench(&format!("fused dot_row    p={p} (trunc)"), &opts, || {
+        let tr = bench(&format!("fused dot_row    p={p} (trunc)"), &opts, || {
             r = (r + 1) % rows;
-            acc += store.dot_row_fused(r, p, &k);
+            let (shard, local) = store.locate_row(r);
+            acc += kernel::dot_row(shard, local, p, &k);
             black_box(acc);
         });
-        bench(&format!("fused dot_row_ds p={p} (1 draw)"), &opts, || {
+        let one = bench(&format!("fused dot_row_ds p={p} (1 draw)"), &opts, || {
             r = (r + 1) % rows;
             let (shard, local) = store.locate_row(r);
             acc += kernel::dot_row_ds(shard, local, p, &k, &mut ds_rng);
             black_box(acc);
         });
-        bench(&format!("ds grad batch    p={p} (2 draws/row)"), &opts, || {
+        let dsb = bench(&format!("ds grad batch    p={p} (2 draws/row)"), &opts, || {
             grad.fill(0.0);
             store.ds_grad_batch(&batch, p, &k, &targets, &mut ds_rng, &mut grad);
             black_box(&grad);
         });
+        js.push(
+            "double_sampling",
+            vec![
+                ("p", p.into()),
+                ("trunc_dot_ns", tr.mean_ns.into()),
+                ("ds_dot_ns", one.mean_ns.into()),
+                ("ds_grad_batch_ns", dsb.mean_ns.into()),
+                ("rows_per_sec_ds_batch", (b as f64 * 1e9 / dsb.mean_ns).into()),
+            ],
+        );
     }
 
     section("byte accounting: DS epoch == exactly 2x the truncation epoch");
@@ -142,5 +399,18 @@ fn main() {
             2 * trunc_bytes,
             "the DS path must account exactly 2x the truncation path per epoch"
         );
+        js.push(
+            "accounting_ds",
+            vec![
+                ("p", p.into()),
+                ("trunc_epoch_bytes", (trunc_bytes as f64).into()),
+                ("ds_epoch_bytes", (ds_bytes as f64).into()),
+            ],
+        );
+    }
+
+    match js.write("BENCH_kernels.json") {
+        Ok(path) => println!("\nwrote bench trajectory to {}", path.display()),
+        Err(e) => eprintln!("\nWARNING: could not write bench trajectory: {e}"),
     }
 }

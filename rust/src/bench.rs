@@ -12,6 +12,10 @@ pub struct BenchOpts {
     pub warmup: Duration,
     pub measure: Duration,
     pub min_samples: usize,
+    /// True when running with shrunken smoke budgets (`--quick` /
+    /// `ZIPML_BENCH_QUICK=1`) — benches gate their perf-ratio acceptance
+    /// asserts on this so noisy CI smoke runs warn instead of failing.
+    pub quick: bool,
 }
 
 impl BenchOpts {
@@ -19,9 +23,19 @@ impl BenchOpts {
         let quick = std::env::args().any(|a| a == "--quick")
             || std::env::var("ZIPML_BENCH_QUICK").is_ok_and(|v| v == "1");
         if quick {
-            BenchOpts { warmup: Duration::from_millis(30), measure: Duration::from_millis(200), min_samples: 5 }
+            BenchOpts {
+                warmup: Duration::from_millis(30),
+                measure: Duration::from_millis(200),
+                min_samples: 5,
+                quick,
+            }
         } else {
-            BenchOpts { warmup: Duration::from_millis(300), measure: Duration::from_secs(2), min_samples: 20 }
+            BenchOpts {
+                warmup: Duration::from_millis(300),
+                measure: Duration::from_secs(2),
+                min_samples: 20,
+                quick,
+            }
         }
     }
 }
@@ -119,6 +133,161 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+// ---------------------------------------------------------------------------
+// Machine-readable bench trajectory (serde is not in the offline crate set,
+// so this is a deliberately tiny JSON emitter). `benches/fused_dot.rs`
+// assembles a `BenchJson` and writes `BENCH_kernels.json` at the repo root
+// (override with env `ZIPML_BENCH_JSON`); `ci.sh` invokes the bench so the
+// file regenerates on every gate run, and CI uploads it as an artifact —
+// the repo's persistent perf trajectory.
+// ---------------------------------------------------------------------------
+
+/// One JSON scalar. Non-finite numbers serialize as `null`.
+#[derive(Clone, Debug)]
+pub enum JsonVal {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl From<f64> for JsonVal {
+    fn from(v: f64) -> Self {
+        JsonVal::Num(v)
+    }
+}
+
+impl From<usize> for JsonVal {
+    fn from(v: usize) -> Self {
+        JsonVal::Num(v as f64)
+    }
+}
+
+impl From<u32> for JsonVal {
+    fn from(v: u32) -> Self {
+        JsonVal::Num(v as f64)
+    }
+}
+
+impl From<&str> for JsonVal {
+    fn from(v: &str) -> Self {
+        JsonVal::Str(v.to_string())
+    }
+}
+
+impl From<bool> for JsonVal {
+    fn from(v: bool) -> Self {
+        JsonVal::Bool(v)
+    }
+}
+
+fn json_escape(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn json_val(v: &JsonVal, out: &mut String) {
+    match v {
+        JsonVal::Num(n) if n.is_finite() => out.push_str(&format!("{n}")),
+        JsonVal::Num(_) => out.push_str("null"),
+        JsonVal::Str(s) => json_escape(s, out),
+        JsonVal::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+    }
+}
+
+/// Accumulates `{meta: {...}, sections: {name: [entry, ...]}}` and writes
+/// it as JSON. Insertion order is preserved for both sections and entries,
+/// so the file diffs stably run over run.
+pub struct BenchJson {
+    meta: Vec<(String, JsonVal)>,
+    sections: Vec<(String, Vec<Vec<(String, JsonVal)>>)>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str, quick: bool) -> Self {
+        BenchJson {
+            meta: vec![
+                ("bench".into(), bench.into()),
+                ("schema".into(), 1.0.into()),
+                ("quick".into(), quick.into()),
+            ],
+            sections: Vec::new(),
+        }
+    }
+
+    /// Add a top-level metadata field (workload shape, tuned constants, …).
+    pub fn meta(&mut self, key: &str, v: impl Into<JsonVal>) {
+        self.meta.push((key.to_string(), v.into()));
+    }
+
+    /// Append one entry (an object of fields) to `section`.
+    pub fn push(&mut self, section: &str, fields: Vec<(&str, JsonVal)>) {
+        let entry: Vec<(String, JsonVal)> =
+            fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        match self.sections.iter_mut().find(|(name, _)| name == section) {
+            Some((_, entries)) => entries.push(entry),
+            None => self.sections.push((section.to_string(), vec![entry])),
+        }
+    }
+
+    fn render(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\n  \"meta\": {");
+        for (i, (k, v)) in self.meta.iter().enumerate() {
+            out.push_str(if i == 0 { "\n    " } else { ",\n    " });
+            json_escape(k, &mut out);
+            out.push_str(": ");
+            json_val(v, &mut out);
+        }
+        out.push_str("\n  },\n  \"sections\": {");
+        for (si, (name, entries)) in self.sections.iter().enumerate() {
+            out.push_str(if si == 0 { "\n    " } else { ",\n    " });
+            json_escape(name, &mut out);
+            out.push_str(": [");
+            for (ei, entry) in entries.iter().enumerate() {
+                out.push_str(if ei == 0 { "\n      {" } else { ",\n      {" });
+                for (fi, (k, v)) in entry.iter().enumerate() {
+                    if fi > 0 {
+                        out.push_str(", ");
+                    }
+                    json_escape(k, &mut out);
+                    out.push_str(": ");
+                    json_val(v, &mut out);
+                }
+                out.push('}');
+            }
+            out.push_str("\n    ]");
+        }
+        out.push_str("\n  }\n}\n");
+        out
+    }
+
+    /// Write the trajectory file; returns the path written. The default
+    /// resolves against the WORKSPACE ROOT (the parent of this crate's
+    /// manifest dir) — deliberately not the process cwd, which cargo sets
+    /// to the package dir (`rust/`) for bench binaries, while CI uploads
+    /// `BENCH_kernels.json` from the repo root. Override with env
+    /// `ZIPML_BENCH_JSON`.
+    pub fn write(&self, default_name: &str) -> std::io::Result<std::path::PathBuf> {
+        let path = match std::env::var_os("ZIPML_BENCH_JSON") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => {
+                let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+                manifest.parent().unwrap_or(manifest).join(default_name)
+            }
+        };
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
@@ -128,8 +297,32 @@ mod tests {
     use super::*;
 
     #[test]
+    fn bench_json_renders_valid_shape() {
+        let mut js = BenchJson::new("unit", true);
+        js.meta("rows", 100usize);
+        js.meta("note", "a\"b");
+        js.push("sec", vec![("p", 8u32.into()), ("ratio", 2.5f64.into())]);
+        js.push("sec", vec![("bad", JsonVal::Num(f64::NAN))]);
+        js.push("other", vec![("ok", true.into())]);
+        let s = js.render();
+        assert!(s.contains("\"bench\": \"unit\""), "{s}");
+        assert!(s.contains("\"quick\": true"), "{s}");
+        assert!(s.contains("\"a\\\"b\""), "escaping broke: {s}");
+        assert!(s.contains("\"ratio\": 2.5"), "{s}");
+        assert!(s.contains("\"bad\": null"), "non-finite must be null: {s}");
+        // structural sanity: balanced braces/brackets (none inside strings)
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
     fn bench_reports_sane_numbers() {
-        let opts = BenchOpts { warmup: Duration::from_millis(5), measure: Duration::from_millis(20), min_samples: 3 };
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_samples: 3,
+            quick: true,
+        };
         let mut acc = 0u64;
         let r = bench("noop-ish", &opts, || {
             acc = black_box(acc.wrapping_add(1));

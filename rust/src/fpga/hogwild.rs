@@ -98,31 +98,31 @@ pub fn hogwild_train(ds: &Dataset, cfg: &HogwildConfig) -> HogwildResult {
     }
 }
 
-/// Per-row-visit hook of [`hogwild_store_run`]: given (shard, local row,
-/// step kernel, target, lr, worker rng, delta scratch), compute the row's
-/// error, write the *plane part* of the update into `delta`, and return
-/// the update coefficient; the skeleton folds the affine term −coef·m and
-/// publishes. Must be `Sync` — one reference is shared by all workers.
-type RowVisit = dyn Fn(&WeavedMatrix, usize, &StepKernel, f32, f32, &mut Rng, &mut [f32]) -> f32
-    + Sync;
-
 /// Shared skeleton of the weaved-store Hogwild! paths: per epoch, every
 /// worker walks its strided row partition ([`MinibatchIter::strided`] at
 /// batch 1, so the (row, worker) assignment is reproducible), takes a racy
-/// model snapshot, refreshes `g = m ⊙ x`, asks `visit` for the row's
-/// update coefficient and plane-part delta, then publishes `delta −
-/// coef·m[c]` as ONE racy add per live column (re-zeroing the scratch) —
-/// the pre-fusion contention profile. `bytes_per_visit` is counted once
-/// per row visit; `visit` gets a per-(epoch, worker) RNG stream derived
-/// via [`crate::rng::Rng::new_stream`], so stochastic variants never share
-/// randomness across racy threads (deterministic variants ignore it).
-fn hogwild_store_run(
+/// model snapshot, asks its visitor for the row's update coefficient and
+/// plane-part delta, then publishes `delta − coef·m[c]` as ONE racy add
+/// per live column (re-zeroing the scratch) — the pre-fusion contention
+/// profile. `make_visitor` is called once per worker thread, so each
+/// visitor owns its per-step kernel state ([`StepKernel`],
+/// [`kernel::QuantStepKernel`], …) without sharing across racy threads;
+/// the visitor receives (shard, local row, model snapshot, target, lr,
+/// rng, delta scratch) and refreshes its kernel from the snapshot.
+/// `bytes_per_visit` is counted once per row visit; the RNG is a
+/// per-(epoch, worker) stream derived via [`crate::rng::Rng::new_stream`],
+/// so stochastic variants never share randomness across racy threads
+/// (deterministic variants ignore it).
+fn hogwild_store_run<V>(
     ds: &Dataset,
     store: &ShardedStore,
     cfg: &HogwildConfig,
     bytes_per_visit: usize,
-    visit: &RowVisit,
-) -> HogwildResult {
+    make_visitor: impl Fn() -> V + Sync,
+) -> HogwildResult
+where
+    V: FnMut(&WeavedMatrix, usize, &[f32], f32, f32, &mut Rng, &mut [f32]) -> f32,
+{
     assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
     let t0 = std::time::Instant::now();
     let n = store.cols();
@@ -139,29 +139,29 @@ fn hogwild_store_run(
         let lr = cfg.lr0 / (epoch as f32 + 1.0);
         let epoch_seed = cfg.seed ^ ((epoch as u64) << 32);
         std::thread::scope(|scope| {
+            let make_visitor = &make_visitor;
             for t in 0..cfg.threads {
                 let x = Arc::clone(&x);
                 let updates = Arc::clone(&updates);
                 scope.spawn(move || {
+                    let mut visit = make_visitor();
                     let mut it = MinibatchIter::strided(k, BATCH, epoch_seed, t, cfg.threads);
                     let mut rng =
                         Rng::new_stream(cfg.seed, (epoch as u64) * cfg.threads as u64 + t as u64);
                     let mut local = vec![0.0f32; n];
                     let mut delta = vec![0.0f32; n];
-                    let mut kern = StepKernel::new(n);
                     let m = &store.scale().m;
                     while let Some(batch) = it.next_batch() {
                         for &r in batch {
                             let r = r as usize;
                             let (shard, sr) = store.locate_row(r);
-                            // racy model snapshot → per-update g = m ⊙ x
+                            // racy model snapshot → per-update kernel state
                             for (l, xa) in local.iter_mut().zip(x.iter()) {
                                 *l = load_f32(xa);
                             }
-                            kern.refresh(m, &local);
                             store.note_bytes_read(bytes_per_visit);
                             let coef =
-                                visit(shard, sr, &kern, ds.train_b[r], lr, &mut rng, &mut delta);
+                                visit(shard, sr, &local, ds.train_b[r], lr, &mut rng, &mut delta);
                             for ((xa, d), &mc) in x.iter().zip(delta.iter_mut()).zip(m.iter()) {
                                 let upd = *d - coef * mc;
                                 *d = 0.0;
@@ -188,30 +188,37 @@ fn hogwild_store_run(
 
 /// Hogwild! over the weaved sample store: every worker computes its dot
 /// products and model updates **in the weaved domain** — the fused kernels
-/// ([`crate::store::kernel`]) walk only the set bits of the p requested
-/// planes, so no worker ever materializes an f32 row. Shard reads stay
-/// lock-free (the store only touches a relaxed byte counter) and updates
-/// race on the shared model exactly like [`hogwild_train`]. Bytes are
-/// counted once per row visit (the update pass reuses the planes the dot
-/// just fetched), identical to the row-read accounting.
+/// ([`crate::store::kernel`]) touch only the p requested planes (the dot
+/// side on the lane-parallel masked sum), so no worker ever materializes
+/// an f32 row. Shard reads stay lock-free (the store only touches a
+/// relaxed byte counter) and updates race on the shared model exactly like
+/// [`hogwild_train`]. Bytes are counted once per row visit (the update
+/// pass reuses the planes the dot just fetched), identical to the
+/// row-read accounting.
 pub fn hogwild_train_store(
     ds: &Dataset,
     store: &ShardedStore,
     p: u32,
     cfg: &HogwildConfig,
 ) -> HogwildResult {
-    hogwild_store_run(
-        ds,
-        store,
-        cfg,
-        store.bytes_per_row(p),
-        &|shard, sr, kern, target, lr, _rng, delta| {
-            let err = kernel::dot_row(shard, sr, p, kern) - target;
+    let n = store.cols();
+    let m = &store.scale().m;
+    hogwild_store_run(ds, store, cfg, store.bytes_per_row(p), || {
+        let mut kern = StepKernel::new(n);
+        move |shard: &WeavedMatrix,
+              sr: usize,
+              local: &[f32],
+              target: f32,
+              lr: f32,
+              _rng: &mut Rng,
+              delta: &mut [f32]| {
+            kern.refresh(m, local);
+            let err = kernel::dot_row(shard, sr, p, &kern) - target;
             let coef = -lr * err;
             kernel::axpy_row_planes(shard, sr, p, coef, delta);
             coef
-        },
-    )
+        }
+    })
 }
 
 /// Hogwild! over the weaved store with **double-sampled** reads: every
@@ -229,21 +236,63 @@ pub fn hogwild_train_store_ds(
     p: u32,
     cfg: &HogwildConfig,
 ) -> HogwildResult {
-    hogwild_store_run(
-        ds,
-        store,
-        cfg,
-        // two independent draws: both fetches counted
-        2 * store.bytes_per_row(p),
-        &|shard, sr, kern, target, lr, rng, delta| {
-            let err = kernel::dot_row_ds(shard, sr, p, kern, rng) - target;
+    let n = store.cols();
+    let m = &store.scale().m;
+    // two independent draws: both fetches counted
+    hogwild_store_run(ds, store, cfg, 2 * store.bytes_per_row(p), || {
+        let mut kern = StepKernel::new(n);
+        move |shard: &WeavedMatrix,
+              sr: usize,
+              local: &[f32],
+              target: f32,
+              lr: f32,
+              rng: &mut Rng,
+              delta: &mut [f32]| {
+            kern.refresh(m, local);
+            let err = kernel::dot_row_ds(shard, sr, p, &kern, rng) - target;
             let coef = -lr * err;
             // draw two accumulates the plane part; the skeleton's publish
             // pass folds the affine term and issues the racy adds
             kernel::axpy_row_planes_ds(shard, sr, p, coef, rng, delta);
             coef
-        },
-    )
+        }
+    })
+}
+
+/// Hogwild! on the **popcount fast path** (DESIGN.md §8): every worker
+/// re-rounds its snapshot's `g = m⊙x` onto a q-bit sign/magnitude grid
+/// per visit (one [`kernel::QuantStepKernel::refresh`] draw from the
+/// worker's own stream) and computes the fused dot by integer AND+POPCNT
+/// ([`kernel::dot_row_q`]); the racy update side stays the exact bit-walk
+/// axpy. The rounding is unbiased, so every visit's expected update is the
+/// truncating visit's. Byte accounting matches [`hogwild_train_store`]
+/// exactly — the ĝ planes never cross the memory boundary as sample
+/// traffic.
+pub fn hogwild_train_store_q(
+    ds: &Dataset,
+    store: &ShardedStore,
+    p: u32,
+    step_bits: u32,
+    cfg: &HogwildConfig,
+) -> HogwildResult {
+    let n = store.cols();
+    let m = &store.scale().m;
+    hogwild_store_run(ds, store, cfg, store.bytes_per_row(p), || {
+        let mut qk = kernel::QuantStepKernel::new(n, step_bits);
+        move |shard: &WeavedMatrix,
+              sr: usize,
+              local: &[f32],
+              target: f32,
+              lr: f32,
+              rng: &mut Rng,
+              delta: &mut [f32]| {
+            qk.refresh(m, local, rng);
+            let err = kernel::dot_row_q(shard, sr, p, &qk) - target;
+            let coef = -lr * err;
+            kernel::axpy_row_planes(shard, sr, p, coef, delta);
+            coef
+        }
+    })
 }
 
 /// Simulated epoch time for the 10-core Hogwild baseline of Fig 5: CPU
@@ -336,5 +385,23 @@ mod tests {
             store.bytes_read(),
             (8 * 4000 * 2 * store.bytes_per_row(4)) as u64
         );
+    }
+
+    /// Popcount-path Hogwild!: racy workers re-round g per visit from
+    /// their own streams, converge at a generous q, and the store counts
+    /// exactly the truncating path's bytes (ĝ planes are not traffic).
+    #[test]
+    fn hogwild_popcount_over_weaved_store_converges_same_bytes() {
+        use crate::quant::ColumnScale;
+        let ds = make_regression("hw_q", 4000, 100, 20, 3);
+        let scale = ColumnScale::from_data(&ds.train_a);
+        let store = crate::store::ShardedStore::ingest(&ds.train_a, &scale, 8, 11, 8, 0);
+        let cfg = HogwildConfig { threads: 4, epochs: 8, lr0: 0.02, seed: 1 };
+        let r = hogwild_train_store_q(&ds, &store, 8, 8, &cfg);
+        let first = r.loss_curve[0];
+        let last = *r.loss_curve.last().unwrap();
+        assert!(last < 0.3 * first, "no convergence: {first} -> {last}");
+        assert_eq!(r.updates, 8 * 4000);
+        assert_eq!(store.bytes_read(), (8 * 4000 * store.bytes_per_row(8)) as u64);
     }
 }

@@ -13,8 +13,9 @@ use anyhow::{bail, Result};
 
 use zipml::coordinator::{self, Ctx};
 use zipml::data;
+use zipml::quant::ColumnScale;
 use zipml::sgd::{self, modes::RefetchStrategy, Mode, ModelKind, StoreBackend, TrainConfig};
-use zipml::store::PrecisionSchedule;
+use zipml::store::{PrecisionSchedule, ShardedStore};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -58,7 +59,7 @@ USAGE:
   zipml train --model linreg|lssvm|logistic|svm --mode MODE [--dataset D]
               [--bits B] [--epochs E] [--lr F] [--batch N] [--seed N]
               [--store legacy|weaved|weaved-ds] [--shards N] [--schedule S]
-              [--store-bits W]
+              [--store-bits W] [--host] [--step-bits Q]
        MODE: fp32 | naive | ds | dsu8 | e2e | mq | gq | optimal | round
              | cheby | poly | refetch-l1 | refetch-jl
        S (weaved stores, reads p planes/epoch): fixed | step | refetch
@@ -68,6 +69,11 @@ USAGE:
                  (--mode ds); the store is ingested at --store-bits W
                  (default min(2·bits, 16)), and W > p keeps the carry
                  planes live
+       --host    artifact-free linreg training on the fused host kernels
+                 (no PJRT runtime needed; --store weaved or weaved-ds)
+       --step-bits Q  (with --host --store weaved) popcount fast path:
+                 round g = m*x to Q sign/magnitude bit planes per step and
+                 dot by AND+POPCNT; unbiased, off by default
   zipml fpga-sim [--k K] [--n N]
   zipml quantize-demo";
 
@@ -134,7 +140,115 @@ fn parse_mode(mode: &str, bits: u32) -> Result<Mode> {
     })
 }
 
+/// Per-epoch read-precision schedule for the weaved store backends.
+fn parse_schedule(args: &[String], bits: u32) -> Result<PrecisionSchedule> {
+    Ok(match opt(args, "--schedule").unwrap_or("fixed") {
+        "fixed" => PrecisionSchedule::Fixed(bits),
+        "step" => PrecisionSchedule::StepUp { start: 1.max(bits / 4), every: 3, max: bits },
+        "refetch" => PrecisionSchedule::RefetchTriggered {
+            start: 1.max(bits / 4),
+            max: bits,
+            min_rel_improve: 0.01,
+        },
+        other => bail!("unknown schedule {other}"),
+    })
+}
+
+/// Artifact-free host training over the weaved store (linreg): runs the
+/// fused weaved-domain kernels directly — no PJRT runtime, no artifacts —
+/// so the truncating, double-sampled, and popcount hot paths are
+/// exercisable from the CLI in every checkout. `--step-bits Q` switches
+/// the truncating path onto the integer popcount fast path (DESIGN.md §8).
+fn cmd_train_host(args: &[String]) -> Result<()> {
+    let model = opt(args, "--model").unwrap_or("linreg");
+    if model != "linreg" {
+        bail!("--host runs the artifact-free linreg kernels; got --model {model}");
+    }
+    if let Some(mode) = opt(args, "--mode") {
+        // the host path's algorithm is picked by --store (truncating /
+        // double-sampled) and --step-bits, never by --mode — reject it
+        // rather than silently training something else than requested
+        bail!("--host ignores --mode (got {mode}): use --store weaved|weaved-ds, --step-bits");
+    }
+    let bits: u32 = opt(args, "--bits").map(|v| v.parse()).transpose()?.unwrap_or(5);
+    let seed: u64 = opt(args, "--seed").map(|v| v.parse()).transpose()?.unwrap_or(42);
+    let epochs: usize = opt(args, "--epochs").map(|v| v.parse()).transpose()?.unwrap_or(15);
+    let batch: usize = opt(args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(64);
+    let lr0: f32 = opt(args, "--lr").map(|v| v.parse()).transpose()?.unwrap_or(0.05);
+    let shards: usize = opt(args, "--shards").map(|v| v.parse()).transpose()?.unwrap_or(16);
+    let step_bits: Option<u32> = opt(args, "--step-bits").map(|v| v.parse()).transpose()?;
+    if let Some(q) = step_bits {
+        if !(1..=16).contains(&q) {
+            bail!("--step-bits must be 1..=16, got {q}");
+        }
+    }
+    let dataset_name = opt(args, "--dataset").unwrap_or("synthetic100");
+    let ds = data::by_name(dataset_name, seed)?;
+    let scale = ColumnScale::from_data(&ds.train_a);
+    let schedule = parse_schedule(args, bits)?;
+    let ingest_seed = seed ^ 0x5745_4156_4544; // "WEAVED"
+    let store_kind = opt(args, "--store").unwrap_or("weaved");
+    let (label, r) = match store_kind {
+        "weaved" => {
+            let store = ShardedStore::ingest(&ds.train_a, &scale, bits, ingest_seed, shards, 0);
+            match step_bits {
+                Some(q) => (
+                    format!("host fused popcount (q={q})"),
+                    sgd::train_store_host_q(&ds, &store, schedule, q, epochs, batch, lr0, seed),
+                ),
+                None => (
+                    "host fused truncating".to_string(),
+                    sgd::train_store_host(&ds, &store, schedule, epochs, batch, lr0, seed),
+                ),
+            }
+        }
+        "weaved-ds" => {
+            if step_bits.is_some() {
+                bail!("--step-bits is the truncating popcount path: use --store weaved");
+            }
+            let store_bits: u32 = opt(args, "--store-bits")
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or_else(|| (2 * bits).min(16));
+            if store_bits <= bits {
+                eprintln!(
+                    "warning: --store-bits {store_bits} <= read precision {bits}: \
+                     double-sampled reads degenerate to exact truncation"
+                );
+            }
+            let store =
+                ShardedStore::ingest(&ds.train_a, &scale, store_bits, ingest_seed, shards, 0);
+            (
+                "host fused double-sampling".to_string(),
+                sgd::train_store_host_ds(&ds, &store, schedule, epochs, batch, lr0, seed),
+            )
+        }
+        other => bail!("--host needs --store weaved|weaved-ds, got {other}"),
+    };
+    println!(
+        "training linreg [{label}] on {dataset_name} (n={}, K={}, p={bits})",
+        ds.n(),
+        ds.k_train()
+    );
+    for (e, l) in r.loss_curve.iter().enumerate() {
+        println!("  epoch {e:3}  loss {l:.6}");
+    }
+    println!(
+        "final={:.6} bytes/epoch={:.3e} precisions={:?}",
+        r.loss_curve.last().unwrap(),
+        r.sample_bytes_per_epoch,
+        r.precisions
+    );
+    Ok(())
+}
+
 fn cmd_train(args: &[String]) -> Result<()> {
+    if flag(args, "--host") {
+        return cmd_train_host(args);
+    }
+    if opt(args, "--step-bits").is_some() {
+        bail!("--step-bits is a host-kernel feature: add --host (see zipml help)");
+    }
     let model = match opt(args, "--model").unwrap_or("linreg") {
         "linreg" => ModelKind::Linreg,
         "lssvm" => ModelKind::Lssvm {
@@ -166,16 +280,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     }
     if store_kind != "legacy" {
         let shards: usize = opt(args, "--shards").map(|v| v.parse()).transpose()?.unwrap_or(16);
-        let schedule = match opt(args, "--schedule").unwrap_or("fixed") {
-            "fixed" => PrecisionSchedule::Fixed(bits),
-            "step" => PrecisionSchedule::StepUp { start: 1.max(bits / 4), every: 3, max: bits },
-            "refetch" => PrecisionSchedule::RefetchTriggered {
-                start: 1.max(bits / 4),
-                max: bits,
-                min_rel_improve: 0.01,
-            },
-            other => bail!("unknown schedule {other}"),
-        };
+        let schedule = parse_schedule(args, bits)?;
         cfg.store = if store_kind == "weaved-ds" {
             if !matches!(cfg.mode, Mode::DoubleSample { .. }) {
                 bail!("--store weaved-ds runs the double-sampling step: use --mode ds");

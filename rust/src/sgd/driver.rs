@@ -21,7 +21,7 @@ use crate::quant::packing::{DoubleSampleBlock, PackedMatrix};
 use crate::quant::{discretized_optimal_levels, ColumnScale};
 use crate::rng::Rng;
 use crate::runtime::{lit_f32, lit_scalar11, lit_u8, Runtime};
-use crate::store::{PrecisionSchedule, ScheduleState, ShardedStore, StepKernel};
+use crate::store::{PrecisionSchedule, QuantStepKernel, ScheduleState, ShardedStore, StepKernel};
 use crate::tensor::Matrix;
 
 use super::modes::{Mode, ModelKind};
@@ -682,11 +682,15 @@ fn eval_batch_count(requested: usize, loss_batch: usize, k: usize) -> Result<usi
 // without AOT artifacts or a PJRT client. Shared by tests, benches, the
 // Hogwild! substrate, and examples/store_weaving.rs.
 //
-// Four batch kernels run the same epoch skeleton:
-//   * train_store_host         — fused weaved-domain kernels (no f32 row)
+// Five batch kernels run the same epoch skeleton:
+//   * train_store_host         — fused weaved-domain kernels (no f32 row),
+//                                blocked per shard visit (DESIGN.md §8)
 //   * train_store_host_ds      — fused *double-sampled* kernels: two
 //                                unbiased stochastic draws per row visit
 //                                (§2.2 host-native, DESIGN.md §5)
+//   * train_store_host_q       — popcount fast path: the per-step g = m⊙x
+//                                stochastically rounded to q bit planes,
+//                                dots by AND+POPCNT (DESIGN.md §8)
 //   * train_store_host_dequant — dequantize-row oracle over the store
 //   * train_packed_host        — dequantize-row oracle over PackedMatrix
 // The two oracle paths execute identical float ops, so their loss curves
@@ -834,6 +838,60 @@ pub fn train_store_host_ds(
                 *t = ds.train_b[r];
             }
             store.ds_grad_batch(rows, p, &k, t, &mut ds_rng, grad);
+        },
+    );
+    HostTrainResult {
+        loss_curve,
+        final_model,
+        sample_bytes_per_epoch: store.bytes_read() as f64 / epochs.max(1) as f64,
+        precisions,
+    }
+}
+
+/// Host-path training on the **popcount fast path** (`--step-bits q`,
+/// DESIGN.md §8): per step, `g = m⊙x` is stochastically rounded onto a
+/// q-bit sign/magnitude grid ([`QuantStepKernel`], one rounding draw per
+/// step from a dedicated seed-derived stream), and every minibatch error
+/// comes from the integer AND+POPCNT dot
+/// ([`ShardedStore::fused_grad_batch_q`]); the axpy side stays exact. The
+/// rounding is unbiased (E[ĝ] = g), so every step's expected gradient is
+/// the exact fused gradient — the trade is integer throughput for one
+/// bounded noise term per step. Byte accounting is identical to
+/// [`train_store_host`] (the ĝ planes are model-side state, not sample
+/// traffic). Deterministic bit for bit in (seed, store contents).
+#[allow(clippy::too_many_arguments)] // the host-trainer family's 7 + step_bits
+pub fn train_store_host_q(
+    ds: &Dataset,
+    store: &ShardedStore,
+    schedule: PrecisionSchedule,
+    step_bits: u32,
+    epochs: usize,
+    batch: usize,
+    lr0: f32,
+    seed: u64,
+) -> HostTrainResult {
+    assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
+    assert_eq!(store.cols(), ds.n(), "store/dataset col mismatch");
+    store.reset_bytes_read();
+    let mut sched = ScheduleState::new(schedule, store.bits());
+    let m = store.scale().m.clone();
+    let mut qk = QuantStepKernel::new(store.cols(), step_bits);
+    let mut targets = vec![0.0f32; batch];
+    let mut q_rng = Rng::new_stream(seed, 0x5153); // "QS": step-rounding stream
+    let (loss_curve, final_model, precisions) = host_sgd_linreg(
+        ds,
+        epochs,
+        batch,
+        lr0,
+        seed,
+        |epoch, hist| sched.precision_for_epoch(epoch, hist),
+        |p, rows, x, grad| {
+            qk.refresh(&m, x, &mut q_rng);
+            let t = &mut targets[..rows.len()];
+            for (t, &r) in t.iter_mut().zip(rows) {
+                *t = ds.train_b[r];
+            }
+            store.fused_grad_batch_q(rows, p, &qk, t, grad);
         },
     );
     HostTrainResult {
@@ -1113,6 +1171,36 @@ mod tests {
         assert_eq!(tr.sample_bytes_per_epoch, (100 * store.bytes_per_row(4)) as f64);
         let dsr = train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(4), 3, 32, 0.05, 7);
         assert_eq!(dsr.sample_bytes_per_epoch, 2.0 * tr.sample_bytes_per_epoch);
+    }
+
+    /// The popcount host path converges like the exact fused path at a
+    /// generous q, replays bit for bit from its seed, and accounts exactly
+    /// the truncating path's bytes.
+    #[test]
+    fn popcount_host_path_converges_deterministic_same_bytes() {
+        let ds = make_regression("host_q", 512, 64, 24, 51);
+        let (_, store) = packed_and_store(&ds, 8, 5, 13);
+        let exact = train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 8, 32, 0.05, 7);
+        let q = train_store_host_q(&ds, &store, PrecisionSchedule::Fixed(8), 12, 8, 32, 0.05, 7);
+        assert_eq!(q.precisions, exact.precisions);
+        assert_eq!(
+            q.sample_bytes_per_epoch, exact.sample_bytes_per_epoch,
+            "popcount path must not change sample-byte accounting"
+        );
+        let (le, lq) = (exact.final_loss(), q.final_loss());
+        assert!(le < 0.5 * exact.loss_curve[0], "exact path did not converge");
+        assert!(
+            lq < 2.0 * le.max(1e-9) + 0.05 * exact.loss_curve[0],
+            "q path stalled: {lq} vs {le}"
+        );
+        let again =
+            train_store_host_q(&ds, &store, PrecisionSchedule::Fixed(8), 12, 8, 32, 0.05, 7);
+        assert_eq!(q.loss_curve, again.loss_curve, "not deterministic");
+        assert_eq!(q.final_model, again.final_model);
+        // a different seed draws different roundings below exactness
+        let other =
+            train_store_host_q(&ds, &store, PrecisionSchedule::Fixed(8), 4, 8, 32, 0.05, 8);
+        assert_ne!(q.final_model, other.final_model);
     }
 
     /// The DS host path is deterministic bit for bit and degenerates to

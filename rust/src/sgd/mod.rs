@@ -13,7 +13,7 @@ pub mod refetch;
 
 pub use driver::{
     train, train_packed_host, train_store_host, train_store_host_dequant, train_store_host_ds,
-    HostTrainResult, StoreBackend, TrainConfig, TrainResult,
+    train_store_host_q, HostTrainResult, StoreBackend, TrainConfig, TrainResult,
 };
 pub use modes::{Mode, ModelKind};
 

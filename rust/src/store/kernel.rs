@@ -2,7 +2,7 @@
 //! computing *in the weaved domain* (MLWeaving, arXiv 1903.03404) so the
 //! training hot loop never materializes an f32 row.
 //!
-//! Two layers:
+//! Three layers:
 //!
 //! * **Gather** — [`spread_word`] scatters one plane word into the `u16`
 //!   index outputs without a 64-iteration dependent loop: sparse words walk
@@ -21,17 +21,28 @@
 //!   ```
 //!
 //!   with `g[c] = m[c]·x[c]` precomputed once per SGD step ([`StepKernel`]).
-//!   Only the set bits of the p requested planes are touched; zero-scale
-//!   columns contribute exactly 0 through `g`. FLOPs per row ≈ popcount of
-//!   the touched planes plus one fused multiply-add per plane — versus
-//!   gather + per-column dequant + dot for the materializing path.
-//!
-//! Accumulation order is fixed (plane-major, then word, then ascending bit)
-//! and plane sums are carried in f64, so results are deterministic and
-//! within ~1e-7 relative of the dequantize-then-`tensor::dot` oracle (the
-//! property suite pins ≤ 1e-4). Exact bit-equality with the oracle is not
-//! possible — the two paths round in different summation orders — which is
-//! why `WeavedMatrix::dequantize_row_at` stays as the validation oracle.
+//!   `maskedsum` is **lane-parallel** (DESIGN.md §8): each plane word is
+//!   expanded into per-8-lane select masks and `g` is accumulated with
+//!   branch-free select-adds — a fixed, autovectorizable 64-lane schedule —
+//!   with a `trailing_zeros` walk below [`MASKED_SUM_SPARSE_BITS`] set
+//!   bits. The summation order is fixed either way, plane carries stay in
+//!   f64, so results remain deterministic and within the ≤ 1e-4 oracle
+//!   bound of the dequantize-then-`tensor::dot` path (exact bit-equality
+//!   with the oracle is impossible — different rounding schedules — which
+//!   is why `WeavedMatrix::dequantize_row_at` stays as the validation
+//!   oracle).
+//! * **Blocked batch kernels** — [`dot_rows_block`] / [`axpy_rows_block`]
+//!   (and the `_ds` twins) process a whole block of rows of ONE shard
+//!   against a single resident [`StepKernel`], amortizing `g` loads and
+//!   plane-pointer setup across the block, and running the axpy side
+//!   lane-parallel ([`select_add_word`]-style select-adds instead of the
+//!   per-set-bit walk). They are **bit-for-bit equal** to calling the
+//!   per-row kernels row by row in the same order (property-tested): the
+//!   dot side shares `masked_sum` verbatim, and the lane-parallel axpy
+//!   issues the identical `out[c] += wgt·m[c]` additions in the identical
+//!   per-column order — unset lanes contribute a masked `+0.0`, which is
+//!   f32-bit-preserving for the `+0.0`-initialized accumulators every
+//!   caller uses (DESIGN.md §8 spells out the −0.0 caveat).
 //!
 //! * **Stochastic (double-sampling) reads** — [`carry_mask_word`] turns the
 //!   *residual* planes (the b−p low planes a truncating reader discards)
@@ -57,7 +68,25 @@
 //!   early stop once all 64 comparisons are decided — so fused and
 //!   materializing DS readers given equal RNG states draw identical
 //!   samples (property-tested), and any DS path is deterministic in
-//!   (seed, store contents, visit order).
+//!   (seed, store contents, visit order). The blocked DS kernels consume
+//!   carries row-major in block order, exactly as the per-row kernels
+//!   called sequentially would.
+//!
+//! * **Quantized-step popcount fast path** — [`QuantStepKernel`]
+//!   stochastically rounds `g = m⊙x` into q sign/magnitude bit planes
+//!   once per step, collapsing `maskedsum(plane, ĝ)` to
+//!
+//!   ```text
+//!   step · Σ_u 2^(q−1−u) · [popcount(plane ∧ mag_u)
+//!                           − 2·popcount(plane ∧ mag_u ∧ sign)]
+//!   ```
+//!
+//!   — a pure AND+POPCNT integer inner loop with no f32 until the final
+//!   rescale ([`dot_row_q`]). The rounding is unbiased (E[ĝ] = g,
+//!   property-tested under a CLT budget), so E[dot_q] is the exact fused
+//!   dot; the trade is integer throughput for one stochastic-rounding
+//!   noise term per step. Opt-in (`--step-bits q` on the host CLI path;
+//!   off by default). Derivation and variance notes: DESIGN.md §8.
 
 use crate::rng::Rng;
 
@@ -80,59 +109,153 @@ const fn build_spread8() -> [[u16; 8]; 256] {
     t
 }
 
-/// Below this popcount a word is "sparse": walking set bits beats spreading
-/// every byte.
-const SPARSE_BITS: u32 = 8;
+/// Below this popcount [`spread_word`] walks set bits via `trailing_zeros`
+/// instead of spreading every byte through the LUT. The crossover is
+/// re-measured per popcount by the `sparse_crossover` section of
+/// `benches/fused_dot.rs`, which records both paths' timings in
+/// `BENCH_kernels.json` — the constant is pinned to data, not folklore.
+pub const SPARSE_BITS: u32 = 8;
+
+/// Below this popcount [`masked_sum`] walks set bits instead of running
+/// the 8-lane select-add over the whole word: the dense path always issues
+/// 64 lane-adds (vectorizable, no dependent chain), so very sparse words
+/// are cheaper on the walk. Re-measured by the same `sparse_crossover`
+/// bench section of `BENCH_kernels.json`.
+pub const MASKED_SUM_SPARSE_BITS: u32 = 4;
 
 /// OR bit `j` of `word` into `out[j] << shift` for every set bit, without a
 /// per-bit dependent loop. Bits at or beyond `out.len()` are ignored (tail
-/// words of a ragged row store them as 0 anyway).
+/// words of a ragged row store them as 0 anyway). Dispatches on popcount
+/// ([`SPARSE_BITS`]).
 #[inline]
 pub fn spread_word(word: u64, shift: u32, out: &mut [u16]) {
     if word == 0 {
         return;
     }
     if word.count_ones() <= SPARSE_BITS {
-        let mut m = word;
-        while m != 0 {
-            let j = m.trailing_zeros() as usize;
-            if j >= out.len() {
-                break;
-            }
-            out[j] |= 1 << shift;
-            m &= m - 1;
-        }
+        spread_word_sparse(word, shift, out);
     } else {
-        for (chunk, byte) in out.chunks_mut(8).zip(word.to_le_bytes()) {
-            if byte == 0 {
-                continue;
-            }
-            for (o, &b) in chunk.iter_mut().zip(&SPREAD8[byte as usize]) {
-                *o |= b << shift;
-            }
+        spread_word_dense(word, shift, out);
+    }
+}
+
+/// Sparse [`spread_word`] path: walk set bits via `trailing_zeros`.
+/// Exposed (with [`spread_word_dense`]) for the crossover bench.
+#[inline]
+pub fn spread_word_sparse(word: u64, shift: u32, out: &mut [u16]) {
+    let mut m = word;
+    while m != 0 {
+        let j = m.trailing_zeros() as usize;
+        if j >= out.len() {
+            break;
+        }
+        out[j] |= 1 << shift;
+        m &= m - 1;
+    }
+}
+
+/// Dense [`spread_word`] path: spread one byte at a time through the
+/// 256-entry LUT.
+#[inline]
+pub fn spread_word_dense(word: u64, shift: u32, out: &mut [u16]) {
+    for (chunk, byte) in out.chunks_mut(8).zip(word.to_le_bytes()) {
+        if byte == 0 {
+            continue;
+        }
+        for (o, &b) in chunk.iter_mut().zip(&SPREAD8[byte as usize]) {
+            *o |= b << shift;
         }
     }
 }
 
 /// Σ g[j] over the set bits of `word`. Bits beyond `g.len()` must be zero
-/// (guaranteed for weaved tail words). Two alternating accumulators break
-/// the f32 add-latency chain on dense planes (~32 set bits/word); the
-/// summation order stays fixed, so results are deterministic.
+/// (guaranteed for weaved tail words; `debug_assert`ed here). Dispatches on
+/// popcount: sparse words walk their set bits, dense words run the
+/// lane-parallel select-add ([`masked_sum_dense`]). Each path has a fixed
+/// summation order, and a given word always takes the same path, so
+/// results are deterministic.
 #[inline]
-fn masked_sum(mut word: u64, g: &[f32]) -> f32 {
-    let (mut acc0, mut acc1) = (0.0f32, 0.0f32);
+fn masked_sum(word: u64, g: &[f32]) -> f32 {
+    debug_assert!(
+        g.len() >= 64 || word >> g.len() == 0,
+        "plane word has set bits at or beyond lane {}: the weaved tail contract \
+         (bits beyond g.len() are zero) is violated",
+        g.len()
+    );
+    if word.count_ones() <= MASKED_SUM_SPARSE_BITS {
+        masked_sum_sparse(word, g)
+    } else {
+        masked_sum_dense(word, g)
+    }
+}
+
+/// Sparse [`masked_sum`] path: walk set bits (dependent `trailing_zeros`
+/// chain, one add per set bit). Exposed for the crossover bench.
+#[inline]
+pub fn masked_sum_sparse(mut word: u64, g: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
     while word != 0 {
-        let j = word.trailing_zeros() as usize;
-        acc0 += g[j];
-        word &= word - 1;
-        if word == 0 {
-            break;
-        }
-        let j = word.trailing_zeros() as usize;
-        acc1 += g[j];
+        acc += g[word.trailing_zeros() as usize];
         word &= word - 1;
     }
-    acc0 + acc1
+    acc
+}
+
+/// Dense [`masked_sum`] path: expand the word into per-8-lane select masks
+/// and accumulate `g` with branch-free select-adds — eight independent
+/// lane accumulators (lane j sums `g[8c+j]`), no data-dependent branches
+/// or index chains, so the loop autovectorizes. The final reduction order
+/// is fixed. Exposed for the crossover bench.
+#[inline]
+pub fn masked_sum_dense(word: u64, g: &[f32]) -> f32 {
+    let g = &g[..g.len().min(64)];
+    let mut acc = [0.0f32; 8];
+    let mut w = word;
+    let mut chunks = g.chunks_exact(8);
+    for c8 in &mut chunks {
+        for (j, (a, &gv)) in acc.iter_mut().zip(c8).enumerate() {
+            let keep = 0u32.wrapping_sub(((w >> j) & 1) as u32);
+            *a += f32::from_bits(gv.to_bits() & keep);
+        }
+        w >>= 8;
+    }
+    for (j, &gv) in chunks.remainder().iter().enumerate() {
+        let keep = 0u32.wrapping_sub(((w >> j) & 1) as u32);
+        acc[j] += f32::from_bits(gv.to_bits() & keep);
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// `out[j] += select(bit j of word, wgt·m[j], +0.0)` over the ≤ 64 live
+/// lanes — the lane-parallel write side of the blocked axpy kernels. For
+/// every SET bit this is the exact `out[j] += wgt·m[j]` the per-row
+/// bit-walk issues; unset lanes add a masked `+0.0`, which never changes
+/// an f32 accumulation that started from `+0.0` (adding ±0.0 cannot
+/// produce −0.0, and v + 0.0 == v bit-for-bit for every other v).
+#[inline]
+fn select_add_word(word: u64, wgt: f32, m: &[f32], out: &mut [f32]) {
+    let lanes = m.len().min(out.len()).min(64);
+    debug_assert!(
+        lanes >= 64 || word >> lanes == 0,
+        "plane word has set bits at or beyond lane {lanes}: the weaved tail contract \
+         (bits beyond the live columns are zero) is violated"
+    );
+    let m = &m[..lanes];
+    let out = &mut out[..lanes];
+    let mut w = word;
+    let mut oc = out.chunks_exact_mut(8);
+    let mut mc = m.chunks_exact(8);
+    for (o8, m8) in (&mut oc).zip(&mut mc) {
+        for (j, (o, &mv)) in o8.iter_mut().zip(m8).enumerate() {
+            let keep = 0u32.wrapping_sub(((w >> j) & 1) as u32);
+            *o += f32::from_bits((wgt * mv).to_bits() & keep);
+        }
+        w >>= 8;
+    }
+    for (j, (o, &mv)) in oc.into_remainder().iter_mut().zip(mc.remainder()).enumerate() {
+        let keep = 0u32.wrapping_sub(((w >> j) & 1) as u32);
+        *o += f32::from_bits((wgt * mv).to_bits() & keep);
+    }
 }
 
 /// Per-SGD-step context for the fused kernels: `g = m ⊙ x` and its sum,
@@ -170,14 +293,11 @@ impl StepKernel {
     }
 }
 
-/// Fused weaved-domain dot product: `dot(dequant_p(row r), x)` where `k`
-/// was refreshed with (`scale.m`, `x`). Touches only the p requested bit
-/// planes; never materializes indices or an f32 row.
-pub fn dot_row(w: &WeavedMatrix, r: usize, p: u32, k: &StepKernel) -> f32 {
-    assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
-    assert_eq!(k.g.len(), w.cols, "StepKernel built for {} cols, store has {}", k.g.len(), w.cols);
-    let planes = w.row_planes(r);
-    let wpp = w.words_per_plane();
+/// Shared core of [`dot_row`] and [`dot_rows_block`]: the fused dot over
+/// one row's plane slice. Plane-major, then word, lane order inside
+/// `masked_sum`; per-plane sums carried in f64.
+#[inline]
+fn dot_planes(planes: &[u64], wpp: usize, p: u32, k: &StepKernel) -> f32 {
     let inv_s2 = 2.0 / ((1u32 << p) - 1) as f32;
     let mut acc = 0.0f64;
     for t in 0..p as usize {
@@ -191,6 +311,30 @@ pub fn dot_row(w: &WeavedMatrix, r: usize, p: u32, k: &StepKernel) -> f32 {
         acc += weight * psum;
     }
     (inv_s2 as f64 * acc - k.sum_g as f64) as f32
+}
+
+/// Fused weaved-domain dot product: `dot(dequant_p(row r), x)` where `k`
+/// was refreshed with (`scale.m`, `x`). Touches only the p requested bit
+/// planes; never materializes indices or an f32 row.
+pub fn dot_row(w: &WeavedMatrix, r: usize, p: u32, k: &StepKernel) -> f32 {
+    assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
+    assert_eq!(k.g.len(), w.cols, "StepKernel built for {} cols, store has {}", k.g.len(), w.cols);
+    dot_planes(w.row_planes(r), w.words_per_plane(), p, k)
+}
+
+/// Blocked fused dots: `out[i] = dot(dequant_p(rows[i]), x)` for a block
+/// of rows of ONE shard, against a single resident [`StepKernel`] —
+/// plane-pointer setup and `g` residency are amortized across the block.
+/// Bit-for-bit equal to calling [`dot_row`] per row in order (the inner
+/// core is shared).
+pub fn dot_rows_block(w: &WeavedMatrix, rows: &[usize], p: u32, k: &StepKernel, out: &mut [f32]) {
+    assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
+    assert_eq!(k.g.len(), w.cols, "StepKernel built for {} cols, store has {}", k.g.len(), w.cols);
+    assert_eq!(out.len(), rows.len(), "one dot output per row");
+    let wpp = w.words_per_plane();
+    for (o, &r) in out.iter_mut().zip(rows) {
+        *o = dot_planes(w.row_planes(r), wpp, p, k);
+    }
 }
 
 /// Draw the stochastic-carry mask for word-column `wi` of a row's planes:
@@ -226,6 +370,39 @@ pub fn carry_mask_word(
     gt
 }
 
+/// Shared core of [`dot_row_ds`] and [`dot_rows_block_ds`]: one unbiased
+/// p-plane draw of the row, dotted with `x` straight from the planes.
+/// Word-major so the carry randomness order matches every other DS reader.
+#[inline]
+fn dot_planes_ds(
+    planes: &[u64],
+    wpp: usize,
+    bits: u32,
+    s: u32,
+    p: u32,
+    k: &StepKernel,
+    rng: &mut Rng,
+) -> f32 {
+    let bits_us = bits as usize;
+    let inv_s2 = 2.0 / s as f32;
+    let carry_w = (1u64 << (bits_us - p as usize)) as f64;
+    let mut acc = 0.0f64;
+    for wi in 0..wpp {
+        let g = &k.g[wi * 64..];
+        for t in 0..p as usize {
+            let word = planes[t * wpp + wi];
+            if word != 0 {
+                acc += (1u64 << (bits_us - 1 - t)) as f64 * masked_sum(word, g) as f64;
+            }
+        }
+        let carry = carry_mask_word(planes, wpp, bits, p, wi, rng);
+        if carry != 0 {
+            acc += carry_w * masked_sum(carry, g) as f64;
+        }
+    }
+    (inv_s2 as f64 * acc - k.sum_g as f64) as f32
+}
+
 /// Fused stochastic (double-sampling) dot product: one unbiased p-plane
 /// draw of row `r`, dotted with `x` straight from the bit planes. The
 /// draw's fine-grid index is `Σ_{t<p} 2^(b−1−t)·bit_t + 2^(b−p)·C`, so
@@ -236,26 +413,30 @@ pub fn carry_mask_word(
 pub fn dot_row_ds(w: &WeavedMatrix, r: usize, p: u32, k: &StepKernel, rng: &mut Rng) -> f32 {
     assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
     assert_eq!(k.g.len(), w.cols, "StepKernel built for {} cols, store has {}", k.g.len(), w.cols);
-    let planes = w.row_planes(r);
+    dot_planes_ds(w.row_planes(r), w.words_per_plane(), w.bits, w.s, p, k, rng)
+}
+
+/// Blocked stochastic dots: `out[i]` gets one unbiased p-plane draw of
+/// `rows[i]` dotted with `x`. Rows are drawn in block order, each with the
+/// standard word-major carry order — the RNG consumption is *identical* to
+/// calling [`dot_row_ds`] per row in sequence on the same stream
+/// (property-tested), so blocked and per-row DS paths draw the same
+/// samples from equal states.
+pub fn dot_rows_block_ds(
+    w: &WeavedMatrix,
+    rows: &[usize],
+    p: u32,
+    k: &StepKernel,
+    rng: &mut Rng,
+    out: &mut [f32],
+) {
+    assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
+    assert_eq!(k.g.len(), w.cols, "StepKernel built for {} cols, store has {}", k.g.len(), w.cols);
+    assert_eq!(out.len(), rows.len(), "one dot output per row");
     let wpp = w.words_per_plane();
-    let bits = w.bits as usize;
-    let inv_s2 = 2.0 / w.s as f32;
-    let carry_w = (1u64 << (bits - p as usize)) as f64;
-    let mut acc = 0.0f64;
-    for wi in 0..wpp {
-        let g = &k.g[wi * 64..];
-        for t in 0..p as usize {
-            let word = planes[t * wpp + wi];
-            if word != 0 {
-                acc += (1u64 << (bits - 1 - t)) as f64 * masked_sum(word, g) as f64;
-            }
-        }
-        let carry = carry_mask_word(planes, wpp, w.bits, p, wi, rng);
-        if carry != 0 {
-            acc += carry_w * masked_sum(carry, g) as f64;
-        }
+    for (o, &r) in out.iter_mut().zip(rows) {
+        *o = dot_planes_ds(w.row_planes(r), wpp, w.bits, w.s, p, k, rng);
     }
-    (inv_s2 as f64 * acc - k.sum_g as f64) as f32
 }
 
 /// Plane + carry part of the stochastic axpy: draw one unbiased p-plane
@@ -299,6 +480,62 @@ pub fn axpy_row_planes_ds(
     }
 }
 
+/// Lane-parallel single-row core of [`axpy_rows_block_ds`]: identical
+/// per-column additions and identical carry-randomness order to
+/// [`axpy_row_planes_ds`], with the bit-walk replaced by select-adds.
+#[inline]
+fn axpy_row_planes_ds_lanes(
+    w: &WeavedMatrix,
+    r: usize,
+    p: u32,
+    coef: f32,
+    rng: &mut Rng,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), w.cols);
+    let planes = w.row_planes(r);
+    let wpp = w.words_per_plane();
+    let bits = w.bits as usize;
+    let m = &w.scale.m;
+    let inv_s2 = 2.0 / w.s as f32;
+    let carry_wgt = coef * inv_s2 * (1u64 << (bits - p as usize)) as f32;
+    for wi in 0..wpp {
+        let c0 = wi * 64;
+        for t in 0..p as usize {
+            let wgt = coef * inv_s2 * (1u64 << (bits - 1 - t)) as f32;
+            let word = planes[t * wpp + wi];
+            if word != 0 {
+                select_add_word(word, wgt, &m[c0..], &mut out[c0..]);
+            }
+        }
+        let carry = carry_mask_word(planes, wpp, w.bits, p, wi, rng);
+        if carry != 0 {
+            select_add_word(carry, carry_wgt, &m[c0..], &mut out[c0..]);
+        }
+    }
+}
+
+/// Blocked stochastic axpys: for each row i (in block order), draw one
+/// unbiased p-plane sample and add `coefs[i] · dequant_ds(rows[i])[c]`
+/// into `out` — plane part only, affine term deferred as in
+/// [`axpy_row_planes_ds`]. Bit-for-bit equal to, and RNG-identical with,
+/// calling [`axpy_row_planes_ds`] per row in order on the same stream.
+pub fn axpy_rows_block_ds(
+    w: &WeavedMatrix,
+    rows: &[usize],
+    p: u32,
+    coefs: &[f32],
+    rng: &mut Rng,
+    out: &mut [f32],
+) {
+    assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
+    assert_eq!(rows.len(), coefs.len(), "one coefficient per row");
+    debug_assert_eq!(out.len(), w.cols);
+    for (&r, &coef) in rows.iter().zip(coefs) {
+        axpy_row_planes_ds_lanes(w, r, p, coef, rng, out);
+    }
+}
+
 /// Plane part of the fused axpy: for every set bit of the p planes of row
 /// `r`, add `coef · 2^(p−1−t) · (2/s_p) · m[c]` into `sink(c, delta)`.
 #[inline]
@@ -329,6 +566,32 @@ pub fn axpy_row_planes(w: &WeavedMatrix, r: usize, p: u32, coef: f32, out: &mut 
     plane_walk(w, r, p, coef, |c, d| out[c] += d);
 }
 
+/// Blocked fused axpys: for each row i (in block order), add
+/// `coefs[i] · dequant_p(rows[i])[c]` into `out` — plane part only, the
+/// shared affine term is deferred to one [`axpy_affine`] pass. The write
+/// side is lane-parallel ([`select_add_word`]), and the result is
+/// bit-for-bit equal to calling [`axpy_row_planes`] per row in order (same
+/// per-column addition sequence; unset lanes add a masked `+0.0`).
+pub fn axpy_rows_block(w: &WeavedMatrix, rows: &[usize], p: u32, coefs: &[f32], out: &mut [f32]) {
+    assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
+    assert_eq!(rows.len(), coefs.len(), "one coefficient per row");
+    debug_assert_eq!(out.len(), w.cols);
+    let wpp = w.words_per_plane();
+    let m = &w.scale.m;
+    let inv_s2 = 2.0 / ((1u32 << p) - 1) as f32;
+    for (&r, &coef) in rows.iter().zip(coefs) {
+        let planes = w.row_planes(r);
+        for t in 0..p as usize {
+            let wgt = coef * inv_s2 * (1u64 << (p as usize - 1 - t)) as f32;
+            for (wi, &word) in planes[t * wpp..(t + 1) * wpp].iter().enumerate() {
+                if word != 0 {
+                    select_add_word(word, wgt, &m[wi * 64..], &mut out[wi * 64..]);
+                }
+            }
+        }
+    }
+}
+
 /// The affine term of the dequant identity: `out[c] -= coef_sum · m[c]`.
 /// For a batch, `coef_sum` is the sum of the per-row axpy coefficients.
 pub fn axpy_affine(coef_sum: f32, m: &[f32], out: &mut [f32]) {
@@ -342,6 +605,170 @@ pub fn axpy_affine(coef_sum: f32, m: &[f32], out: &mut [f32]) {
 pub fn axpy_row(w: &WeavedMatrix, r: usize, p: u32, coef: f32, out: &mut [f32]) {
     axpy_row_planes(w, r, p, coef, out);
     axpy_affine(coef, &w.scale.m, out);
+}
+
+/// Per-step context for the **popcount fast path**: one stochastic
+/// sign/magnitude rounding of `g = m⊙x` onto a q-bit magnitude grid,
+/// stored as bit planes so `maskedsum(plane, ĝ)` collapses to AND+POPCNT
+/// ([`QuantStepKernel::masked_count`], used by [`dot_row_q`]).
+///
+/// The grid: `ĝ[c] = ±k_c·step` with `step = max|g| / (2^q − 1)` and
+/// `k_c ∈ 0..=2^q−1` drawn by stochastic rounding of `|g[c]|/step`
+/// (floor plus a Bernoulli on the fraction), so `E[ĝ[c]] = g[c]` exactly
+/// and E of every popcount dot is the exact fused dot (DESIGN.md §8).
+/// One refresh consumes exactly `cols` RNG draws, so popcount runs replay
+/// deterministically from their seed.
+#[derive(Clone, Debug)]
+pub struct QuantStepKernel {
+    q: u32,
+    cols: usize,
+    wpp: usize,
+    /// Magnitude grid step `max|g| / (2^q − 1)`; 0 when `g == 0`.
+    step: f32,
+    /// Sign mask per word-column: bit c set ⇔ ĝ[c] < 0.
+    sign: Vec<u64>,
+    /// q × wpp magnitude planes, MSB first: plane u holds bit q−1−u of k.
+    mag: Vec<u64>,
+    /// Σ_c ĝ[c], computed exactly from the integer k's.
+    sum_g: f32,
+}
+
+impl QuantStepKernel {
+    pub fn new(cols: usize, q: u32) -> Self {
+        assert!((1..=16).contains(&q), "step bits must be 1..=16, got {q}");
+        let wpp = cols.div_ceil(64);
+        QuantStepKernel {
+            q,
+            cols,
+            wpp,
+            step: 0.0,
+            sign: vec![0; wpp],
+            mag: vec![0; q as usize * wpp],
+            sum_g: 0.0,
+        }
+    }
+
+    pub fn q(&self) -> u32 {
+        self.q
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn sum_g(&self) -> f32 {
+        self.sum_g
+    }
+
+    /// Re-draw the q-bit rounding of `g = m⊙x` for the current model.
+    /// Unbiased: `E[ĝ] = g` componentwise (the CLT harness in
+    /// tests/ds_statistics.rs pins it). Consumes exactly `m.len()` draws.
+    pub fn refresh(&mut self, m: &[f32], x: &[f32], rng: &mut Rng) {
+        assert_eq!(m.len(), self.cols, "kernel built for {} cols, got {}", self.cols, m.len());
+        assert_eq!(x.len(), self.cols, "kernel built for {} cols, got {}", self.cols, x.len());
+        self.sign.fill(0);
+        self.mag.fill(0);
+        let mut gmax = 0.0f32;
+        for (&mc, &xc) in m.iter().zip(x) {
+            gmax = gmax.max((mc * xc).abs());
+        }
+        if gmax == 0.0 {
+            // all-zero g (e.g. the x = 0 first step): exact, no RNG needed
+            // beyond the per-column draws we still consume for replayability
+            self.step = 0.0;
+            self.sum_g = 0.0;
+            for _ in 0..self.cols {
+                rng.f32();
+            }
+            return;
+        }
+        let smax = (1u32 << self.q) - 1;
+        let step = gmax / smax as f32;
+        self.step = step;
+        let q = self.q as usize;
+        let mut sum_k = 0i64;
+        for (c, (&mc, &xc)) in m.iter().zip(x).enumerate() {
+            let g = mc * xc;
+            let u = g.abs() / step;
+            let fl = u.floor();
+            let draw = rng.f32();
+            let k = ((fl as u32) + u32::from(draw < u - fl)).min(smax);
+            if k == 0 {
+                continue;
+            }
+            let (wi, j) = (c / 64, c % 64);
+            if g < 0.0 {
+                self.sign[wi] |= 1u64 << j;
+                sum_k -= k as i64;
+            } else {
+                sum_k += k as i64;
+            }
+            for (u_t, plane) in self.mag.chunks_mut(self.wpp).enumerate() {
+                if (k >> (q - 1 - u_t)) & 1 != 0 {
+                    plane[wi] |= 1u64 << j;
+                }
+            }
+        }
+        self.sum_g = (sum_k as f64 * step as f64) as f32;
+    }
+
+    /// `Σ_{c ∈ word} ĝ[c]` in integer form — the popcount identity:
+    /// `Σ_u 2^(q−1−u)·[pc(word ∧ mag_u) − 2·pc(word ∧ mag_u ∧ sign)]`,
+    /// to be rescaled by `step` once per dot. Pure AND+POPCNT+shift.
+    /// Tail bits are structurally inert: the magnitude planes store 0
+    /// beyond the live columns.
+    #[inline]
+    fn masked_count(&self, word: u64, wi: usize) -> i64 {
+        let s = self.sign[wi];
+        let mut acc = 0i64;
+        for (u, plane) in self.mag.chunks(self.wpp).enumerate() {
+            let mw = word & plane[wi];
+            let signed = mw.count_ones() as i64 - 2 * (mw & s).count_ones() as i64;
+            acc += signed << (self.q as usize - 1 - u);
+        }
+        acc
+    }
+}
+
+/// Popcount-path fused dot: `dot(dequant_p(row r), ĝ-model)` with the
+/// q-bit rounded step kernel — the inner loop is integer AND+POPCNT only
+/// (p plane words × q magnitude planes per word); floats appear once, in
+/// the final rescale. Unbiased for [`dot_row`] over the rounding draw:
+/// `E[dot_row_q] = dot_row` with the exact `g`.
+pub fn dot_row_q(w: &WeavedMatrix, r: usize, p: u32, qk: &QuantStepKernel) -> f32 {
+    assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
+    assert_eq!(qk.cols, w.cols, "QuantStepKernel built for {} cols, store has {}", qk.cols, w.cols);
+    let planes = w.row_planes(r);
+    let wpp = w.words_per_plane();
+    debug_assert_eq!(wpp, qk.wpp);
+    let inv_s2 = 2.0 / ((1u32 << p) - 1) as f64;
+    let mut acc = 0i64;
+    for t in 0..p as usize {
+        let mut psum = 0i64;
+        for (wi, &word) in planes[t * wpp..(t + 1) * wpp].iter().enumerate() {
+            if word != 0 {
+                psum += qk.masked_count(word, wi);
+            }
+        }
+        acc += psum << (p as usize - 1 - t);
+    }
+    (inv_s2 * acc as f64 * qk.step as f64 - qk.sum_g as f64) as f32
+}
+
+/// Blocked popcount dots: `out[i] = dot_row_q(rows[i])` for a block of
+/// rows of one shard against a single resident [`QuantStepKernel`].
+/// Bit-for-bit equal to calling [`dot_row_q`] per row in order.
+pub fn dot_rows_block_q(
+    w: &WeavedMatrix,
+    rows: &[usize],
+    p: u32,
+    qk: &QuantStepKernel,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), rows.len(), "one dot output per row");
+    for (o, &r) in out.iter_mut().zip(rows) {
+        *o = dot_row_q(w, r, p, qk);
+    }
 }
 
 #[cfg(test)]
@@ -433,6 +860,104 @@ mod tests {
         }
     }
 
+    /// Tentpole pin: the blocked batch kernels are BIT-FOR-BIT equal to
+    /// the per-row kernels called in the same order, across the ragged
+    /// shapes the ISSUE names and every width 1..=16.
+    #[test]
+    fn blocked_kernels_bit_identical_to_per_row() {
+        for &cols in &[63usize, 64, 65, 130] {
+            for bits in 1..=16u32 {
+                let (_, w) = mk(7, cols, bits, 41 + bits as u64);
+                let mut rng = Rng::new(5 + cols as u64);
+                let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+                let mut k = StepKernel::new(cols);
+                k.refresh(&w.scale.m, &x);
+                let rows: Vec<usize> = vec![6, 0, 3, 3, 5, 1];
+                let coefs: Vec<f32> = (0..rows.len()).map(|_| rng.normal()).collect();
+                for p in [1, bits / 2 + 1, bits] {
+                    // dots
+                    let mut blocked = vec![0.0f32; rows.len()];
+                    dot_rows_block(&w, &rows, p, &k, &mut blocked);
+                    for (i, &r) in rows.iter().enumerate() {
+                        assert_eq!(
+                            blocked[i].to_bits(),
+                            dot_row(&w, r, p, &k).to_bits(),
+                            "dot cols={cols} bits={bits} p={p} i={i}"
+                        );
+                    }
+                    // axpys (plane part)
+                    let mut gb = vec![0.0f32; cols];
+                    let mut gp = vec![0.0f32; cols];
+                    axpy_rows_block(&w, &rows, p, &coefs, &mut gb);
+                    for (&r, &coef) in rows.iter().zip(&coefs) {
+                        axpy_row_planes(&w, r, p, coef, &mut gp);
+                    }
+                    for c in 0..cols {
+                        assert_eq!(
+                            gb[c].to_bits(),
+                            gp[c].to_bits(),
+                            "axpy cols={cols} bits={bits} p={p} c={c}: {} vs {}",
+                            gb[c],
+                            gp[c]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// DS tentpole pin: the blocked DS kernels consume carry randomness
+    /// exactly like the per-row kernels called in sequence — equal RNG
+    /// states draw identical samples, results are bit-for-bit equal, and
+    /// the streams end in the same state.
+    #[test]
+    fn blocked_ds_kernels_draw_identical_samples() {
+        for &cols in &[63usize, 65, 130] {
+            for bits in [2u32, 5, 8, 16] {
+                let (_, w) = mk(6, cols, bits, 17 + bits as u64);
+                let mut rng = Rng::new(23 + cols as u64);
+                let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+                let mut k = StepKernel::new(cols);
+                k.refresh(&w.scale.m, &x);
+                let rows: Vec<usize> = vec![5, 2, 2, 0, 4];
+                let coefs: Vec<f32> = (0..rows.len()).map(|_| rng.normal()).collect();
+                for p in [1, bits] {
+                    let seed = 900 + (p as u64) * 7 + cols as u64;
+                    // dots: blocked vs sequential per-row on twin streams
+                    let mut ra = Rng::new(seed);
+                    let mut rb = Rng::new(seed);
+                    let mut blocked = vec![0.0f32; rows.len()];
+                    dot_rows_block_ds(&w, &rows, p, &k, &mut ra, &mut blocked);
+                    for (i, &r) in rows.iter().enumerate() {
+                        assert_eq!(
+                            blocked[i].to_bits(),
+                            dot_row_ds(&w, r, p, &k, &mut rb).to_bits(),
+                            "ds dot cols={cols} bits={bits} p={p} i={i}"
+                        );
+                    }
+                    assert_eq!(ra.next_u64(), rb.next_u64(), "dot streams diverged");
+                    // axpys: same contract
+                    let mut ra = Rng::new(seed ^ 1);
+                    let mut rb = Rng::new(seed ^ 1);
+                    let mut gb = vec![0.0f32; cols];
+                    let mut gp = vec![0.0f32; cols];
+                    axpy_rows_block_ds(&w, &rows, p, &coefs, &mut ra, &mut gb);
+                    for (&r, &coef) in rows.iter().zip(&coefs) {
+                        axpy_row_planes_ds(&w, r, p, coef, &mut rb, &mut gp);
+                    }
+                    for c in 0..cols {
+                        assert_eq!(
+                            gb[c].to_bits(),
+                            gp[c].to_bits(),
+                            "ds axpy cols={cols} bits={bits} p={p} c={c}"
+                        );
+                    }
+                    assert_eq!(ra.next_u64(), rb.next_u64(), "axpy streams diverged");
+                }
+            }
+        }
+    }
+
     /// Zero-scale columns: dot ignores them, axpy leaves them untouched.
     #[test]
     fn zero_scale_columns_are_inert() {
@@ -448,6 +973,10 @@ mod tests {
             axpy_row(&w, r, 8, 1.5, &mut grad);
         }
         assert_eq!(grad[1], 0.0);
+        // the blocked write side too: masked +0.0 pads must not leak
+        let mut gb = vec![0.0f32; 10];
+        axpy_rows_block(&w, &[0, 1, 2, 3], 8, &[1.5, -0.5, 2.0, -1.0], &mut gb);
+        assert_eq!(gb[1], 0.0);
     }
 
     /// spread_word: LUT (dense) and trailing_zeros (sparse) paths agree
@@ -469,6 +998,65 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// masked_sum: the sparse walk and the lane-parallel dense path agree
+    /// with a scalar f64 reference within rounding, for full and ragged
+    /// lane counts, across the popcount range.
+    #[test]
+    fn masked_sum_paths_match_reference() {
+        let mut rng = Rng::new(29);
+        for lanes in [64usize, 63, 17, 9, 8, 3, 1] {
+            let g: Vec<f32> = (0..lanes).map(|_| rng.normal()).collect();
+            for _ in 0..40 {
+                let dense = rng.next_u64();
+                let sparse = dense & rng.next_u64() & rng.next_u64() & rng.next_u64();
+                for word in [dense, sparse, 0, u64::MAX] {
+                    let masked =
+                        if lanes == 64 { word } else { word & ((1u64 << lanes) - 1) };
+                    let want: f64 = (0..lanes)
+                        .filter(|&j| (masked >> j) & 1 == 1)
+                        .map(|j| g[j] as f64)
+                        .sum();
+                    let mag: f64 = (0..lanes)
+                        .filter(|&j| (masked >> j) & 1 == 1)
+                        .map(|j| g[j].abs() as f64)
+                        .sum();
+                    for got in [masked_sum_sparse(masked, &g), masked_sum_dense(masked, &g)] {
+                        assert!(
+                            (got as f64 - want).abs() <= 1e-5 * (1.0 + mag),
+                            "lanes={lanes} word={masked:#x}: {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Satellite regression: a deliberately dirty tail word (set bits at
+    /// or beyond the live columns) trips the masked_sum tail guard in
+    /// debug builds instead of silently corrupting the dot.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "tail contract")]
+    fn dirty_tail_word_trips_masked_sum_guard() {
+        let (_, mut w) = mk(2, 65, 4, 31);
+        w.poison_tail_bit_for_test(0);
+        let x = vec![1.0f32; 65];
+        let mut k = StepKernel::new(65);
+        k.refresh(&w.scale.m, &x);
+        let _ = dot_row(&w, 0, 4, &k);
+    }
+
+    /// Same guard on the lane-parallel axpy write side.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "tail contract")]
+    fn dirty_tail_word_trips_select_add_guard() {
+        let (_, mut w) = mk(2, 65, 4, 31);
+        w.poison_tail_bit_for_test(0);
+        let mut out = vec![0.0f32; 65];
+        axpy_rows_block(&w, &[0], 4, &[1.0], &mut out);
     }
 
     /// The carry mask is exactly Bernoulli(residual / 2^(b−p)): degenerate
@@ -601,5 +1189,82 @@ mod tests {
         for r in 0..8 {
             assert_eq!(dot_row(&w, r, 5, &k).to_bits(), dot_row(&w, r, 5, &k).to_bits());
         }
+    }
+
+    /// Popcount path at high q: the rounding noise is ≤ step per column,
+    /// so dot_row_q tracks the exact fused dot tightly; zero-scale columns
+    /// and the ragged shapes stay correct. (Unbiasedness at low q is the
+    /// CLT harness in tests/ds_statistics.rs.)
+    #[test]
+    fn popcount_dot_tracks_exact_dot_at_high_q() {
+        for &cols in &[63usize, 64, 65, 130] {
+            for bits in [1u32, 5, 8, 16] {
+                let (_, w) = mk(5, cols, bits, 53 + bits as u64);
+                let mut rng = Rng::new(7 + cols as u64);
+                let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+                let mut k = StepKernel::new(cols);
+                k.refresh(&w.scale.m, &x);
+                let mut qk = QuantStepKernel::new(cols, 16);
+                qk.refresh(&w.scale.m, &x, &mut rng);
+                // the rounded step sum is within cols·step of the exact one
+                let gmax = k.g().iter().fold(0.0f32, |a, &g| a.max(g.abs()));
+                let step = gmax / 65535.0;
+                assert!(
+                    (qk.sum_g() - k.sum_g()).abs() <= cols as f32 * step + 1e-6,
+                    "cols={cols} bits={bits}: Σĝ {} vs Σg {}",
+                    qk.sum_g(),
+                    k.sum_g()
+                );
+                for p in [1, bits] {
+                    for r in 0..5 {
+                        let exact = dot_row(&w, r, p, &k) as f64;
+                        let got = dot_row_q(&w, r, p, &qk) as f64;
+                        // per-column rounding error ≤ step, dotted against
+                        // dequant values in [−m, m]: budget Σ_c m_c · step
+                        let budget: f64 =
+                            w.scale.m.iter().map(|&mc| (mc * step) as f64).sum::<f64>() + 1e-5;
+                        assert!(
+                            (got - exact).abs() <= 4.0 * budget + 1e-4 * exact.abs(),
+                            "cols={cols} bits={bits} p={p} r={r}: {got} vs {exact}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Popcount path degenerate cases: the all-zero model (first SGD step)
+    /// is exact, the blocked form is bit-identical to the per-row form,
+    /// and refreshes replay bit-for-bit from equal RNG states.
+    #[test]
+    fn popcount_kernel_degenerate_and_blocked() {
+        let (_, w) = mk(6, 100, 8, 61);
+        // x = 0 → g = 0 → every dot is exactly 0 (no NaN from step = 0)
+        let mut qk = QuantStepKernel::new(100, 4);
+        qk.refresh(&w.scale.m, &[0.0f32; 100], &mut Rng::new(3));
+        for r in 0..6 {
+            assert_eq!(dot_row_q(&w, r, 4, &qk), 0.0, "r={r}");
+        }
+        // blocked == per-row, and replay from equal states is bit-exact
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..100).map(|_| rng.normal()).collect();
+        let mut qa = QuantStepKernel::new(100, 4);
+        let mut qb = QuantStepKernel::new(100, 4);
+        qa.refresh(&w.scale.m, &x, &mut Rng::new(17));
+        qb.refresh(&w.scale.m, &x, &mut Rng::new(17));
+        let rows: Vec<usize> = vec![5, 1, 1, 0, 3];
+        let mut blocked = vec![0.0f32; rows.len()];
+        dot_rows_block_q(&w, &rows, 6, &qa, &mut blocked);
+        for (i, &r) in rows.iter().enumerate() {
+            assert_eq!(blocked[i].to_bits(), dot_row_q(&w, r, 6, &qb).to_bits(), "i={i}");
+        }
+        // a refresh consumes exactly cols draws: twin streams stay aligned
+        let mut ra = Rng::new(23);
+        let mut rb = Rng::new(23);
+        qa.refresh(&w.scale.m, &x, &mut ra);
+        for _ in 0..100 {
+            rb.f32();
+        }
+        assert_eq!(ra.next_u64(), rb.next_u64(), "refresh RNG budget drifted");
     }
 }

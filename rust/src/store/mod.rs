@@ -20,12 +20,17 @@
 //! * [`kernel`] — word-parallel fused kernels computing dot products and
 //!   gradient accumulations *in the weaved domain* (no f32 row
 //!   materialization); [`StepKernel`] holds the per-step `g = m ⊙ x`
-//!   precompute. Reads come in two flavors: deterministic top-p
+//!   precompute. The dot side runs a lane-parallel select-add masked sum,
+//!   and multi-row **blocked** kernels process a whole shard visit against
+//!   one resident kernel, bit-for-bit equal to the per-row kernels
+//!   (DESIGN.md §8). Reads come in two flavors: deterministic top-p
 //!   *truncation* (biased below the stored width) and *stochastic* draws
 //!   whose Bernoulli carry is sourced from the residual planes — exactly
 //!   unbiased for the stored value at any p, serving both independent
 //!   draws of the paper's §2.2 double-sampled gradient from the single
-//!   stored copy (DESIGN.md §5).
+//!   stored copy (DESIGN.md §5). An opt-in popcount fast path
+//!   ([`QuantStepKernel`]) stochastically rounds `g` itself onto q bit
+//!   planes so the dot's inner loop is pure integer AND+POPCNT.
 //!
 //! Consumers: `sgd::driver` (store-backed training path, selectable via
 //! `TrainConfig::store`; the host twins run the fused truncating and
@@ -38,7 +43,7 @@ pub mod precision_schedule;
 pub mod shard;
 pub mod weave;
 
-pub use kernel::StepKernel;
+pub use kernel::{QuantStepKernel, StepKernel};
 pub use precision_schedule::{PrecisionSchedule, ScheduleState};
 pub use shard::{MinibatchIter, ShardedStore};
 pub use weave::WeavedMatrix;

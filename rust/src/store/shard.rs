@@ -25,12 +25,19 @@ use crate::quant::scaling::ColumnScale;
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
-use super::kernel::{self, StepKernel};
+use super::kernel::{self, QuantStepKernel, StepKernel};
 use super::weave::WeavedMatrix;
 
 /// Rows per shard are rounded up to this so shard payloads are whole
 /// cache lines (8 rows × ≥8 B/row-plane = ≥64 B).
 const SHARD_ROW_ALIGN: usize = 8;
+
+/// Largest block the batch kernels hand to one [`kernel::dot_rows_block`]
+/// / [`kernel::axpy_rows_block`] call: shard runs longer than this are
+/// emitted in `BLOCK_ROWS` chunks, so every batch entry point works out of
+/// fixed stack scratch — the hot loop allocates nothing at any batch size.
+/// Chunking preserves row order, so results stay bit-identical.
+const BLOCK_ROWS: usize = 256;
 
 /// A row-sharded, bit-weaved, any-precision sample store.
 #[derive(Debug)]
@@ -207,46 +214,90 @@ impl ShardedStore {
         kernel::dot_row(shard, local, p, k)
     }
 
-    /// Visit `rows` grouped by shard — each shard visited once, its rows
-    /// processed back to back, in a deterministic order (the unstable sort
-    /// has a fixed algorithm and no randomness). Typical minibatches fit
-    /// the stack scratch, so the hot loop allocates nothing. `f` receives
-    /// `(position in rows, shard, local row)`. Shared grouping scaffold of
-    /// the truncating and double-sampled batch kernels.
-    fn for_rows_by_shard(&self, rows: &[usize], mut f: impl FnMut(usize, &WeavedMatrix, usize)) {
-        let mut stack = [0u32; 256];
-        let mut heap: Vec<u32>;
-        let order: &mut [u32] = if rows.len() <= 256 {
-            &mut stack[..rows.len()]
-        } else {
-            heap = vec![0u32; rows.len()];
-            &mut heap
-        };
-        for (i, o) in order.iter_mut().enumerate() {
-            *o = i as u32;
+    /// Visit `rows` as shard-grouped **blocks**: shards in ascending id,
+    /// and within a shard the rows in their original batch order (a stable
+    /// partition — the order is *specified*, so per-row reference
+    /// implementations can reproduce it exactly). Runs longer than
+    /// [`BLOCK_ROWS`] are emitted in chunks. `f` receives
+    /// `(shard, local rows, positions into rows)` — the local mapping is
+    /// done here once, so the batch entry points below are just kernel
+    /// calls. Minibatch-sized inputs (≤ [`BLOCK_ROWS`]) group alloc-free
+    /// with fixed stack scratch; larger inputs take one heap-allocated
+    /// stable sort (same specified order, no per-distinct-shard rescans).
+    fn for_shard_runs(
+        &self,
+        rows: &[usize],
+        mut f: impl FnMut(&WeavedMatrix, &[usize], &[u32]),
+    ) {
+        let mut locals = [0usize; BLOCK_ROWS];
+        if rows.len() > BLOCK_ROWS {
+            // large batch: stable sort of positions by shard id — identical
+            // visit order to the scan path, O(N log N) instead of O(S·N)
+            let mut order: Vec<u32> = (0..rows.len() as u32).collect();
+            order.sort_by_key(|&i| rows[i as usize] / self.shard_rows);
+            let mut a = 0usize;
+            while a < order.len() {
+                let s = rows[order[a] as usize] / self.shard_rows;
+                let mut b = a + 1;
+                while b < order.len() && rows[order[b] as usize] / self.shard_rows == s {
+                    b += 1;
+                }
+                for chunk in order[a..b].chunks(BLOCK_ROWS) {
+                    for (l, &i) in locals.iter_mut().zip(chunk) {
+                        *l = rows[i as usize] % self.shard_rows;
+                    }
+                    f(&self.shards[s], &locals[..chunk.len()], chunk);
+                }
+                a = b;
+            }
+            return;
         }
-        order.sort_unstable_by_key(|&i| rows[i as usize] / self.shard_rows);
-        for &i in order.iter() {
-            let (shard, local) = self.locate(rows[i as usize]);
-            f(i as usize, shard, local);
+        let mut run = [0u32; BLOCK_ROWS];
+        let mut done = 0usize;
+        let mut next_shard = 0usize;
+        while done < rows.len() {
+            // smallest shard id not yet visited
+            let mut s = usize::MAX;
+            for &r in rows {
+                let si = r / self.shard_rows;
+                if si >= next_shard && si < s {
+                    s = si;
+                }
+            }
+            let mut n = 0usize;
+            for (i, &r) in rows.iter().enumerate() {
+                if r / self.shard_rows == s {
+                    run[n] = i as u32;
+                    locals[n] = r % self.shard_rows;
+                    n += 1;
+                    done += 1;
+                }
+            }
+            f(&self.shards[s], &locals[..n], &run[..n]);
+            next_shard = s + 1;
         }
     }
 
-    /// One fused minibatch gradient pass, batched per shard visit
-    /// ([`ShardedStore::for_rows_by_shard`]): for each row
+    /// One fused minibatch gradient pass on the **blocked batch kernels**
+    /// ([`kernel::dot_rows_block`] / [`kernel::axpy_rows_block`]): rows
+    /// are visited in shard-grouped blocks ([`ShardedStore::for_shard_runs`]),
+    /// each block computed against the single resident [`StepKernel`] —
+    /// `g` loads and plane-pointer setup are amortized across the block.
+    /// For each row
     ///
     /// ```text
     /// err_i = dot(dequant_p(row_i), x) − targets[i]
     /// grad += err_i · dequant_p(row_i)
     /// ```
     ///
-    /// is evaluated straight from the bit planes (`k` must hold `g = m⊙x`
-    /// for the current model). The shared affine term −(Σ err_i)·m is
-    /// applied once per batch. Byte accounting is identical to the
-    /// row-read path — p plane spans per row, counted once per row visit;
-    /// the axpy pass reuses the planes the dot pass just fetched (they are
-    /// cache-resident, not a second DRAM crossing). Returns the bytes
-    /// counted.
+    /// straight from the bit planes (`k` must hold `g = m⊙x` for the
+    /// current model), with the shared affine term −(Σ err_i)·m applied
+    /// once per batch. The result is **bit-for-bit equal** to running the
+    /// per-row kernels over the same shard-grouped order (property-tested).
+    /// Byte accounting is identical to the row-read path — p plane spans
+    /// per row, counted once per row visit; the axpy pass reuses the
+    /// planes the dot pass just fetched (cache-resident, not a second DRAM
+    /// crossing). Returns the bytes counted.
     pub fn fused_grad_batch(
         &self,
         rows: &[usize],
@@ -256,11 +307,18 @@ impl ShardedStore {
         grad: &mut [f32],
     ) -> usize {
         assert_eq!(rows.len(), targets.len(), "one target per row");
+        let mut errs = [0.0f32; BLOCK_ROWS];
         let mut err_sum = 0.0f32;
-        self.for_rows_by_shard(rows, |i, shard, local| {
-            let err = kernel::dot_row(shard, local, p, k) - targets[i];
-            kernel::axpy_row_planes(shard, local, p, err, grad);
-            err_sum += err;
+        self.for_shard_runs(rows, |shard, locals, pos| {
+            let nb = pos.len();
+            kernel::dot_rows_block(shard, locals, p, k, &mut errs[..nb]);
+            for (e, &i) in errs[..nb].iter_mut().zip(pos) {
+                *e -= targets[i as usize];
+            }
+            kernel::axpy_rows_block(shard, locals, p, &errs[..nb], grad);
+            for &e in &errs[..nb] {
+                err_sum += e;
+            }
         });
         kernel::axpy_affine(err_sum, &self.scale().m, grad);
         let bytes = rows.len() * self.bytes_per_row(p);
@@ -268,10 +326,9 @@ impl ShardedStore {
         bytes
     }
 
-    /// One *double-sampled* fused minibatch gradient pass (§2.2), batched
-    /// per shard visit like [`ShardedStore::fused_grad_batch`]: for each
-    /// row, two independent unbiased p-plane draws are taken straight from
-    /// the bit planes — draw one feeds the residual
+    /// One *double-sampled* fused minibatch gradient pass (§2.2) on the
+    /// blocked DS kernels: rows are visited in shard-grouped blocks; per
+    /// block, draw one of every row feeds the residual
     ///
     /// ```text
     /// err_i = dot(draw1_i, x) − targets[i]
@@ -280,11 +337,15 @@ impl ShardedStore {
     ///
     /// and draw two the accumulation, so E[grad] is the gradient on the
     /// stored full-width values at *any* read precision — the unbiased
-    /// estimator naive truncation is not. The shared affine term
-    /// −(Σ err_i)·m is applied once per batch. Byte accounting: both
-    /// fetches count, 2·p plane spans per row visit — exactly 2× the
-    /// truncating path (DESIGN.md §5). Deterministic in (rng state, store
-    /// contents, batch order). Returns the bytes counted.
+    /// estimator naive truncation is not. Carry randomness is consumed in
+    /// a fixed, specified order: per block, the dot draws of all rows
+    /// (row-major), then the axpy draws of all rows — identical to calling
+    /// the per-row DS kernels in that sequence on the same stream. The
+    /// shared affine term −(Σ err_i)·m is applied once per batch. Byte
+    /// accounting: both fetches count, 2·p plane spans per row visit —
+    /// exactly 2× the truncating path (DESIGN.md §5). Deterministic in
+    /// (rng state, store contents, batch order). Returns the bytes
+    /// counted.
     pub fn ds_grad_batch(
         &self,
         rows: &[usize],
@@ -295,14 +356,83 @@ impl ShardedStore {
         grad: &mut [f32],
     ) -> usize {
         assert_eq!(rows.len(), targets.len(), "one target per row");
+        let mut errs = [0.0f32; BLOCK_ROWS];
         let mut err_sum = 0.0f32;
-        self.for_rows_by_shard(rows, |i, shard, local| {
-            let err = kernel::dot_row_ds(shard, local, p, k, rng) - targets[i];
-            kernel::axpy_row_planes_ds(shard, local, p, err, rng, grad);
-            err_sum += err;
+        self.for_shard_runs(rows, |shard, locals, pos| {
+            let nb = pos.len();
+            kernel::dot_rows_block_ds(shard, locals, p, k, rng, &mut errs[..nb]);
+            for (e, &i) in errs[..nb].iter_mut().zip(pos) {
+                *e -= targets[i as usize];
+            }
+            kernel::axpy_rows_block_ds(shard, locals, p, &errs[..nb], rng, grad);
+            for &e in &errs[..nb] {
+                err_sum += e;
+            }
         });
         kernel::axpy_affine(err_sum, &self.scale().m, grad);
         let bytes = 2 * rows.len() * self.bytes_per_row(p);
+        self.note_bytes_read(bytes);
+        bytes
+    }
+
+    /// [`ShardedStore::fused_grad_batch`] on the **popcount fast path**:
+    /// the per-row errors come from [`kernel::dot_rows_block_q`] — an
+    /// integer AND+POPCNT inner loop against the q-bit rounded step kernel
+    /// (`qk` must hold this step's rounding of `g = m⊙x`) — while the axpy
+    /// side is the exact blocked kernel on the true `m`. Unbiased over the
+    /// rounding draw: E[grad] equals the exact fused batch gradient. Byte
+    /// accounting is identical to the truncating path (the ĝ planes are
+    /// model-side state, not sample traffic). Returns the bytes counted.
+    pub fn fused_grad_batch_q(
+        &self,
+        rows: &[usize],
+        p: u32,
+        qk: &QuantStepKernel,
+        targets: &[f32],
+        grad: &mut [f32],
+    ) -> usize {
+        assert_eq!(rows.len(), targets.len(), "one target per row");
+        let mut errs = [0.0f32; BLOCK_ROWS];
+        let mut err_sum = 0.0f32;
+        self.for_shard_runs(rows, |shard, locals, pos| {
+            let nb = pos.len();
+            kernel::dot_rows_block_q(shard, locals, p, qk, &mut errs[..nb]);
+            for (e, &i) in errs[..nb].iter_mut().zip(pos) {
+                *e -= targets[i as usize];
+            }
+            kernel::axpy_rows_block(shard, locals, p, &errs[..nb], grad);
+            for &e in &errs[..nb] {
+                err_sum += e;
+            }
+        });
+        kernel::axpy_affine(err_sum, &self.scale().m, grad);
+        let bytes = rows.len() * self.bytes_per_row(p);
+        self.note_bytes_read(bytes);
+        bytes
+    }
+
+    /// Blocked fused dots over global rows: `out[i] = dot(dequant_p(rows[i]),
+    /// x)`, computed in shard-grouped blocks against the resident kernel —
+    /// the batch form of [`ShardedStore::dot_row_fused`], bit-for-bit equal
+    /// to it per row. Counts the same bytes the row-read path would (one
+    /// visit per row). Returns the bytes counted.
+    pub fn dot_rows_fused(
+        &self,
+        rows: &[usize],
+        p: u32,
+        k: &StepKernel,
+        out: &mut [f32],
+    ) -> usize {
+        assert_eq!(rows.len(), out.len(), "one dot output per row");
+        let mut dots = [0.0f32; BLOCK_ROWS];
+        self.for_shard_runs(rows, |shard, locals, pos| {
+            let nb = pos.len();
+            kernel::dot_rows_block(shard, locals, p, k, &mut dots[..nb]);
+            for (&d, &i) in dots[..nb].iter().zip(pos) {
+                out[i as usize] = d;
+            }
+        });
+        let bytes = rows.len() * self.bytes_per_row(p);
         self.note_bytes_read(bytes);
         bytes
     }
@@ -606,6 +736,111 @@ mod tests {
         }
         // both paths counted: 2 passes × 40 rows × bytes_per_row(3)
         assert_eq!(store.bytes_read(), (2 * 40 * store.bytes_per_row(3)) as u64);
+    }
+
+    /// The blocked batch gradient is BIT-FOR-BIT equal to the per-row
+    /// kernels run over the specified shard-grouped order (ascending
+    /// shard id, batch order within a shard) — the tentpole's exactness
+    /// contract at the store level, including duplicate rows.
+    #[test]
+    fn fused_grad_batch_bit_identical_to_per_row_reference() {
+        let (a, sc) = mk(96, 70, 36);
+        let store = ShardedStore::ingest(&a, &sc, 8, 13, 5, 1);
+        let mut rng = crate::rng::Rng::new(9);
+        let x: Vec<f32> = (0..70).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(70);
+        k.refresh(&sc.m, &x);
+        let rows: Vec<usize> = vec![95, 3, 40, 3, 0, 77, 12, 63, 40];
+        let targets: Vec<f32> = rows.iter().map(|&r| r as f32 * 0.1).collect();
+        for p in [1u32, 3, 8] {
+            let mut blocked = vec![0.0f32; 70];
+            store.fused_grad_batch(&rows, p, &k, &targets, &mut blocked);
+
+            // per-row reference over the same specified visit order
+            let mut order: Vec<usize> = (0..rows.len()).collect();
+            order.sort_by_key(|&i| rows[i] / store.shard_rows()); // stable
+            let mut want = vec![0.0f32; 70];
+            let mut err_sum = 0.0f32;
+            for &i in &order {
+                let (shard, local) = store.locate_row(rows[i]);
+                let err = kernel::dot_row(shard, local, p, &k) - targets[i];
+                kernel::axpy_row_planes(shard, local, p, err, &mut want);
+                err_sum += err;
+            }
+            kernel::axpy_affine(err_sum, &sc.m, &mut want);
+            for c in 0..70 {
+                assert_eq!(
+                    blocked[c].to_bits(),
+                    want[c].to_bits(),
+                    "p={p} c={c}: blocked {} vs per-row {}",
+                    blocked[c],
+                    want[c]
+                );
+            }
+        }
+    }
+
+    /// Popcount batch gradient: tracks the exact fused batch at high q,
+    /// replays bit for bit from its rounding seed, and accounts exactly
+    /// the truncating path's bytes (ĝ planes are not sample traffic).
+    #[test]
+    fn fused_grad_batch_q_tracks_exact_and_accounts() {
+        let (a, sc) = mk(96, 70, 46);
+        let store = ShardedStore::ingest(&a, &sc, 8, 13, 5, 1);
+        let mut rng = crate::rng::Rng::new(9);
+        let x: Vec<f32> = (0..70).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(70);
+        k.refresh(&sc.m, &x);
+        let mut qk = kernel::QuantStepKernel::new(70, 16);
+        qk.refresh(&sc.m, &x, &mut crate::rng::Rng::new(4));
+        let rows: Vec<usize> = vec![95, 3, 40, 41, 0, 77, 12, 63];
+        let targets: Vec<f32> = rows.iter().map(|&r| r as f32 * 0.1).collect();
+        for p in [2u32, 8] {
+            store.reset_bytes_read();
+            let mut gq = vec![0.0f32; 70];
+            let bytes = store.fused_grad_batch_q(&rows, p, &qk, &targets, &mut gq);
+            assert_eq!(bytes, rows.len() * store.bytes_per_row(p), "same bytes as truncating");
+            assert_eq!(store.bytes_read(), bytes as u64);
+            // replay: same rounding draw, bit-identical gradient
+            let mut qk2 = kernel::QuantStepKernel::new(70, 16);
+            qk2.refresh(&sc.m, &x, &mut crate::rng::Rng::new(4));
+            let mut gq2 = vec![0.0f32; 70];
+            store.fused_grad_batch_q(&rows, p, &qk2, &targets, &mut gq2);
+            assert_eq!(gq, gq2, "p={p}: popcount batch not deterministic");
+            // at q = 16 the rounding noise is far below the test tolerance
+            let mut gx = vec![0.0f32; 70];
+            store.fused_grad_batch(&rows, p, &k, &targets, &mut gx);
+            for c in 0..70 {
+                assert!(
+                    (gq[c] - gx[c]).abs() <= 1e-2 * (1.0 + gx[c].abs()),
+                    "p={p} c={c}: popcount {} vs exact {}",
+                    gq[c],
+                    gx[c]
+                );
+            }
+        }
+    }
+
+    /// dot_rows_fused: bit-identical to dot_row_fused per row, counted
+    /// once per row like the row-read path.
+    #[test]
+    fn dot_rows_fused_matches_per_row_and_accounts() {
+        let (a, sc) = mk(40, 33, 8);
+        let store = ShardedStore::ingest(&a, &sc, 6, 17, 4, 1);
+        let mut rng = crate::rng::Rng::new(2);
+        let x: Vec<f32> = (0..33).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(33);
+        k.refresh(&sc.m, &x);
+        let rows: Vec<usize> = vec![39, 0, 17, 17, 8, 25];
+        let mut out = vec![0.0f32; rows.len()];
+        store.reset_bytes_read();
+        let bytes = store.dot_rows_fused(&rows, 3, &k, &mut out);
+        assert_eq!(bytes, rows.len() * store.bytes_per_row(3));
+        let counted = store.bytes_read();
+        for (i, &r) in rows.iter().enumerate() {
+            assert_eq!(out[i].to_bits(), store.dot_row_fused(r, 3, &k).to_bits(), "row {r}");
+        }
+        assert_eq!(store.bytes_read(), counted + bytes as u64, "per-row pass counts the same");
     }
 
     #[test]

@@ -253,6 +253,17 @@ impl WeavedMatrix {
     pub fn words_per_plane(&self) -> usize {
         self.words_per_plane
     }
+
+    /// Deliberately violate the tail contract (set a bit at or beyond the
+    /// live columns in the MSB plane of row `r`) — used by the kernel
+    /// guard regression tests only.
+    #[cfg(test)]
+    pub(crate) fn poison_tail_bit_for_test(&mut self, r: usize) {
+        assert!(self.cols % 64 != 0, "poisoning needs a ragged tail word");
+        let wpp = self.words_per_plane;
+        let base = r * self.bits as usize * wpp;
+        self.data[base + wpp - 1] |= 1u64 << (self.cols % 64);
+    }
 }
 
 #[cfg(test)]

@@ -428,6 +428,120 @@ fn prop_fused_grad_batch_consistent() {
     });
 }
 
+/// The blocked batch gradient is BIT-FOR-BIT the per-row kernels run over
+/// the specified shard-grouped order (ascending shard id, batch order
+/// within a shard) — randomized over widths 1..=16, word-boundary-ragged
+/// shapes, shard counts, duplicate rows, and batches long enough to
+/// exercise the 256-row block chunking.
+#[test]
+fn prop_blocked_grad_batch_bit_identical_to_per_row() {
+    Prop::new(32).check("blocked-bitexact", |rng| {
+        let rows = 9 + small_size(rng, 80);
+        let cols = match rng.below(6) {
+            0 => 63,
+            1 => 64,
+            2 => 65,
+            3 => 130,
+            _ => small_size(rng, 150),
+        };
+        let bits = 1 + rng.below(16) as u32;
+        let a = rand_matrix(rng, rows, cols, 2.0);
+        let sc = ColumnScale::from_data(&a);
+        let store = ShardedStore::ingest(&a, &sc, bits, rng.next_u64(), 1 + rng.below(6), 1);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(cols);
+        k.refresh(&sc.m, &x);
+        let p = 1 + rng.below(bits as usize) as u32;
+        // occasionally a batch longer than one 256-row block
+        let nb = if rng.below(8) == 0 { 300 + rng.below(200) } else { 1 + rng.below(12) };
+        let batch: Vec<usize> = (0..nb).map(|_| rng.below(rows)).collect();
+        let targets: Vec<f32> = (0..nb).map(|_| rng.normal()).collect();
+        let mut blocked = vec![0.0f32; cols];
+        store.fused_grad_batch(&batch, p, &k, &targets, &mut blocked);
+        // per-row reference over the specified visit order
+        let mut order: Vec<usize> = (0..batch.len()).collect();
+        order.sort_by_key(|&i| batch[i] / store.shard_rows()); // stable
+        let mut want = vec![0.0f32; cols];
+        let mut err_sum = 0.0f32;
+        for &i in &order {
+            let (shard, local) = store.locate_row(batch[i]);
+            let err = kernel::dot_row(shard, local, p, &k) - targets[i];
+            kernel::axpy_row_planes(shard, local, p, err, &mut want);
+            err_sum += err;
+        }
+        kernel::axpy_affine(err_sum, &sc.m, &mut want);
+        for c in 0..cols {
+            if blocked[c].to_bits() != want[c].to_bits() {
+                return Err(format!(
+                    "bits={bits} p={p} nb={nb} c={c}: blocked {} != per-row {}",
+                    blocked[c], want[c]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The blocked DS kernels draw identical samples to the per-row DS
+/// kernels under shared RNG streams: bit-for-bit equal outputs AND
+/// streams left in the same state — so blocked and per-row DS paths are
+/// interchangeable draw for draw.
+#[test]
+fn prop_ds_blocked_draws_match_per_row() {
+    Prop::new(32).check("ds-blocked-draws", |rng| {
+        let rows = 1 + small_size(rng, 12);
+        let cols = match rng.below(6) {
+            0 => 63,
+            1 => 64,
+            2 => 65,
+            3 => 130,
+            _ => small_size(rng, 150),
+        };
+        let bits = 1 + rng.below(16) as u32;
+        let a = rand_matrix(rng, rows, cols, 2.0);
+        let sc = ColumnScale::from_data(&a);
+        let w = WeavedMatrix::quantize(&a, &sc, bits, rng);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(cols);
+        k.refresh(&sc.m, &x);
+        let p = 1 + rng.below(bits as usize) as u32;
+        let nb = 1 + rng.below(10);
+        let batch: Vec<usize> = (0..nb).map(|_| rng.below(rows)).collect();
+        let coefs: Vec<f32> = (0..nb).map(|_| rng.normal()).collect();
+        let seed = rng.next_u64();
+        // dots on twin streams
+        let (mut ra, mut rb) = (Rng::new(seed), Rng::new(seed));
+        let mut blocked = vec![0.0f32; nb];
+        kernel::dot_rows_block_ds(&w, &batch, p, &k, &mut ra, &mut blocked);
+        for (i, &r) in batch.iter().enumerate() {
+            let want = kernel::dot_row_ds(&w, r, p, &k, &mut rb);
+            if blocked[i].to_bits() != want.to_bits() {
+                return Err(format!("ds dot bits={bits} p={p} i={i}: {} vs {want}", blocked[i]));
+            }
+        }
+        if ra.next_u64() != rb.next_u64() {
+            return Err("dot streams diverged".into());
+        }
+        // axpys on twin streams
+        let (mut ra, mut rb) = (Rng::new(seed ^ 1), Rng::new(seed ^ 1));
+        let mut gb = vec![0.0f32; cols];
+        let mut gp = vec![0.0f32; cols];
+        kernel::axpy_rows_block_ds(&w, &batch, p, &coefs, &mut ra, &mut gb);
+        for (&r, &coef) in batch.iter().zip(&coefs) {
+            kernel::axpy_row_planes_ds(&w, r, p, coef, &mut rb, &mut gp);
+        }
+        for c in 0..cols {
+            if gb[c].to_bits() != gp[c].to_bits() {
+                return Err(format!("ds axpy bits={bits} p={p} c={c}: {} vs {}", gb[c], gp[c]));
+            }
+        }
+        if ra.next_u64() != rb.next_u64() {
+            return Err("axpy streams diverged".into());
+        }
+        Ok(())
+    });
+}
+
 /// Stochastic (double-sampling) reads: every draw is the truncation plus
 /// an at-most-one-ulp carry on the coarse grid, p = stored width is exact,
 /// and the fused DS kernels given the same RNG state reproduce the
