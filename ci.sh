@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints, the tier-1 verify
+# CI gate: formatting, lints, rustdoc (-D warnings, so the public
+# HostSession/GlmLoss API stays documented), the tier-1 verify
 # (cargo build --release && cargo test -q), then artifact-free end-to-end
 # smoke runs: the weaved-store example (truncating + double-sampled host
-# paths) and the fused-dot bench in --quick mode, whose assertions pin the
+# paths), a `zipml train --host --model logistic --store weaved-ds` CLI
+# run (a non-linear GLM through the session, end to end)
+# and the fused-dot bench in --quick mode, whose assertions pin the
 # blocked/per-row byte accounting equality and DS bytes == 2x truncation
 # (the perf-ratio acceptance asserts — blocked >= 2x per-row, popcount
 # beating f32 at q <= 4 — enforce only at full budgets, i.e. under
@@ -40,12 +43,19 @@ cargo fmt --all --check
 echo "== cargo clippy -D warnings =="
 cargo clippy --workspace --all-targets -- -D warnings
 
+echo "== cargo doc --no-deps (rustdoc -D warnings: the public API stays documented) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
+
 echo "== tier-1 verify =="
 cargo build --release
 cargo test -q
 
-echo "== example smoke: store_weaving (fused + DS host paths, no artifacts) =="
+echo "== example smoke: store_weaving (HostSession fused + DS paths, no artifacts) =="
 cargo run --release --example store_weaving > /dev/null
+
+echo "== CLI smoke: logistic GLM over the double-sampled weaved store (HostSession) =="
+cargo run --release --bin zipml -- \
+  train --host --model logistic --store weaved-ds --bits 3 --epochs 2 > /dev/null
 
 echo "== bench smoke: fused_dot --quick (blocked/popcount/accounting asserts; writes BENCH_kernels.json) =="
 cargo bench --bench fused_dot -- --quick > /dev/null

@@ -6,7 +6,7 @@
 use zipml::data::synthetic::make_regression;
 use zipml::fpga::{self, Precision};
 use zipml::runtime::Runtime;
-use zipml::sgd::{self, Mode, ModelKind, TrainConfig};
+use zipml::sgd::{self, Execution, HostSession, Mode, ModelKind, TrainConfig};
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::open_default()?;
@@ -20,12 +20,14 @@ fn main() -> anyhow::Result<()> {
     let fp = sgd::train(&rt, &ds, &cfg)?;
     cfg.mode = Mode::DoubleSample { bits: 4 };
     let q4 = sgd::train(&rt, &ds, &cfg)?;
-    let hw = fpga::hogwild_train(&ds, &fpga::HogwildConfig {
-        threads: 10.min(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)),
-        epochs,
-        lr0: 0.02,
-        seed: 42,
-    });
+    let hw = HostSession::dense(&ds)
+        .execution(Execution::Hogwild {
+            threads: 10.min(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)),
+        })
+        .epochs(epochs)
+        .lr0(0.02)
+        .seed(42)
+        .run()?;
 
     let t32 = fpga::epoch_seconds(Precision::Float, k, n);
     let tq4 = fpga::epoch_seconds(Precision::Q(4), k, n);

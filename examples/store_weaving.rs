@@ -10,7 +10,7 @@
 use zipml::data::synthetic::make_regression;
 use zipml::fpga::pipeline::{epoch_bytes, epoch_seconds, store_epoch_seconds, Precision};
 use zipml::quant::ColumnScale;
-use zipml::sgd::{train_store_host, train_store_host_ds};
+use zipml::sgd::{HostSession, ReadStrategy};
 use zipml::store::{PrecisionSchedule, ShardedStore};
 
 fn main() {
@@ -30,11 +30,12 @@ fn main() {
         store.stored_bytes(),
     );
 
-    let (epochs, batch, lr0, seed) = (12usize, 64usize, 0.05f32, 7u64);
+    // one HostSession builder serves every (read strategy × schedule)
+    // below — the same session API the CLI's `--host` path drives
+    let session = HostSession::over(&ds, &store).epochs(12).batch(64).lr0(0.05).seed(7);
     println!("\n{:>12} {:>12} {:>14} {:>16}", "schedule", "final_loss", "bytes/epoch", "epoch_s");
     for p in [2u32, 4, 8] {
-        let sched = PrecisionSchedule::Fixed(p);
-        let r = train_store_host(&ds, &store, sched, epochs, batch, lr0, seed);
+        let r = session.schedule(PrecisionSchedule::Fixed(p)).run().expect("truncating session");
         println!(
             "{:>12} {:>12.6} {:>14.3e} {:>16.3e}",
             format!("fixed p={p}"),
@@ -44,7 +45,7 @@ fn main() {
         );
     }
     let step = PrecisionSchedule::StepUp { start: 2, every: 4, max: 8 };
-    let r = train_store_host(&ds, &store, step, epochs, batch, lr0, seed);
+    let r = session.schedule(step).run().expect("step-up session");
     println!(
         "{:>12} {:>12.6} {:>14.3e}   (per-epoch p: {:?})",
         "step 2→8",
@@ -58,8 +59,11 @@ fn main() {
     // residual planes — so low-precision reads stay unbiased where the
     // truncating reads above are not; both fetches are in the accounting
     for p in [2u32, 4] {
-        let sched = PrecisionSchedule::Fixed(p);
-        let r = train_store_host_ds(&ds, &store, sched, epochs, batch, lr0, seed);
+        let r = session
+            .read(ReadStrategy::DoubleSample)
+            .schedule(PrecisionSchedule::Fixed(p))
+            .run()
+            .expect("double-sampled session");
         println!(
             "{:>12} {:>12.6} {:>14.3e}   (2 draws/row: bytes exactly 2x p={p})",
             format!("ds p={p}"),

@@ -3,7 +3,8 @@
 
 use zipml::bench::{bench, black_box, section, BenchOpts};
 use zipml::data::synthetic::make_regression;
-use zipml::fpga::{self, epoch_seconds, Precision};
+use zipml::fpga::{epoch_seconds, Precision};
+use zipml::sgd::{Execution, HostSession};
 
 fn main() {
     let opts = BenchOpts::from_env_and_args();
@@ -21,11 +22,13 @@ fn main() {
     section("real Hogwild! epoch wallclock on this machine");
     let ds = make_regression("bench", 20_000, 256, 100, 7);
     for threads in [1usize, 2, 4, 8] {
+        let session = HostSession::dense(&ds)
+            .execution(Execution::Hogwild { threads })
+            .epochs(1)
+            .lr0(0.02)
+            .seed(1);
         bench(&format!("hogwild epoch, {threads} threads"), &opts, || {
-            black_box(fpga::hogwild_train(
-                &ds,
-                &fpga::HogwildConfig { threads, epochs: 1, lr0: 0.02, seed: 1 },
-            ));
+            black_box(session.run().expect("dense hogwild session"));
         });
     }
 

@@ -20,6 +20,7 @@
 use zipml::bench::{bench, black_box, section, BenchJson, BenchOpts};
 use zipml::quant::ColumnScale;
 use zipml::rng::Rng;
+use zipml::sgd::{GlmLoss, ModelKind};
 use zipml::store::{kernel, QuantStepKernel, ShardedStore, StepKernel};
 use zipml::tensor::{dot, Matrix};
 
@@ -183,6 +184,50 @@ fn main() {
                 );
             }
         }
+    }
+
+    section("per-model fused grad batch: any GLM through one engine (p=8, batch 64)");
+    // the widened scenario space of the HostSession redesign: the same
+    // blocked plane-domain batch, with each GlmLoss's step multiplier
+    // applied between the fused dot and the fused axpy — rows/sec per
+    // model, relative to the linreg residual (the historical hot path)
+    let glms: [(&str, ModelKind); 4] = [
+        ("linreg", ModelKind::Linreg),
+        ("lssvm", ModelKind::Lssvm { c: 1e-4 }),
+        ("logistic", ModelKind::Logistic),
+        ("svm", ModelKind::Svm),
+    ];
+    let pm_targets: Vec<f32> = (0..b).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let mut linreg_ns = 0.0f64;
+    for (name, model) in &glms {
+        let br = bench(&format!("glm grad batch {name:8} p=8"), &opts, || {
+            grad.fill(0.0);
+            store.fused_grad_batch_glm(
+                &batch,
+                8,
+                &k,
+                &pm_targets,
+                |d, t| model.multiplier(d, t),
+                &mut grad,
+            );
+            black_box(&grad);
+        });
+        if *name == "linreg" {
+            linreg_ns = br.mean_ns;
+        }
+        let rel = br.mean_ns / linreg_ns;
+        println!("   {name:8}: {:.1} rows/s ({rel:.3}x linreg time)", b as f64 * 1e9 / br.mean_ns);
+        js.push(
+            "per_model",
+            vec![
+                ("model", (*name).into()),
+                ("p", 8u32.into()),
+                ("batch", b.into()),
+                ("ns", br.mean_ns.into()),
+                ("rows_per_sec", (b as f64 * 1e9 / br.mean_ns).into()),
+                ("rel_time_vs_linreg", rel.into()),
+            ],
+        );
     }
 
     section("popcount fast path: integer AND+POPCNT dot vs f32 masked-sum dot (p=8)");

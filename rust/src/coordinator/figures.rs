@@ -12,7 +12,7 @@ use crate::fpga::{self, Precision};
 use crate::quant::{self, discretized_optimal_levels, optimal_levels, quantization_variance};
 use crate::rng::Rng;
 use crate::sgd::modes::RefetchStrategy;
-use crate::sgd::{self, deep, Mode, ModelKind, TrainConfig};
+use crate::sgd::{self, deep, Execution, HostSession, Mode, ModelKind, TrainConfig};
 
 /// Dataset by Table-1 name, scaled down in quick mode.
 fn dataset(ctx: &Ctx, name: &str) -> Result<Dataset> {
@@ -147,9 +147,14 @@ pub fn fig5(ctx: &Ctx) -> Result<Vec<Report>> {
     let (k, n) = (ds.k_train(), ds.n());
     let fp = run(ctx, &ds, ModelKind::Linreg, Mode::Full, epochs, 0.05)?;
     let q4 = run(ctx, &ds, ModelKind::Linreg, Mode::DoubleSample { bits: 4 }, epochs, 0.05)?;
-    let hw = fpga::hogwild_train(&ds, &fpga::HogwildConfig {
-        threads: 10.min(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)),
-        epochs, lr0: 0.05, seed: ctx.seed });
+    let hw = HostSession::dense(&ds)
+        .execution(Execution::Hogwild {
+            threads: 10.min(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)),
+        })
+        .epochs(epochs)
+        .lr0(0.05)
+        .seed(ctx.seed)
+        .run()?;
     let t_f32 = fpga::epoch_seconds(Precision::Float, k, n);
     let t_q4 = fpga::epoch_seconds(Precision::Q(4), k, n);
     let t_hw = fpga::hogwild::hogwild_epoch_seconds(k, n, 10);

@@ -2,15 +2,18 @@
 //! multi-threaded SGD over a shared model stored as `AtomicU32`-encoded
 //! f32s, racing updates without synchronization (De Sa et al., 2015).
 //!
-//! Used both as a wall-clock baseline and as a substrate correctness test
-//! (convergence under benign races on well-conditioned problems).
-
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
-use std::sync::Arc;
+//! The engine itself lives in [`crate::sgd::host`] as the session's
+//! `Execution::Hogwild` axis — any [`crate::sgd::GlmLoss`] × any read
+//! strategy (dense f32, truncating, double-sampled, popcount) runs
+//! through one racy-update skeleton with per-worker kernel state and
+//! per-(epoch, worker) RNG streams. The four historical free functions
+//! below survive as deprecated ≤5-line shims over
+//! [`HostSession`], plus the analytic
+//! [`hogwild_epoch_seconds`] wall-clock model Fig 5 trades against.
 
 use crate::data::Dataset;
-use crate::rng::Rng;
-use crate::store::{kernel, MinibatchIter, ShardedStore, StepKernel, WeavedMatrix};
+use crate::sgd::host::{Execution, HostSession, ReadStrategy};
+use crate::store::{PrecisionSchedule, ShardedStore};
 
 #[derive(Clone, Debug)]
 pub struct HogwildConfig {
@@ -34,240 +37,60 @@ pub struct HogwildResult {
     pub updates: usize,
 }
 
-#[inline]
-fn load_f32(a: &AtomicU32) -> f32 {
-    f32::from_bits(a.load(Ordering::Relaxed))
-}
-
-#[inline]
-fn add_f32(a: &AtomicU32, delta: f32) {
-    // racy read-modify-write — deliberately NOT a CAS loop: Hogwild!'s
-    // whole point is that unsynchronized updates still converge.
-    let cur = f32::from_bits(a.load(Ordering::Relaxed));
-    a.store((cur + delta).to_bits(), Ordering::Relaxed);
-}
-
-/// Least-squares Hogwild! SGD (one sample per update, per thread).
+/// Least-squares Hogwild! SGD over full-precision f32 rows (one sample
+/// per update, per thread). Shim over [`HostSession::dense`] with
+/// hogwild execution: each epoch's rows are partitioned across workers
+/// by the strided minibatch iterator. The historical implementation
+/// sampled rows with replacement, `threads·⌊k/threads⌋` draws per
+/// epoch; the partition visits every row exactly once — exactly `k`
+/// updates per epoch (up to `threads − 1` more than before when
+/// `threads ∤ k`), with reproducible visit sets.
+#[deprecated(note = "compose a sgd::host::HostSession (dense + Execution::Hogwild) instead")]
 pub fn hogwild_train(ds: &Dataset, cfg: &HogwildConfig) -> HogwildResult {
-    let t0 = std::time::Instant::now();
-    let n = ds.n();
-    let k = ds.k_train();
-    let x: Arc<Vec<AtomicU32>> = Arc::new((0..n).map(|_| AtomicU32::new(0)).collect());
-    let updates = Arc::new(AtomicUsize::new(0));
-    let mut loss_curve = Vec::with_capacity(cfg.epochs + 1);
-    let snapshot = |x: &[AtomicU32]| -> Vec<f32> { x.iter().map(load_f32).collect() };
-    loss_curve.push(ds.train_mse(&snapshot(&x)));
-
-    for epoch in 0..cfg.epochs {
-        let lr = cfg.lr0 / (epoch as f32 + 1.0);
-        std::thread::scope(|scope| {
-            for t in 0..cfg.threads {
-                let x = Arc::clone(&x);
-                let updates = Arc::clone(&updates);
-                let seed = cfg.seed ^ ((epoch as u64) << 32) ^ t as u64;
-                scope.spawn(move || {
-                    let mut rng = crate::rng::Rng::new(seed);
-                    let per_thread = k / cfg.threads;
-                    let mut local = vec![0.0f32; n];
-                    for _ in 0..per_thread {
-                        let r = rng.below(k);
-                        let row = ds.train_a.row(r);
-                        for (l, xa) in local.iter_mut().zip(x.iter()) {
-                            *l = load_f32(xa);
-                        }
-                        let err = crate::tensor::dot(row, &local) - ds.train_b[r];
-                        let g = lr * err;
-                        for (xa, &a) in x.iter().zip(row) {
-                            if a != 0.0 {
-                                add_f32(xa, -g * a);
-                            }
-                        }
-                        updates.fetch_add(1, Ordering::Relaxed);
-                    }
-                });
-            }
-        });
-        loss_curve.push(ds.train_mse(&snapshot(&x)));
-    }
-
-    HogwildResult {
-        final_model: snapshot(&x),
-        loss_curve,
-        wall_secs: t0.elapsed().as_secs_f64(),
-        updates: updates.load(Ordering::Relaxed),
-    }
+    let s = HostSession::dense(ds).execution(Execution::Hogwild { threads: cfg.threads });
+    let s = s.epochs(cfg.epochs).lr0(cfg.lr0).seed(cfg.seed);
+    s.run().expect("legacy hogwild_train combination").into_hogwild()
 }
 
-/// Shared skeleton of the weaved-store Hogwild! paths: per epoch, every
-/// worker walks its strided row partition ([`MinibatchIter::strided`] at
-/// batch 1, so the (row, worker) assignment is reproducible), takes a racy
-/// model snapshot, asks its visitor for the row's update coefficient and
-/// plane-part delta, then publishes `delta − coef·m[c]` as ONE racy add
-/// per live column (re-zeroing the scratch) — the pre-fusion contention
-/// profile. `make_visitor` is called once per worker thread, so each
-/// visitor owns its per-step kernel state ([`StepKernel`],
-/// [`kernel::QuantStepKernel`], …) without sharing across racy threads;
-/// the visitor receives (shard, local row, model snapshot, target, lr,
-/// rng, delta scratch) and refreshes its kernel from the snapshot.
-/// `bytes_per_visit` is counted once per row visit; the RNG is a
-/// per-(epoch, worker) stream derived via [`crate::rng::Rng::new_stream`],
-/// so stochastic variants never share randomness across racy threads
-/// (deterministic variants ignore it).
-fn hogwild_store_run<V>(
-    ds: &Dataset,
-    store: &ShardedStore,
-    cfg: &HogwildConfig,
-    bytes_per_visit: usize,
-    make_visitor: impl Fn() -> V + Sync,
-) -> HogwildResult
-where
-    V: FnMut(&WeavedMatrix, usize, &[f32], f32, f32, &mut Rng, &mut [f32]) -> f32,
-{
-    assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
-    let t0 = std::time::Instant::now();
-    let n = store.cols();
-    let k = store.rows();
-    let x: Arc<Vec<AtomicU32>> = Arc::new((0..n).map(|_| AtomicU32::new(0)).collect());
-    let updates = Arc::new(AtomicUsize::new(0));
-    let mut loss_curve = Vec::with_capacity(cfg.epochs + 1);
-    let snapshot = |x: &[AtomicU32]| -> Vec<f32> { x.iter().map(load_f32).collect() };
-    loss_curve.push(ds.train_mse(&snapshot(&x)));
-
-    // per-sample updates: batch 1 through the strided iterator
-    const BATCH: usize = 1;
-    for epoch in 0..cfg.epochs {
-        let lr = cfg.lr0 / (epoch as f32 + 1.0);
-        let epoch_seed = cfg.seed ^ ((epoch as u64) << 32);
-        std::thread::scope(|scope| {
-            let make_visitor = &make_visitor;
-            for t in 0..cfg.threads {
-                let x = Arc::clone(&x);
-                let updates = Arc::clone(&updates);
-                scope.spawn(move || {
-                    let mut visit = make_visitor();
-                    let mut it = MinibatchIter::strided(k, BATCH, epoch_seed, t, cfg.threads);
-                    let mut rng =
-                        Rng::new_stream(cfg.seed, (epoch as u64) * cfg.threads as u64 + t as u64);
-                    let mut local = vec![0.0f32; n];
-                    let mut delta = vec![0.0f32; n];
-                    let m = &store.scale().m;
-                    while let Some(batch) = it.next_batch() {
-                        for &r in batch {
-                            let r = r as usize;
-                            let (shard, sr) = store.locate_row(r);
-                            // racy model snapshot → per-update kernel state
-                            for (l, xa) in local.iter_mut().zip(x.iter()) {
-                                *l = load_f32(xa);
-                            }
-                            store.note_bytes_read(bytes_per_visit);
-                            let coef =
-                                visit(shard, sr, &local, ds.train_b[r], lr, &mut rng, &mut delta);
-                            for ((xa, d), &mc) in x.iter().zip(delta.iter_mut()).zip(m.iter()) {
-                                let upd = *d - coef * mc;
-                                *d = 0.0;
-                                if upd != 0.0 {
-                                    add_f32(xa, upd);
-                                }
-                            }
-                            updates.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                });
-            }
-        });
-        loss_curve.push(ds.train_mse(&snapshot(&x)));
-    }
-
-    HogwildResult {
-        final_model: snapshot(&x),
-        loss_curve,
-        wall_secs: t0.elapsed().as_secs_f64(),
-        updates: updates.load(Ordering::Relaxed),
-    }
-}
-
-/// Hogwild! over the weaved sample store: every worker computes its dot
-/// products and model updates **in the weaved domain** — the fused kernels
-/// ([`crate::store::kernel`]) touch only the p requested planes (the dot
-/// side on the lane-parallel masked sum), so no worker ever materializes
-/// an f32 row. Shard reads stay lock-free (the store only touches a
-/// relaxed byte counter) and updates race on the shared model exactly like
-/// [`hogwild_train`]. Bytes are counted once per row visit (the update
-/// pass reuses the planes the dot just fetched), identical to the
-/// row-read accounting.
+/// Hogwild! over the weaved sample store on the fused truncating kernels
+/// (no worker ever materializes an f32 row). Shim over [`HostSession`].
+#[deprecated(note = "compose a sgd::host::HostSession (Truncate + Execution::Hogwild) instead")]
 pub fn hogwild_train_store(
     ds: &Dataset,
     store: &ShardedStore,
     p: u32,
     cfg: &HogwildConfig,
 ) -> HogwildResult {
-    let n = store.cols();
-    let m = &store.scale().m;
-    hogwild_store_run(ds, store, cfg, store.bytes_per_row(p), || {
-        let mut kern = StepKernel::new(n);
-        move |shard: &WeavedMatrix,
-              sr: usize,
-              local: &[f32],
-              target: f32,
-              lr: f32,
-              _rng: &mut Rng,
-              delta: &mut [f32]| {
-            kern.refresh(m, local);
-            let err = kernel::dot_row(shard, sr, p, &kern) - target;
-            let coef = -lr * err;
-            kernel::axpy_row_planes(shard, sr, p, coef, delta);
-            coef
-        }
-    })
+    let s = HostSession::over(ds, store).schedule(PrecisionSchedule::Fixed(p));
+    let s = s.execution(Execution::Hogwild { threads: cfg.threads });
+    let s = s.epochs(cfg.epochs).lr0(cfg.lr0).seed(cfg.seed);
+    s.run().expect("legacy hogwild_train_store combination").into_hogwild()
 }
 
-/// Hogwild! over the weaved store with **double-sampled** reads: every
-/// worker takes two independent unbiased stochastic p-plane draws per row
-/// visit — draw one for the fused dot, draw two for the racy model update
-/// — implementing the §2.2 estimator concurrently from the single stored
-/// copy (DESIGN.md §5). Each worker owns a carry-randomness stream derived
-/// from (seed, epoch, worker) via [`crate::rng::Rng::new_stream`], so the
-/// *set* of draws is reproducible even though update interleaving is racy.
-/// Both fetches are counted: 2·p plane spans per row visit, exactly 2× the
-/// truncating [`hogwild_train_store`].
+/// Hogwild! with **double-sampled** reads: two independent unbiased
+/// stochastic p-plane draws per row visit, concurrently, from the single
+/// stored copy (§2.2, DESIGN.md §5); bytes count exactly 2× the
+/// truncating path. Shim over [`HostSession`].
+#[deprecated(
+    note = "compose a sgd::host::HostSession (DoubleSample + Execution::Hogwild) instead"
+)]
 pub fn hogwild_train_store_ds(
     ds: &Dataset,
     store: &ShardedStore,
     p: u32,
     cfg: &HogwildConfig,
 ) -> HogwildResult {
-    let n = store.cols();
-    let m = &store.scale().m;
-    // two independent draws: both fetches counted
-    hogwild_store_run(ds, store, cfg, 2 * store.bytes_per_row(p), || {
-        let mut kern = StepKernel::new(n);
-        move |shard: &WeavedMatrix,
-              sr: usize,
-              local: &[f32],
-              target: f32,
-              lr: f32,
-              rng: &mut Rng,
-              delta: &mut [f32]| {
-            kern.refresh(m, local);
-            let err = kernel::dot_row_ds(shard, sr, p, &kern, rng) - target;
-            let coef = -lr * err;
-            // draw two accumulates the plane part; the skeleton's publish
-            // pass folds the affine term and issues the racy adds
-            kernel::axpy_row_planes_ds(shard, sr, p, coef, rng, delta);
-            coef
-        }
-    })
+    let s = HostSession::over(ds, store).schedule(PrecisionSchedule::Fixed(p));
+    let s = s.read(ReadStrategy::DoubleSample);
+    let s = s.execution(Execution::Hogwild { threads: cfg.threads });
+    s.epochs(cfg.epochs).lr0(cfg.lr0).seed(cfg.seed).run().expect("legacy combo").into_hogwild()
 }
 
 /// Hogwild! on the **popcount fast path** (DESIGN.md §8): every worker
-/// re-rounds its snapshot's `g = m⊙x` onto a q-bit sign/magnitude grid
-/// per visit (one [`kernel::QuantStepKernel::refresh`] draw from the
-/// worker's own stream) and computes the fused dot by integer AND+POPCNT
-/// ([`kernel::dot_row_q`]); the racy update side stays the exact bit-walk
-/// axpy. The rounding is unbiased, so every visit's expected update is the
-/// truncating visit's. Byte accounting matches [`hogwild_train_store`]
-/// exactly — the ĝ planes never cross the memory boundary as sample
-/// traffic.
+/// re-rounds its snapshot's g = m⊙x per visit and dots by integer
+/// AND+POPCNT; byte accounting matches the truncating path. Shim over
+/// [`HostSession`].
+#[deprecated(note = "compose a sgd::host::HostSession (Popcount + Execution::Hogwild) instead")]
 pub fn hogwild_train_store_q(
     ds: &Dataset,
     store: &ShardedStore,
@@ -275,24 +98,10 @@ pub fn hogwild_train_store_q(
     step_bits: u32,
     cfg: &HogwildConfig,
 ) -> HogwildResult {
-    let n = store.cols();
-    let m = &store.scale().m;
-    hogwild_store_run(ds, store, cfg, store.bytes_per_row(p), || {
-        let mut qk = kernel::QuantStepKernel::new(n, step_bits);
-        move |shard: &WeavedMatrix,
-              sr: usize,
-              local: &[f32],
-              target: f32,
-              lr: f32,
-              rng: &mut Rng,
-              delta: &mut [f32]| {
-            qk.refresh(m, local, rng);
-            let err = kernel::dot_row_q(shard, sr, p, &qk) - target;
-            let coef = -lr * err;
-            kernel::axpy_row_planes(shard, sr, p, coef, delta);
-            coef
-        }
-    })
+    let s = HostSession::over(ds, store).schedule(PrecisionSchedule::Fixed(p));
+    let s = s.read(ReadStrategy::Popcount { q: step_bits });
+    let s = s.execution(Execution::Hogwild { threads: cfg.threads });
+    s.epochs(cfg.epochs).lr0(cfg.lr0).seed(cfg.seed).run().expect("legacy combo").into_hogwild()
 }
 
 /// Simulated epoch time for the 10-core Hogwild baseline of Fig 5: CPU
@@ -308,6 +117,7 @@ pub fn hogwild_epoch_seconds(k_samples: usize, n_features: usize, threads: usize
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shims ARE the subject under test here
 mod tests {
     use super::*;
     use crate::data::synthetic::make_regression;

@@ -11,7 +11,9 @@
 pub mod hogwild;
 pub mod pipeline;
 
-pub use hogwild::{hogwild_train, HogwildConfig, HogwildResult};
+#[allow(deprecated)] // legacy entry point stays importable during migration
+pub use hogwild::hogwild_train;
+pub use hogwild::{HogwildConfig, HogwildResult};
 pub use pipeline::{epoch_seconds, PipelineSpec, Precision, FPGA_CLOCK_HZ, MEM_BANDWIDTH_BYTES};
 
 #[cfg(test)]

@@ -14,7 +14,10 @@ use anyhow::{bail, Result};
 use zipml::coordinator::{self, Ctx};
 use zipml::data;
 use zipml::quant::ColumnScale;
-use zipml::sgd::{self, modes::RefetchStrategy, Mode, ModelKind, StoreBackend, TrainConfig};
+use zipml::sgd::{
+    self, modes::RefetchStrategy, HostSession, Mode, ModelKind, ReadStrategy, StoreBackend,
+    TrainConfig,
+};
 use zipml::store::{PrecisionSchedule, ShardedStore};
 
 fn main() {
@@ -59,7 +62,8 @@ USAGE:
   zipml train --model linreg|lssvm|logistic|svm --mode MODE [--dataset D]
               [--bits B] [--epochs E] [--lr F] [--batch N] [--seed N]
               [--store legacy|weaved|weaved-ds] [--shards N] [--schedule S]
-              [--store-bits W] [--host] [--step-bits Q]
+              [--store-bits W] [--bits-m M] [--bits-g G]
+              [--host] [--step-bits Q]
        MODE: fp32 | naive | ds | dsu8 | e2e | mq | gq | optimal | round
              | cheby | poly | refetch-l1 | refetch-jl
        S (weaved stores, reads p planes/epoch): fixed | step | refetch
@@ -69,8 +73,14 @@ USAGE:
                  (--mode ds); the store is ingested at --store-bits W
                  (default min(2·bits, 16)), and W > p keeps the carry
                  planes live
-       --host    artifact-free linreg training on the fused host kernels
-                 (no PJRT runtime needed; --store weaved or weaved-ds)
+       --bits-m M / --bits-g G  (--mode e2e only) model / gradient
+                 quantization widths, 1..=16, default 8 each — the §E
+                 end-to-end point (samples stay at --bits)
+       --host    artifact-free GLM training on the fused host kernels —
+                 any --model (linreg|lssvm|logistic|svm): the session
+                 computes a^T x in the weaved domain and applies the
+                 loss's step multiplier on the host (no PJRT runtime
+                 needed; --store weaved or weaved-ds; needs --epochs >= 1)
        --step-bits Q  (with --host --store weaved) popcount fast path:
                  round g = m*x to Q sign/magnitude bit planes per step and
                  dot by AND+POPCNT; unbiased, off by default
@@ -118,13 +128,25 @@ fn cmd_figure(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn parse_mode(mode: &str, bits: u32) -> Result<Mode> {
+fn parse_mode(args: &[String], mode: &str, bits: u32) -> Result<Mode> {
+    if mode != "e2e" && (opt(args, "--bits-m").is_some() || opt(args, "--bits-g").is_some()) {
+        bail!("--bits-m/--bits-g quantize the model/gradient of --mode e2e (got --mode {mode})");
+    }
     Ok(match mode {
         "fp32" | "full" => Mode::Full,
         "naive" => Mode::Naive { bits },
         "ds" => Mode::DoubleSample { bits },
         "dsu8" => Mode::DoubleSampleU8 { bits },
-        "e2e" => Mode::EndToEnd { bits_s: bits, bits_m: 8, bits_g: 8 },
+        "e2e" => {
+            let bits_m: u32 = opt(args, "--bits-m").map(|v| v.parse()).transpose()?.unwrap_or(8);
+            let bits_g: u32 = opt(args, "--bits-g").map(|v| v.parse()).transpose()?.unwrap_or(8);
+            for (name, b) in [("--bits-m", bits_m), ("--bits-g", bits_g)] {
+                if !(1..=16).contains(&b) {
+                    bail!("{name} must be 1..=16, got {b}");
+                }
+            }
+            Mode::EndToEnd { bits_s: bits, bits_m, bits_g }
+        }
         "mq" => Mode::ModelQuant { bits },
         "gq" => Mode::GradQuant { bits },
         "optimal" => Mode::OptimalDs { levels: 1 << bits },
@@ -137,6 +159,19 @@ fn parse_mode(mode: &str, bits: u32) -> Result<Mode> {
             strategy: RefetchStrategy::L2Jl { sketch_dim: 64, delta: 0.05 },
         },
         other => bail!("unknown mode {other}"),
+    })
+}
+
+/// `--model` (+ `--c` for LS-SVM), shared by the artifact and host paths.
+fn parse_model(args: &[String]) -> Result<ModelKind> {
+    Ok(match opt(args, "--model").unwrap_or("linreg") {
+        "linreg" => ModelKind::Linreg,
+        "lssvm" => ModelKind::Lssvm {
+            c: opt(args, "--c").map(|v| v.parse()).transpose()?.unwrap_or(1e-4),
+        },
+        "logistic" => ModelKind::Logistic,
+        "svm" => ModelKind::Svm,
+        other => bail!("unknown model {other}"),
     })
 }
 
@@ -154,25 +189,36 @@ fn parse_schedule(args: &[String], bits: u32) -> Result<PrecisionSchedule> {
     })
 }
 
-/// Artifact-free host training over the weaved store (linreg): runs the
-/// fused weaved-domain kernels directly — no PJRT runtime, no artifacts —
-/// so the truncating, double-sampled, and popcount hot paths are
-/// exercisable from the CLI in every checkout. `--step-bits Q` switches
-/// the truncating path onto the integer popcount fast path (DESIGN.md §8).
+/// Artifact-free host training over the weaved store: one
+/// [`HostSession`] composes any `--model` (linreg, LS-SVM, logistic,
+/// SVM/hinge) with any read strategy — truncating (`--store weaved`),
+/// double-sampled (`--store weaved-ds`), or popcount (`--step-bits Q`,
+/// DESIGN.md §8) — on the fused weaved-domain kernels directly. No PJRT
+/// runtime, no artifacts: runs in every checkout.
 fn cmd_train_host(args: &[String]) -> Result<()> {
-    let model = opt(args, "--model").unwrap_or("linreg");
-    if model != "linreg" {
-        bail!("--host runs the artifact-free linreg kernels; got --model {model}");
-    }
+    let model = parse_model(args)?;
     if let Some(mode) = opt(args, "--mode") {
-        // the host path's algorithm is picked by --store (truncating /
-        // double-sampled) and --step-bits, never by --mode — reject it
-        // rather than silently training something else than requested
-        bail!("--host ignores --mode (got {mode}): use --store weaved|weaved-ds, --step-bits");
+        // the host path's algorithm is picked by --model, --store
+        // (truncating / double-sampled), and --step-bits, never by
+        // --mode — reject it rather than silently training something
+        // else than requested
+        bail!("--host ignores --mode (got {mode}): use --model, --store weaved|weaved-ds");
+    }
+    if opt(args, "--bits-m").is_some() || opt(args, "--bits-g").is_some() {
+        // same reject-don't-ignore rule as --mode: these flags belong to
+        // the artifact e2e mode, the host session has no model/gradient
+        // quantization axis
+        bail!("--bits-m/--bits-g quantize the artifact e2e step (--mode e2e), not --host runs");
     }
     let bits: u32 = opt(args, "--bits").map(|v| v.parse()).transpose()?.unwrap_or(5);
     let seed: u64 = opt(args, "--seed").map(|v| v.parse()).transpose()?.unwrap_or(42);
     let epochs: usize = opt(args, "--epochs").map(|v| v.parse()).transpose()?.unwrap_or(15);
+    if epochs == 0 {
+        // regression guard: a 0-epoch run would "report" only the
+        // untrained model's loss as the final result
+        bail!("--epochs 0 trains nothing (the curve would only hold the untrained model); \
+               pass --epochs >= 1");
+    }
     let batch: usize = opt(args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(64);
     let lr0: f32 = opt(args, "--lr").map(|v| v.parse()).transpose()?.unwrap_or(0.05);
     let shards: usize = opt(args, "--shards").map(|v| v.parse()).transpose()?.unwrap_or(16);
@@ -182,26 +228,24 @@ fn cmd_train_host(args: &[String]) -> Result<()> {
             bail!("--step-bits must be 1..=16, got {q}");
         }
     }
-    let dataset_name = opt(args, "--dataset").unwrap_or("synthetic100");
+    let dataset_name = opt(args, "--dataset").unwrap_or(if model.is_classification() {
+        "cod-rna"
+    } else {
+        "synthetic100"
+    });
     let ds = data::by_name(dataset_name, seed)?;
     let scale = ColumnScale::from_data(&ds.train_a);
     let schedule = parse_schedule(args, bits)?;
     let ingest_seed = seed ^ 0x5745_4156_4544; // "WEAVED"
     let store_kind = opt(args, "--store").unwrap_or("weaved");
-    let (label, r) = match store_kind {
-        "weaved" => {
-            let store = ShardedStore::ingest(&ds.train_a, &scale, bits, ingest_seed, shards, 0);
+    let (store, read) = match store_kind {
+        "weaved" => (
+            ShardedStore::ingest(&ds.train_a, &scale, bits, ingest_seed, shards, 0),
             match step_bits {
-                Some(q) => (
-                    format!("host fused popcount (q={q})"),
-                    sgd::train_store_host_q(&ds, &store, schedule, q, epochs, batch, lr0, seed),
-                ),
-                None => (
-                    "host fused truncating".to_string(),
-                    sgd::train_store_host(&ds, &store, schedule, epochs, batch, lr0, seed),
-                ),
-            }
-        }
+                Some(q) => ReadStrategy::Popcount { q },
+                None => ReadStrategy::Truncate,
+            },
+        ),
         "weaved-ds" => {
             if step_bits.is_some() {
                 bail!("--step-bits is the truncating popcount path: use --store weaved");
@@ -216,17 +260,25 @@ fn cmd_train_host(args: &[String]) -> Result<()> {
                      double-sampled reads degenerate to exact truncation"
                 );
             }
-            let store =
-                ShardedStore::ingest(&ds.train_a, &scale, store_bits, ingest_seed, shards, 0);
             (
-                "host fused double-sampling".to_string(),
-                sgd::train_store_host_ds(&ds, &store, schedule, epochs, batch, lr0, seed),
+                ShardedStore::ingest(&ds.train_a, &scale, store_bits, ingest_seed, shards, 0),
+                ReadStrategy::DoubleSample,
             )
         }
         other => bail!("--host needs --store weaved|weaved-ds, got {other}"),
     };
+    let r = HostSession::over(&ds, &store)
+        .loss(&model)
+        .read(read)
+        .schedule(schedule)
+        .epochs(epochs)
+        .batch(batch)
+        .lr0(lr0)
+        .seed(seed)
+        .run()?;
     println!(
-        "training linreg [{label}] on {dataset_name} (n={}, K={}, p={bits})",
+        "training [{}] on {dataset_name} (n={}, K={}, p={bits})",
+        r.label,
         ds.n(),
         ds.k_train()
     );
@@ -249,17 +301,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if opt(args, "--step-bits").is_some() {
         bail!("--step-bits is a host-kernel feature: add --host (see zipml help)");
     }
-    let model = match opt(args, "--model").unwrap_or("linreg") {
-        "linreg" => ModelKind::Linreg,
-        "lssvm" => ModelKind::Lssvm {
-            c: opt(args, "--c").map(|v| v.parse()).transpose()?.unwrap_or(1e-4),
-        },
-        "logistic" => ModelKind::Logistic,
-        "svm" => ModelKind::Svm,
-        other => bail!("unknown model {other}"),
-    };
+    let model = parse_model(args)?;
     let bits: u32 = opt(args, "--bits").map(|v| v.parse()).transpose()?.unwrap_or(5);
-    let mode = parse_mode(opt(args, "--mode").unwrap_or("ds"), bits)?;
+    let mode = parse_mode(args, opt(args, "--mode").unwrap_or("ds"), bits)?;
     let dataset_name = opt(args, "--dataset").unwrap_or(if model.is_classification() {
         "cod-rna"
     } else {
@@ -357,4 +401,93 @@ fn cmd_quantize_demo() -> Result<()> {
             mv_u / mv_o);
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// CLI regression: `--host --epochs 0` must bail with a clear message
+    /// instead of reporting the untrained model (or panicking downstream).
+    #[test]
+    fn train_host_epochs_zero_bails() {
+        let err = cmd_train_host(&a(&["--epochs", "0"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--epochs"), "unhelpful error: {msg}");
+    }
+
+    /// `--bits-m`/`--bits-g` reach the e2e mode (no more hardcoded 8/8)
+    /// and default to 8 when absent.
+    #[test]
+    fn parse_mode_e2e_bits_flags() {
+        let args = a(&["--bits-m", "4", "--bits-g", "6"]);
+        assert_eq!(
+            parse_mode(&args, "e2e", 5).unwrap(),
+            Mode::EndToEnd { bits_s: 5, bits_m: 4, bits_g: 6 }
+        );
+        assert_eq!(
+            parse_mode(&a(&[]), "e2e", 5).unwrap(),
+            Mode::EndToEnd { bits_s: 5, bits_m: 8, bits_g: 8 }
+        );
+        assert!(parse_mode(&a(&["--bits-m", "0"]), "e2e", 5).is_err());
+        assert!(parse_mode(&a(&["--bits-g", "17"]), "e2e", 5).is_err());
+    }
+
+    /// The flags are e2e-only: other modes reject them instead of
+    /// silently ignoring them.
+    #[test]
+    fn bits_flags_rejected_outside_e2e() {
+        let err = parse_mode(&a(&["--bits-m", "4"]), "ds", 5).unwrap_err();
+        assert!(format!("{err:#}").contains("e2e"));
+        assert!(parse_mode(&a(&[]), "ds", 5).is_ok());
+    }
+
+    /// `--host` accepts every GLM; unknown models still error.
+    #[test]
+    fn parse_model_accepts_all_glms() {
+        assert_eq!(parse_model(&a(&["--model", "linreg"])).unwrap(), ModelKind::Linreg);
+        assert_eq!(parse_model(&a(&["--model", "logistic"])).unwrap(), ModelKind::Logistic);
+        assert_eq!(parse_model(&a(&["--model", "svm"])).unwrap(), ModelKind::Svm);
+        assert_eq!(
+            parse_model(&a(&["--model", "lssvm", "--c", "0.5"])).unwrap(),
+            ModelKind::Lssvm { c: 0.5 }
+        );
+        assert!(parse_model(&a(&["--model", "resnet"])).is_err());
+    }
+
+    /// End-to-end host smoke: a logistic model trains over the
+    /// double-sampled weaved store straight from the CLI path (the ci.sh
+    /// gate runs the same invocation through the built binary).
+    #[test]
+    fn train_host_logistic_weaved_ds_smoke() {
+        cmd_train_host(&a(&[
+            "--model",
+            "logistic",
+            "--store",
+            "weaved-ds",
+            "--dataset",
+            "cod-rna",
+            "--bits",
+            "3",
+            "--epochs",
+            "2",
+        ]))
+        .unwrap();
+    }
+
+    /// `--host` still rejects `--mode`, artifact-only flags, and bad
+    /// store kinds instead of silently ignoring them.
+    #[test]
+    fn train_host_rejects_mode_and_bad_store() {
+        assert!(cmd_train_host(&a(&["--mode", "ds"])).is_err());
+        assert!(cmd_train_host(&a(&["--bits-m", "4"])).is_err());
+        assert!(cmd_train_host(&a(&["--bits-g", "4"])).is_err());
+        assert!(cmd_train_host(&a(&["--store", "legacy"])).is_err());
+        assert!(cmd_train_host(&a(&["--store", "weaved-ds", "--step-bits", "4"])).is_err());
+        assert!(cmd_train_host(&a(&["--step-bits", "0"])).is_err());
+    }
 }

@@ -10,8 +10,9 @@
 //! [`TrainConfig`]): the legacy per-mode stores, and the bit-weaved
 //! [`ShardedStore`] whose single stored copy serves any precision and
 //! whose per-epoch precision follows a [`PrecisionSchedule`]. The weaved
-//! path also has an artifact-free host twin ([`train_store_host`]) used by
-//! tests, benches, and the `store_weaving` example.
+//! path also has an artifact-free host twin ([`super::host::HostSession`],
+//! any GLM × read strategy × execution) used by tests, benches, the CLI's
+//! `--host` path, and the `store_weaving` example.
 
 use anyhow::{bail, Context, Result};
 
@@ -21,9 +22,10 @@ use crate::quant::packing::{DoubleSampleBlock, PackedMatrix};
 use crate::quant::{discretized_optimal_levels, ColumnScale};
 use crate::rng::Rng;
 use crate::runtime::{lit_f32, lit_scalar11, lit_u8, Runtime};
-use crate::store::{PrecisionSchedule, QuantStepKernel, ScheduleState, ShardedStore, StepKernel};
+use crate::store::{PrecisionSchedule, ScheduleState, ShardedStore};
 use crate::tensor::Matrix;
 
+use super::host::{HostSession, ReadStrategy};
 use super::modes::{Mode, ModelKind};
 use super::refetch::RefetchState;
 
@@ -675,34 +677,22 @@ fn eval_batch_count(requested: usize, loss_batch: usize, k: usize) -> Result<usi
 }
 
 // ---------------------------------------------------------------------------
-// Artifact-free host training path (linreg).
+// Artifact-free host training (legacy entry points).
 //
-// The store-backed epoch loop distilled to pure host math: lets the
-// weaved/packed stores be compared end-to-end (loss curves, bandwidth)
-// without AOT artifacts or a PJRT client. Shared by tests, benches, the
-// Hogwild! substrate, and examples/store_weaving.rs.
-//
-// Five batch kernels run the same epoch skeleton:
-//   * train_store_host         — fused weaved-domain kernels (no f32 row),
-//                                blocked per shard visit (DESIGN.md §8)
-//   * train_store_host_ds      — fused *double-sampled* kernels: two
-//                                unbiased stochastic draws per row visit
-//                                (§2.2 host-native, DESIGN.md §5)
-//   * train_store_host_q       — popcount fast path: the per-step g = m⊙x
-//                                stochastically rounded to q bit planes,
-//                                dots by AND+POPCNT (DESIGN.md §8)
-//   * train_store_host_dequant — dequantize-row oracle over the store
-//   * train_packed_host        — dequantize-row oracle over PackedMatrix
-// The two oracle paths execute identical float ops, so their loss curves
-// are comparable bit for bit when fetches agree; the fused path sums in
-// plane order (different f32 rounding) and is pinned to the oracle by
-// tolerance + determinism tests instead.
+// The host engine lives in [`super::host`]: a [`HostSession`] composes
+// any GLM loss × read strategy × execution × precision schedule over the
+// weaved store. The five historical free functions below survive as
+// deprecated ≤5-line shims — each is one fixed point of the session's
+// axis lattice, bit-for-bit identical to its pre-session implementation
+// for linreg (regression-tested in tests/host_session.rs).
 // ---------------------------------------------------------------------------
 
-/// Result of a host-path run ([`train_store_host`] / [`train_packed_host`]).
+/// Result of a legacy host-path run ([`train_store_host`] /
+/// [`train_packed_host`]); new code reads the richer
+/// [`super::host::SessionResult`] instead.
 #[derive(Clone, Debug)]
 pub struct HostTrainResult {
-    /// loss_curve[e] = full-precision training MSE after e epochs.
+    /// loss_curve[e] = full-precision training loss after e epochs.
     pub loss_curve: Vec<f64>,
     pub final_model: Vec<f32>,
     /// Store-accounted sample bytes per epoch (exact for the weaved path).
@@ -711,54 +701,8 @@ pub struct HostTrainResult {
     pub precisions: Vec<u32>,
 }
 
-/// Minibatch linreg SGD epoch skeleton. `step_batch(p, rows, x, grad)`
-/// accumulates the un-scaled minibatch gradient Σ err_i·a_i into `grad`;
-/// the skeleton owns shuffling, the lr schedule, the model update, and the
-/// per-epoch loss, so every host path shares them exactly. Every training
-/// row is visited each epoch: when `k % batch != 0` the final batch is
-/// genuinely short and its update is scaled by its own row count.
-fn host_sgd_linreg(
-    ds: &Dataset,
-    epochs: usize,
-    batch: usize,
-    lr0: f32,
-    seed: u64,
-    mut precision: impl FnMut(usize, &[f64]) -> u32,
-    mut step_batch: impl FnMut(u32, &[usize], &[f32], &mut [f32]),
-) -> (Vec<f64>, Vec<f32>, Vec<u32>) {
-    let n = ds.n();
-    let k = ds.k_train();
-    assert!(k > 0, "empty training split");
-    let nb = k.div_ceil(batch);
-    let mut rng = Rng::new(seed);
-    let mut x = vec![0.0f32; n];
-    let mut loss_curve = vec![ds.train_mse(&x)];
-    let mut precisions = Vec::with_capacity(epochs);
-    let mut order: Vec<usize> = (0..k).collect();
-    let mut grad = vec![0.0f32; n];
-    for epoch in 0..epochs {
-        let p = precision(epoch, &loss_curve);
-        precisions.push(p);
-        let lr = super::lr_at_epoch(lr0, epoch);
-        rng.shuffle(&mut order);
-        for bi in 0..nb {
-            let rows = &order[bi * batch..((bi + 1) * batch).min(k)];
-            grad.fill(0.0);
-            step_batch(p, rows, &x, &mut grad);
-            crate::tensor::axpy(-lr / rows.len() as f32, &grad, &mut x);
-        }
-        loss_curve.push(ds.train_mse(&x));
-    }
-    (loss_curve, x, precisions)
-}
-
-/// Host-path training over a weaved [`ShardedStore`] with a per-epoch
-/// [`PrecisionSchedule`], on the **fused weaved-domain kernels**: per step,
-/// `g = m⊙x` is refreshed once ([`StepKernel`]), then the whole minibatch
-/// gradient is computed straight from bit planes, batched per shard visit
-/// (`ShardedStore::fused_grad_batch`) — no f32 row is ever materialized.
-/// Bandwidth is the store's exact accounting, identical to the row-read
-/// path. [`train_store_host_dequant`] is the dequantize-row oracle.
+/// Truncating fused host training (linreg). Shim over [`HostSession`].
+#[deprecated(note = "compose a sgd::host::HostSession (ReadStrategy::Truncate) instead")]
 pub fn train_store_host(
     ds: &Dataset,
     store: &ShardedStore,
@@ -768,45 +712,14 @@ pub fn train_store_host(
     lr0: f32,
     seed: u64,
 ) -> HostTrainResult {
-    assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
-    assert_eq!(store.cols(), ds.n(), "store/dataset col mismatch");
-    store.reset_bytes_read();
-    let mut sched = ScheduleState::new(schedule, store.bits());
-    let m = store.scale().m.clone();
-    let mut k = StepKernel::new(store.cols());
-    let mut targets = vec![0.0f32; batch];
-    let (loss_curve, final_model, precisions) = host_sgd_linreg(
-        ds,
-        epochs,
-        batch,
-        lr0,
-        seed,
-        |epoch, hist| sched.precision_for_epoch(epoch, hist),
-        |p, rows, x, grad| {
-            k.refresh(&m, x);
-            let t = &mut targets[..rows.len()];
-            for (t, &r) in t.iter_mut().zip(rows) {
-                *t = ds.train_b[r];
-            }
-            store.fused_grad_batch(rows, p, &k, t, grad);
-        },
-    );
-    HostTrainResult {
-        loss_curve,
-        final_model,
-        sample_bytes_per_epoch: store.bytes_read() as f64 / epochs.max(1) as f64,
-        precisions,
-    }
+    let s = HostSession::over(ds, store).schedule(schedule);
+    let s = s.epochs(epochs).batch(batch).lr0(lr0).seed(seed);
+    s.run().expect("legacy train_store_host combination").into_host()
 }
 
-/// Host-path **double-sampled** training over the weaved store: per step,
-/// `g = m⊙x` is refreshed once, then the minibatch gradient is computed
-/// from two independent unbiased p-plane draws per row
-/// ([`ShardedStore::ds_grad_batch`]) — the §2.2 estimator, host-native,
-/// straight from bit planes, from the single stored copy. Unbiased at any
-/// read precision where [`train_store_host`]'s truncating reads are not;
-/// bandwidth is the store's exact accounting, 2× the truncating path.
-/// Deterministic bit for bit in (seed, store contents).
+/// Double-sampled fused host training (linreg, §2.2). Shim over
+/// [`HostSession`].
+#[deprecated(note = "compose a sgd::host::HostSession (ReadStrategy::DoubleSample) instead")]
 pub fn train_store_host_ds(
     ds: &Dataset,
     store: &ShardedStore,
@@ -816,50 +729,15 @@ pub fn train_store_host_ds(
     lr0: f32,
     seed: u64,
 ) -> HostTrainResult {
-    assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
-    assert_eq!(store.cols(), ds.n(), "store/dataset col mismatch");
-    store.reset_bytes_read();
-    let mut sched = ScheduleState::new(schedule, store.bits());
-    let m = store.scale().m.clone();
-    let mut k = StepKernel::new(store.cols());
-    let mut targets = vec![0.0f32; batch];
-    let mut ds_rng = Rng::new_stream(seed, 0x4453); // "DS"
-    let (loss_curve, final_model, precisions) = host_sgd_linreg(
-        ds,
-        epochs,
-        batch,
-        lr0,
-        seed,
-        |epoch, hist| sched.precision_for_epoch(epoch, hist),
-        |p, rows, x, grad| {
-            k.refresh(&m, x);
-            let t = &mut targets[..rows.len()];
-            for (t, &r) in t.iter_mut().zip(rows) {
-                *t = ds.train_b[r];
-            }
-            store.ds_grad_batch(rows, p, &k, t, &mut ds_rng, grad);
-        },
-    );
-    HostTrainResult {
-        loss_curve,
-        final_model,
-        sample_bytes_per_epoch: store.bytes_read() as f64 / epochs.max(1) as f64,
-        precisions,
-    }
+    let s = HostSession::over(ds, store).schedule(schedule).read(ReadStrategy::DoubleSample);
+    let s = s.epochs(epochs).batch(batch).lr0(lr0).seed(seed);
+    s.run().expect("legacy train_store_host_ds combination").into_host()
 }
 
-/// Host-path training on the **popcount fast path** (`--step-bits q`,
-/// DESIGN.md §8): per step, `g = m⊙x` is stochastically rounded onto a
-/// q-bit sign/magnitude grid ([`QuantStepKernel`], one rounding draw per
-/// step from a dedicated seed-derived stream), and every minibatch error
-/// comes from the integer AND+POPCNT dot
-/// ([`ShardedStore::fused_grad_batch_q`]); the axpy side stays exact. The
-/// rounding is unbiased (E[ĝ] = g), so every step's expected gradient is
-/// the exact fused gradient — the trade is integer throughput for one
-/// bounded noise term per step. Byte accounting is identical to
-/// [`train_store_host`] (the ĝ planes are model-side state, not sample
-/// traffic). Deterministic bit for bit in (seed, store contents).
-#[allow(clippy::too_many_arguments)] // the host-trainer family's 7 + step_bits
+/// Popcount fast-path host training (linreg, DESIGN.md §8). Shim over
+/// [`HostSession`].
+#[deprecated(note = "compose a sgd::host::HostSession (ReadStrategy::Popcount) instead")]
+#[allow(clippy::too_many_arguments)] // the legacy signature: 7 + step_bits
 pub fn train_store_host_q(
     ds: &Dataset,
     store: &ShardedStore,
@@ -870,42 +748,15 @@ pub fn train_store_host_q(
     lr0: f32,
     seed: u64,
 ) -> HostTrainResult {
-    assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
-    assert_eq!(store.cols(), ds.n(), "store/dataset col mismatch");
-    store.reset_bytes_read();
-    let mut sched = ScheduleState::new(schedule, store.bits());
-    let m = store.scale().m.clone();
-    let mut qk = QuantStepKernel::new(store.cols(), step_bits);
-    let mut targets = vec![0.0f32; batch];
-    let mut q_rng = Rng::new_stream(seed, 0x5153); // "QS": step-rounding stream
-    let (loss_curve, final_model, precisions) = host_sgd_linreg(
-        ds,
-        epochs,
-        batch,
-        lr0,
-        seed,
-        |epoch, hist| sched.precision_for_epoch(epoch, hist),
-        |p, rows, x, grad| {
-            qk.refresh(&m, x, &mut q_rng);
-            let t = &mut targets[..rows.len()];
-            for (t, &r) in t.iter_mut().zip(rows) {
-                *t = ds.train_b[r];
-            }
-            store.fused_grad_batch_q(rows, p, &qk, t, grad);
-        },
-    );
-    HostTrainResult {
-        loss_curve,
-        final_model,
-        sample_bytes_per_epoch: store.bytes_read() as f64 / epochs.max(1) as f64,
-        precisions,
-    }
+    let s = HostSession::over(ds, store).schedule(schedule);
+    let s = s.read(ReadStrategy::Popcount { q: step_bits });
+    let s = s.epochs(epochs).batch(batch).lr0(lr0).seed(seed);
+    s.run().expect("legacy train_store_host_q combination").into_host()
 }
 
-/// Dequantize-row oracle over the weaved store: materializes each row via
-/// `ShardedStore::dequantize_row` and runs the classic dot/axpy step —
-/// the pre-fusion host path, kept as the validation baseline. Bit-for-bit
-/// comparable with [`train_packed_host`] at p = stored width.
+/// Dequantize-row oracle over the weaved store — the pre-fusion
+/// validation baseline. Shim over [`HostSession::dequant_oracle`].
+#[deprecated(note = "compose a sgd::host::HostSession (dequant_oracle) instead")]
 pub fn train_store_host_dequant(
     ds: &Dataset,
     store: &ShardedStore,
@@ -915,35 +766,16 @@ pub fn train_store_host_dequant(
     lr0: f32,
     seed: u64,
 ) -> HostTrainResult {
-    assert_eq!(store.rows(), ds.k_train(), "store/dataset row mismatch");
-    store.reset_bytes_read();
-    let mut sched = ScheduleState::new(schedule, store.bits());
-    let mut row = vec![0.0f32; store.cols()];
-    let (loss_curve, final_model, precisions) = host_sgd_linreg(
-        ds,
-        epochs,
-        batch,
-        lr0,
-        seed,
-        |epoch, hist| sched.precision_for_epoch(epoch, hist),
-        |p, rows, x, grad| {
-            for &r in rows {
-                store.dequantize_row(r, p, &mut row);
-                let err = crate::tensor::dot(&row, x) - ds.train_b[r];
-                crate::tensor::axpy(err, &row, grad);
-            }
-        },
-    );
-    HostTrainResult {
-        loss_curve,
-        final_model,
-        sample_bytes_per_epoch: store.bytes_read() as f64 / epochs.max(1) as f64,
-        precisions,
-    }
+    let s = HostSession::over(ds, store).schedule(schedule).dequant_oracle();
+    let s = s.epochs(epochs).batch(batch).lr0(lr0).seed(seed);
+    s.run().expect("legacy train_store_host_dequant combination").into_host()
 }
 
 /// Host-path twin over the legacy [`PackedMatrix`] (full stored width) —
-/// the baseline the weaved paths are validated against.
+/// the baseline the weaved paths are validated against. Shim over
+/// [`HostSession`]: re-shards losslessly via `ShardedStore::from_packed`
+/// (bit-identical reads) and keeps the legacy packed wire-bytes figure.
+#[deprecated(note = "compose a sgd::host::HostSession over ShardedStore::from_packed instead")]
 pub fn train_packed_host(
     ds: &Dataset,
     packed: &PackedMatrix,
@@ -952,99 +784,17 @@ pub fn train_packed_host(
     lr0: f32,
     seed: u64,
 ) -> HostTrainResult {
-    assert_eq!(packed.rows, ds.k_train(), "store/dataset row mismatch");
-    let bits = packed.bits;
-    let mut row = vec![0.0f32; packed.cols];
-    let (loss_curve, final_model, precisions) = host_sgd_linreg(
-        ds,
-        epochs,
-        batch,
-        lr0,
-        seed,
-        |_, _| bits,
-        |_, rows, x, grad| {
-            for &r in rows {
-                packed.dequantize_row(r, &mut row);
-                let err = crate::tensor::dot(&row, x) - ds.train_b[r];
-                crate::tensor::axpy(err, &row, grad);
-            }
-        },
-    );
-    // every row is read once per epoch (the final batch runs short), so
-    // the figure is comparable with the weaved path's measured bytes
-    let bytes_per_row = packed.bytes() as f64 / packed.rows as f64;
-    HostTrainResult {
-        loss_curve,
-        final_model,
-        sample_bytes_per_epoch: packed.rows as f64 * bytes_per_row,
-        precisions,
-    }
+    let store = ShardedStore::from_packed(packed, 1);
+    let s = HostSession::over(ds, &store).schedule(PrecisionSchedule::Fixed(packed.bits));
+    let s = s.dequant_oracle().epochs(epochs).batch(batch).lr0(lr0).seed(seed);
+    let mut r = s.run().expect("legacy train_packed_host combination").into_host();
+    r.sample_bytes_per_epoch = packed.rows as f64 * (packed.bytes() as f64 / packed.rows as f64);
+    r
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::synthetic::make_regression;
-
-    fn packed_and_store(
-        ds: &Dataset,
-        bits: u32,
-        shards: usize,
-        seed: u64,
-    ) -> (PackedMatrix, ShardedStore) {
-        let scale = ColumnScale::from_data(&ds.train_a);
-        let mut rng = Rng::new(seed);
-        let packed = PackedMatrix::quantize(&ds.train_a, &scale, bits, &mut rng);
-        let store = ShardedStore::from_packed(&packed, shards);
-        (packed, store)
-    }
-
-    /// At p = stored width over identical indices, the weaved dequantize
-    /// oracle is bit-identical to the packed host path (the pre-fusion
-    /// guarantee, preserved).
-    #[test]
-    fn store_host_matches_packed_host_exactly_at_full_width() {
-        let ds = make_regression("host_eq", 512, 64, 24, 11);
-        let (packed, store) = packed_and_store(&ds, 8, 5, 13);
-        let a = train_packed_host(&ds, &packed, 6, 32, 0.05, 7);
-        let b = train_store_host_dequant(&ds, &store, PrecisionSchedule::Fixed(8), 6, 32, 0.05, 7);
-        assert_eq!(a.loss_curve, b.loss_curve);
-        assert_eq!(a.final_model, b.final_model);
-        assert_eq!(b.precisions, vec![8; 6]);
-    }
-
-    /// Loss-curve equivalence of the fused path: `train_store_host` (fused
-    /// kernels, no f32 rows) tracks the pre-fusion dequantize oracle at
-    /// every epoch, reads the same precisions, accounts identical bytes —
-    /// and is itself deterministic bit for bit. (Exact f32 equality with
-    /// the oracle is impossible: the fused path sums in plane order.)
-    #[test]
-    fn fused_host_path_tracks_dequant_oracle_curve() {
-        let ds = make_regression("host_fused", 512, 64, 24, 11);
-        let (_, store) = packed_and_store(&ds, 8, 5, 13);
-        for sched in [
-            PrecisionSchedule::Fixed(8),
-            PrecisionSchedule::Fixed(3),
-            PrecisionSchedule::StepUp { start: 2, every: 2, max: 8 },
-        ] {
-            let oracle = train_store_host_dequant(&ds, &store, sched, 6, 32, 0.05, 7);
-            let fused = train_store_host(&ds, &store, sched, 6, 32, 0.05, 7);
-            assert_eq!(oracle.precisions, fused.precisions, "{sched:?}");
-            assert_eq!(
-                oracle.sample_bytes_per_epoch, fused.sample_bytes_per_epoch,
-                "{sched:?}: byte accounting must be identical to the row-read path"
-            );
-            for (e, (a, b)) in oracle.loss_curve.iter().zip(&fused.loss_curve).enumerate() {
-                assert!(
-                    (a - b).abs() <= 2e-2 * (1.0 + a.abs()),
-                    "{sched:?} epoch {e}: oracle {a} vs fused {b}"
-                );
-            }
-            let again = train_store_host(&ds, &store, sched, 6, 32, 0.05, 7);
-            assert_eq!(fused.loss_curve, again.loss_curve, "{sched:?} not deterministic");
-            assert_eq!(fused.final_model, again.final_model);
-        }
-    }
 
     /// Regression for the eval_nb == 0 divide-by-zero: too few rows for
     /// one loss batch must error out instead of reporting NaN loss.
@@ -1058,76 +808,6 @@ mod tests {
         assert_eq!(eval_batch_count(4, 64, 200).unwrap(), 3);
         let msg = format!("{:#}", eval_batch_count(16, 64, 40).unwrap_err());
         assert!(msg.contains("64-row"), "unhelpful error: {msg}");
-    }
-
-    /// Independently ingested store (fresh stochastic draws) converges to
-    /// the same loss regime as the packed path at p=8 — tolerance form of
-    /// the acceptance criterion.
-    #[test]
-    fn ingested_store_matches_packed_loss_within_tolerance() {
-        let ds = make_regression("host_tol", 1024, 64, 32, 17);
-        let scale = ColumnScale::from_data(&ds.train_a);
-        let mut rng = Rng::new(19);
-        let packed = PackedMatrix::quantize(&ds.train_a, &scale, 8, &mut rng);
-        let store = ShardedStore::ingest(&ds.train_a, &scale, 8, 23, 8, 0);
-        let a = train_packed_host(&ds, &packed, 8, 32, 0.05, 7);
-        let b = train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 8, 32, 0.05, 7);
-        assert!(a.final_loss() < 0.5 * a.loss_curve[0], "packed did not converge");
-        let ratio = b.final_loss() / a.final_loss().max(1e-12);
-        assert!((0.5..2.0).contains(&ratio), "loss ratio {ratio}");
-    }
-
-    /// Step-up schedule reads coarse planes early, fine planes late, and
-    /// pays fewer bytes than a fixed full-width run.
-    #[test]
-    fn step_up_schedule_reads_fewer_bytes() {
-        let ds = make_regression("host_sched", 512, 64, 16, 29);
-        let (_, store) = packed_and_store(&ds, 8, 4, 31);
-        let full = train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 6, 32, 0.05, 3);
-        let step = train_store_host(
-            &ds,
-            &store,
-            PrecisionSchedule::StepUp { start: 2, every: 2, max: 8 },
-            6,
-            32,
-            0.05,
-            3,
-        );
-        assert_eq!(step.precisions, vec![2, 2, 4, 4, 8, 8]);
-        assert!(step.sample_bytes_per_epoch < full.sample_bytes_per_epoch);
-        assert!(step.loss_curve.last().unwrap().is_finite());
-    }
-
-    impl HostTrainResult {
-        fn final_loss(&self) -> f64 {
-            *self.loss_curve.last().unwrap()
-        }
-    }
-
-    /// Regression for the ragged-tail drop: with k % batch != 0 the host
-    /// skeleton must visit every training row exactly once per epoch, in
-    /// one genuinely short final batch.
-    #[test]
-    fn host_skeleton_visits_ragged_tail() {
-        let ds = make_regression("host_tail", 70, 8, 6, 41);
-        let mut seen = vec![0u32; 70];
-        let mut batch_sizes = Vec::new();
-        host_sgd_linreg(
-            &ds,
-            1,
-            32,
-            0.0,
-            5,
-            |_, _| 1,
-            |_, rows, _, _| {
-                batch_sizes.push(rows.len());
-                for &r in rows {
-                    seen[r] += 1;
-                }
-            },
-        );
-        assert_eq!(batch_sizes, vec![32, 32, 6]);
-        assert!(seen.iter().all(|&c| c == 1), "rows missed or repeated: {seen:?}");
     }
 
     /// The artifact path's fixed-shape batches wrap the ragged tail around
@@ -1158,71 +838,6 @@ mod tests {
             }
         }
         assert!(seen2.iter().all(|&c| c == 1));
-    }
-
-    /// Ragged-tail byte accounting over the store paths: with k % batch
-    /// != 0 every row is fetched once per epoch (truncation) and twice per
-    /// epoch (double sampling) — the DS path's bytes are *exactly* 2×.
-    #[test]
-    fn ragged_store_paths_account_every_row() {
-        let ds = make_regression("host_tail_store", 100, 16, 12, 43);
-        let (_, store) = packed_and_store(&ds, 8, 3, 19);
-        let tr = train_store_host(&ds, &store, PrecisionSchedule::Fixed(4), 3, 32, 0.05, 7);
-        assert_eq!(tr.sample_bytes_per_epoch, (100 * store.bytes_per_row(4)) as f64);
-        let dsr = train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(4), 3, 32, 0.05, 7);
-        assert_eq!(dsr.sample_bytes_per_epoch, 2.0 * tr.sample_bytes_per_epoch);
-    }
-
-    /// The popcount host path converges like the exact fused path at a
-    /// generous q, replays bit for bit from its seed, and accounts exactly
-    /// the truncating path's bytes.
-    #[test]
-    fn popcount_host_path_converges_deterministic_same_bytes() {
-        let ds = make_regression("host_q", 512, 64, 24, 51);
-        let (_, store) = packed_and_store(&ds, 8, 5, 13);
-        let exact = train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 8, 32, 0.05, 7);
-        let q = train_store_host_q(&ds, &store, PrecisionSchedule::Fixed(8), 12, 8, 32, 0.05, 7);
-        assert_eq!(q.precisions, exact.precisions);
-        assert_eq!(
-            q.sample_bytes_per_epoch, exact.sample_bytes_per_epoch,
-            "popcount path must not change sample-byte accounting"
-        );
-        let (le, lq) = (exact.final_loss(), q.final_loss());
-        assert!(le < 0.5 * exact.loss_curve[0], "exact path did not converge");
-        assert!(
-            lq < 2.0 * le.max(1e-9) + 0.05 * exact.loss_curve[0],
-            "q path stalled: {lq} vs {le}"
-        );
-        let again =
-            train_store_host_q(&ds, &store, PrecisionSchedule::Fixed(8), 12, 8, 32, 0.05, 7);
-        assert_eq!(q.loss_curve, again.loss_curve, "not deterministic");
-        assert_eq!(q.final_model, again.final_model);
-        // a different seed draws different roundings below exactness
-        let other =
-            train_store_host_q(&ds, &store, PrecisionSchedule::Fixed(8), 4, 8, 32, 0.05, 8);
-        assert_ne!(q.final_model, other.final_model);
-    }
-
-    /// The DS host path is deterministic bit for bit and degenerates to
-    /// the truncating fused path at p = stored width (carry-free draws).
-    #[test]
-    fn ds_host_path_deterministic_and_exact_at_full_width() {
-        let ds = make_regression("host_ds", 256, 32, 16, 47);
-        let (_, store) = packed_and_store(&ds, 8, 4, 23);
-        let a = train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(8), 5, 32, 0.05, 7);
-        let b = train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(8), 5, 32, 0.05, 7);
-        assert_eq!(a.loss_curve, b.loss_curve);
-        assert_eq!(a.final_model, b.final_model);
-        // at p = bits both draws are the exact stored row, so the loss
-        // curve tracks the truncating fused path epoch for epoch
-        let t = train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 5, 32, 0.05, 7);
-        for (e, (u, v)) in a.loss_curve.iter().zip(&t.loss_curve).enumerate() {
-            assert!((u - v).abs() <= 2e-2 * (1.0 + u.abs()), "epoch {e}: ds {u} vs trunc {v}");
-        }
-        // distinct seeds draw distinct carries below full width
-        let c = train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(3), 5, 32, 0.05, 7);
-        let d = train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(3), 5, 32, 0.05, 8);
-        assert_ne!(c.final_model, d.final_model);
     }
 }
 

@@ -3,18 +3,25 @@
 //!
 //! * [`modes`]   — the quantization mode lattice (Fig 1's design space)
 //! * [`driver`]  — the epoch loop: store → batches → artifact execution
+//! * [`host`]    — artifact-free [`HostSession`]: any GLM × read strategy
+//!   × execution × schedule over the weaved store (the legacy free host
+//!   trainers are deprecated shims over it)
 //! * [`refetch`] — ℓ1 / ℓ2(JL) refetching for hinge loss (§G)
 //! * [`deep`]    — quantized-model MLP training (§3.3, Fig 7b)
 
 pub mod deep;
 pub mod driver;
+pub mod host;
 pub mod modes;
 pub mod refetch;
 
+pub use driver::{train, HostTrainResult, StoreBackend, TrainConfig, TrainResult};
+#[allow(deprecated)] // legacy entry points stay importable during migration
 pub use driver::{
-    train, train_packed_host, train_store_host, train_store_host_dequant, train_store_host_ds,
-    train_store_host_q, HostTrainResult, StoreBackend, TrainConfig, TrainResult,
+    train_packed_host, train_store_host, train_store_host_dequant, train_store_host_ds,
+    train_store_host_q,
 };
+pub use host::{eval_glm_loss, Execution, GlmLoss, HostSession, ReadStrategy, SessionResult};
 pub use modes::{Mode, ModelKind};
 
 /// Diminishing step size α/k per epoch k (the paper's §5 schedule).

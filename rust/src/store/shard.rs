@@ -279,25 +279,61 @@ impl ShardedStore {
     }
 
     /// One fused minibatch gradient pass on the **blocked batch kernels**
-    /// ([`kernel::dot_rows_block`] / [`kernel::axpy_rows_block`]): rows
-    /// are visited in shard-grouped blocks ([`ShardedStore::for_shard_runs`]),
-    /// each block computed against the single resident [`StepKernel`] —
-    /// `g` loads and plane-pointer setup are amortized across the block.
-    /// For each row
+    /// ([`kernel::dot_rows_block`] / [`kernel::axpy_rows_block`]),
+    /// generalized over the GLM step multiplier: rows are visited in
+    /// shard-grouped blocks (`for_shard_runs`), each block computed
+    /// against the single resident [`StepKernel`] — `g` loads and
+    /// plane-pointer setup are amortized across the block. For each row
     ///
     /// ```text
-    /// err_i = dot(dequant_p(row_i), x) − targets[i]
-    /// grad += err_i · dequant_p(row_i)
+    /// coef_i = step(dot(dequant_p(row_i), x), targets[i])
+    /// grad  += coef_i · dequant_p(row_i)
     /// ```
     ///
     /// straight from the bit planes (`k` must hold `g = m⊙x` for the
-    /// current model), with the shared affine term −(Σ err_i)·m applied
-    /// once per batch. The result is **bit-for-bit equal** to running the
-    /// per-row kernels over the same shard-grouped order (property-tested).
-    /// Byte accounting is identical to the row-read path — p plane spans
-    /// per row, counted once per row visit; the axpy pass reuses the
-    /// planes the dot pass just fetched (cache-resident, not a second DRAM
-    /// crossing). Returns the bytes counted.
+    /// current model), with the shared affine term −(Σ coef_i)·m applied
+    /// once per batch. `step` is the loss derivative ℓ′(aᵀx; b) —
+    /// `|d, t| d - t` recovers the least-squares residual and makes this
+    /// bit-for-bit the classic fused linreg batch
+    /// ([`ShardedStore::fused_grad_batch`]); any other
+    /// [`crate::sgd::GlmLoss`] multiplier extends the same plane-domain
+    /// pass to its GLM. Byte accounting is identical to the row-read path
+    /// — p plane spans per row, counted once per row visit; the axpy pass
+    /// reuses the planes the dot pass just fetched (cache-resident, not a
+    /// second DRAM crossing). Returns the bytes counted.
+    pub fn fused_grad_batch_glm<F: Fn(f32, f32) -> f32>(
+        &self,
+        rows: &[usize],
+        p: u32,
+        k: &StepKernel,
+        targets: &[f32],
+        step: F,
+        grad: &mut [f32],
+    ) -> usize {
+        assert_eq!(rows.len(), targets.len(), "one target per row");
+        let mut errs = [0.0f32; BLOCK_ROWS];
+        let mut coef_sum = 0.0f32;
+        self.for_shard_runs(rows, |shard, locals, pos| {
+            let nb = pos.len();
+            kernel::dot_rows_block(shard, locals, p, k, &mut errs[..nb]);
+            for (e, &i) in errs[..nb].iter_mut().zip(pos) {
+                *e = step(*e, targets[i as usize]);
+            }
+            kernel::axpy_rows_block(shard, locals, p, &errs[..nb], grad);
+            for &e in &errs[..nb] {
+                coef_sum += e;
+            }
+        });
+        kernel::axpy_affine(coef_sum, &self.scale().m, grad);
+        let bytes = rows.len() * self.bytes_per_row(p);
+        self.note_bytes_read(bytes);
+        bytes
+    }
+
+    /// [`ShardedStore::fused_grad_batch_glm`] with the least-squares
+    /// residual `coef_i = dot_i − targets[i]` — the classic fused linreg
+    /// minibatch gradient (the property-tested bit-for-bit contract with
+    /// the per-row kernels lives here). Returns the bytes counted.
     pub fn fused_grad_batch(
         &self,
         rows: &[usize],
@@ -306,24 +342,7 @@ impl ShardedStore {
         targets: &[f32],
         grad: &mut [f32],
     ) -> usize {
-        assert_eq!(rows.len(), targets.len(), "one target per row");
-        let mut errs = [0.0f32; BLOCK_ROWS];
-        let mut err_sum = 0.0f32;
-        self.for_shard_runs(rows, |shard, locals, pos| {
-            let nb = pos.len();
-            kernel::dot_rows_block(shard, locals, p, k, &mut errs[..nb]);
-            for (e, &i) in errs[..nb].iter_mut().zip(pos) {
-                *e -= targets[i as usize];
-            }
-            kernel::axpy_rows_block(shard, locals, p, &errs[..nb], grad);
-            for &e in &errs[..nb] {
-                err_sum += e;
-            }
-        });
-        kernel::axpy_affine(err_sum, &self.scale().m, grad);
-        let bytes = rows.len() * self.bytes_per_row(p);
-        self.note_bytes_read(bytes);
-        bytes
+        self.fused_grad_batch_glm(rows, p, k, targets, |d, t| d - t, grad)
     }
 
     /// One *double-sampled* fused minibatch gradient pass (§2.2) on the
@@ -337,15 +356,52 @@ impl ShardedStore {
     ///
     /// and draw two the accumulation, so E[grad] is the gradient on the
     /// stored full-width values at *any* read precision — the unbiased
-    /// estimator naive truncation is not. Carry randomness is consumed in
-    /// a fixed, specified order: per block, the dot draws of all rows
-    /// (row-major), then the axpy draws of all rows — identical to calling
-    /// the per-row DS kernels in that sequence on the same stream. The
-    /// shared affine term −(Σ err_i)·m is applied once per batch. Byte
-    /// accounting: both fetches count, 2·p plane spans per row visit —
-    /// exactly 2× the truncating path (DESIGN.md §5). Deterministic in
-    /// (rng state, store contents, batch order). Returns the bytes
-    /// counted.
+    /// estimator naive truncation is not. Generalized over the GLM step
+    /// multiplier like [`ShardedStore::fused_grad_batch_glm`]:
+    /// `coef_i = step(dot(draw1_i, x), targets[i])` scales draw two's
+    /// accumulation (for non-linear `step` the two independent draws
+    /// still factorize the expectation — the residual bias lives in the
+    /// multiplier alone and is bounded by the §4 smoothness argument, see
+    /// DESIGN.md §9). Carry randomness is consumed in a fixed, specified
+    /// order: per block, the dot draws of all rows (row-major), then the
+    /// axpy draws of all rows — identical to calling the per-row DS
+    /// kernels in that sequence on the same stream. The shared affine
+    /// term −(Σ coef_i)·m is applied once per batch. Byte accounting:
+    /// both fetches count, 2·p plane spans per row visit — exactly 2× the
+    /// truncating path (DESIGN.md §5). Deterministic in (rng state, store
+    /// contents, batch order). Returns the bytes counted.
+    pub fn ds_grad_batch_glm<F: Fn(f32, f32) -> f32>(
+        &self,
+        rows: &[usize],
+        p: u32,
+        k: &StepKernel,
+        targets: &[f32],
+        step: F,
+        rng: &mut Rng,
+        grad: &mut [f32],
+    ) -> usize {
+        assert_eq!(rows.len(), targets.len(), "one target per row");
+        let mut errs = [0.0f32; BLOCK_ROWS];
+        let mut coef_sum = 0.0f32;
+        self.for_shard_runs(rows, |shard, locals, pos| {
+            let nb = pos.len();
+            kernel::dot_rows_block_ds(shard, locals, p, k, rng, &mut errs[..nb]);
+            for (e, &i) in errs[..nb].iter_mut().zip(pos) {
+                *e = step(*e, targets[i as usize]);
+            }
+            kernel::axpy_rows_block_ds(shard, locals, p, &errs[..nb], rng, grad);
+            for &e in &errs[..nb] {
+                coef_sum += e;
+            }
+        });
+        kernel::axpy_affine(coef_sum, &self.scale().m, grad);
+        let bytes = 2 * rows.len() * self.bytes_per_row(p);
+        self.note_bytes_read(bytes);
+        bytes
+    }
+
+    /// [`ShardedStore::ds_grad_batch_glm`] with the least-squares residual
+    /// — the §2.2 double-sampled linreg batch. Returns the bytes counted.
     pub fn ds_grad_batch(
         &self,
         rows: &[usize],
@@ -355,34 +411,52 @@ impl ShardedStore {
         rng: &mut Rng,
         grad: &mut [f32],
     ) -> usize {
+        self.ds_grad_batch_glm(rows, p, k, targets, |d, t| d - t, rng, grad)
+    }
+
+    /// [`ShardedStore::fused_grad_batch_glm`] on the **popcount fast
+    /// path**: the per-row dots come from [`kernel::dot_rows_block_q`] —
+    /// an integer AND+POPCNT inner loop against the q-bit rounded step
+    /// kernel (`qk` must hold this step's rounding of `g = m⊙x`) — before
+    /// `step` maps each to its GLM multiplier, while the axpy side is the
+    /// exact blocked kernel on the true `m`. With the least-squares
+    /// residual the estimator is unbiased over the rounding draw:
+    /// E[grad] equals the exact fused batch gradient (non-linear
+    /// multipliers add the same bounded approximation bias as the DS
+    /// path, DESIGN.md §9). Byte accounting is identical to the
+    /// truncating path (the ĝ planes are model-side state, not sample
+    /// traffic). Returns the bytes counted.
+    pub fn fused_grad_batch_q_glm<F: Fn(f32, f32) -> f32>(
+        &self,
+        rows: &[usize],
+        p: u32,
+        qk: &QuantStepKernel,
+        targets: &[f32],
+        step: F,
+        grad: &mut [f32],
+    ) -> usize {
         assert_eq!(rows.len(), targets.len(), "one target per row");
         let mut errs = [0.0f32; BLOCK_ROWS];
-        let mut err_sum = 0.0f32;
+        let mut coef_sum = 0.0f32;
         self.for_shard_runs(rows, |shard, locals, pos| {
             let nb = pos.len();
-            kernel::dot_rows_block_ds(shard, locals, p, k, rng, &mut errs[..nb]);
+            kernel::dot_rows_block_q(shard, locals, p, qk, &mut errs[..nb]);
             for (e, &i) in errs[..nb].iter_mut().zip(pos) {
-                *e -= targets[i as usize];
+                *e = step(*e, targets[i as usize]);
             }
-            kernel::axpy_rows_block_ds(shard, locals, p, &errs[..nb], rng, grad);
+            kernel::axpy_rows_block(shard, locals, p, &errs[..nb], grad);
             for &e in &errs[..nb] {
-                err_sum += e;
+                coef_sum += e;
             }
         });
-        kernel::axpy_affine(err_sum, &self.scale().m, grad);
-        let bytes = 2 * rows.len() * self.bytes_per_row(p);
+        kernel::axpy_affine(coef_sum, &self.scale().m, grad);
+        let bytes = rows.len() * self.bytes_per_row(p);
         self.note_bytes_read(bytes);
         bytes
     }
 
-    /// [`ShardedStore::fused_grad_batch`] on the **popcount fast path**:
-    /// the per-row errors come from [`kernel::dot_rows_block_q`] — an
-    /// integer AND+POPCNT inner loop against the q-bit rounded step kernel
-    /// (`qk` must hold this step's rounding of `g = m⊙x`) — while the axpy
-    /// side is the exact blocked kernel on the true `m`. Unbiased over the
-    /// rounding draw: E[grad] equals the exact fused batch gradient. Byte
-    /// accounting is identical to the truncating path (the ĝ planes are
-    /// model-side state, not sample traffic). Returns the bytes counted.
+    /// [`ShardedStore::fused_grad_batch_q_glm`] with the least-squares
+    /// residual — the popcount linreg batch. Returns the bytes counted.
     pub fn fused_grad_batch_q(
         &self,
         rows: &[usize],
@@ -391,24 +465,7 @@ impl ShardedStore {
         targets: &[f32],
         grad: &mut [f32],
     ) -> usize {
-        assert_eq!(rows.len(), targets.len(), "one target per row");
-        let mut errs = [0.0f32; BLOCK_ROWS];
-        let mut err_sum = 0.0f32;
-        self.for_shard_runs(rows, |shard, locals, pos| {
-            let nb = pos.len();
-            kernel::dot_rows_block_q(shard, locals, p, qk, &mut errs[..nb]);
-            for (e, &i) in errs[..nb].iter_mut().zip(pos) {
-                *e -= targets[i as usize];
-            }
-            kernel::axpy_rows_block(shard, locals, p, &errs[..nb], grad);
-            for &e in &errs[..nb] {
-                err_sum += e;
-            }
-        });
-        kernel::axpy_affine(err_sum, &self.scale().m, grad);
-        let bytes = rows.len() * self.bytes_per_row(p);
-        self.note_bytes_read(bytes);
-        bytes
+        self.fused_grad_batch_q_glm(rows, p, qk, targets, |d, t| d - t, grad)
     }
 
     /// Blocked fused dots over global rows: `out[i] = dot(dequant_p(rows[i]),
@@ -500,7 +557,7 @@ fn shard_rows_for(rows: usize, num_shards: usize) -> usize {
 /// workers partition the epoch exactly, without coordination. The tail
 /// partial batch is dropped — full batches keep the worker partition
 /// coordination-free; the single-threaded SGD drivers visit the ragged
-/// tail themselves (see `sgd::driver::host_sgd_linreg`).
+/// tail themselves (see the `sgd::host` sequential epoch skeleton).
 pub struct MinibatchIter {
     order: Vec<u32>,
     batch: usize,

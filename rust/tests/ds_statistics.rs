@@ -25,9 +25,51 @@ use zipml::data::synthetic::make_regression;
 use zipml::data::{tomo, Dataset};
 use zipml::quant::ColumnScale;
 use zipml::rng::Rng;
-use zipml::sgd::{lr_at_epoch, train_store_host, train_store_host_ds};
+use zipml::sgd::{lr_at_epoch, HostSession, ReadStrategy, SessionResult};
 use zipml::store::{PrecisionSchedule, QuantStepKernel, ShardedStore, StepKernel};
 use zipml::tensor::{axpy, dot};
+
+/// Truncating host session at fixed read precision p — the weaved-domain
+/// fused path the statistics below measure.
+fn host_trunc(
+    ds: &Dataset,
+    store: &ShardedStore,
+    p: u32,
+    epochs: usize,
+    batch: usize,
+    lr0: f32,
+    seed: u64,
+) -> SessionResult {
+    HostSession::over(ds, store)
+        .schedule(PrecisionSchedule::Fixed(p))
+        .epochs(epochs)
+        .batch(batch)
+        .lr0(lr0)
+        .seed(seed)
+        .run()
+        .expect("truncating session")
+}
+
+/// Double-sampled host session at fixed read precision p (§2.2).
+fn host_ds(
+    ds: &Dataset,
+    store: &ShardedStore,
+    p: u32,
+    epochs: usize,
+    batch: usize,
+    lr0: f32,
+    seed: u64,
+) -> SessionResult {
+    HostSession::over(ds, store)
+        .schedule(PrecisionSchedule::Fixed(p))
+        .read(ReadStrategy::DoubleSample)
+        .epochs(epochs)
+        .batch(batch)
+        .lr0(lr0)
+        .seed(seed)
+        .run()
+        .expect("double-sampled session")
+}
 
 /// Full-precision dense minibatch SGD with the host skeleton's semantics
 /// (per-epoch shuffle, lr0/(e+1), short final batch) — the fp32 reference
@@ -264,12 +306,9 @@ fn e2e_synthetic_ds_converges_truncation_plateaus() {
         let (epochs, batch, lr0) = (60usize, 32usize, 0.1f32);
 
         let fp = dense_sgd(&ds, epochs, batch, lr0, seed);
-        let ds4 =
-            train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(4), epochs, batch, lr0, seed);
-        let ds2 =
-            train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(2), epochs, batch, lr0, seed);
-        let tr2 =
-            train_store_host(&ds, &store, PrecisionSchedule::Fixed(2), epochs, batch, lr0, seed);
+        let ds4 = host_ds(&ds, &store, 4, epochs, batch, lr0, seed);
+        let ds2 = host_ds(&ds, &store, 2, epochs, batch, lr0, seed);
+        let tr2 = host_trunc(&ds, &store, 2, epochs, batch, lr0, seed);
 
         let l_ds4 = *ds4.loss_curve.last().unwrap();
         let l_ds2 = *ds2.loss_curve.last().unwrap();
@@ -288,8 +327,7 @@ fn e2e_synthetic_ds_converges_truncation_plateaus() {
         );
 
         // deterministic: the DS run replays bit for bit
-        let again =
-            train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(4), epochs, batch, lr0, seed);
+        let again = host_ds(&ds, &store, 4, epochs, batch, lr0, seed);
         assert_eq!(ds4.loss_curve, again.loss_curve, "seed {seed}");
         assert_eq!(ds4.final_model, again.final_model, "seed {seed}");
     }
@@ -306,12 +344,9 @@ fn e2e_tomography_ds_converges_truncation_plateaus() {
     let (epochs, batch, lr0) = (150usize, 32usize, 1.0f32);
     for seed in [7u64, 8] {
         let fp = dense_sgd(&ds, epochs, batch, lr0, seed);
-        let ds4 =
-            train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(4), epochs, batch, lr0, seed);
-        let ds1 =
-            train_store_host_ds(&ds, &store, PrecisionSchedule::Fixed(1), epochs, batch, lr0, seed);
-        let tr1 =
-            train_store_host(&ds, &store, PrecisionSchedule::Fixed(1), epochs, batch, lr0, seed);
+        let ds4 = host_ds(&ds, &store, 4, epochs, batch, lr0, seed);
+        let ds1 = host_ds(&ds, &store, 1, epochs, batch, lr0, seed);
+        let tr1 = host_trunc(&ds, &store, 1, epochs, batch, lr0, seed);
         let l_ds4 = *ds4.loss_curve.last().unwrap();
         let l_ds1 = *ds1.loss_curve.last().unwrap();
         let l_tr1 = *tr1.loss_curve.last().unwrap();

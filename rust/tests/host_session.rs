@@ -1,0 +1,401 @@
+//! The [`HostSession`] matrix: every GLM loss × read strategy × execution
+//! composes through one engine — smoke convergence, exact byte
+//! accounting, fixed-seed determinism, invalid-combination errors, and
+//! the bit-for-bit shim contract of the nine legacy entry points.
+//! Artifact-free: runs in every checkout.
+
+use zipml::data::synthetic::{make_classification, make_regression};
+use zipml::data::Dataset;
+use zipml::fpga::hogwild::HogwildConfig;
+use zipml::quant::ColumnScale;
+use zipml::sgd::{self, Execution, GlmLoss, HostSession, ModelKind, ReadStrategy};
+use zipml::store::{PrecisionSchedule, ShardedStore};
+
+const MODELS: [ModelKind; 4] = [
+    ModelKind::Linreg,
+    ModelKind::Lssvm { c: 1e-3 },
+    ModelKind::Logistic,
+    ModelKind::Svm,
+];
+
+/// Per-model workload: regression data for the squared losses, ±1-label
+/// classification data (row-normalized) for logistic and hinge, with a
+/// learning rate stable for each task's gradient scale.
+fn workload(model: ModelKind, seed: u64) -> (Dataset, f32) {
+    if model.is_classification() {
+        (make_classification("session_cls", 520, 64, 24, seed), 0.5)
+    } else {
+        (make_regression("session_reg", 520, 64, 24, seed), 0.05)
+    }
+}
+
+fn store_for(ds: &Dataset, bits: u32, seed: u64) -> ShardedStore {
+    let scale = ColumnScale::from_data(&ds.train_a);
+    ShardedStore::ingest(&ds.train_a, &scale, bits, seed, 5, 1)
+}
+
+fn final_loss(curve: &[f64]) -> f64 {
+    *curve.last().unwrap()
+}
+
+/// The full store-backed matrix: 4 GLMs × {Truncate, DoubleSample,
+/// Popcount} × {Sequential, Hogwild}. Every combination runs, descends
+/// from the initial loss, and accounts exactly rows × bytes_per_row(p)
+/// per epoch (2× for the two DS fetches) — k % batch != 0, so the ragged
+/// tail is in the accounting too.
+#[test]
+fn matrix_store_reads_converge_and_account_exactly() {
+    let reads = [
+        ReadStrategy::Truncate,
+        ReadStrategy::DoubleSample,
+        ReadStrategy::Popcount { q: 8 },
+    ];
+    let execs = [Execution::Sequential, Execution::Hogwild { threads: 2 }];
+    for model in MODELS {
+        let (ds, lr) = workload(model, 31);
+        let store = store_for(&ds, 8, 77);
+        // DS reads draw live carries below the stored width; the
+        // deterministic reads run at a precision with real truncation too
+        let p = 6u32;
+        for read in reads {
+            for exec in execs {
+                let r = HostSession::over(&ds, &store)
+                    .loss(&model)
+                    .read(read)
+                    .execution(exec)
+                    .schedule(PrecisionSchedule::Fixed(p))
+                    .epochs(10)
+                    .batch(48)
+                    .lr0(lr)
+                    .seed(9)
+                    .run()
+                    .unwrap_or_else(|e| panic!("{model:?} × {read:?} × {exec:?}: {e:#}"));
+                let tag = format!("{model:?} × {read:?} × {exec:?}");
+                let (l0, lf) = (r.loss_curve[0], final_loss(&r.loss_curve));
+                assert!(lf.is_finite(), "{tag}: non-finite loss");
+                assert!(lf < 0.97 * l0, "{tag}: no descent ({l0} -> {lf})");
+                assert_eq!(r.precisions, vec![p; 10], "{tag}");
+                let per_fetch = (ds.k_train() * store.bytes_per_row(p)) as f64;
+                let want = match read {
+                    ReadStrategy::DoubleSample => 2.0 * per_fetch,
+                    _ => per_fetch,
+                };
+                assert_eq!(r.sample_bytes_per_epoch, want, "{tag}: byte accounting");
+                // hogwild applies one racy update per (epoch × row);
+                // sequential applies one per batch
+                let want_updates = match exec {
+                    Execution::Sequential => 10 * ds.k_train().div_ceil(48),
+                    Execution::Hogwild { .. } => 10 * ds.k_train(),
+                };
+                assert_eq!(r.updates, want_updates, "{tag}: update count");
+            }
+        }
+    }
+}
+
+/// The dense (storeless, fp32) read serves the same 4 GLMs under both
+/// executions — the baseline column of the matrix.
+#[test]
+fn matrix_dense_read_converges_all_models() {
+    for model in MODELS {
+        let (ds, lr) = workload(model, 33);
+        for exec in [Execution::Sequential, Execution::Hogwild { threads: 2 }] {
+            let r = HostSession::dense(&ds)
+                .loss(&model)
+                .execution(exec)
+                .epochs(10)
+                .batch(48)
+                .lr0(lr)
+                .seed(5)
+                .run()
+                .unwrap_or_else(|e| panic!("{model:?} dense × {exec:?}: {e:#}"));
+            let tag = format!("{model:?} × dense × {exec:?}");
+            assert!(
+                final_loss(&r.loss_curve) < 0.97 * r.loss_curve[0],
+                "{tag}: no descent ({} -> {})",
+                r.loss_curve[0],
+                final_loss(&r.loss_curve)
+            );
+            assert_eq!(r.sample_bytes_per_epoch, (ds.k_train() * ds.n() * 4) as f64, "{tag}");
+            assert_eq!(r.precisions, vec![32; 10], "{tag}");
+        }
+    }
+}
+
+/// Fixed-seed determinism: every sequential (model × read) combination
+/// replays bit for bit — loss curves and final models.
+#[test]
+fn sequential_sessions_are_deterministic() {
+    for model in MODELS {
+        let (ds, lr) = workload(model, 41);
+        let store = store_for(&ds, 8, 13);
+        let reads = [
+            ReadStrategy::Truncate,
+            ReadStrategy::DoubleSample,
+            ReadStrategy::Popcount { q: 6 },
+        ];
+        for read in reads {
+            let base = HostSession::over(&ds, &store)
+                .loss(&model)
+                .read(read)
+                .schedule(PrecisionSchedule::Fixed(5))
+                .epochs(4)
+                .batch(32)
+                .lr0(lr)
+                .seed(3);
+            let a = base.run().unwrap();
+            let b = base.run().unwrap();
+            assert_eq!(a.loss_curve, b.loss_curve, "{model:?} × {read:?}");
+            assert_eq!(a.final_model, b.final_model, "{model:?} × {read:?}");
+        }
+        let dense = HostSession::dense(&ds).loss(&model).epochs(4).batch(32).lr0(lr).seed(3);
+        let a = dense.run().unwrap();
+        let b = dense.run().unwrap();
+        assert_eq!(a.loss_curve, b.loss_curve, "{model:?} × dense");
+        assert_eq!(a.final_model, b.final_model, "{model:?} × dense");
+    }
+}
+
+/// Invalid axis combinations must error, not silently fall back.
+#[test]
+fn invalid_combinations_error() {
+    let ds = make_regression("session_bad", 96, 16, 12, 3);
+    let store = store_for(&ds, 8, 5);
+    // dense read over a store: the store would be silently ignored
+    assert!(HostSession::over(&ds, &store).read(ReadStrategy::Dense).run().is_err());
+    // store-backed reads without a store
+    for read in [
+        ReadStrategy::Truncate,
+        ReadStrategy::DoubleSample,
+        ReadStrategy::Popcount { q: 4 },
+    ] {
+        assert!(HostSession::dense(&ds).read(read).run().is_err(), "{read:?} without store");
+    }
+    // popcount rounding width out of range
+    assert!(HostSession::over(&ds, &store).read(ReadStrategy::Popcount { q: 0 }).run().is_err());
+    assert!(HostSession::over(&ds, &store).read(ReadStrategy::Popcount { q: 17 }).run().is_err());
+    // the dequantize oracle is sequential + truncating only
+    assert!(HostSession::over(&ds, &store)
+        .dequant_oracle()
+        .read(ReadStrategy::DoubleSample)
+        .run()
+        .is_err());
+    assert!(HostSession::over(&ds, &store)
+        .dequant_oracle()
+        .read(ReadStrategy::Popcount { q: 4 })
+        .run()
+        .is_err());
+    assert!(HostSession::over(&ds, &store)
+        .dequant_oracle()
+        .execution(Execution::Hogwild { threads: 2 })
+        .run()
+        .is_err());
+    // degenerate knobs
+    assert!(HostSession::over(&ds, &store)
+        .execution(Execution::Hogwild { threads: 0 })
+        .run()
+        .is_err());
+    assert!(HostSession::over(&ds, &store).batch(0).run().is_err());
+    // store/dataset shape mismatch
+    let other = make_regression("session_bad2", 80, 16, 12, 4);
+    assert!(HostSession::over(&other, &store).run().is_err());
+}
+
+/// The nine legacy entry points are shims over the session: for linreg
+/// they produce bit-for-bit the session's results (hogwild compared at
+/// one thread, where the racy engine is deterministic).
+#[test]
+#[allow(deprecated)] // the shims are the subject under test
+fn legacy_shims_are_bit_for_bit_the_session() {
+    let ds = make_regression("session_shim", 260, 32, 16, 21);
+    let scale = ColumnScale::from_data(&ds.train_a);
+    let mut rng = zipml::rng::Rng::new(2);
+    let packed = zipml::quant::packing::PackedMatrix::quantize(&ds.train_a, &scale, 8, &mut rng);
+    let store = ShardedStore::from_packed(&packed, 4);
+    let sched = PrecisionSchedule::Fixed(5);
+    let base =
+        HostSession::over(&ds, &store).schedule(sched).epochs(4).batch(32).lr0(0.05).seed(7);
+
+    let a = sgd::train_store_host(&ds, &store, sched, 4, 32, 0.05, 7);
+    let b = base.run().unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.final_model, b.final_model);
+    assert_eq!(a.sample_bytes_per_epoch, b.sample_bytes_per_epoch);
+    assert_eq!(a.precisions, b.precisions);
+
+    let a = sgd::train_store_host_ds(&ds, &store, sched, 4, 32, 0.05, 7);
+    let b = base.read(ReadStrategy::DoubleSample).run().unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.final_model, b.final_model);
+    assert_eq!(a.sample_bytes_per_epoch, b.sample_bytes_per_epoch);
+
+    let a = sgd::train_store_host_q(&ds, &store, sched, 6, 4, 32, 0.05, 7);
+    let b = base.read(ReadStrategy::Popcount { q: 6 }).run().unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.final_model, b.final_model);
+
+    let a = sgd::train_store_host_dequant(&ds, &store, sched, 4, 32, 0.05, 7);
+    let b = base.dequant_oracle().run().unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.final_model, b.final_model);
+
+    // packed twin: same math through ShardedStore::from_packed(_, 1),
+    // legacy wire-bytes figure preserved
+    let a = sgd::train_packed_host(&ds, &packed, 4, 32, 0.05, 7);
+    let store1 = ShardedStore::from_packed(&packed, 1);
+    let b = HostSession::over(&ds, &store1)
+        .schedule(PrecisionSchedule::Fixed(8))
+        .dequant_oracle()
+        .epochs(4)
+        .batch(32)
+        .lr0(0.05)
+        .seed(7)
+        .run()
+        .unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.final_model, b.final_model);
+    assert_eq!(
+        a.sample_bytes_per_epoch,
+        packed.rows as f64 * (packed.bytes() as f64 / packed.rows as f64)
+    );
+
+    // hogwild shims at one thread (deterministic: no races, strided
+    // partition and streams are seed-derived)
+    let cfg = HogwildConfig { threads: 1, epochs: 3, lr0: 0.02, seed: 11 };
+    let hw_base = HostSession::over(&ds, &store)
+        .execution(Execution::Hogwild { threads: 1 })
+        .epochs(3)
+        .lr0(0.02)
+        .seed(11);
+
+    let a = zipml::fpga::hogwild::hogwild_train(&ds, &cfg);
+    let b = HostSession::dense(&ds)
+        .execution(Execution::Hogwild { threads: 1 })
+        .epochs(3)
+        .lr0(0.02)
+        .seed(11)
+        .run()
+        .unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.final_model, b.final_model);
+    assert_eq!(a.updates, b.updates);
+
+    let a = zipml::fpga::hogwild::hogwild_train_store(&ds, &store, 5, &cfg);
+    let b = hw_base.schedule(sched).run().unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.final_model, b.final_model);
+
+    let a = zipml::fpga::hogwild::hogwild_train_store_ds(&ds, &store, 5, &cfg);
+    let b = hw_base.schedule(sched).read(ReadStrategy::DoubleSample).run().unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.final_model, b.final_model);
+
+    let a = zipml::fpga::hogwild::hogwild_train_store_q(&ds, &store, 5, 6, &cfg);
+    let b = hw_base.schedule(sched).read(ReadStrategy::Popcount { q: 6 }).run().unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.final_model, b.final_model);
+}
+
+/// The generalized fused-vs-dequant oracle contract at session level: for
+/// every smooth GlmLoss the fused truncating session tracks its
+/// dequantize-oracle twin epoch for epoch (the hinge's kink makes
+/// curve-level comparison ill-posed for SVM — its fused path is pinned by
+/// the gradient-level property in tests/properties.rs instead).
+#[test]
+fn session_fused_tracks_dequant_oracle_per_smooth_model() {
+    for model in [ModelKind::Linreg, ModelKind::Lssvm { c: 1e-3 }, ModelKind::Logistic] {
+        let (ds, lr) = workload(model, 57);
+        let store = store_for(&ds, 8, 29);
+        let base = HostSession::over(&ds, &store)
+            .loss(&model)
+            .schedule(PrecisionSchedule::Fixed(6))
+            .epochs(5)
+            .batch(32)
+            .lr0(lr)
+            .seed(7);
+        let fused = base.run().unwrap();
+        let oracle = base.dequant_oracle().run().unwrap();
+        assert_eq!(fused.precisions, oracle.precisions, "{model:?}");
+        assert_eq!(fused.sample_bytes_per_epoch, oracle.sample_bytes_per_epoch, "{model:?}");
+        for (e, (a, b)) in oracle.loss_curve.iter().zip(&fused.loss_curve).enumerate() {
+            assert!(
+                (a - b).abs() <= 2e-2 * (1.0 + a.abs()),
+                "{model:?} epoch {e}: oracle {a} vs fused {b}"
+            );
+        }
+    }
+}
+
+/// Zero epochs is a degenerate but well-defined session: the curve holds
+/// only the initial loss and no update is applied (the CLI refuses it
+/// before getting here — tested in main.rs).
+#[test]
+fn zero_epochs_returns_initial_loss_only() {
+    let ds = make_regression("session_e0", 96, 16, 12, 3);
+    let store = store_for(&ds, 8, 5);
+    let r = HostSession::over(&ds, &store).epochs(0).run().unwrap();
+    assert_eq!(r.loss_curve.len(), 1);
+    assert_eq!(r.updates, 0);
+    assert!(r.precisions.is_empty());
+    assert!(r.final_model.iter().all(|&v| v == 0.0));
+}
+
+/// New capability from the axis product: precision schedules compose with
+/// hogwild execution (the legacy hogwild paths were fixed-p only). The
+/// step-up schedule reads coarse planes early and pays fewer bytes than
+/// fixed full width, under racing workers.
+#[test]
+fn schedules_compose_with_hogwild() {
+    let ds = make_regression("session_hw_sched", 400, 32, 20, 13);
+    let store = store_for(&ds, 8, 17);
+    let base = HostSession::over(&ds, &store)
+        .execution(Execution::Hogwild { threads: 3 })
+        .epochs(6)
+        .lr0(0.02)
+        .seed(5);
+    let full = base.schedule(PrecisionSchedule::Fixed(8)).run().unwrap();
+    let step = base
+        .schedule(PrecisionSchedule::StepUp { start: 2, every: 2, max: 8 })
+        .run()
+        .unwrap();
+    assert_eq!(step.precisions, vec![2, 2, 4, 4, 8, 8]);
+    assert!(step.sample_bytes_per_epoch < full.sample_bytes_per_epoch);
+    assert!(final_loss(&step.loss_curve).is_finite());
+    assert_eq!(step.updates, full.updates);
+}
+
+/// A custom GlmLoss implementation (not a ModelKind) drives the session:
+/// the trait is the extension point, not the enum.
+#[test]
+fn custom_glm_loss_composes() {
+    /// Huber-flavored loss: quadratic inside |r| <= 1, linear outside.
+    struct Huber;
+    impl GlmLoss for Huber {
+        fn label(&self) -> &'static str {
+            "huber"
+        }
+        fn multiplier(&self, dot: f32, target: f32) -> f32 {
+            (dot - target).clamp(-1.0, 1.0)
+        }
+        fn loss(&self, dot: f32, target: f32) -> f64 {
+            let r = (dot - target) as f64;
+            if r.abs() <= 1.0 {
+                0.5 * r * r
+            } else {
+                r.abs() - 0.5
+            }
+        }
+    }
+    let ds = make_regression("session_huber", 260, 32, 16, 19);
+    let store = store_for(&ds, 8, 23);
+    let r = HostSession::over(&ds, &store)
+        .loss(&Huber)
+        .epochs(8)
+        .batch(32)
+        .lr0(0.1)
+        .seed(3)
+        .run()
+        .unwrap();
+    assert!(r.label.starts_with("huber"), "label: {}", r.label);
+    assert!(final_loss(&r.loss_curve) < 0.8 * r.loss_curve[0], "{:?}", r.loss_curve);
+}

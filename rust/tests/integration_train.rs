@@ -282,30 +282,32 @@ fn weaved_store_backend_matches_packed_path() {
 }
 
 /// The weaved host paths (no artifacts needed) run in every checkout: the
-/// dequantize oracle reproduces the packed host path bit for bit at full
-/// width, and the fused weaved-domain path tracks the oracle with
-/// identical byte accounting.
+/// session's dequantize oracle reproduces the legacy packed host path bit
+/// for bit at full width, and the fused weaved-domain session tracks the
+/// oracle with identical byte accounting.
 #[test]
+#[allow(deprecated)] // train_packed_host: the legacy baseline under test
 fn weaved_host_path_matches_packed_exactly() {
     let ds = make_regression("weaved_host_it", 1024, 128, 48, 61);
     let scale = ColumnScale::from_data(&ds.train_a);
     let mut rng = Rng::new(5);
     let packed = PackedMatrix::quantize(&ds.train_a, &scale, 8, &mut rng);
     let store = ShardedStore::from_packed(&packed, 16);
+    let session = sgd::HostSession::over(&ds, &store).epochs(8).batch(64).lr0(0.05).seed(9);
     let a = sgd::train_packed_host(&ds, &packed, 8, 64, 0.05, 9);
-    let b = sgd::train_store_host_dequant(&ds, &store, PrecisionSchedule::Fixed(8), 8, 64, 0.05, 9);
+    let b = session.schedule(PrecisionSchedule::Fixed(8)).dequant_oracle().run().unwrap();
     assert_eq!(a.loss_curve, b.loss_curve);
     assert!(b.loss_curve.last().unwrap() < &(0.5 * b.loss_curve[0]), "no convergence");
-    // the fused path (no f32 row materialization) tracks the oracle and
-    // accounts exactly the same bytes
-    let f = sgd::train_store_host(&ds, &store, PrecisionSchedule::Fixed(8), 8, 64, 0.05, 9);
+    // the fused session (no f32 row materialization) tracks the oracle
+    // and accounts exactly the same bytes
+    let f = session.schedule(PrecisionSchedule::Fixed(8)).run().unwrap();
     assert_eq!(f.sample_bytes_per_epoch, b.sample_bytes_per_epoch);
     for (x, y) in b.loss_curve.iter().zip(&f.loss_curve) {
         assert!((x - y).abs() <= 2e-2 * (1.0 + x.abs()), "oracle {x} vs fused {y}");
     }
     // one stored copy at 8 bits serves a 2-bit reader at a quarter of the
     // row bytes (Fig 5's bandwidth knob, post-ingestion)
-    let c = sgd::train_store_host(&ds, &store, PrecisionSchedule::Fixed(2), 8, 64, 0.05, 9);
+    let c = session.schedule(PrecisionSchedule::Fixed(2)).run().unwrap();
     assert!(c.sample_bytes_per_epoch * 3.9 < b.sample_bytes_per_epoch * 1.01);
 }
 

@@ -7,6 +7,7 @@ use zipml::quant::{
     self, discretized_optimal_levels, optimal_levels, quantization_variance, ColumnScale,
 };
 use zipml::rng::Rng;
+use zipml::sgd::{GlmLoss, ModelKind};
 use zipml::store::{
     kernel, MinibatchIter, PrecisionSchedule, ScheduleState, ShardedStore, StepKernel,
     WeavedMatrix,
@@ -378,6 +379,91 @@ fn prop_fused_kernels_match_dequant_oracle() {
         // zero-scale column is inert through both kernels
         if cols > 2 && grad_f[1] != 0.0 {
             return Err(format!("zero-scale column accumulated {}", grad_f[1]));
+        }
+        Ok(())
+    });
+}
+
+/// The generalized fused-vs-dequant oracle property (the tentpole's
+/// acceptance pin): for EVERY GlmLoss impl — linreg, LS-SVM, logistic,
+/// SVM/hinge — and every read precision p in 1..=16 of a 16-bit store,
+/// the fused plane-domain GLM batch gradient matches the
+/// dequantize-then-multiply oracle within 1e-4 relative. The multiplier
+/// is applied to marginally different dots on the two paths (plane-order
+/// vs column-order f32 summation), so hinge rows whose fused and oracle
+/// dots straddle the margin kink are excluded — the subgradient there is
+/// a tie-break, not a numerical disagreement.
+#[test]
+fn prop_glm_fused_vs_dequant_oracle_every_loss() {
+    let models: [(&str, ModelKind); 4] = [
+        ("linreg", ModelKind::Linreg),
+        ("lssvm", ModelKind::Lssvm { c: 1e-3 }),
+        ("logistic", ModelKind::Logistic),
+        ("svm", ModelKind::Svm),
+    ];
+    Prop::new(24).check("glm-fused-vs-dequant", |rng| {
+        let rows = 9 + small_size(rng, 40);
+        let cols = match rng.below(6) {
+            0 => 63,
+            1 => 64,
+            2 => 65,
+            3 => 130,
+            _ => small_size(rng, 120),
+        };
+        let a = rand_matrix(rng, rows, cols, 2.0);
+        let sc = ColumnScale::from_data(&a);
+        let store = ShardedStore::ingest(&a, &sc, 16, rng.next_u64(), 1 + rng.below(5), 1);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal() * 0.3).collect();
+        let mut k = StepKernel::new(cols);
+        k.refresh(&sc.m, &x);
+        let batch: Vec<usize> = (0..8).map(|_| rng.below(rows)).collect();
+        // ±1 targets: meaningful for the margin losses, fine for the rest
+        let targets: Vec<f32> =
+            (0..8).map(|_| if rng.below(2) == 0 { -1.0 } else { 1.0 }).collect();
+        let mut row = vec![0.0f32; cols];
+        for p in 1..=16u32 {
+            for (name, model) in &models {
+                let mut fused = vec![0.0f32; cols];
+                store.fused_grad_batch_glm(
+                    &batch,
+                    p,
+                    &k,
+                    &targets,
+                    |d, t| model.multiplier(d, t),
+                    &mut fused,
+                );
+                // dequantize-row oracle in f64, same multiplier rule
+                let mut want = vec![0.0f64; cols];
+                let mut mag = vec![0.0f64; cols];
+                let mut kink = false;
+                for (&r, &t) in batch.iter().zip(&targets) {
+                    store.dequantize_row(r, p, &mut row);
+                    let d_oracle = zipml::tensor::dot(&row, &x);
+                    let (shard, local) = store.locate_row(r);
+                    let d_fused = kernel::dot_row(shard, local, p, &k);
+                    let coef = model.multiplier(d_oracle, t);
+                    if matches!(model, ModelKind::Svm)
+                        && coef != model.multiplier(d_fused, t)
+                    {
+                        kink = true; // hinge tie-break, not a numeric bug
+                    }
+                    for ((o, g), &v) in want.iter_mut().zip(mag.iter_mut()).zip(&row) {
+                        *o += coef as f64 * v as f64;
+                        *g += (coef as f64 * v as f64).abs();
+                    }
+                }
+                if kink {
+                    continue;
+                }
+                for c in 0..cols {
+                    if (fused[c] as f64 - want[c]).abs() > 1e-4 * (1.0 + mag[c]) {
+                        return Err(format!(
+                            "{name} p={p} c={c}: fused {} vs oracle {}",
+                            fused[c], want[c]
+                        ));
+                    }
+                }
+            }
         }
         Ok(())
     });
