@@ -4,7 +4,9 @@
 # (cargo build --release && cargo test -q), then artifact-free end-to-end
 # smoke runs: the weaved-store example (truncating + double-sampled host
 # paths), a `zipml train --host --model logistic --store weaved-ds` CLI
-# run (a non-linear GLM through the session, end to end)
+# run (a non-linear GLM through the session, end to end, with a
+# `--trace` that is then schema-validated by `zipml trace validate` and
+# summarized — TRACE_smoke.jsonl is uploaded as a CI artifact)
 # and the fused-dot bench in --quick mode, whose assertions pin the
 # blocked/per-row byte accounting equality and DS bytes == 2x truncation
 # (the perf-ratio acceptance asserts — blocked >= 2x per-row, popcount
@@ -53,9 +55,14 @@ cargo test -q
 echo "== example smoke: store_weaving (HostSession fused + DS paths, no artifacts) =="
 cargo run --release --example store_weaving > /dev/null
 
-echo "== CLI smoke: logistic GLM over the double-sampled weaved store (HostSession) =="
+echo "== CLI smoke: logistic GLM over the double-sampled weaved store, traced (HostSession) =="
 cargo run --release --bin zipml -- \
-  train --host --model logistic --store weaved-ds --bits 3 --epochs 2 > /dev/null
+  train --host --model logistic --store weaved-ds --bits 3 --epochs 2 \
+  --trace TRACE_smoke.jsonl --trace-level full > /dev/null
+
+echo "== trace smoke: schema-validate + summarize the emitted TRACE_smoke.jsonl =="
+cargo run --release --bin zipml -- trace validate TRACE_smoke.jsonl
+cargo run --release --bin zipml -- trace summarize TRACE_smoke.jsonl > /dev/null
 
 echo "== bench smoke: fused_dot --quick (blocked/popcount/accounting asserts; writes BENCH_kernels.json) =="
 cargo bench --bench fused_dot -- --quick > /dev/null

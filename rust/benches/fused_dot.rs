@@ -11,6 +11,9 @@
 //!     and spread_word paths — the data behind SPARSE_BITS /
 //!     MASKED_SUM_SPARSE_BITS
 //!   * byte accounting: blocked == per-row == row-read path; DS == 2×
+//!   * telemetry overhead: fused grad batch with an enabled counter
+//!     registry attached vs the disabled default (ASSERT: enabled ≥
+//!     0.95× disabled throughput at p = 8 — full budgets; --quick warns)
 //!
 //! Every section is also recorded machine-readably in
 //! `BENCH_kernels.json` (repo root; env `ZIPML_BENCH_JSON` overrides) —
@@ -59,7 +62,7 @@ fn main() {
     let (rows, cols, store_bits) = (100_000usize, 64usize, 16u32);
     let a = Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal()).collect());
     let scale = ColumnScale::from_data(&a);
-    let store = ShardedStore::ingest(&a, &scale, store_bits, 42, 64, 0);
+    let mut store = ShardedStore::ingest(&a, &scale, store_bits, 42, 64, 0);
     let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
     let mut k = StepKernel::new(cols);
     k.refresh(&scale.m, &x);
@@ -451,6 +454,48 @@ fn main() {
                 ("trunc_epoch_bytes", (trunc_bytes as f64).into()),
                 ("ds_epoch_bytes", (ds_bytes as f64).into()),
             ],
+        );
+    }
+
+    section("telemetry overhead: enabled vs disabled counter registry (grad batch, p=8)");
+    // the branch-free contract (DESIGN.md §10): the disabled default does
+    // the same mask-gated relaxed adds with mask 0, so attaching an
+    // enabled registry must cost ~nothing on the fused hot path. Disabled
+    // is measured first, on the store's shared disabled registry.
+    let disabled = bench("grad batch, telemetry off p=8", &opts, || {
+        grad.fill(0.0);
+        store.fused_grad_batch(&batch, 8, &k, &targets, &mut grad);
+        black_box(&grad);
+    });
+    let reg = std::sync::Arc::new(zipml::telemetry::Metrics::enabled());
+    store.attach_metrics(std::sync::Arc::clone(&reg));
+    let enabled = bench("grad batch, telemetry on  p=8", &opts, || {
+        grad.fill(0.0);
+        store.fused_grad_batch(&batch, 8, &k, &targets, &mut grad);
+        black_box(&grad);
+    });
+    assert!(reg.bytes_read_total() > 0, "the enabled registry saw no bytes");
+    let ratio = disabled.mean_ns / enabled.mean_ns;
+    println!("   telemetry on/off throughput ratio: {ratio:.3} (acceptance: >= 0.95)");
+    js.push(
+        "telemetry_overhead",
+        vec![
+            ("p", 8u32.into()),
+            ("batch", b.into()),
+            ("disabled_ns", disabled.mean_ns.into()),
+            ("enabled_ns", enabled.mean_ns.into()),
+            ("throughput_ratio", ratio.into()),
+        ],
+    );
+    if quick {
+        if ratio < 0.95 {
+            println!("   WARNING: telemetry overhead above 5% ({ratio:.3}x) in quick mode");
+        }
+    } else {
+        assert!(
+            ratio >= 0.95,
+            "ACCEPTANCE: the enabled-telemetry fused grad batch must keep >= 0.95x the \
+             disabled throughput at p=8 (got {ratio:.3}x)"
         );
     }
 

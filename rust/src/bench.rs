@@ -142,10 +142,14 @@ pub fn black_box<T>(x: T) -> T {
 // the repo's persistent perf trajectory.
 // ---------------------------------------------------------------------------
 
-/// One JSON scalar. Non-finite numbers serialize as `null`.
+/// One JSON scalar. Non-finite numbers serialize as `null`. Counter
+/// totals go through [`JsonVal::UInt`], which emits the integer text
+/// directly — `Num` routes through f64 and would silently round values
+/// above 2^53, breaking the telemetry bit-for-bit byte contract.
 #[derive(Clone, Debug)]
 pub enum JsonVal {
     Num(f64),
+    UInt(u64),
     Str(String),
     Bool(bool),
 }
@@ -153,6 +157,12 @@ pub enum JsonVal {
 impl From<f64> for JsonVal {
     fn from(v: f64) -> Self {
         JsonVal::Num(v)
+    }
+}
+
+impl From<u64> for JsonVal {
+    fn from(v: u64) -> Self {
+        JsonVal::UInt(v)
     }
 }
 
@@ -180,7 +190,10 @@ impl From<bool> for JsonVal {
     }
 }
 
-fn json_escape(s: &str, out: &mut String) {
+/// Escape `s` as a JSON string (quotes, backslashes, control chars) and
+/// append it, quoted, to `out`. Shared with `telemetry::trace`, whose
+/// round-trip tests pin the escaping against the matching parser.
+pub(crate) fn json_escape(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -193,10 +206,11 @@ fn json_escape(s: &str, out: &mut String) {
     out.push('"');
 }
 
-fn json_val(v: &JsonVal, out: &mut String) {
+pub(crate) fn json_val(v: &JsonVal, out: &mut String) {
     match v {
         JsonVal::Num(n) if n.is_finite() => out.push_str(&format!("{n}")),
         JsonVal::Num(_) => out.push_str("null"),
+        JsonVal::UInt(v) => out.push_str(&v.to_string()),
         JsonVal::Str(s) => json_escape(s, out),
         JsonVal::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
     }
@@ -303,13 +317,17 @@ mod tests {
         js.meta("note", "a\"b");
         js.push("sec", vec![("p", 8u32.into()), ("ratio", 2.5f64.into())]);
         js.push("sec", vec![("bad", JsonVal::Num(f64::NAN))]);
-        js.push("other", vec![("ok", true.into())]);
+        js.push("other", vec![("ok", true.into()), ("big", u64::MAX.into())]);
         let s = js.render();
         assert!(s.contains("\"bench\": \"unit\""), "{s}");
         assert!(s.contains("\"quick\": true"), "{s}");
         assert!(s.contains("\"a\\\"b\""), "escaping broke: {s}");
         assert!(s.contains("\"ratio\": 2.5"), "{s}");
         assert!(s.contains("\"bad\": null"), "non-finite must be null: {s}");
+        assert!(
+            s.contains(&format!("\"big\": {}", u64::MAX)),
+            "u64 must not round through f64: {s}"
+        );
         // structural sanity: balanced braces/brackets (none inside strings)
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());

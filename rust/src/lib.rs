@@ -32,4 +32,5 @@ pub mod rng;
 pub mod runtime;
 pub mod sgd;
 pub mod store;
+pub mod telemetry;
 pub mod tensor;

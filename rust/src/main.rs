@@ -4,10 +4,13 @@
 //!   zipml list                         list figures/tables and artifacts
 //!   zipml figure <id>|all [--quick]    regenerate a paper figure (CSV + stdout)
 //!   zipml train [opts]                 train one model/mode combination
+//!   zipml trace summarize|validate F   inspect a --trace JSONL file
 //!   zipml fpga-sim [--k K --n N]       print the pipeline cycle model
 //!   zipml quantize-demo                optimal-vs-uniform levels demo
 //!
 //! (clap is not in the offline crate set — parsing is hand-rolled.)
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -19,6 +22,7 @@ use zipml::sgd::{
     TrainConfig,
 };
 use zipml::store::{PrecisionSchedule, ShardedStore};
+use zipml::telemetry::{self, Metrics, TraceLevel, TraceSink};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -48,6 +52,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("list") => cmd_list(),
         Some("figure") => cmd_figure(&args[1..]),
         Some("train") => cmd_train(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("fpga-sim") => cmd_fpga(&args[1..]),
         Some("quantize-demo") => cmd_quantize_demo(),
         Some(other) => bail!("unknown command {other:?}\n{HELP}"),
@@ -64,6 +69,7 @@ USAGE:
               [--store legacy|weaved|weaved-ds] [--shards N] [--schedule S]
               [--store-bits W] [--bits-m M] [--bits-g G]
               [--host] [--step-bits Q]
+              [--trace FILE [--trace-level counters|spans|full]]
        MODE: fp32 | naive | ds | dsu8 | e2e | mq | gq | optimal | round
              | cheby | poly | refetch-l1 | refetch-jl
        S (weaved stores, reads p planes/epoch): fixed | step | refetch
@@ -84,6 +90,14 @@ USAGE:
        --step-bits Q  (with --host --store weaved) popcount fast path:
                  round g = m*x to Q sign/magnitude bit planes per step and
                  dot by AND+POPCNT; unbiased, off by default
+       --trace FILE   (--host only) write a JSONL telemetry trace: run
+                 header, per-epoch loss/precision/exact-byte rollups,
+                 phase spans, counter totals, and a cross-checked summary
+                 (schema: DESIGN.md §10). --trace-level picks the
+                 detail: counters (epoch rollups + counters), spans
+                 (default; + phase spans), full (+ per-shard bytes)
+  zipml trace summarize <file.jsonl>   per-epoch table from a --trace file
+  zipml trace validate <file.jsonl>    schema + consistency check a trace
   zipml fpga-sim [--k K] [--n N]
   zipml quantize-demo";
 
@@ -228,6 +242,16 @@ fn cmd_train_host(args: &[String]) -> Result<()> {
             bail!("--step-bits must be 1..=16, got {q}");
         }
     }
+    let trace_path = opt(args, "--trace");
+    let trace_level = match opt(args, "--trace-level") {
+        Some(s) => {
+            if trace_path.is_none() {
+                bail!("--trace-level picks the detail of --trace: add --trace FILE");
+            }
+            TraceLevel::parse(s).map_err(anyhow::Error::msg)?
+        }
+        None => TraceLevel::Spans,
+    };
     let dataset_name = opt(args, "--dataset").unwrap_or(if model.is_classification() {
         "cod-rna"
     } else {
@@ -238,7 +262,8 @@ fn cmd_train_host(args: &[String]) -> Result<()> {
     let schedule = parse_schedule(args, bits)?;
     let ingest_seed = seed ^ 0x5745_4156_4544; // "WEAVED"
     let store_kind = opt(args, "--store").unwrap_or("weaved");
-    let (store, read) = match store_kind {
+    let ingest_start = std::time::Instant::now();
+    let (mut store, read) = match store_kind {
         "weaved" => (
             ShardedStore::ingest(&ds.train_a, &scale, bits, ingest_seed, shards, 0),
             match step_bits {
@@ -267,15 +292,36 @@ fn cmd_train_host(args: &[String]) -> Result<()> {
         }
         other => bail!("--host needs --store weaved|weaved-ds, got {other}"),
     };
-    let r = HostSession::over(&ds, &store)
+    let ingest_secs = ingest_start.elapsed().as_secs_f64();
+    // One registry serves both views: the store tallies its exact-byte
+    // accounting into it on every read, the session reads it back for the
+    // trace's `counters` events — so the two agree bit for bit.
+    let metrics = Arc::new(Metrics::enabled());
+    let sink = match trace_path {
+        Some(p) => {
+            store.attach_metrics(Arc::clone(&metrics));
+            let sink = TraceSink::to_path(std::path::Path::new(p), trace_level)?;
+            sink.emit_at(
+                TraceLevel::Spans,
+                "span",
+                &[("name", "ingest".into()), ("secs", ingest_secs.into())],
+            );
+            Some(sink)
+        }
+        None => None,
+    };
+    let mut sess = HostSession::over(&ds, &store)
         .loss(&model)
         .read(read)
         .schedule(schedule)
         .epochs(epochs)
         .batch(batch)
         .lr0(lr0)
-        .seed(seed)
-        .run()?;
+        .seed(seed);
+    if let Some(t) = &sink {
+        sess = sess.metrics(&metrics).trace(t);
+    }
+    let r = sess.run()?;
     println!(
         "training [{}] on {dataset_name} (n={}, K={}, p={bits})",
         r.label,
@@ -291,6 +337,36 @@ fn cmd_train_host(args: &[String]) -> Result<()> {
         r.sample_bytes_per_epoch,
         r.precisions
     );
+    if let (Some(t), Some(p)) = (&sink, trace_path) {
+        let events = t.finish()?;
+        println!("trace: {events} events ({}) -> {p}", trace_level.as_str());
+    }
+    Ok(())
+}
+
+/// Inspect a `--trace` JSONL file: `validate` runs the DESIGN.md §10
+/// schema and consistency checks; `summarize` prints the per-epoch table
+/// (after validating).
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let usage = "usage: zipml trace summarize|validate <file.jsonl>";
+    let (sub, path) = match (args.first().map(String::as_str), args.get(1)) {
+        (Some(sub @ ("summarize" | "validate")), Some(path)) => (sub, path),
+        _ => bail!("{usage}"),
+    };
+    let text = std::fs::read_to_string(path)?;
+    match sub {
+        "summarize" => {
+            print!("{}", telemetry::summarize(&text).map_err(anyhow::Error::msg)?);
+        }
+        _ => {
+            let st = telemetry::validate(&text).map_err(anyhow::Error::msg)?;
+            let loss = st.final_loss.map_or("-".to_string(), |l| format!("{l:.6}"));
+            println!(
+                "ok: {} events, {} epochs, {} bytes read, final loss {loss}",
+                st.events, st.epochs, st.total_bytes
+            );
+        }
+    }
     Ok(())
 }
 
@@ -300,6 +376,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     }
     if opt(args, "--step-bits").is_some() {
         bail!("--step-bits is a host-kernel feature: add --host (see zipml help)");
+    }
+    if opt(args, "--trace").is_some() || opt(args, "--trace-level").is_some() {
+        bail!("--trace is a host-session feature: add --host (see zipml help)");
     }
     let model = parse_model(args)?;
     let bits: u32 = opt(args, "--bits").map(|v| v.parse()).transpose()?.unwrap_or(5);
@@ -489,5 +568,45 @@ mod tests {
         assert!(cmd_train_host(&a(&["--store", "legacy"])).is_err());
         assert!(cmd_train_host(&a(&["--store", "weaved-ds", "--step-bits", "4"])).is_err());
         assert!(cmd_train_host(&a(&["--step-bits", "0"])).is_err());
+    }
+
+    /// `--trace-level` modifies `--trace`, and both are host-session
+    /// flags: lone or artifact-path uses bail with a pointer to the fix.
+    #[test]
+    fn trace_flags_validated() {
+        let err = cmd_train_host(&a(&["--trace-level", "full"])).unwrap_err();
+        assert!(format!("{err:#}").contains("--trace"), "unhelpful: {err:#}");
+        let err = cmd_train(&a(&["--trace", "t.jsonl"])).unwrap_err();
+        assert!(format!("{err:#}").contains("--host"), "unhelpful: {err:#}");
+        // bad level names are rejected before any training happens
+        assert!(cmd_train_host(&a(&["--trace", "t.jsonl", "--trace-level", "verbose"])).is_err());
+        // the trace subcommand needs a known verb and a file
+        assert!(cmd_trace(&a(&["dump", "t.jsonl"])).is_err());
+        assert!(cmd_trace(&a(&["validate"])).is_err());
+    }
+
+    /// End-to-end CLI trace: a host run with `--trace` emits a JSONL
+    /// file that `zipml trace validate` and `summarize` both accept.
+    #[test]
+    fn train_host_trace_round_trips_through_validate() {
+        let name = format!("zipml_cli_trace_{}.jsonl", std::process::id());
+        let path = std::env::temp_dir().join(name);
+        let p = path.to_str().unwrap();
+        cmd_train_host(&a(&[
+            "--store",
+            "weaved-ds",
+            "--bits",
+            "3",
+            "--epochs",
+            "2",
+            "--trace",
+            p,
+            "--trace-level",
+            "full",
+        ]))
+        .unwrap();
+        cmd_trace(&a(&["validate", p])).unwrap();
+        cmd_trace(&a(&["summarize", p])).unwrap();
+        std::fs::remove_file(&path).ok();
     }
 }

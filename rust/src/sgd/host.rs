@@ -27,6 +27,14 @@
 //! * **schedule** — a [`PrecisionSchedule`] picking the read precision
 //!   per epoch (store-backed reads; defaults to the stored width).
 //!
+//! **Observability** (DESIGN.md §10): [`HostSession::trace`] attaches a
+//! JSONL [`TraceSink`] — the session emits a `run` header, per-epoch
+//! rollups (loss, precision, exact bytes, updates), phase spans, and a
+//! consistency-checked `summary`/`counters` tail; [`HostSession::metrics`]
+//! attaches the counter registry the trace reads back. Both default to
+//! off, and the disabled path is branch-free in the kernels (mask-gated
+//! counters on the store).
+//!
 //! The nine legacy entry points survive as `#[deprecated]` shims over the
 //! session, bit-for-bit identical for linreg (the sequential engine
 //! issues exactly the same f32 operations in the same order; the hogwild
@@ -54,7 +62,8 @@
 //! println!("{}: final loss {:?}", r.label, r.loss_curve.last());
 //! ```
 
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -65,6 +74,7 @@ use crate::store::{
     kernel, MinibatchIter, PrecisionSchedule, QuantStepKernel, ScheduleState, ShardedStore,
     StepKernel,
 };
+use crate::telemetry::{Metrics, TraceLevel, TraceSink, MAX_PRECISION};
 use crate::tensor::{axpy, dot};
 
 use super::driver::HostTrainResult;
@@ -320,6 +330,8 @@ pub struct HostSession<'a> {
     lr0: f32,
     seed: u64,
     oracle: bool,
+    metrics: Option<&'a Metrics>,
+    trace: Option<&'a TraceSink>,
 }
 
 impl<'a> HostSession<'a> {
@@ -338,6 +350,8 @@ impl<'a> HostSession<'a> {
             lr0: 0.05,
             seed: 42,
             oracle: false,
+            metrics: None,
+            trace: None,
         }
     }
 
@@ -357,6 +371,8 @@ impl<'a> HostSession<'a> {
             lr0: 0.05,
             seed: 42,
             oracle: false,
+            metrics: None,
+            trace: None,
         }
     }
 
@@ -421,6 +437,39 @@ impl<'a> HostSession<'a> {
     pub fn dequant_oracle(mut self) -> Self {
         self.oracle = true;
         self
+    }
+
+    /// Attach a telemetry counter registry for this run. The session
+    /// resets it at run start, flushes hogwild worker tallies into it,
+    /// and reads it back for the trace's `counters` events. Store-backed
+    /// reads tally into the registry the *store* carries
+    /// ([`ShardedStore::attach_metrics`]) — attach the same `Arc` there
+    /// and pass it here so the two views agree bit for bit (the CLI
+    /// does). If unset, the session falls back to the store's own
+    /// registry; a disabled registry is treated as absent.
+    pub fn metrics(mut self, m: &'a Metrics) -> Self {
+        self.metrics = Some(m);
+        self
+    }
+
+    /// Attach a JSONL trace sink: the run emits its `run` header,
+    /// per-epoch rollups, phase spans (at [`TraceLevel::Spans`]+),
+    /// per-shard byte attribution (at [`TraceLevel::Full`]), and the
+    /// `counters`/`summary` tail, per the DESIGN.md §10 schema. Trace
+    /// content is deterministic under a fixed seed except the
+    /// wall-clock/publish fields in
+    /// [`crate::telemetry::UNSTABLE_FIELDS`].
+    pub fn trace(mut self, t: &'a TraceSink) -> Self {
+        self.trace = Some(t);
+        self
+    }
+
+    /// The registry the run records/reports against: the builder's, else
+    /// the store's, provided it is enabled.
+    fn effective_metrics(&self) -> Option<&Metrics> {
+        self.metrics
+            .or_else(|| self.store.map(|s| s.metrics()))
+            .filter(|m| m.is_enabled())
     }
 
     fn label_string(&self) -> String {
@@ -519,15 +568,106 @@ impl<'a> HostSession<'a> {
     /// Validate the axis combination and train. Errors on invalid
     /// combinations (see the module docs); never silently substitutes a
     /// different configuration.
+    ///
+    /// Accounting is reset at run start (store byte cells and the
+    /// effective metrics registry), so after the run the store counter,
+    /// the registry, and the trace's per-epoch byte deltas all describe
+    /// exactly this run — the §10 consistency contract.
     pub fn run(self) -> Result<SessionResult> {
         self.validate()?;
+        if let Some(s) = self.store {
+            s.reset_bytes_read();
+        }
+        if let Some(m) = self.effective_metrics() {
+            m.reset();
+        }
+        if let Some(t) = self.trace {
+            let threads = match self.exec {
+                Execution::Sequential => 1usize,
+                Execution::Hogwild { threads } => threads,
+            };
+            t.emit(
+                "run",
+                &[
+                    ("label", self.label_string().as_str().into()),
+                    ("loss", self.loss.label().into()),
+                    ("read", self.read.label().as_str().into()),
+                    ("level", t.level().as_str().into()),
+                    ("rows", self.ds.k_train().into()),
+                    ("cols", self.ds.n().into()),
+                    ("epochs", self.epochs.into()),
+                    ("batch", self.batch.into()),
+                    ("threads", threads.into()),
+                    ("seed", self.seed.into()),
+                    ("lr0", (self.lr0 as f64).into()),
+                ],
+            );
+        }
         let t0 = std::time::Instant::now();
         let mut r = match self.exec {
             Execution::Sequential => self.run_sequential()?,
             Execution::Hogwild { threads } => self.run_hogwild(threads)?,
         };
         r.wall_secs = t0.elapsed().as_secs_f64();
+        if let Some(t) = self.trace {
+            self.emit_tail(t, &r);
+        }
         Ok(r)
+    }
+
+    /// The trace's trailing events: per-shard byte attribution (Full),
+    /// counter totals (when an enabled registry is in play), and the
+    /// `summary` whose `total_bytes` the validator cross-checks against
+    /// the per-epoch deltas, the counters, and the shard attribution.
+    fn emit_tail(&self, t: &TraceSink, r: &SessionResult) {
+        if let Some(s) = self.store {
+            for si in 0..s.num_shards() {
+                t.emit_at(
+                    TraceLevel::Full,
+                    "shard_bytes",
+                    &[("shard", si.into()), ("bytes", s.shard_bytes_read(si).into())],
+                );
+            }
+        }
+        if let Some(m) = self.effective_metrics() {
+            let mut counters: Vec<(String, u64)> = vec![
+                ("bytes_read".into(), m.bytes_read_total()),
+                ("row_visits".into(), m.row_visits()),
+                ("plane_words".into(), m.plane_words()),
+                ("rng_draws".into(), m.rng_draws()),
+                ("sround_refreshes".into(), m.sround_refreshes()),
+                ("hogwild_updates".into(), m.hogwild_updates()),
+                ("hogwild_publishes".into(), m.hogwild_publishes()),
+            ];
+            for p in 1..=MAX_PRECISION {
+                let b = m.bytes_read_at(p);
+                if b != 0 {
+                    counters.push((format!("bytes_read_p{p}"), b));
+                }
+            }
+            for (name, v) in &counters {
+                t.emit("counters", &[("counter", name.as_str().into()), ("value", (*v).into())]);
+            }
+        }
+        let total_bytes: u64 = match self.store {
+            Some(s) => s.bytes_read(),
+            None => self.epochs as u64 * (self.ds.k_train() * self.ds.n() * 4) as u64,
+        };
+        t.emit(
+            "summary",
+            &[
+                ("total_bytes", total_bytes.into()),
+                ("final_loss", (*r.loss_curve.last().expect("curve holds initial loss")).into()),
+                ("epochs", self.epochs.into()),
+                ("updates", r.updates.into()),
+                ("wall_secs", r.wall_secs.into()),
+            ],
+        );
+        t.emit_at(
+            TraceLevel::Spans,
+            "span",
+            &[("name", "session".into()), ("secs", r.wall_secs.into())],
+        );
     }
 
     // -- sequential ---------------------------------------------------------
@@ -537,32 +677,86 @@ impl<'a> HostSession<'a> {
         let loss = self.loss;
         let k_rows = ds.k_train();
         let n = ds.n();
-        let (loss_curve, final_model, precisions, updates, bytes) = match self.read {
-            ReadStrategy::Dense => {
-                let (c, m, p, u) = epoch_skeleton(
-                    ds,
-                    loss,
-                    self.epochs,
-                    self.batch,
-                    self.lr0,
-                    self.seed,
-                    |_, _| 32,
-                    |_, rows, x, grad| {
-                        for &r in rows {
-                            let row = ds.train_a.row(r);
-                            let coef = loss.multiplier(dot(row, x), ds.train_b[r]);
-                            axpy(coef, row, grad);
-                        }
-                    },
-                );
-                (c, m, p, u, (k_rows * n * 4) as f64)
-            }
+        // Per-epoch trace emitter shared by every arm: byte deltas come
+        // off the store's exact counter (reset in `run`), never a second
+        // formula, so trace bytes ARE store accounting. Dense sessions
+        // have no store; their analytic rows×cols×4 is also fed to the
+        // registry's dense bucket so the counters stay consistent.
+        let trace = self.trace;
+        let metrics = self.effective_metrics();
+        let store_opt = self.store;
+        let dense_epoch_bytes = (k_rows * n * 4) as u64;
+        let mut prev_bytes = 0u64;
+        let mut on_epoch = move |obs: EpochObs| {
+            let bytes = match store_opt {
+                Some(s) => {
+                    let total = s.bytes_read();
+                    let delta = total - prev_bytes;
+                    prev_bytes = total;
+                    delta
+                }
+                None => {
+                    if let Some(m) = metrics {
+                        m.add_read(0, 32, k_rows as u64, dense_epoch_bytes);
+                    }
+                    dense_epoch_bytes
+                }
+            };
+            let Some(t) = trace else { return };
+            let secs = obs.grad_secs + obs.eval_secs;
+            t.emit(
+                "epoch",
+                &[
+                    ("epoch", obs.epoch.into()),
+                    ("p", obs.p.into()),
+                    ("loss", obs.loss.into()),
+                    ("rows", k_rows.into()),
+                    ("bytes", bytes.into()),
+                    ("updates", obs.updates.into()),
+                    ("secs", secs.into()),
+                    ("grad_secs", obs.grad_secs.into()),
+                    ("eval_secs", obs.eval_secs.into()),
+                ],
+            );
+            t.emit_at(
+                TraceLevel::Spans,
+                "span",
+                &[("name", "epoch".into()), ("secs", secs.into())],
+            );
+            t.emit_at(
+                TraceLevel::Spans,
+                "span",
+                &[("name", "grad_batch".into()), ("secs", obs.grad_secs.into())],
+            );
+            t.emit_at(
+                TraceLevel::Spans,
+                "span",
+                &[("name", "eval".into()), ("secs", obs.eval_secs.into())],
+            );
+        };
+        let (loss_curve, final_model, precisions, updates) = match self.read {
+            ReadStrategy::Dense => epoch_skeleton(
+                ds,
+                loss,
+                self.epochs,
+                self.batch,
+                self.lr0,
+                self.seed,
+                |_, _| 32,
+                |_, rows, x, grad| {
+                    for &r in rows {
+                        let row = ds.train_a.row(r);
+                        let coef = loss.multiplier(dot(row, x), ds.train_b[r]);
+                        axpy(coef, row, grad);
+                    }
+                },
+                &mut on_epoch,
+            ),
             ReadStrategy::Truncate if self.oracle => {
                 let store = self.store.expect("validated");
-                store.reset_bytes_read();
                 let mut sched = ScheduleState::new(self.schedule_for(store), store.bits());
                 let mut row = vec![0.0f32; store.cols()];
-                let (c, m, p, u) = epoch_skeleton(
+                epoch_skeleton(
                     ds,
                     loss,
                     self.epochs,
@@ -577,17 +771,16 @@ impl<'a> HostSession<'a> {
                             axpy(coef, &row, grad);
                         }
                     },
-                );
-                (c, m, p, u, store.bytes_read() as f64 / self.epochs.max(1) as f64)
+                    &mut on_epoch,
+                )
             }
             ReadStrategy::Truncate => {
                 let store = self.store.expect("validated");
-                store.reset_bytes_read();
                 let mut sched = ScheduleState::new(self.schedule_for(store), store.bits());
                 let m = store.scale().m.clone();
                 let mut kern = StepKernel::new(store.cols());
                 let mut targets = vec![0.0f32; self.batch];
-                let (c, mm, p, u) = epoch_skeleton(
+                epoch_skeleton(
                     ds,
                     loss,
                     self.epochs,
@@ -610,12 +803,11 @@ impl<'a> HostSession<'a> {
                             grad,
                         );
                     },
-                );
-                (c, mm, p, u, store.bytes_read() as f64 / self.epochs.max(1) as f64)
+                    &mut on_epoch,
+                )
             }
             ReadStrategy::DoubleSample => {
                 let store = self.store.expect("validated");
-                store.reset_bytes_read();
                 let mut sched = ScheduleState::new(self.schedule_for(store), store.bits());
                 let m = store.scale().m.clone();
                 let mut kern = StepKernel::new(store.cols());
@@ -623,7 +815,7 @@ impl<'a> HostSession<'a> {
                 // carry-randomness stream, independent of the shuffle
                 // stream so DS and truncating runs share visit orders
                 let mut ds_rng = Rng::new_stream(self.seed, 0x4453); // "DS"
-                let (c, mm, p, u) = epoch_skeleton(
+                epoch_skeleton(
                     ds,
                     loss,
                     self.epochs,
@@ -647,18 +839,18 @@ impl<'a> HostSession<'a> {
                             grad,
                         );
                     },
-                );
-                (c, mm, p, u, store.bytes_read() as f64 / self.epochs.max(1) as f64)
+                    &mut on_epoch,
+                )
             }
             ReadStrategy::Popcount { q } => {
                 let store = self.store.expect("validated");
-                store.reset_bytes_read();
                 let mut sched = ScheduleState::new(self.schedule_for(store), store.bits());
                 let m = store.scale().m.clone();
                 let mut qk = QuantStepKernel::new(store.cols(), q);
                 let mut targets = vec![0.0f32; self.batch];
                 let mut q_rng = Rng::new_stream(self.seed, 0x5153); // "QS"
-                let (c, mm, p, u) = epoch_skeleton(
+                let srounds = self.effective_metrics();
+                epoch_skeleton(
                     ds,
                     loss,
                     self.epochs,
@@ -668,6 +860,9 @@ impl<'a> HostSession<'a> {
                     |epoch, hist| sched.precision_for_epoch(epoch, hist),
                     |p, rows, x, grad| {
                         qk.refresh(&m, x, &mut q_rng);
+                        if let Some(mm) = srounds {
+                            mm.add_sround_refreshes(0, 1);
+                        }
                         let t = &mut targets[..rows.len()];
                         for (t, &r) in t.iter_mut().zip(rows) {
                             *t = ds.train_b[r];
@@ -681,9 +876,13 @@ impl<'a> HostSession<'a> {
                             grad,
                         );
                     },
-                );
-                (c, mm, p, u, store.bytes_read() as f64 / self.epochs.max(1) as f64)
+                    &mut on_epoch,
+                )
             }
+        };
+        let bytes = match store_opt {
+            Some(s) => s.bytes_read() as f64 / self.epochs.max(1) as f64,
+            None => dense_epoch_bytes as f64,
         };
         Ok(SessionResult {
             label: self.label_string(),
@@ -704,16 +903,19 @@ impl<'a> HostSession<'a> {
         let n = ds.n();
         let k = ds.k_train();
         let x: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-        let updates = AtomicUsize::new(0);
         let snapshot = |x: &[AtomicU32]| -> Vec<f32> { x.iter().map(load_f32).collect() };
         let mut loss_curve = Vec::with_capacity(self.epochs + 1);
         loss_curve.push(eval_glm_loss(ds, loss, &snapshot(&x)));
         let mut precisions = Vec::with_capacity(self.epochs);
-        let mut sched = self.store.map(|s| {
-            s.reset_bytes_read();
-            ScheduleState::new(self.schedule_for(s), s.bits())
-        });
+        let mut sched = self
+            .store
+            .map(|s| ScheduleState::new(self.schedule_for(s), s.bits()));
         let c_reg = loss.l2_reg();
+        let trace = self.trace;
+        let metrics = self.effective_metrics();
+        let dense_epoch_bytes = (k * n * 4) as u64;
+        let mut updates_total = 0usize;
+        let mut prev_bytes = 0u64;
 
         for epoch in 0..self.epochs {
             let p = match sched.as_mut() {
@@ -726,128 +928,239 @@ impl<'a> HostSession<'a> {
             let epoch_seed = self.seed ^ ((epoch as u64) << 32);
             // fused readers account one plane fetch per row visit (both
             // fetches for the two DS draws), like the row-read path
-            let bytes_per_visit = self.store.map_or(0, |s| match self.read {
-                ReadStrategy::DoubleSample => 2 * s.bytes_per_row(p),
-                _ => s.bytes_per_row(p),
-            });
-            std::thread::scope(|scope| {
-                let xr = &x;
-                let ur = &updates;
-                for t in 0..threads {
-                    scope.spawn(move || {
-                        // per-worker visitor state: each worker owns its
-                        // kernel scratch and a per-(epoch, worker) stream,
-                        // so stochastic variants never share randomness
-                        // across racy threads
-                        let mut it = MinibatchIter::strided(k, 1, epoch_seed, t, threads);
-                        let mut rng = Rng::new_stream(
-                            self.seed,
-                            (epoch as u64) * threads as u64 + t as u64,
-                        );
-                        let mut local = vec![0.0f32; n];
-                        // per-read-strategy state only: Dense needs no
-                        // plane scratch at all, Popcount no f32 kernel
-                        let mut delta = match self.read {
-                            ReadStrategy::Dense => Vec::new(),
-                            _ => vec![0.0f32; n],
-                        };
-                        let mut kern = match self.read {
-                            ReadStrategy::Truncate | ReadStrategy::DoubleSample => {
-                                Some(StepKernel::new(n))
-                            }
-                            _ => None,
-                        };
-                        let mut qk = match self.read {
-                            ReadStrategy::Popcount { q } => Some(QuantStepKernel::new(n, q)),
-                            _ => None,
-                        };
-                        let store_m = self.store.map(|s| &s.scale().m);
-                        while let Some(batch) = it.next_batch() {
-                            for &r in batch {
-                                let r = r as usize;
-                                // racy model snapshot → per-update state
-                                for (l, xa) in local.iter_mut().zip(xr.iter()) {
-                                    *l = load_f32(xa);
-                                }
-                                let target = ds.train_b[r];
-                                if self.read == ReadStrategy::Dense {
-                                    let row = ds.train_a.row(r);
-                                    let coef = -lr * loss.multiplier(dot(row, &local), target);
-                                    for (xa, &a) in xr.iter().zip(row) {
-                                        if a != 0.0 {
-                                            add_f32(xa, coef * a);
-                                        }
+            let reads_per_visit: u32 = match self.read {
+                ReadStrategy::DoubleSample => 2,
+                _ => 1,
+            };
+            let grad_start = Instant::now();
+            // Each worker tallies locally (updates, publishes, rng draws,
+            // stochastic-round refreshes, secs) and the epoch flushes the
+            // tallies once post-join — the hot loop never touches the
+            // registry except through the store's per-visit accounting.
+            let worker_stats: Vec<(usize, usize, u64, u64, f64)> =
+                std::thread::scope(|scope| {
+                    let xr = &x;
+                    let handles: Vec<_> = (0..threads)
+                        .map(|t| {
+                            scope.spawn(move || {
+                                let w_start = Instant::now();
+                                let mut w_updates = 0usize;
+                                let mut w_pubs = 0usize;
+                                let mut w_draws = 0u64;
+                                let mut w_srounds = 0u64;
+                                // per-worker visitor state: each worker owns
+                                // its kernel scratch and a per-(epoch,
+                                // worker) stream, so stochastic variants
+                                // never share randomness across racy threads
+                                let mut it =
+                                    MinibatchIter::strided(k, 1, epoch_seed, t, threads);
+                                let mut rng = Rng::new_stream(
+                                    self.seed,
+                                    (epoch as u64) * threads as u64 + t as u64,
+                                );
+                                let mut local = vec![0.0f32; n];
+                                // per-read-strategy state only: Dense needs
+                                // no plane scratch, Popcount no f32 kernel
+                                let mut delta = match self.read {
+                                    ReadStrategy::Dense => Vec::new(),
+                                    _ => vec![0.0f32; n],
+                                };
+                                let mut kern = match self.read {
+                                    ReadStrategy::Truncate | ReadStrategy::DoubleSample => {
+                                        Some(StepKernel::new(n))
                                     }
-                                } else {
-                                    let store = self.store.expect("validated");
-                                    let (shard, sr) = store.locate_row(r);
-                                    store.note_bytes_read(bytes_per_visit);
-                                    let m = store_m.expect("validated");
-                                    let coef = match self.read {
-                                        ReadStrategy::Truncate => {
-                                            let kern = kern.as_mut().expect("step kernel");
-                                            kern.refresh(m, &local);
-                                            let d = kernel::dot_row(shard, sr, p, kern);
-                                            let coef = -lr * loss.multiplier(d, target);
-                                            kernel::axpy_row_planes(
-                                                shard, sr, p, coef, &mut delta,
-                                            );
-                                            coef
+                                    _ => None,
+                                };
+                                let mut qk = match self.read {
+                                    ReadStrategy::Popcount { q } => {
+                                        Some(QuantStepKernel::new(n, q))
+                                    }
+                                    _ => None,
+                                };
+                                let store_m = self.store.map(|s| &s.scale().m);
+                                while let Some(batch) = it.next_batch() {
+                                    for &r in batch {
+                                        let r = r as usize;
+                                        // racy model snapshot → update state
+                                        for (l, xa) in local.iter_mut().zip(xr.iter()) {
+                                            *l = load_f32(xa);
                                         }
-                                        ReadStrategy::DoubleSample => {
-                                            let kern = kern.as_mut().expect("step kernel");
-                                            kern.refresh(m, &local);
-                                            // draw one feeds the dot, draw
-                                            // two the racy accumulation
-                                            let d = kernel::dot_row_ds(
-                                                shard, sr, p, kern, &mut rng,
-                                            );
-                                            let coef = -lr * loss.multiplier(d, target);
-                                            kernel::axpy_row_planes_ds(
-                                                shard, sr, p, coef, &mut rng, &mut delta,
-                                            );
-                                            coef
+                                        let target = ds.train_b[r];
+                                        if self.read == ReadStrategy::Dense {
+                                            let row = ds.train_a.row(r);
+                                            let coef =
+                                                -lr * loss.multiplier(dot(row, &local), target);
+                                            for (xa, &a) in xr.iter().zip(row) {
+                                                if a != 0.0 {
+                                                    add_f32(xa, coef * a);
+                                                    w_pubs += 1;
+                                                }
+                                            }
+                                        } else {
+                                            let store = self.store.expect("validated");
+                                            let (shard, sr) = store.locate_row(r);
+                                            store.note_row_visit(r, p, reads_per_visit, t);
+                                            let m = store_m.expect("validated");
+                                            let coef = match self.read {
+                                                ReadStrategy::Truncate => {
+                                                    let kern =
+                                                        kern.as_mut().expect("step kernel");
+                                                    kern.refresh(m, &local);
+                                                    let d =
+                                                        kernel::dot_row(shard, sr, p, kern);
+                                                    let coef =
+                                                        -lr * loss.multiplier(d, target);
+                                                    kernel::axpy_row_planes(
+                                                        shard, sr, p, coef, &mut delta,
+                                                    );
+                                                    coef
+                                                }
+                                                ReadStrategy::DoubleSample => {
+                                                    let kern =
+                                                        kern.as_mut().expect("step kernel");
+                                                    kern.refresh(m, &local);
+                                                    // draw one feeds the dot,
+                                                    // draw two the racy
+                                                    // accumulation
+                                                    let d = kernel::dot_row_ds(
+                                                        shard, sr, p, kern, &mut rng,
+                                                    );
+                                                    let coef =
+                                                        -lr * loss.multiplier(d, target);
+                                                    kernel::axpy_row_planes_ds(
+                                                        shard, sr, p, coef, &mut rng,
+                                                        &mut delta,
+                                                    );
+                                                    w_draws += 2;
+                                                    coef
+                                                }
+                                                ReadStrategy::Popcount { .. } => {
+                                                    let qk =
+                                                        qk.as_mut().expect("popcount kernel");
+                                                    qk.refresh(m, &local, &mut rng);
+                                                    w_srounds += 1;
+                                                    let d =
+                                                        kernel::dot_row_q(shard, sr, p, qk);
+                                                    let coef =
+                                                        -lr * loss.multiplier(d, target);
+                                                    kernel::axpy_row_planes(
+                                                        shard, sr, p, coef, &mut delta,
+                                                    );
+                                                    coef
+                                                }
+                                                ReadStrategy::Dense => unreachable!(),
+                                            };
+                                            // publish: fold the affine plane
+                                            // term into ONE racy add per live
+                                            // column, re-zeroing the scratch
+                                            for ((xa, d), &mc) in
+                                                xr.iter().zip(delta.iter_mut()).zip(m.iter())
+                                            {
+                                                let upd = *d - coef * mc;
+                                                *d = 0.0;
+                                                if upd != 0.0 {
+                                                    add_f32(xa, upd);
+                                                    w_pubs += 1;
+                                                }
+                                            }
                                         }
-                                        ReadStrategy::Popcount { .. } => {
-                                            let qk = qk.as_mut().expect("popcount kernel");
-                                            qk.refresh(m, &local, &mut rng);
-                                            let d = kernel::dot_row_q(shard, sr, p, qk);
-                                            let coef = -lr * loss.multiplier(d, target);
-                                            kernel::axpy_row_planes(
-                                                shard, sr, p, coef, &mut delta,
-                                            );
-                                            coef
+                                        if lrc != 0.0 {
+                                            // ℓ2 shrink against the snapshot
+                                            for (xa, &lv) in xr.iter().zip(local.iter()) {
+                                                if lv != 0.0 {
+                                                    add_f32(xa, -lrc * lv);
+                                                    w_pubs += 1;
+                                                }
+                                            }
                                         }
-                                        ReadStrategy::Dense => unreachable!(),
-                                    };
-                                    // publish: fold the affine plane term
-                                    // into ONE racy add per live column,
-                                    // re-zeroing the scratch
-                                    for ((xa, d), &mc) in
-                                        xr.iter().zip(delta.iter_mut()).zip(m.iter())
-                                    {
-                                        let upd = *d - coef * mc;
-                                        *d = 0.0;
-                                        if upd != 0.0 {
-                                            add_f32(xa, upd);
-                                        }
+                                        w_updates += 1;
                                     }
                                 }
-                                if lrc != 0.0 {
-                                    // ℓ2 shrink against the snapshot
-                                    for (xa, &lv) in xr.iter().zip(local.iter()) {
-                                        if lv != 0.0 {
-                                            add_f32(xa, -lrc * lv);
-                                        }
-                                    }
-                                }
-                                ur.fetch_add(1, Ordering::Relaxed);
-                            }
-                        }
-                    });
-                }
-            });
+                                let secs = w_start.elapsed().as_secs_f64();
+                                (w_updates, w_pubs, w_draws, w_srounds, secs)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("hogwild worker panicked"))
+                        .collect()
+                });
+            let grad_secs = grad_start.elapsed().as_secs_f64();
+            let eval_start = Instant::now();
             loss_curve.push(eval_glm_loss(ds, loss, &snapshot(&x)));
+            let eval_secs = eval_start.elapsed().as_secs_f64();
+
+            let mut epoch_updates = 0usize;
+            for (w, &(u, pb, dr, sr, secs)) in worker_stats.iter().enumerate() {
+                epoch_updates += u;
+                if let Some(m) = metrics {
+                    m.add_hogwild(w, u as u64, pb as u64);
+                    m.add_rng_draws(w, dr);
+                    m.add_sround_refreshes(w, sr);
+                }
+                if let Some(t) = trace {
+                    t.emit_at(
+                        TraceLevel::Spans,
+                        "hogwild_epoch",
+                        &[
+                            ("epoch", (epoch + 1).into()),
+                            ("worker", w.into()),
+                            ("updates", u.into()),
+                            ("publishes", pb.into()),
+                            ("secs", secs.into()),
+                        ],
+                    );
+                }
+            }
+            updates_total += epoch_updates;
+
+            let bytes = match self.store {
+                Some(s) => {
+                    let total = s.bytes_read();
+                    let delta = total - prev_bytes;
+                    prev_bytes = total;
+                    delta
+                }
+                None => {
+                    if let Some(m) = metrics {
+                        m.add_read(0, 32, k as u64, dense_epoch_bytes);
+                    }
+                    dense_epoch_bytes
+                }
+            };
+            if let Some(t) = trace {
+                let secs = grad_secs + eval_secs;
+                t.emit(
+                    "epoch",
+                    &[
+                        ("epoch", (epoch + 1).into()),
+                        ("p", p.into()),
+                        ("loss", (*loss_curve.last().expect("just pushed")).into()),
+                        ("rows", k.into()),
+                        ("bytes", bytes.into()),
+                        ("updates", epoch_updates.into()),
+                        ("secs", secs.into()),
+                        ("grad_secs", grad_secs.into()),
+                        ("eval_secs", eval_secs.into()),
+                    ],
+                );
+                t.emit_at(
+                    TraceLevel::Spans,
+                    "span",
+                    &[("name", "epoch".into()), ("secs", secs.into())],
+                );
+                t.emit_at(
+                    TraceLevel::Spans,
+                    "span",
+                    &[("name", "grad_batch".into()), ("secs", grad_secs.into())],
+                );
+                t.emit_at(
+                    TraceLevel::Spans,
+                    "span",
+                    &[("name", "eval".into()), ("secs", eval_secs.into())],
+                );
+            }
         }
 
         let bytes = match self.store {
@@ -861,7 +1174,7 @@ impl<'a> HostSession<'a> {
             sample_bytes_per_epoch: bytes,
             precisions,
             wall_secs: 0.0,
-            updates: updates.load(Ordering::Relaxed),
+            updates: updates_total,
         })
     }
 }
@@ -870,6 +1183,26 @@ impl<'a> HostSession<'a> {
 // Shared machinery
 // ---------------------------------------------------------------------------
 
+/// Per-epoch observation handed to the session's `on_epoch` hook right
+/// after the epoch's evaluation. `epoch` is 1-based so it indexes the
+/// matching `loss_curve` entry directly (`loss_curve[0]` is the initial
+/// loss, before any update). Timing fields are wall-clock and therefore
+/// excluded from the trace determinism contract (DESIGN.md §10).
+struct EpochObs {
+    /// 1-based epoch index; equals the `loss_curve` index for this loss.
+    epoch: usize,
+    /// Precision used for this epoch's gradient reads.
+    p: u32,
+    /// Loss evaluated after this epoch's updates.
+    loss: f64,
+    /// Model updates applied this epoch (= number of minibatches).
+    updates: usize,
+    /// Wall-clock seconds spent in shuffle + gradient batches.
+    grad_secs: f64,
+    /// Wall-clock seconds spent evaluating the epoch loss.
+    eval_secs: f64,
+}
+
 /// Minibatch SGD epoch skeleton shared by every sequential read strategy.
 /// `step_batch(p, rows, x, grad)` accumulates the un-scaled minibatch
 /// gradient Σ mᵢ·aᵢ into `grad`; the skeleton owns shuffling, the lr
@@ -877,8 +1210,9 @@ impl<'a> HostSession<'a> {
 /// every path shares them exactly. Every training row is visited each
 /// epoch: when `k % batch != 0` the final batch is genuinely short and
 /// its update is scaled by its own row count. For a zero-`l2_reg` loss
-/// this is op-for-op the legacy linreg skeleton.
-#[allow(clippy::too_many_arguments)] // private engine core: 6 knobs + 2 hooks
+/// this is op-for-op the legacy linreg skeleton. `on_epoch` fires once
+/// per epoch after evaluation; pass `|_| {}` when not tracing.
+#[allow(clippy::too_many_arguments)] // private engine core: 6 knobs + 3 hooks
 fn epoch_skeleton(
     ds: &Dataset,
     loss: &dyn GlmLoss,
@@ -888,6 +1222,7 @@ fn epoch_skeleton(
     seed: u64,
     mut precision: impl FnMut(usize, &[f64]) -> u32,
     mut step_batch: impl FnMut(u32, &[usize], &[f32], &mut [f32]),
+    mut on_epoch: impl FnMut(EpochObs),
 ) -> (Vec<f64>, Vec<f32>, Vec<u32>, usize) {
     let n = ds.n();
     let k = ds.k_train();
@@ -905,6 +1240,7 @@ fn epoch_skeleton(
         let p = precision(epoch, &loss_curve);
         precisions.push(p);
         let lr = super::lr_at_epoch(lr0, epoch);
+        let grad_start = Instant::now();
         rng.shuffle(&mut order);
         for bi in 0..nb {
             let rows = &order[bi * batch..((bi + 1) * batch).min(k)];
@@ -921,7 +1257,18 @@ fn epoch_skeleton(
             }
             updates += 1;
         }
+        let grad_secs = grad_start.elapsed().as_secs_f64();
+        let eval_start = Instant::now();
         loss_curve.push(eval_glm_loss(ds, loss, &x));
+        let eval_secs = eval_start.elapsed().as_secs_f64();
+        on_epoch(EpochObs {
+            epoch: epoch + 1,
+            p,
+            loss: *loss_curve.last().expect("just pushed"),
+            updates: nb,
+            grad_secs,
+            eval_secs,
+        });
     }
     (loss_curve, x, precisions, updates)
 }
@@ -1083,6 +1430,7 @@ mod tests {
                     seen[r] += 1;
                 }
             },
+            |_| {},
         );
         assert_eq!(batch_sizes, vec![32, 32, 6]);
         assert!(seen.iter().all(|&c| c == 1), "rows missed or repeated: {seen:?}");

@@ -313,6 +313,16 @@ fn dot_planes(planes: &[u64], wpp: usize, p: u32, k: &StepKernel) -> f32 {
     (inv_s2 as f64 * acc - k.sum_g as f64) as f32
 }
 
+/// Plane words one precision-`p` row visit touches: `p` bit planes of
+/// `words_per_plane` u64s each. This is the unit the telemetry
+/// `plane_words` counter ([`crate::telemetry::Metrics`]) accumulates —
+/// always exactly `bytes_per_row(p) / 8`, since every weaved read moves
+/// whole u64 plane spans (the unit-test contract below pins the two
+/// accountings together).
+pub fn plane_words_per_row(w: &WeavedMatrix, p: u32) -> u64 {
+    p as u64 * w.words_per_plane() as u64
+}
+
 /// Fused weaved-domain dot product: `dot(dequant_p(row r), x)` where `k`
 /// was refreshed with (`scale.m`, `x`). Touches only the p requested bit
 /// planes; never materializes indices or an f32 row.
@@ -795,6 +805,25 @@ mod tests {
 
     fn rel_err(got: f64, want: f64, scale: f64) -> f64 {
         (got - want).abs() / (1.0 + want.abs() + scale)
+    }
+
+    /// Plane-word accounting is bytes/8, exactly, across ragged column
+    /// counts — the kernel-level tie between the telemetry `plane_words`
+    /// counter and the store's exact byte accounting.
+    #[test]
+    fn plane_words_per_row_is_bytes_over_eight() {
+        for &cols in &[63usize, 64, 65, 130] {
+            for bits in [1u32, 5, 16] {
+                let (_, w) = mk(4, cols, bits, 3 + bits as u64);
+                for p in 1..=bits {
+                    assert_eq!(
+                        plane_words_per_row(&w, p) * 8,
+                        w.bytes_per_row(p) as u64,
+                        "cols={cols} bits={bits} p={p}"
+                    );
+                }
+            }
+        }
     }
 
     /// Fused dot == dequantize-then-dot (≤1e-4 relative) for bits 1..=16,

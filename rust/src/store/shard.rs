@@ -12,17 +12,23 @@
 //!   RNG stream, so the result is bit-identical regardless of how many
 //!   threads ingest.
 //! * **Reads** route a global row to its shard and add the exact bytes
-//!   touched to a shared relaxed atomic — the accounting the FPGA
-//!   bandwidth model consumes ([`crate::fpga::pipeline`]).
+//!   touched to that shard's cache-line-padded relaxed counter — the
+//!   accounting the FPGA bandwidth model consumes
+//!   ([`crate::fpga::pipeline`]) and the telemetry layer mirrors
+//!   ([`crate::telemetry::Metrics`], attached per store). Per-shard
+//!   cells replaced the former single global atomic, which ping-ponged
+//!   its line between hogwild workers on every row visit.
 //! * **[`MinibatchIter`]** hands out deterministic shuffled minibatches;
 //!   the strided form partitions one epoch's batches across N workers
 //!   without coordination (used by the Hogwild! shard readers).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::quant::packing::PackedMatrix;
 use crate::quant::scaling::ColumnScale;
 use crate::rng::Rng;
+use crate::telemetry::Metrics;
 use crate::tensor::Matrix;
 
 use super::kernel::{self, QuantStepKernel, StepKernel};
@@ -39,6 +45,13 @@ const SHARD_ROW_ALIGN: usize = 8;
 /// Chunking preserves row order, so results stay bit-identical.
 const BLOCK_ROWS: usize = 256;
 
+/// One cache-line-padded relaxed byte counter — one per shard, so
+/// concurrent readers accounting against different shards never share a
+/// line (and telemetry gets per-shard byte attribution for free).
+#[repr(align(64))]
+#[derive(Debug, Default)]
+struct PaddedBytes(AtomicU64);
+
 /// A row-sharded, bit-weaved, any-precision sample store.
 #[derive(Debug)]
 pub struct ShardedStore {
@@ -47,8 +60,13 @@ pub struct ShardedStore {
     bits: u32,
     shard_rows: usize,
     shards: Vec<WeavedMatrix>,
-    /// Exact bytes touched by reads since the last reset (relaxed).
-    bytes_read: AtomicU64,
+    /// Exact bytes touched by reads since the last reset, attributed to
+    /// the shard that served them. Ordering contract on
+    /// [`ShardedStore::bytes_read`].
+    shard_bytes: Vec<PaddedBytes>,
+    /// Telemetry registry mirrored by every accounting site; defaults to
+    /// [`Metrics::shared_disabled`] (mask-gated no-op recorders).
+    metrics: Arc<Metrics>,
 }
 
 impl ShardedStore {
@@ -114,7 +132,15 @@ impl ShardedStore {
                 slots.into_iter().map(|s| s.expect("missing shard")).collect()
             })
         };
-        ShardedStore { rows: a.rows, cols, bits, shard_rows, shards, bytes_read: AtomicU64::new(0) }
+        ShardedStore {
+            rows: a.rows,
+            cols,
+            bits,
+            shard_rows,
+            shards,
+            shard_bytes: (0..ns).map(|_| PaddedBytes::default()).collect(),
+            metrics: Metrics::shared_disabled(),
+        }
     }
 
     /// Re-shard an existing packed store without re-drawing randomness —
@@ -154,7 +180,8 @@ impl ShardedStore {
             bits: p.bits,
             shard_rows,
             shards,
-            bytes_read: AtomicU64::new(0),
+            shard_bytes: (0..ns).map(|_| PaddedBytes::default()).collect(),
+            metrics: Metrics::shared_disabled(),
         }
     }
 
@@ -164,12 +191,24 @@ impl ShardedStore {
         (&self.shards[r / self.shard_rows], r % self.shard_rows)
     }
 
+    /// Account `rows` row visits moving `bytes` served by shard `si` at
+    /// read precision `p`: the shard's padded byte cell always counts;
+    /// the attached [`Metrics`] mirrors bytes / visits / plane words
+    /// (mask-gated no-op when disabled). `lane` spreads concurrent
+    /// telemetry writers (shard id or worker id).
+    #[inline]
+    fn account(&self, si: usize, lane: usize, p: u32, rows: u64, bytes: u64) {
+        self.shard_bytes[si].0.fetch_add(bytes, Ordering::Relaxed);
+        self.metrics.add_read(lane, p, rows, bytes);
+    }
+
     /// Read the level indices of global row `r` at precision `p`; counts
     /// the exact bytes touched. Returns those bytes.
     pub fn read_row(&self, r: usize, p: u32, out: &mut [u16]) -> usize {
         let (shard, local) = self.locate(r);
         let bytes = shard.read_row(local, p, out);
-        self.bytes_read.fetch_add(bytes as u64, Ordering::Relaxed);
+        let si = r / self.shard_rows;
+        self.account(si, si, p, 1, bytes as u64);
         bytes
     }
 
@@ -177,7 +216,8 @@ impl ShardedStore {
     pub fn dequantize_row(&self, r: usize, p: u32, out: &mut [f32]) -> usize {
         let (shard, local) = self.locate(r);
         let bytes = shard.dequantize_row_at(local, p, out);
-        self.bytes_read.fetch_add(bytes as u64, Ordering::Relaxed);
+        let si = r / self.shard_rows;
+        self.account(si, si, p, 1, bytes as u64);
         bytes
     }
 
@@ -187,22 +227,30 @@ impl ShardedStore {
     pub fn dequantize_row_ds(&self, r: usize, p: u32, rng: &mut Rng, out: &mut [f32]) -> usize {
         let (shard, local) = self.locate(r);
         let bytes = shard.dequantize_row_ds(local, p, rng, out);
-        self.bytes_read.fetch_add(bytes as u64, Ordering::Relaxed);
+        let si = r / self.shard_rows;
+        self.account(si, si, p, 1, bytes as u64);
+        self.metrics.add_rng_draws(si, 1);
         bytes
     }
 
     /// Route global row `r` to `(shard, local row)` for direct fused-kernel
     /// access ([`super::kernel`]). Does NOT count bytes — compose with
-    /// [`ShardedStore::note_bytes_read`] so each row visit is accounted
+    /// [`ShardedStore::note_row_visit`] so each row visit is accounted
     /// exactly once however many kernel passes reuse the cached planes.
     pub fn locate_row(&self, r: usize) -> (&WeavedMatrix, usize) {
         self.locate(r)
     }
 
-    /// Add `bytes` to the read counter (fused readers account one plane
-    /// fetch per row visit, like the row-read path).
-    pub fn note_bytes_read(&self, bytes: usize) {
-        self.bytes_read.fetch_add(bytes as u64, Ordering::Relaxed);
+    /// Account one fused-kernel visit of global row `r` at precision `p`,
+    /// `reads` plane fetches deep (1 = truncating/popcount, 2 =
+    /// double-sampled). `lane` is the telemetry lane hint — hogwild
+    /// workers pass their worker id so concurrent tallies land on
+    /// disjoint cache lines. Returns the bytes counted. This is the
+    /// accounting half of [`ShardedStore::locate_row`].
+    pub fn note_row_visit(&self, r: usize, p: u32, reads: u32, lane: usize) -> usize {
+        let bytes = reads as usize * self.bytes_per_row(p);
+        self.account(r / self.shard_rows, lane, p, 1, bytes as u64);
+        bytes
     }
 
     /// Fused weaved-domain dot product of global row `r` at precision `p`;
@@ -210,7 +258,7 @@ impl ShardedStore {
     /// would. No f32 row is materialized.
     pub fn dot_row_fused(&self, r: usize, p: u32, k: &StepKernel) -> f32 {
         let (shard, local) = self.locate(r);
-        self.note_bytes_read(shard.bytes_per_row(p));
+        self.note_row_visit(r, p, 1, r / self.shard_rows);
         kernel::dot_row(shard, local, p, k)
     }
 
@@ -224,9 +272,15 @@ impl ShardedStore {
     /// calls. Minibatch-sized inputs (≤ [`BLOCK_ROWS`]) group alloc-free
     /// with fixed stack scratch; larger inputs take one heap-allocated
     /// stable sort (same specified order, no per-distinct-shard rescans).
+    ///
+    /// `visit_bytes` (wire bytes per row visit, 2× for double-sampled
+    /// batches) is attributed to each serving shard's byte cell here —
+    /// one relaxed add per emitted run, not per row — so per-shard
+    /// accounting costs the batch paths O(distinct shards), not O(rows).
     fn for_shard_runs(
         &self,
         rows: &[usize],
+        visit_bytes: usize,
         mut f: impl FnMut(&WeavedMatrix, &[usize], &[u32]),
     ) {
         let mut locals = [0usize; BLOCK_ROWS];
@@ -242,6 +296,9 @@ impl ShardedStore {
                 while b < order.len() && rows[order[b] as usize] / self.shard_rows == s {
                     b += 1;
                 }
+                self.shard_bytes[s]
+                    .0
+                    .fetch_add(((b - a) * visit_bytes) as u64, Ordering::Relaxed);
                 for chunk in order[a..b].chunks(BLOCK_ROWS) {
                     for (l, &i) in locals.iter_mut().zip(chunk) {
                         *l = rows[i as usize] % self.shard_rows;
@@ -273,6 +330,7 @@ impl ShardedStore {
                     done += 1;
                 }
             }
+            self.shard_bytes[s].0.fetch_add((n * visit_bytes) as u64, Ordering::Relaxed);
             f(&self.shards[s], &locals[..n], &run[..n]);
             next_shard = s + 1;
         }
@@ -313,7 +371,8 @@ impl ShardedStore {
         assert_eq!(rows.len(), targets.len(), "one target per row");
         let mut errs = [0.0f32; BLOCK_ROWS];
         let mut coef_sum = 0.0f32;
-        self.for_shard_runs(rows, |shard, locals, pos| {
+        let visit_bytes = self.bytes_per_row(p);
+        self.for_shard_runs(rows, visit_bytes, |shard, locals, pos| {
             let nb = pos.len();
             kernel::dot_rows_block(shard, locals, p, k, &mut errs[..nb]);
             for (e, &i) in errs[..nb].iter_mut().zip(pos) {
@@ -325,8 +384,8 @@ impl ShardedStore {
             }
         });
         kernel::axpy_affine(coef_sum, &self.scale().m, grad);
-        let bytes = rows.len() * self.bytes_per_row(p);
-        self.note_bytes_read(bytes);
+        let bytes = rows.len() * visit_bytes;
+        self.metrics.add_read(0, p, rows.len() as u64, bytes as u64);
         bytes
     }
 
@@ -383,7 +442,8 @@ impl ShardedStore {
         assert_eq!(rows.len(), targets.len(), "one target per row");
         let mut errs = [0.0f32; BLOCK_ROWS];
         let mut coef_sum = 0.0f32;
-        self.for_shard_runs(rows, |shard, locals, pos| {
+        let visit_bytes = 2 * self.bytes_per_row(p);
+        self.for_shard_runs(rows, visit_bytes, |shard, locals, pos| {
             let nb = pos.len();
             kernel::dot_rows_block_ds(shard, locals, p, k, rng, &mut errs[..nb]);
             for (e, &i) in errs[..nb].iter_mut().zip(pos) {
@@ -395,8 +455,9 @@ impl ShardedStore {
             }
         });
         kernel::axpy_affine(coef_sum, &self.scale().m, grad);
-        let bytes = 2 * rows.len() * self.bytes_per_row(p);
-        self.note_bytes_read(bytes);
+        let bytes = rows.len() * visit_bytes;
+        self.metrics.add_read(0, p, rows.len() as u64, bytes as u64);
+        self.metrics.add_rng_draws(0, 2 * rows.len() as u64);
         bytes
     }
 
@@ -438,7 +499,8 @@ impl ShardedStore {
         assert_eq!(rows.len(), targets.len(), "one target per row");
         let mut errs = [0.0f32; BLOCK_ROWS];
         let mut coef_sum = 0.0f32;
-        self.for_shard_runs(rows, |shard, locals, pos| {
+        let visit_bytes = self.bytes_per_row(p);
+        self.for_shard_runs(rows, visit_bytes, |shard, locals, pos| {
             let nb = pos.len();
             kernel::dot_rows_block_q(shard, locals, p, qk, &mut errs[..nb]);
             for (e, &i) in errs[..nb].iter_mut().zip(pos) {
@@ -450,8 +512,8 @@ impl ShardedStore {
             }
         });
         kernel::axpy_affine(coef_sum, &self.scale().m, grad);
-        let bytes = rows.len() * self.bytes_per_row(p);
-        self.note_bytes_read(bytes);
+        let bytes = rows.len() * visit_bytes;
+        self.metrics.add_read(0, p, rows.len() as u64, bytes as u64);
         bytes
     }
 
@@ -482,15 +544,16 @@ impl ShardedStore {
     ) -> usize {
         assert_eq!(rows.len(), out.len(), "one dot output per row");
         let mut dots = [0.0f32; BLOCK_ROWS];
-        self.for_shard_runs(rows, |shard, locals, pos| {
+        let visit_bytes = self.bytes_per_row(p);
+        self.for_shard_runs(rows, visit_bytes, |shard, locals, pos| {
             let nb = pos.len();
             kernel::dot_rows_block(shard, locals, p, k, &mut dots[..nb]);
             for (&d, &i) in dots[..nb].iter().zip(pos) {
                 out[i as usize] = d;
             }
         });
-        let bytes = rows.len() * self.bytes_per_row(p);
-        self.note_bytes_read(bytes);
+        let bytes = rows.len() * visit_bytes;
+        self.metrics.add_read(0, p, rows.len() as u64, bytes as u64);
         bytes
     }
 
@@ -535,13 +598,48 @@ impl ShardedStore {
         self.shards.iter().map(|s| s.bytes()).sum()
     }
 
-    /// Exact bytes touched by reads since construction / last reset.
+    /// Exact bytes touched by reads since construction / last reset: the
+    /// relaxed sum over the per-shard padded cells.
+    ///
+    /// **Ordering contract:** every read path adds to its serving shard's
+    /// cell with `Relaxed` ordering — the adds carry no happens-before
+    /// edge with the data reads they account. The sum is *exact* (every
+    /// byte is added exactly once) but only once writers have quiesced:
+    /// read concurrently with in-flight readers it is a valid, possibly
+    /// stale, partial snapshot. All in-repo consumers read it after a
+    /// `thread::scope` join or from the owning thread, where it is the
+    /// exact total.
     pub fn bytes_read(&self) -> u64 {
-        self.bytes_read.load(Ordering::Relaxed)
+        self.shard_bytes.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
     }
 
+    /// Bytes attributed to shard `si` since the last reset (same
+    /// ordering contract as [`ShardedStore::bytes_read`]).
+    pub fn shard_bytes_read(&self, si: usize) -> u64 {
+        self.shard_bytes[si].0.load(Ordering::Relaxed)
+    }
+
+    /// Zero every per-shard byte cell (relaxed stores; callers reset
+    /// only from quiescent points, per the ordering contract).
     pub fn reset_bytes_read(&self) {
-        self.bytes_read.store(0, Ordering::Relaxed);
+        for c in &self.shard_bytes {
+            c.0.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Attach a telemetry registry: every subsequent read mirrors its
+    /// exact byte accounting (plus row visits, plane words, RNG draws)
+    /// into `m`. Stores start on [`Metrics::shared_disabled`], whose
+    /// mask-gated recorders add 0 through the same instruction stream —
+    /// attaching an enabled registry changes no control flow anywhere.
+    pub fn attach_metrics(&mut self, m: Arc<Metrics>) {
+        self.metrics = m;
+    }
+
+    /// The attached telemetry registry (the shared disabled one unless
+    /// [`ShardedStore::attach_metrics`] was called).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
     }
 }
 
@@ -898,6 +996,59 @@ mod tests {
             assert_eq!(out[i].to_bits(), store.dot_row_fused(r, 3, &k).to_bits(), "row {r}");
         }
         assert_eq!(store.bytes_read(), counted + bytes as u64, "per-row pass counts the same");
+    }
+
+    /// Per-shard byte cells: sum to exactly the old global total, and an
+    /// attached enabled registry mirrors the store's accounting
+    /// bit-for-bit (the tentpole's first hard contract, store level).
+    #[test]
+    fn per_shard_attribution_and_metrics_mirror_store_accounting() {
+        let (a, sc) = mk(100, 17, 11);
+        let mut store = ShardedStore::ingest(&a, &sc, 6, 42, 7, 1);
+        let m = Arc::new(Metrics::enabled());
+        store.attach_metrics(m.clone());
+        assert!(store.metrics().is_enabled());
+        let mut out = vec![0u16; 17];
+        for r in 0..100 {
+            store.read_row(r, 4, &mut out);
+        }
+        let per_shard: u64 = (0..store.num_shards()).map(|s| store.shard_bytes_read(s)).sum();
+        assert_eq!(per_shard, store.bytes_read());
+        assert_eq!(store.bytes_read(), store.epoch_bytes(4) as u64);
+        assert_eq!(m.bytes_read_total(), store.bytes_read());
+        assert_eq!(m.bytes_read_at(4), store.bytes_read());
+        assert_eq!(m.row_visits(), 100);
+        assert_eq!(m.plane_words(), store.bytes_read() / 8);
+
+        // fused + DS batches: shard cells, metrics buckets, and RNG-draw
+        // tallies all stay in lockstep with the returned byte counts
+        store.reset_bytes_read();
+        m.reset();
+        let mut rng = crate::rng::Rng::new(9);
+        let x: Vec<f32> = (0..17).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(17);
+        k.refresh(&sc.m, &x);
+        let rows: Vec<usize> = vec![99, 3, 40, 41, 0, 77, 12, 63];
+        let targets: Vec<f32> = rows.iter().map(|&r| r as f32 * 0.1).collect();
+        let mut grad = vec![0.0f32; 17];
+        let b1 = store.fused_grad_batch(&rows, 3, &k, &targets, &mut grad);
+        let b2 =
+            store.ds_grad_batch(&rows, 3, &k, &targets, &mut crate::rng::Rng::new(4), &mut grad);
+        assert_eq!(b2, 2 * b1, "DS costs exactly 2x the truncating batch");
+        assert_eq!(store.bytes_read(), (b1 + b2) as u64);
+        assert_eq!(m.bytes_read_total(), store.bytes_read());
+        assert_eq!(m.bytes_read_at(3), store.bytes_read());
+        assert_eq!(m.row_visits(), 2 * rows.len() as u64);
+        assert_eq!(m.rng_draws(), 2 * rows.len() as u64, "2 draws per DS row visit");
+        let per_shard: u64 = (0..store.num_shards()).map(|s| store.shard_bytes_read(s)).sum();
+        assert_eq!(per_shard, store.bytes_read());
+
+        // note_row_visit: the fused per-row accounting half
+        store.reset_bytes_read();
+        let nb = store.note_row_visit(99, 5, 2, 1);
+        assert_eq!(nb, 2 * store.bytes_per_row(5));
+        assert_eq!(store.bytes_read(), nb as u64);
+        assert_eq!(store.shard_bytes_read(99 / store.shard_rows()), nb as u64);
     }
 
     #[test]

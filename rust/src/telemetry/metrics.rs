@@ -1,0 +1,320 @@
+//! The counter registry: sharded relaxed counters behind a mask gate.
+//!
+//! Every counter is a [`ShardedU64`] — one logical u64 striped across
+//! [`COUNTER_LANES`] cache-line-padded atomic cells, summed on read — so
+//! concurrent writers (hogwild workers, parallel ingest shards) never
+//! ping-pong one line. Recording is **mask-gated, not branch-gated**: a
+//! disabled registry adds `v & 0` through the identical instruction
+//! stream, so enabling telemetry changes no control flow, only the value
+//! added (the `telemetry_overhead` bench section pins the cost of that
+//! difference at ≥ 0.95× disabled throughput).
+//!
+//! Ordering contract: all cells are `Relaxed`. Totals are exact once the
+//! writers have quiesced (joined threads / returned calls); a `sum()`
+//! taken while writers race is a valid but non-linearizable snapshot —
+//! the same contract as [`crate::store::ShardedStore::bytes_read`].
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Stripe width of every counter. A power of two; lane hints are masked
+/// with `COUNTER_LANES - 1`, so any shard id / worker id works as a hint.
+pub const COUNTER_LANES: usize = 16;
+
+/// Highest per-precision byte bucket: 32 is the dense-f32 "precision"
+/// bucket, 1..=16 are weaved read widths.
+pub const MAX_PRECISION: u32 = 32;
+
+#[repr(align(64))]
+#[derive(Default)]
+struct Lane(AtomicU64);
+
+/// One relaxed u64 counter striped across [`COUNTER_LANES`] padded cells.
+pub struct ShardedU64 {
+    lanes: Box<[Lane; COUNTER_LANES]>,
+}
+
+impl Default for ShardedU64 {
+    fn default() -> Self {
+        ShardedU64 { lanes: Box::new(std::array::from_fn(|_| Lane::default())) }
+    }
+}
+
+impl ShardedU64 {
+    /// Add `v` to the cell picked by `lane` (any usize: masked to the
+    /// stripe width). Relaxed; see the module ordering contract.
+    #[inline]
+    pub fn add(&self, lane: usize, v: u64) {
+        self.lanes[lane & (COUNTER_LANES - 1)].0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Relaxed sum over all lanes — exact once writers have quiesced.
+    pub fn sum(&self) -> u64 {
+        self.lanes.iter().map(|l| l.0.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Per-lane relaxed snapshot (worker-keyed counters read this).
+    pub fn lane_values(&self) -> [u64; COUNTER_LANES] {
+        std::array::from_fn(|i| self.lanes[i].0.load(Ordering::Relaxed))
+    }
+
+    /// Zero every lane (relaxed stores).
+    pub fn reset(&self) {
+        for l in self.lanes.iter() {
+            l.0.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The telemetry counter registry (DESIGN.md §10).
+///
+/// Instrumentation points add through [`Metrics::add_read`] and friends;
+/// a disabled registry (the default every [`crate::store::ShardedStore`]
+/// starts with, see `Metrics::shared_disabled`) masks every addend to 0
+/// without branching. Counter totals are read back with the accessors;
+/// byte totals are bit-for-bit equal to the store's own exact-byte
+/// accounting because both are fed the same `bytes` value at the same
+/// call sites.
+pub struct Metrics {
+    /// `!0` when enabled, `0` when disabled: every addend is `v & mask`.
+    mask: u64,
+    /// Exact sample bytes read, bucketed by read precision (index = p;
+    /// 32 is the dense-f32 bucket). `bytes_read_total()` sums buckets.
+    bytes_read: Vec<ShardedU64>,
+    /// Row visits (each DS visit counts once; its 2 draws are bytes/RNG).
+    row_visits: ShardedU64,
+    /// 8-byte plane words touched — always `bytes_read / 8`, since every
+    /// weaved read moves whole u64 plane spans (and the dense bucket's
+    /// rows are whole f32 pairs); pinned by `kernel::plane_words_per_row`.
+    plane_words: ShardedU64,
+    /// Stochastic p-plane row draws (2 per DS row visit, 1 per
+    /// `dequantize_row_ds`).
+    rng_draws: ShardedU64,
+    /// Stochastic-round refreshes of the popcount step kernel
+    /// (`QuantStepKernel::refresh` calls issued by the session).
+    sround_refreshes: ShardedU64,
+    /// Hogwild per-sample updates, lane-keyed by worker id.
+    hogwild_updates: ShardedU64,
+    /// Hogwild racy per-column model publishes actually applied
+    /// (zero-delta columns are skipped), lane-keyed by worker id.
+    hogwild_publishes: ShardedU64,
+}
+
+impl Metrics {
+    fn with_mask(mask: u64) -> Self {
+        Metrics {
+            mask,
+            bytes_read: (0..=MAX_PRECISION as usize).map(|_| ShardedU64::default()).collect(),
+            row_visits: ShardedU64::default(),
+            plane_words: ShardedU64::default(),
+            rng_draws: ShardedU64::default(),
+            sround_refreshes: ShardedU64::default(),
+            hogwild_updates: ShardedU64::default(),
+            hogwild_publishes: ShardedU64::default(),
+        }
+    }
+
+    /// A recording registry.
+    pub fn enabled() -> Self {
+        Self::with_mask(u64::MAX)
+    }
+
+    /// A registry whose every add is a masked no-op (same instructions,
+    /// addend forced to 0).
+    pub fn disabled() -> Self {
+        Self::with_mask(0)
+    }
+
+    /// The process-wide disabled registry every store points at until a
+    /// caller attaches its own — one allocation, shared by `Arc`.
+    pub fn shared_disabled() -> Arc<Metrics> {
+        static DISABLED: OnceLock<Arc<Metrics>> = OnceLock::new();
+        DISABLED.get_or_init(|| Arc::new(Metrics::disabled())).clone()
+    }
+
+    /// Whether adds record (false: addends are masked to 0).
+    pub fn is_enabled(&self) -> bool {
+        self.mask != 0
+    }
+
+    /// Record `rows` row visits moving `bytes` at read precision `p`.
+    /// `lane` spreads concurrent writers (shard id or worker id).
+    #[inline]
+    pub fn add_read(&self, lane: usize, p: u32, rows: u64, bytes: u64) {
+        let m = self.mask;
+        self.row_visits.add(lane, rows & m);
+        self.plane_words.add(lane, (bytes / 8) & m);
+        self.bytes_read[p.min(MAX_PRECISION) as usize].add(lane, bytes & m);
+    }
+
+    /// Record `n` stochastic p-plane row draws.
+    #[inline]
+    pub fn add_rng_draws(&self, lane: usize, n: u64) {
+        self.rng_draws.add(lane, n & self.mask);
+    }
+
+    /// Record `n` stochastic-round refreshes of a popcount step kernel.
+    #[inline]
+    pub fn add_sround_refreshes(&self, lane: usize, n: u64) {
+        self.sround_refreshes.add(lane, n & self.mask);
+    }
+
+    /// Record one hogwild worker's epoch tallies (flushed once per
+    /// (epoch, worker) after the join — not per visit).
+    #[inline]
+    pub fn add_hogwild(&self, worker: usize, updates: u64, publishes: u64) {
+        let m = self.mask;
+        self.hogwild_updates.add(worker, updates & m);
+        self.hogwild_publishes.add(worker, publishes & m);
+    }
+
+    /// Total exact bytes read across all precision buckets.
+    pub fn bytes_read_total(&self) -> u64 {
+        self.bytes_read.iter().map(|c| c.sum()).sum()
+    }
+
+    /// Exact bytes read at precision `p` (32 = dense-f32 bucket).
+    pub fn bytes_read_at(&self, p: u32) -> u64 {
+        self.bytes_read[p.min(MAX_PRECISION) as usize].sum()
+    }
+
+    pub fn row_visits(&self) -> u64 {
+        self.row_visits.sum()
+    }
+
+    pub fn plane_words(&self) -> u64 {
+        self.plane_words.sum()
+    }
+
+    pub fn rng_draws(&self) -> u64 {
+        self.rng_draws.sum()
+    }
+
+    pub fn sround_refreshes(&self) -> u64 {
+        self.sround_refreshes.sum()
+    }
+
+    pub fn hogwild_updates(&self) -> u64 {
+        self.hogwild_updates.sum()
+    }
+
+    pub fn hogwild_publishes(&self) -> u64 {
+        self.hogwild_publishes.sum()
+    }
+
+    /// Per-worker-lane hogwild update counts (lane = worker id masked to
+    /// the stripe width; workers ≥ [`COUNTER_LANES`] fold onto lanes).
+    pub fn hogwild_updates_per_lane(&self) -> [u64; COUNTER_LANES] {
+        self.hogwild_updates.lane_values()
+    }
+
+    /// Zero every counter (the mask is untouched).
+    pub fn reset(&self) {
+        for c in &self.bytes_read {
+            c.reset();
+        }
+        self.row_visits.reset();
+        self.plane_words.reset();
+        self.rng_draws.reset();
+        self.sround_refreshes.reset();
+        self.hogwild_updates.reset();
+        self.hogwild_publishes.reset();
+    }
+}
+
+impl fmt::Debug for Metrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Metrics")
+            .field("enabled", &self.is_enabled())
+            .field("bytes_read", &self.bytes_read_total())
+            .field("row_visits", &self.row_visits())
+            .field("plane_words", &self.plane_words())
+            .field("rng_draws", &self.rng_draws())
+            .field("sround_refreshes", &self.sround_refreshes())
+            .field("hogwild_updates", &self.hogwild_updates())
+            .field("hogwild_publishes", &self.hogwild_publishes())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let m = Metrics::disabled();
+        m.add_read(3, 8, 10, 640);
+        m.add_rng_draws(0, 20);
+        m.add_sround_refreshes(1, 5);
+        m.add_hogwild(2, 100, 90);
+        assert!(!m.is_enabled());
+        assert_eq!(m.bytes_read_total(), 0);
+        assert_eq!(m.row_visits(), 0);
+        assert_eq!(m.plane_words(), 0);
+        assert_eq!(m.rng_draws(), 0);
+        assert_eq!(m.sround_refreshes(), 0);
+        assert_eq!(m.hogwild_updates(), 0);
+        assert_eq!(m.hogwild_publishes(), 0);
+    }
+
+    #[test]
+    fn enabled_registry_sums_across_lanes_and_buckets() {
+        let m = Metrics::enabled();
+        // spread the same precision over many lanes: sum is lane-blind
+        for lane in 0..40 {
+            m.add_read(lane, 4, 1, 64);
+        }
+        m.add_read(0, 8, 2, 256);
+        m.add_read(1, 32, 3, 1200); // dense bucket
+        assert_eq!(m.bytes_read_at(4), 40 * 64);
+        assert_eq!(m.bytes_read_at(8), 256);
+        assert_eq!(m.bytes_read_at(32), 1200);
+        assert_eq!(m.bytes_read_total(), 40 * 64 + 256 + 1200);
+        assert_eq!(m.row_visits(), 40 + 2 + 3);
+        assert_eq!(m.plane_words(), m.bytes_read_total() / 8);
+        m.reset();
+        assert_eq!(m.bytes_read_total(), 0);
+        assert_eq!(m.row_visits(), 0);
+        assert!(m.is_enabled(), "reset must not flip the mask");
+    }
+
+    #[test]
+    fn hogwild_lanes_key_by_worker() {
+        let m = Metrics::enabled();
+        m.add_hogwild(0, 10, 8);
+        m.add_hogwild(1, 20, 15);
+        m.add_hogwild(0, 5, 4);
+        assert_eq!(m.hogwild_updates(), 35);
+        assert_eq!(m.hogwild_publishes(), 27);
+        let lanes = m.hogwild_updates_per_lane();
+        assert_eq!(lanes[0], 15);
+        assert_eq!(lanes[1], 20);
+    }
+
+    #[test]
+    fn shared_disabled_is_one_allocation() {
+        let a = Metrics::shared_disabled();
+        let b = Metrics::shared_disabled();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!a.is_enabled());
+    }
+
+    #[test]
+    fn concurrent_adds_sum_exactly() {
+        let m = std::sync::Arc::new(Metrics::enabled());
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let m = &m;
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        m.add_read(t, 8, 1, 16);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.row_visits(), 4000);
+        assert_eq!(m.bytes_read_at(8), 4000 * 16);
+    }
+}

@@ -1,0 +1,32 @@
+//! Zero-dependency observability for the ZipML training paths
+//! (DESIGN.md §10).
+//!
+//! The paper's claims are accounting claims — double sampling costs
+//! exactly 2× the truncating bytes per visit, the popcount path trades
+//! RNG draws for integer ops — so the telemetry layer's job is to make
+//! that accounting observable without perturbing it:
+//!
+//! * [`metrics`] — [`Metrics`]: a registry of sharded relaxed counters
+//!   (bytes read per precision, row visits, plane words, RNG draws,
+//!   stochastic-round refreshes, hogwild updates/publishes per worker).
+//!   Disabled registries are branch-free no-ops: every recorder applies
+//!   a constant mask (`0` when disabled, `!0` when enabled) to the
+//!   addend, so the instruction stream is identical either way.
+//! * [`trace`] — [`TraceSink`]: a JSONL writer over the serde-free
+//!   value model in [`crate::bench`], plus the flat-JSON reader,
+//!   schema [`validate`]r, [`summarize`]r, and the fixed-seed
+//!   determinism contract ([`UNSTABLE_FIELDS`], [`stable_view`]).
+//!
+//! Two hard contracts bind this module to the store: telemetry byte
+//! counters equal [`crate::store::ShardedStore`]'s exact-byte
+//! accounting bit-for-bit, and trace content (timing fields aside) is
+//! deterministic under a fixed seed.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Metrics, ShardedU64, COUNTER_LANES, MAX_PRECISION};
+pub use trace::{
+    field, parse_line, stable_view, summarize, validate, JsonScalar, TraceLevel, TraceSink,
+    TraceStats, UNSTABLE_FIELDS,
+};

@@ -1,0 +1,787 @@
+//! The JSONL trace sink, its flat-JSON reader, and the schema tools
+//! (`zipml trace summarize|validate`) built on it.
+//!
+//! One trace is a sequence of flat JSON objects, one per line, each with
+//! a `"kind"` discriminator (DESIGN.md §10 specifies the schema). The
+//! emitter reuses the serde-free value model from [`crate::bench`]
+//! (`JsonVal`, the escaping `json_escape`), so pathological labels are
+//! exactly as safe here as in `BENCH_kernels.json`; the reader below is
+//! the matching serde-free parser for flat objects — it powers the CLI
+//! subcommands and the determinism tests.
+//!
+//! Determinism contract: under a fixed seed and sequential execution,
+//! every emitted field is bit-reproducible EXCEPT the wall-clock timing
+//! fields and the racy hogwild publish tallies, enumerated in
+//! [`UNSTABLE_FIELDS`]. [`stable_view`] strips exactly those, so two
+//! same-seed traces compare byte-identical line by line.
+
+use std::io::Write;
+use std::sync::Mutex;
+
+use crate::bench::{json_escape, json_val, JsonVal};
+
+/// How much a [`TraceSink`] records. Ordered: each level is a superset
+/// of the previous one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// Run metadata, per-epoch rollups, final counter totals, summary.
+    Counters,
+    /// `Counters` plus phase spans (`ingest`, `epoch`, `grad_batch`,
+    /// `eval`, per-worker `hogwild_epoch`).
+    Spans,
+    /// `Spans` plus per-shard byte attribution.
+    Full,
+}
+
+impl TraceLevel {
+    /// Parse the CLI spelling (`counters|spans|full`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "counters" => Ok(TraceLevel::Counters),
+            "spans" => Ok(TraceLevel::Spans),
+            "full" => Ok(TraceLevel::Full),
+            other => Err(format!("unknown trace level {other:?} (counters|spans|full)")),
+        }
+    }
+
+    /// The CLI spelling, also recorded in the trace's `run` event.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceLevel::Counters => "counters",
+            TraceLevel::Spans => "spans",
+            TraceLevel::Full => "full",
+        }
+    }
+}
+
+enum SinkOut {
+    File(std::io::BufWriter<std::fs::File>),
+    Mem(Vec<u8>),
+}
+
+struct Inner {
+    out: SinkOut,
+    err: Option<std::io::Error>,
+    events: u64,
+}
+
+/// A JSONL trace writer: one flat object per [`TraceSink::emit`], in
+/// emission order. Write errors are latched and reported once by
+/// [`TraceSink::finish`] so the training hot path never branches on IO.
+pub struct TraceSink {
+    level: TraceLevel,
+    inner: Mutex<Inner>,
+}
+
+impl TraceSink {
+    /// A sink writing (buffered) to `path`, truncating any existing file.
+    pub fn to_path(path: &std::path::Path, level: TraceLevel) -> std::io::Result<Self> {
+        let f = std::fs::File::create(path)?;
+        Ok(TraceSink {
+            level,
+            inner: Mutex::new(Inner {
+                out: SinkOut::File(std::io::BufWriter::new(f)),
+                err: None,
+                events: 0,
+            }),
+        })
+    }
+
+    /// An in-memory sink (tests, validators): read back with
+    /// [`TraceSink::lines`].
+    pub fn in_memory(level: TraceLevel) -> Self {
+        TraceSink {
+            level,
+            inner: Mutex::new(Inner { out: SinkOut::Mem(Vec::new()), err: None, events: 0 }),
+        }
+    }
+
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    /// Emit one event unconditionally (the caller gates on level; most
+    /// call sites use [`TraceSink::emit_at`]). `kind` becomes the leading
+    /// `"kind"` field.
+    pub fn emit(&self, kind: &str, fields: &[(&str, JsonVal)]) {
+        let mut line = String::with_capacity(96);
+        line.push_str("{\"kind\":");
+        json_escape(kind, &mut line);
+        for (k, v) in fields {
+            line.push(',');
+            json_escape(k, &mut line);
+            line.push(':');
+            json_val(v, &mut line);
+        }
+        line.push_str("}\n");
+        let mut inner = self.inner.lock().expect("trace sink poisoned");
+        inner.events += 1;
+        if inner.err.is_some() {
+            return;
+        }
+        let r = match &mut inner.out {
+            SinkOut::File(w) => w.write_all(line.as_bytes()),
+            SinkOut::Mem(buf) => {
+                buf.extend_from_slice(line.as_bytes());
+                Ok(())
+            }
+        };
+        if let Err(e) = r {
+            inner.err = Some(e);
+        }
+    }
+
+    /// Emit only when this sink records at least `min` detail.
+    pub fn emit_at(&self, min: TraceLevel, kind: &str, fields: &[(&str, JsonVal)]) {
+        if self.level >= min {
+            self.emit(kind, fields);
+        }
+    }
+
+    /// Events emitted so far (including any dropped after an IO error).
+    pub fn events(&self) -> u64 {
+        self.inner.lock().expect("trace sink poisoned").events
+    }
+
+    /// The emitted lines (in-memory sinks; empty for file sinks).
+    pub fn lines(&self) -> Vec<String> {
+        let inner = self.inner.lock().expect("trace sink poisoned");
+        match &inner.out {
+            SinkOut::Mem(buf) => String::from_utf8_lossy(buf)
+                .lines()
+                .map(|l| l.to_string())
+                .collect(),
+            SinkOut::File(_) => Vec::new(),
+        }
+    }
+
+    /// Flush and surface any latched write error; returns the event count.
+    pub fn finish(&self) -> std::io::Result<u64> {
+        let mut inner = self.inner.lock().expect("trace sink poisoned");
+        if let Some(e) = inner.err.take() {
+            return Err(e);
+        }
+        if let SinkOut::File(w) = &mut inner.out {
+            w.flush()?;
+        }
+        Ok(inner.events)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reading traces back: a serde-free parser for the flat objects we emit
+// ---------------------------------------------------------------------------
+
+/// One parsed JSON scalar (the trace schema is flat: no arrays/objects
+/// nest inside an event).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonScalar {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Null,
+}
+
+impl JsonScalar {
+    /// Numeric value, if this scalar is a number.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            JsonScalar::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// String value, if this scalar is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonScalar::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn next(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.i += 1;
+        }
+        c
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        match self.next() {
+            Some(got) if got == c => Ok(()),
+            got => Err(format!("expected {:?} at byte {}, got {:?}", c as char, self.i, got)),
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u16, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| "non-ascii \\u escape".to_string())?;
+        self.i += 4;
+        u16::from_str_radix(s, 16).map_err(|_| format!("bad \\u escape {s:?}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            let c = self.next().ok_or("unterminated string")?;
+            match c {
+                b'"' => break,
+                b'\\' => {
+                    let e = self.next().ok_or("unterminated escape")?;
+                    match e {
+                        b'"' => buf.push(b'"'),
+                        b'\\' => buf.push(b'\\'),
+                        b'/' => buf.push(b'/'),
+                        b'n' => buf.push(b'\n'),
+                        b't' => buf.push(b'\t'),
+                        b'r' => buf.push(b'\r'),
+                        b'b' => buf.push(0x08),
+                        b'f' => buf.push(0x0c),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..=0xDBFF).contains(&hi) {
+                                // surrogate pair: the low half must follow
+                                if self.next() != Some(b'\\') || self.next() != Some(b'u') {
+                                    return Err("lone high surrogate".into());
+                                }
+                                let lo = self.hex4()?;
+                                if !(0xDC00..=0xDFFF).contains(&lo) {
+                                    return Err("invalid low surrogate".into());
+                                }
+                                0x10000 + (((hi as u32 - 0xD800) << 10) | (lo as u32 - 0xDC00))
+                            } else if (0xDC00..=0xDFFF).contains(&hi) {
+                                return Err("lone low surrogate".into());
+                            } else {
+                                hi as u32
+                            };
+                            let ch =
+                                char::from_u32(cp).ok_or_else(|| "invalid codepoint".to_string())?;
+                            let mut tmp = [0u8; 4];
+                            buf.extend_from_slice(ch.encode_utf8(&mut tmp).as_bytes());
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    }
+                }
+                c => buf.push(c),
+            }
+        }
+        String::from_utf8(buf).map_err(|_| "invalid utf-8 in string".to_string())
+    }
+
+    fn value(&mut self) -> Result<JsonScalar, String> {
+        match self.peek().ok_or("missing value")? {
+            b'"' => Ok(JsonScalar::Str(self.string()?)),
+            b't' => self.literal(b"true", JsonScalar::Bool(true)),
+            b'f' => self.literal(b"false", JsonScalar::Bool(false)),
+            b'n' => self.literal(b"null", JsonScalar::Null),
+            _ => {
+                let start = self.i;
+                while matches!(
+                    self.peek(),
+                    Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+                ) {
+                    self.i += 1;
+                }
+                let s = std::str::from_utf8(&self.b[start..self.i])
+                    .expect("number bytes are ascii");
+                s.parse::<f64>().map(JsonScalar::Num).map_err(|_| format!("bad number {s:?}"))
+            }
+        }
+    }
+
+    fn literal(&mut self, lit: &[u8], v: JsonScalar) -> Result<JsonScalar, String> {
+        if self.b[self.i..].starts_with(lit) {
+            self.i += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+}
+
+/// Parse one flat JSON object line into its (key, scalar) pairs, in
+/// source order. Rejects nesting, trailing bytes, and malformed escapes.
+pub fn parse_line(line: &str) -> Result<Vec<(String, JsonScalar)>, String> {
+    let mut p = Parser { b: line.as_bytes(), i: 0 };
+    p.ws();
+    p.expect(b'{')?;
+    let mut out = Vec::new();
+    p.ws();
+    if p.peek() == Some(b'}') {
+        p.i += 1;
+    } else {
+        loop {
+            p.ws();
+            let k = p.string()?;
+            p.ws();
+            p.expect(b':')?;
+            p.ws();
+            let v = p.value()?;
+            out.push((k, v));
+            p.ws();
+            match p.next() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                got => return Err(format!("expected ',' or '}}', got {got:?}")),
+            }
+        }
+    }
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing bytes after object at {}", p.i));
+    }
+    Ok(out)
+}
+
+/// Look up `key` in a parsed line.
+pub fn field<'a>(obj: &'a [(String, JsonScalar)], key: &str) -> Option<&'a JsonScalar> {
+    obj.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+// ---------------------------------------------------------------------------
+// Determinism contract
+// ---------------------------------------------------------------------------
+
+/// Fields excluded from the fixed-seed determinism contract: wall-clock
+/// timings and the racy hogwild publish tallies (the count of per-column
+/// adds depends on racy snapshots at `threads > 1`). Everything else in
+/// a sequential trace is bit-reproducible under a fixed seed.
+pub const UNSTABLE_FIELDS: &[&str] = &["secs", "grad_secs", "eval_secs", "wall_secs", "publishes"];
+
+/// Canonical re-render of one trace line with [`UNSTABLE_FIELDS`]
+/// removed — the form two same-seed traces are compared in.
+pub fn stable_view(line: &str) -> Result<String, String> {
+    let obj = parse_line(line)?;
+    let mut out = String::with_capacity(line.len());
+    out.push('{');
+    let mut first = true;
+    for (k, v) in &obj {
+        if UNSTABLE_FIELDS.contains(&k.as_str()) {
+            continue;
+        }
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        json_escape(k, &mut out);
+        out.push(':');
+        let jv = match v {
+            JsonScalar::Num(n) => JsonVal::Num(*n),
+            JsonScalar::Str(s) => JsonVal::Str(s.clone()),
+            JsonScalar::Bool(b) => JsonVal::Bool(*b),
+            JsonScalar::Null => JsonVal::Num(f64::NAN), // renders as null
+        };
+        json_val(&jv, &mut out);
+    }
+    out.push('}');
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Schema validation + summarization (the `zipml trace` subcommands)
+// ---------------------------------------------------------------------------
+
+/// What [`validate`] measured while checking a trace.
+#[derive(Debug, Default)]
+pub struct TraceStats {
+    /// Non-empty lines (= events) in the trace.
+    pub events: usize,
+    /// `epoch` events seen.
+    pub epochs: usize,
+    /// Sum of the `epoch` events' `bytes` fields.
+    pub total_bytes: u64,
+    /// `loss` of the last `epoch` event, if any.
+    pub final_loss: Option<f64>,
+}
+
+fn req_num(obj: &[(String, JsonScalar)], kind: &str, key: &str) -> Result<f64, String> {
+    field(obj, key)
+        .and_then(JsonScalar::as_num)
+        .ok_or_else(|| format!("{kind} event missing numeric {key:?}"))
+}
+
+fn req_str<'a>(
+    obj: &'a [(String, JsonScalar)],
+    kind: &str,
+    key: &str,
+) -> Result<&'a str, String> {
+    field(obj, key)
+        .and_then(JsonScalar::as_str)
+        .ok_or_else(|| format!("{kind} event missing string {key:?}"))
+}
+
+/// Validate a JSONL trace: every non-empty line parses as a flat object
+/// with a `"kind"`, required fields per kind are present and typed, and
+/// the byte totals are mutually consistent (epoch deltas vs `summary`
+/// vs `counters` vs per-shard attribution). Unknown kinds are allowed
+/// (they must still parse) so the schema can grow.
+pub fn validate(text: &str) -> Result<TraceStats, String> {
+    let mut stats = TraceStats::default();
+    let mut run_epochs: Option<f64> = None;
+    let mut summary_bytes: Option<f64> = None;
+    let mut counters_bytes: Option<f64> = None;
+    let mut shard_bytes_sum: f64 = 0.0;
+    let mut saw_shard_bytes = false;
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let obj = parse_line(line).map_err(|e| format!("line {}: {e}", ln + 1))?;
+        let kind = req_str(&obj, "every", "kind").map_err(|e| format!("line {}: {e}", ln + 1))?;
+        let check = |r: Result<f64, String>| {
+            r.map(|_| ()).map_err(|e| format!("line {}: {e}", ln + 1))
+        };
+        match kind {
+            "run" => {
+                req_str(&obj, "run", "label").map_err(|e| format!("line {}: {e}", ln + 1))?;
+                req_str(&obj, "run", "level").map_err(|e| format!("line {}: {e}", ln + 1))?;
+                for k in ["rows", "cols", "epochs", "seed"] {
+                    check(req_num(&obj, "run", k))?;
+                }
+                run_epochs = Some(req_num(&obj, "run", "epochs").expect("checked"));
+            }
+            "epoch" => {
+                for k in ["epoch", "p", "loss", "rows", "bytes", "updates"] {
+                    check(req_num(&obj, "epoch", k))?;
+                }
+                let loss = req_num(&obj, "epoch", "loss").expect("checked");
+                if !loss.is_finite() {
+                    return Err(format!("line {}: non-finite epoch loss", ln + 1));
+                }
+                stats.epochs += 1;
+                stats.total_bytes += req_num(&obj, "epoch", "bytes").expect("checked") as u64;
+                stats.final_loss = Some(loss);
+            }
+            "span" => {
+                req_str(&obj, "span", "name").map_err(|e| format!("line {}: {e}", ln + 1))?;
+                check(req_num(&obj, "span", "secs"))?;
+            }
+            "hogwild_epoch" => {
+                for k in ["epoch", "worker", "updates"] {
+                    check(req_num(&obj, "hogwild_epoch", k))?;
+                }
+            }
+            "shard_bytes" => {
+                check(req_num(&obj, "shard_bytes", "shard"))?;
+                let b = req_num(&obj, "shard_bytes", "bytes")
+                    .map_err(|e| format!("line {}: {e}", ln + 1))?;
+                shard_bytes_sum += b;
+                saw_shard_bytes = true;
+            }
+            "counters" => {
+                let name = req_str(&obj, "counters", "counter")
+                    .map_err(|e| format!("line {}: {e}", ln + 1))?;
+                let v = req_num(&obj, "counters", "value")
+                    .map_err(|e| format!("line {}: {e}", ln + 1))?;
+                if name == "bytes_read" {
+                    counters_bytes = Some(v);
+                }
+            }
+            "summary" => {
+                for k in ["total_bytes", "final_loss", "epochs", "updates"] {
+                    check(req_num(&obj, "summary", k))?;
+                }
+                summary_bytes = Some(req_num(&obj, "summary", "total_bytes").expect("checked"));
+            }
+            _ => {} // forward-compatible: unknown kinds only need to parse
+        }
+        stats.events += 1;
+    }
+    if stats.events == 0 {
+        return Err("empty trace".into());
+    }
+    if let Some(e) = run_epochs {
+        if stats.epochs > 0 && stats.epochs as f64 != e {
+            return Err(format!(
+                "run declares {e} epochs but trace has {} epoch events",
+                stats.epochs
+            ));
+        }
+    }
+    if let Some(s) = summary_bytes {
+        if stats.epochs > 0 && stats.total_bytes as f64 != s {
+            return Err(format!(
+                "byte totals disagree: epoch events sum to {} but summary says {s}",
+                stats.total_bytes
+            ));
+        }
+        if let Some(c) = counters_bytes {
+            if c != s {
+                return Err(format!(
+                    "byte totals disagree: counters bytes_read {c} vs summary {s}"
+                ));
+            }
+        }
+        if saw_shard_bytes && shard_bytes_sum != s {
+            return Err(format!(
+                "byte totals disagree: shard attribution sums to {shard_bytes_sum} vs summary {s}"
+            ));
+        }
+    }
+    Ok(stats)
+}
+
+/// Render the per-epoch table `zipml trace summarize` prints: loss,
+/// precision, bytes/row, rows/sec, and (when present) per-worker hogwild
+/// update counts.
+pub fn summarize(text: &str) -> Result<String, String> {
+    use std::fmt::Write as _;
+    let stats = validate(text)?;
+    let mut out = String::new();
+    let mut workers: Vec<(u64, u64)> = Vec::new(); // (worker, updates) summed
+    let mut label = String::from("?");
+    let mut level = String::from("?");
+    let mut rows_meta = None;
+    let mut cols_meta = None;
+    let mut wrote_header = false;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let obj = parse_line(line)?;
+        match field(&obj, "kind").and_then(JsonScalar::as_str).unwrap_or("") {
+            "run" => {
+                label = req_str(&obj, "run", "label")?.to_string();
+                level = req_str(&obj, "run", "level")?.to_string();
+                rows_meta = field(&obj, "rows").and_then(JsonScalar::as_num);
+                cols_meta = field(&obj, "cols").and_then(JsonScalar::as_num);
+            }
+            "epoch" => {
+                if !wrote_header {
+                    let _ = writeln!(
+                        out,
+                        "{:>5} {:>4} {:>14} {:>14} {:>10} {:>12} {:>9}",
+                        "epoch", "p", "loss", "bytes", "bytes/row", "rows/s", "updates"
+                    );
+                    wrote_header = true;
+                }
+                let e = req_num(&obj, "epoch", "epoch")?;
+                let p = req_num(&obj, "epoch", "p")?;
+                let loss = req_num(&obj, "epoch", "loss")?;
+                let bytes = req_num(&obj, "epoch", "bytes")?;
+                let rows = req_num(&obj, "epoch", "rows")?;
+                let updates = req_num(&obj, "epoch", "updates")?;
+                let secs = field(&obj, "secs").and_then(JsonScalar::as_num).unwrap_or(0.0);
+                let rows_per_sec = if secs > 0.0 {
+                    format!("{:.3e}", rows / secs)
+                } else {
+                    "-".to_string()
+                };
+                let _ = writeln!(
+                    out,
+                    "{:>5} {:>4} {:>14.6} {:>14} {:>10.1} {:>12} {:>9}",
+                    e,
+                    p,
+                    loss,
+                    bytes,
+                    if rows > 0.0 { bytes / rows } else { 0.0 },
+                    rows_per_sec,
+                    updates
+                );
+            }
+            "hogwild_epoch" => {
+                let w = req_num(&obj, "hogwild_epoch", "worker")? as u64;
+                let u = req_num(&obj, "hogwild_epoch", "updates")? as u64;
+                match workers.iter_mut().find(|(id, _)| *id == w) {
+                    Some((_, total)) => *total += u,
+                    None => workers.push((w, u)),
+                }
+            }
+            _ => {}
+        }
+    }
+    let shape = match (rows_meta, cols_meta) {
+        (Some(r), Some(c)) => format!("  rows={r} cols={c}"),
+        _ => String::new(),
+    };
+    let mut head = format!("trace: {label}  level={level}{shape}\n");
+    head.push_str(&out);
+    let _ = writeln!(
+        head,
+        "total: {} events, {} epochs, {} bytes{}",
+        stats.events,
+        stats.epochs,
+        stats.total_bytes,
+        match stats.final_loss {
+            Some(l) => format!(", final loss {l:.6}"),
+            None => String::new(),
+        }
+    );
+    if !workers.is_empty() {
+        workers.sort_by_key(|&(w, _)| w);
+        head.push_str("worker updates:");
+        for (w, u) in &workers {
+            let _ = write!(head, " w{w}={u}");
+        }
+        head.push('\n');
+    }
+    Ok(head)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink_lines(level: TraceLevel) -> Vec<String> {
+        let t = TraceSink::in_memory(level);
+        t.emit("run", &[("label", "x".into()), ("seed", 7u64.into())]);
+        t.emit_at(TraceLevel::Spans, "span", &[("name", "epoch".into()), ("secs", 0.5.into())]);
+        let shard = [("shard", 0u64.into()), ("bytes", 64u64.into())];
+        t.emit_at(TraceLevel::Full, "shard_bytes", &shard);
+        t.lines()
+    }
+
+    #[test]
+    fn levels_gate_events() {
+        assert_eq!(sink_lines(TraceLevel::Counters).len(), 1);
+        assert_eq!(sink_lines(TraceLevel::Spans).len(), 2);
+        assert_eq!(sink_lines(TraceLevel::Full).len(), 3);
+        assert!(TraceLevel::Counters < TraceLevel::Spans);
+        assert!(TraceLevel::Spans < TraceLevel::Full);
+        assert_eq!(TraceLevel::parse("full"), Ok(TraceLevel::Full));
+        assert!(TraceLevel::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn emitted_lines_parse_back() {
+        let t = TraceSink::in_memory(TraceLevel::Full);
+        t.emit(
+            "epoch",
+            &[
+                ("epoch", 1u64.into()),
+                ("p", 8u32.into()),
+                ("loss", 0.125.into()),
+                ("bytes", u64::MAX.into()),
+            ],
+        );
+        let lines = t.lines();
+        assert_eq!(lines.len(), 1);
+        let obj = parse_line(&lines[0]).unwrap();
+        assert_eq!(field(&obj, "kind").unwrap().as_str(), Some("epoch"));
+        assert_eq!(field(&obj, "loss").unwrap().as_num(), Some(0.125));
+        // u64::MAX survives textually (emitted via the UInt variant)
+        assert!(lines[0].contains(&u64::MAX.to_string()), "{}", lines[0]);
+    }
+
+    /// Satellite contract: pathological labels round-trip through the
+    /// escaping emitter and the parser unchanged.
+    #[test]
+    fn pathological_strings_round_trip() {
+        let cases = [
+            "plain",
+            "quote\" backslash\\ done",
+            "newline\n tab\t cr\r",
+            "nul\u{0}bell\u{7}esc\u{1b}",
+            "unicode é ❤ 𝄞 — emoji 🚀",
+            "{\"looks\":\"like json\"}",
+            "trailing backslash \\",
+        ];
+        for case in cases {
+            let t = TraceSink::in_memory(TraceLevel::Counters);
+            t.emit("run", &[("label", case.into())]);
+            let line = &t.lines()[0];
+            let obj = parse_line(line).unwrap_or_else(|e| panic!("{case:?}: {e}\n{line}"));
+            assert_eq!(field(&obj, "label").unwrap().as_str(), Some(case), "case {case:?}");
+        }
+    }
+
+    #[test]
+    fn parser_handles_escapes_and_rejects_junk() {
+        let obj = parse_line(r#"{"a":"xAé𝄞","b":-1.5e3,"c":true,"d":null}"#)
+            .unwrap();
+        assert_eq!(field(&obj, "a").unwrap().as_str(), Some("xAé𝄞"));
+        assert_eq!(field(&obj, "b").unwrap().as_num(), Some(-1500.0));
+        assert_eq!(field(&obj, "c"), Some(&JsonScalar::Bool(true)));
+        assert_eq!(field(&obj, "d"), Some(&JsonScalar::Null));
+        assert!(parse_line("{").is_err());
+        assert!(parse_line(r#"{"a":}"#).is_err());
+        assert!(parse_line(r#"{"a":1} extra"#).is_err());
+        assert!(parse_line(r#"{"a":"\ud834"}"#).is_err(), "lone surrogate");
+        assert!(parse_line(r#"{"a":{"nested":1}}"#).is_err(), "schema is flat");
+        assert!(parse_line("{}").unwrap().is_empty());
+    }
+
+    #[test]
+    fn stable_view_strips_exactly_the_unstable_fields() {
+        let line = r#"{"kind":"epoch","epoch":1,"loss":0.5,"secs":0.123,"publishes":99}"#;
+        assert_eq!(stable_view(line).unwrap(), r#"{"kind":"epoch","epoch":1,"loss":0.5}"#);
+        // stable fields survive byte-for-byte across two renders
+        assert_eq!(stable_view(line).unwrap(), stable_view(line).unwrap());
+    }
+
+    fn valid_trace() -> String {
+        [
+            r#"{"kind":"run","label":"l × t × s","level":"full","rows":100,"cols":8,"epochs":2,"seed":7}"#,
+            r#"{"kind":"span","name":"ingest","secs":0.01}"#,
+            r#"{"kind":"epoch","epoch":1,"p":4,"loss":0.5,"rows":100,"bytes":800,"updates":4,"secs":0.02}"#,
+            r#"{"kind":"epoch","epoch":2,"p":8,"loss":0.25,"rows":100,"bytes":1600,"updates":4,"secs":0.02}"#,
+            r#"{"kind":"shard_bytes","shard":0,"bytes":1400}"#,
+            r#"{"kind":"shard_bytes","shard":1,"bytes":1000}"#,
+            r#"{"kind":"counters","counter":"bytes_read","value":2400}"#,
+            r#"{"kind":"summary","total_bytes":2400,"final_loss":0.25,"epochs":2,"updates":8}"#,
+        ]
+        .join("\n")
+    }
+
+    #[test]
+    fn validate_accepts_consistent_traces() {
+        let stats = validate(&valid_trace()).unwrap();
+        assert_eq!(stats.events, 8);
+        assert_eq!(stats.epochs, 2);
+        assert_eq!(stats.total_bytes, 2400);
+        assert_eq!(stats.final_loss, Some(0.25));
+    }
+
+    #[test]
+    fn validate_rejects_inconsistent_and_malformed_traces() {
+        assert!(validate("").is_err(), "empty");
+        assert!(validate("not json").is_err());
+        assert!(validate(r#"{"no_kind":1}"#).is_err());
+        // epoch bytes vs summary mismatch
+        let bad = valid_trace().replace("\"total_bytes\":2400", "\"total_bytes\":2401");
+        assert!(validate(&bad).unwrap_err().contains("disagree"), "{bad}");
+        // counters vs summary mismatch
+        let bad = valid_trace().replace("\"value\":2400", "\"value\":9");
+        assert!(validate(&bad).unwrap_err().contains("counters"));
+        // shard attribution mismatch
+        let bad = valid_trace().replace("\"bytes\":1000", "\"bytes\":999");
+        assert!(validate(&bad).unwrap_err().contains("shard"));
+        // epoch count vs run declaration
+        let bad = valid_trace().replace("\"epochs\":2,\"seed\":7", "\"epochs\":3,\"seed\":7");
+        assert!(validate(&bad).unwrap_err().contains("epoch events"));
+        // missing required field
+        let bad = valid_trace().replace("\"p\":4,", "");
+        assert!(validate(&bad).unwrap_err().contains("\"p\""));
+    }
+
+    #[test]
+    fn summarize_renders_table_and_workers() {
+        let mut text = valid_trace();
+        text.push_str("\n{\"kind\":\"hogwild_epoch\",\"epoch\":1,\"worker\":0,\"updates\":50}");
+        text.push_str("\n{\"kind\":\"hogwild_epoch\",\"epoch\":1,\"worker\":1,\"updates\":50}");
+        let s = summarize(&text).unwrap();
+        assert!(s.contains("l × t × s"), "{s}");
+        assert!(s.contains("bytes/row"), "{s}");
+        assert!(s.contains("0.250000"), "{s}");
+        assert!(s.contains("w0=50 w1=50"), "{s}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Cross-cutting [`HostSession`] result invariants over the full read ×
+//! execution matrix, plus the DESIGN.md §10 observability contracts:
+//! telemetry byte counters equal the store's exact-byte accounting (and
+//! the analytic truncation / DS-2× formulas), and trace content is
+//! deterministic under a fixed seed once the wall-clock fields are
+//! stripped ([`zipml::telemetry::stable_view`]).
+
+use std::sync::Arc;
+
+use zipml::data::synthetic::make_regression;
+use zipml::data::Dataset;
+use zipml::quant::ColumnScale;
+use zipml::sgd::{Execution, HostSession, ModelKind, ReadStrategy};
+use zipml::store::{PrecisionSchedule, ShardedStore};
+use zipml::telemetry::{stable_view, validate, Metrics, TraceLevel, TraceSink};
+
+/// A small sharded store with an enabled counter registry attached, so
+/// the store's exact-byte accounting mirrors into the registry.
+fn store_with_metrics(ds: &Dataset, bits: u32) -> (ShardedStore, Arc<Metrics>) {
+    let scale = ColumnScale::from_data(&ds.train_a);
+    let mut store = ShardedStore::ingest(&ds.train_a, &scale, bits, 9, 4, 0);
+    let m = Arc::new(Metrics::enabled());
+    store.attach_metrics(Arc::clone(&m));
+    (store, m)
+}
+
+/// Every read × execution combination upholds the `SessionResult`
+/// invariants — curve length, initial loss, precision schedule, update
+/// count — and the exact byte contract: store accounting == telemetry
+/// counters == the analytic per-epoch formula (`k·p·⌈n/64⌉·8`
+/// truncating bytes, exactly doubled by double sampling).
+#[test]
+fn session_invariants_across_read_and_execution_matrix() {
+    let ds = make_regression("inv_matrix", 150, 16, 24, 77);
+    let k = ds.k_train();
+    let (store, metrics) = store_with_metrics(&ds, 8);
+    let (epochs, batch, p) = (3usize, 32usize, 4u32);
+    let nb = k.div_ceil(batch);
+    // the analytic truncating row cost (DESIGN.md §5): p planes of
+    // ⌈n/64⌉ words, 8 bytes each — the store's accounting must agree
+    let trunc_row_bytes = p as u64 * ds.n().div_ceil(64) as u64 * 8;
+    assert_eq!(store.bytes_per_row(p) as u64, trunc_row_bytes);
+    let reads =
+        [ReadStrategy::Truncate, ReadStrategy::DoubleSample, ReadStrategy::Popcount { q: 8 }];
+    let execs = [Execution::Sequential, Execution::Hogwild { threads: 2 }];
+    let mut initial = None;
+    for read in reads {
+        for exec in execs {
+            let r = HostSession::over(&ds, &store)
+                .read(read)
+                .execution(exec)
+                .schedule(PrecisionSchedule::Fixed(p))
+                .epochs(epochs)
+                .batch(batch)
+                .lr0(0.02)
+                .seed(5)
+                .run()
+                .unwrap();
+            assert_eq!(r.loss_curve.len(), epochs + 1, "{}", r.label);
+            let init = *initial.get_or_insert(r.loss_curve[0]);
+            assert_eq!(r.loss_curve[0], init, "loss_curve[0] is the initial loss ({})", r.label);
+            assert_eq!(r.precisions, vec![p; epochs], "{}", r.label);
+            let expected_updates = match exec {
+                Execution::Sequential => epochs * nb,
+                Execution::Hogwild { .. } => epochs * k,
+            };
+            assert_eq!(r.updates, expected_updates, "{}", r.label);
+            let per_visit = match read {
+                ReadStrategy::DoubleSample => 2 * trunc_row_bytes,
+                _ => trunc_row_bytes,
+            };
+            let total = epochs as u64 * k as u64 * per_visit;
+            assert_eq!(store.bytes_read(), total, "store accounting ({})", r.label);
+            assert_eq!(metrics.bytes_read_total(), total, "telemetry mirror ({})", r.label);
+            assert_eq!(metrics.bytes_read_at(p), total, "per-precision bucket ({})", r.label);
+            assert_eq!(metrics.row_visits(), epochs as u64 * k as u64, "{}", r.label);
+            assert_eq!(r.sample_bytes_per_epoch, (k as u64 * per_visit) as f64, "{}", r.label);
+        }
+    }
+    // Dense: storeless analytic accounting, precision pinned at 32
+    for exec in execs {
+        let r = HostSession::dense(&ds)
+            .execution(exec)
+            .epochs(epochs)
+            .batch(batch)
+            .seed(5)
+            .run()
+            .unwrap();
+        assert_eq!(r.loss_curve.len(), epochs + 1, "{}", r.label);
+        assert_eq!(r.precisions, vec![32; epochs], "{}", r.label);
+        assert_eq!(r.sample_bytes_per_epoch, (k * ds.n() * 4) as f64, "{}", r.label);
+    }
+    // the sequential dequantize oracle upholds the same byte contract
+    let r = HostSession::over(&ds, &store)
+        .dequant_oracle()
+        .schedule(PrecisionSchedule::Fixed(p))
+        .epochs(epochs)
+        .batch(batch)
+        .seed(5)
+        .run()
+        .unwrap();
+    assert_eq!(r.loss_curve.len(), epochs + 1);
+    assert_eq!(store.bytes_read(), epochs as u64 * k as u64 * trunc_row_bytes);
+    assert_eq!(metrics.bytes_read_total(), store.bytes_read());
+}
+
+/// A traced double-sampled run emits a schema-valid trace whose byte
+/// totals equal the registry, and two same-seed runs agree byte for byte
+/// once [`stable_view`] strips the wall-clock fields.
+#[test]
+fn trace_is_schema_valid_and_deterministic_under_fixed_seed() {
+    let ds = make_regression("inv_trace", 120, 12, 16, 31);
+    let (store, metrics) = store_with_metrics(&ds, 6);
+    let run = |sink: &TraceSink| {
+        HostSession::over(&ds, &store)
+            .loss(&ModelKind::Logistic)
+            .read(ReadStrategy::DoubleSample)
+            .schedule(PrecisionSchedule::Fixed(3))
+            .epochs(4)
+            .batch(32)
+            .seed(11)
+            .metrics(&metrics)
+            .trace(sink)
+            .run()
+            .unwrap()
+    };
+    let s1 = TraceSink::in_memory(TraceLevel::Full);
+    let r1 = run(&s1);
+    let s2 = TraceSink::in_memory(TraceLevel::Full);
+    let r2 = run(&s2);
+    assert_eq!(r1.loss_curve, r2.loss_curve, "the session itself must replay from its seed");
+    let (t1, t2) = (s1.lines().join("\n"), s2.lines().join("\n"));
+    let stats = validate(&t1).expect("schema-valid trace");
+    assert_eq!(stats.epochs, 4);
+    assert_eq!(stats.total_bytes, metrics.bytes_read_total(), "trace bytes == registry bytes");
+    assert_eq!(stats.final_loss, r1.loss_curve.last().copied());
+    let stable =
+        |t: &str| -> Vec<String> { t.lines().map(|l| stable_view(l).unwrap()).collect() };
+    assert_eq!(stable(&t1), stable(&t2), "non-timing trace content must be deterministic");
+}
+
+/// The determinism contract extends to single-threaded hogwild: with one
+/// worker the racy path is a serial replay, so the stable trace view —
+/// including the per-worker `hogwild_epoch` update counts — is identical
+/// across same-seed runs.
+#[test]
+fn hogwild_single_thread_trace_is_deterministic() {
+    let ds = make_regression("inv_hog", 90, 10, 16, 13);
+    let (store, metrics) = store_with_metrics(&ds, 5);
+    let run = |sink: &TraceSink| {
+        HostSession::over(&ds, &store)
+            .execution(Execution::Hogwild { threads: 1 })
+            .schedule(PrecisionSchedule::Fixed(4))
+            .epochs(3)
+            .seed(23)
+            .metrics(&metrics)
+            .trace(sink)
+            .run()
+            .unwrap()
+    };
+    let s1 = TraceSink::in_memory(TraceLevel::Full);
+    run(&s1);
+    let s2 = TraceSink::in_memory(TraceLevel::Full);
+    run(&s2);
+    validate(&s1.lines().join("\n")).expect("schema-valid hogwild trace");
+    let stable = |s: &TraceSink| -> Vec<String> {
+        s.lines().iter().map(|l| stable_view(l).unwrap()).collect()
+    };
+    assert_eq!(stable(&s1), stable(&s2));
+    assert_eq!(metrics.hogwild_updates(), 3 * 90, "one worker visits every row each epoch");
+}
