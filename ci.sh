@@ -15,20 +15,35 @@
 # shared runners) — and which writes the machine-readable perf trajectory
 # BENCH_kernels.json at the repo root (uploaded as a CI artifact).
 #
-# Usage: ci.sh [--quick|--bench]
+# Usage: ci.sh [--quick|--bench|--analyze]
 #   (default) full gate; the bench smoke runs with --quick budgets
 #   --quick   alias for the default gate (kept for muscle memory)
 #   --bench   build + run the fused-dot bench at FULL measurement budgets,
 #             refreshing BENCH_kernels.json with trajectory-quality numbers
+#   --analyze concurrency & invariant verification (DESIGN.md §11):
+#             zipml-lint over rust/src + its fixture suite, then the loom
+#             models (RUSTFLAGS="--cfg loom"); Miri/TSan run as separate
+#             nightly CI jobs (see .github/workflows/ci.yml)
 # Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 MODE="${1:-gate}"
 case "$MODE" in
-  gate|--quick|--bench) ;;
-  *) echo "usage: ci.sh [--quick|--bench]  (got: $MODE)" >&2; exit 2 ;;
+  gate|--quick|--bench|--analyze) ;;
+  *) echo "usage: ci.sh [--quick|--bench|--analyze]  (got: $MODE)" >&2; exit 2 ;;
 esac
+
+if [[ "$MODE" == "--analyze" ]]; then
+  echo "== zipml-lint: invariant rules over rust/src (DESIGN.md §11) =="
+  cargo run --release -p zipml-lint
+  echo "== zipml-lint: rule unit + fixture tests (each rule fires at its seeded lines) =="
+  cargo test --release -p zipml-lint -q
+  echo "== loom models: ShardedU64 / store byte accounting / RacyF32Cell =="
+  RUSTFLAGS="--cfg loom" cargo test --release -p zipml --test loom_models -- --nocapture
+  echo "ANALYZE OK"
+  exit 0
+fi
 
 if [[ "$MODE" == "--bench" ]]; then
   echo "== cargo build --release =="

@@ -22,7 +22,7 @@ fn banner(s: &str) {
 }
 
 fn main() -> anyhow::Result<()> {
-    let t0 = std::time::Instant::now();
+    let t0 = zipml::telemetry::Stopwatch::start();
     let rt = Runtime::open_default()?;
 
     // ---------------- 1. linear models ------------------------------------
@@ -98,7 +98,7 @@ fn main() -> anyhow::Result<()> {
         st.executions, st.compile_count, st.exec_nanos as f64 * 1e-9);
     println!("double-sampling matches FP32 at 5-6 bits → {:.1}x bandwidth saving",
         fp.sample_bytes_per_epoch / q5.sample_bytes_per_epoch);
-    println!("total wallclock: {:.1}s", t0.elapsed().as_secs_f64());
+    println!("total wallclock: {:.1}s", t0.elapsed_secs());
     println!("\nE2E VALIDATION PASSED: all three layers composed on real workloads");
     Ok(())
 }

@@ -22,25 +22,25 @@ fn main() -> anyhow::Result<()> {
 
     println!("level placement, 8 levels on a bimodal distribution:");
     let uniform: Vec<f32> = (0..8).map(|i| i as f32 / 7.0).collect();
-    let t0 = std::time::Instant::now();
+    let t0 = zipml::telemetry::Stopwatch::start();
     let exact = optimal_levels(&pts, 8);
-    let t_exact = t0.elapsed();
-    let t0 = std::time::Instant::now();
+    let t_exact = t0.elapsed_secs();
+    let t0 = zipml::telemetry::Stopwatch::start();
     let disc = discretized_optimal_levels(&pts, 8, 128);
-    let t_disc = t0.elapsed();
-    let t0 = std::time::Instant::now();
+    let t_disc = t0.elapsed_secs();
+    let t0 = zipml::telemetry::Stopwatch::start();
     let greedy = adaquant_levels(&pts, 8);
-    let t_greedy = t0.elapsed();
+    let t_greedy = t0.elapsed_secs();
     for (name, lv, t) in [
-        ("uniform", &uniform, std::time::Duration::ZERO),
+        ("uniform", &uniform, 0.0f64),
         ("exact DP  O(kN^2)", &exact, t_exact),
         ("discretized DP", &disc, t_disc),
         ("ADAQUANT 2-approx", &greedy, t_greedy),
     ] {
         println!(
-            "  {name:20} MV={:.3e}  ({:.1?})  levels={:?}",
+            "  {name:20} MV={:.3e}  ({:.2}ms)  levels={:?}",
             quantization_variance(&pts, lv),
-            t,
+            t * 1e3,
             lv.iter().map(|v| (v * 1000.0).round() / 1000.0).collect::<Vec<_>>()
         );
     }

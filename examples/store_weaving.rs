@@ -18,7 +18,7 @@ fn main() {
     let scale = ColumnScale::from_data(&ds.train_a);
 
     // quantize-on-first-epoch, in parallel across shards, ONCE at 8 bits
-    let t0 = std::time::Instant::now();
+    let t0 = zipml::telemetry::Stopwatch::start();
     let store = ShardedStore::ingest(&ds.train_a, &scale, 8, 42, 16, 0);
     println!(
         "ingested {}x{} at {} bits into {} shards in {:.1} ms ({} B stored — one copy serves p=1..=8)",
@@ -26,7 +26,7 @@ fn main() {
         store.cols(),
         store.bits(),
         store.num_shards(),
-        t0.elapsed().as_secs_f64() * 1e3,
+        t0.elapsed_secs() * 1e3,
         store.stored_bytes(),
     );
 

@@ -1,0 +1,546 @@
+//! `zipml-lint` — repo-native static analysis for the ZipML invariants
+//! (DESIGN.md §11).
+//!
+//! The crate's correctness story leans on contracts that rustc cannot
+//! see: the exact-byte accounting (DESIGN.md §5/§8), the fixed-seed
+//! determinism contract (§10), and the relaxed-ordering protocols the
+//! loom models check. This linter machine-checks the *textual* side of
+//! those contracts as named, individually-testable rules over
+//! `rust/src/`:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `unsafe-code` | no `unsafe` outside `allowlist_unsafe.txt` |
+//! | `ordering-contract` | every `Ordering::*` use carries an `// ordering:` comment (same line or ≤ 3 lines above) |
+//! | `wall-clock` | no `Instant`/`SystemTime` outside `telemetry/` and `bench.rs` |
+//! | `byte-truncating-cast` | in `store/`: no `as`-narrowing casts on byte-accounting expressions |
+//! | `hash-in-deterministic-path` | no `HashMap`/`HashSet` in `store/`, `sgd/`, `fpga/` |
+//! | `json-emitter` | no JSON writer outside `bench.rs` (`json_escape`/`json_val` calls, `fn json_*` definitions) |
+//!
+//! The scanner is line/token-level (like the repo's serde-free JSON
+//! code, deliberately not a full parser): comments, string/char
+//! literals, and raw strings are scrubbed first so tokens inside them
+//! never match. A finding can be waived in place with
+//! `// lint: allow(rule-name)` on the same or the preceding line —
+//! greppable, narrow, and reviewed like any other diff line.
+
+#![forbid(unsafe_code)]
+
+use std::fmt;
+use std::path::Path;
+
+/// Every rule this linter knows, in diagnostic order.
+pub const RULE_NAMES: &[&str] = &[
+    "unsafe-code",
+    "ordering-contract",
+    "wall-clock",
+    "byte-truncating-cast",
+    "hash-in-deterministic-path",
+    "json-emitter",
+];
+
+/// One finding: `path:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the scanned source root, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The rule name (one of [`RULE_NAMES`]).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The scrubber: split each source line into code text and comment text
+// ---------------------------------------------------------------------------
+
+/// One source line after scrubbing: `code` with all comment bodies and
+/// string/char-literal contents blanked, `comment` holding the line's
+/// comment text (line comments and any block-comment content).
+#[derive(Debug, Default, Clone)]
+pub struct ScrubbedLine {
+    pub code: String,
+    pub comment: String,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Code,
+    /// Inside `/* */`, tracking nesting depth.
+    Block(u32),
+    /// Inside a `"…"` (or `b"…"`) string literal.
+    Str,
+    /// Inside a raw string; payload is the `#` count that closes it.
+    RawStr(u32),
+}
+
+/// Scrub `src` into per-line code/comment records. Handles line and
+/// nested block comments, string/byte-string literals, raw strings
+/// (`r#"…"#`), char literals, and the char-vs-lifetime ambiguity.
+pub fn scrub(src: &str) -> Vec<ScrubbedLine> {
+    let c: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = ScrubbedLine::default();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < c.len() {
+        let ch = c[i];
+        if ch == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            // line comments end at the newline; block/string states span
+            if !matches!(state, State::Block(_) | State::Str | State::RawStr(_)) {
+                state = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if ch == '/' && c.get(i + 1) == Some(&'/') {
+                    // line comment: capture to end of line
+                    i += 2;
+                    while i < c.len() && c[i] != '\n' {
+                        cur.comment.push(c[i]);
+                        i += 1;
+                    }
+                } else if ch == '/' && c.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    i += 2;
+                } else if ch == '"' {
+                    cur.code.push(' ');
+                    state = State::Str;
+                    i += 1;
+                } else if (ch == 'r' || ch == 'b') && !prev_is_ident(&c, i) {
+                    // r"…" / r#"…"# / b"…" / br#"…"# raw & byte strings
+                    let mut j = i + 1;
+                    if ch == 'b' && c.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while c.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    let raw = j > i + 1 || (ch == 'r' && hashes == 0);
+                    if c.get(j) == Some(&'"') && (raw || ch == 'b') {
+                        cur.code.push(' ');
+                        state = if ch == 'b' && hashes == 0 && j == i + 1 {
+                            State::Str
+                        } else {
+                            State::RawStr(hashes)
+                        };
+                        i = j + 1;
+                    } else {
+                        cur.code.push(ch);
+                        i += 1;
+                    }
+                } else if ch == '\'' {
+                    // char literal vs lifetime: a backslash or a closing
+                    // quote two chars on means char literal
+                    if c.get(i + 1) == Some(&'\\') {
+                        i += 2; // skip the escape head
+                        while i < c.len() && c[i] != '\'' && c[i] != '\n' {
+                            i += 1;
+                        }
+                        cur.code.push(' ');
+                        i += 1; // past the closing quote
+                    } else if c.get(i + 2) == Some(&'\'') {
+                        cur.code.push(' ');
+                        i += 3;
+                    } else {
+                        // lifetime: keep the tick so `'a` stays one token
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(ch);
+                    i += 1;
+                }
+            }
+            State::Block(depth) => {
+                if ch == '/' && c.get(i + 1) == Some(&'*') {
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else if ch == '*' && c.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    cur.comment.push(ch);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                // an escape consumes the next char — except a newline
+                // (the `\`-continuation), which must still count a line
+                if ch == '\\' && c.get(i + 1).is_some_and(|&n| n != '\n') {
+                    i += 2;
+                } else if ch == '"' {
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if ch == '"' {
+                    let close = (0..hashes as usize).all(|k| c.get(i + 1 + k) == Some(&'#'));
+                    if close {
+                        state = State::Code;
+                        i += 1 + hashes as usize;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+fn prev_is_ident(c: &[char], i: usize) -> bool {
+    i > 0 && (c[i - 1].is_alphanumeric() || c[i - 1] == '_')
+}
+
+/// Whether `tok` appears in `s` as a whole word (identifier boundaries
+/// on both sides) — so `unsafe_code` never matches the token `unsafe`.
+pub fn has_token(s: &str, tok: &str) -> bool {
+    let sb = s.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = s[from..].find(tok) {
+        let start = from + pos;
+        let end = start + tok.len();
+        let ok_before =
+            start == 0 || !(sb[start - 1].is_ascii_alphanumeric() || sb[start - 1] == b'_');
+        let ok_after = end >= sb.len() || !(sb[end].is_ascii_alphanumeric() || sb[end] == b'_');
+        if ok_before && ok_after {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// The rules
+// ---------------------------------------------------------------------------
+
+/// Narrowing targets of the `byte-truncating-cast` rule: a byte total
+/// cast to any of these can silently truncate or round (`u64`, `usize`
+/// and `f64`→ reporting casts stay legal).
+const NARROW_CASTS: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32", "f32"];
+
+fn cast_to_narrow(code: &str) -> Option<&'static str> {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(" as ") {
+        let mut j = from + pos + 4;
+        while j < b.len() && b[j] == b' ' {
+            j += 1;
+        }
+        let start = j;
+        while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+            j += 1;
+        }
+        let ty = &code[start..j];
+        if let Some(&n) = NARROW_CASTS.iter().find(|&&n| n == ty) {
+            return Some(n);
+        }
+        from += pos + 4;
+    }
+    None
+}
+
+/// Whether the scrubbed code mentions a byte-accounting identifier (any
+/// identifier containing `bytes`, case-insensitive).
+fn mentions_bytes_ident(code: &str) -> bool {
+    code.to_ascii_lowercase().contains("bytes")
+}
+
+fn suppressed(lines: &[ScrubbedLine], i: usize, rule: &str) -> bool {
+    let needle = format!("lint: allow({rule})");
+    lines[i].comment.contains(&needle)
+        || (i > 0 && lines[i - 1].comment.contains(&needle))
+}
+
+/// How many lines above an `Ordering::` use its `// ordering:` contract
+/// comment may sit (inclusive; same-line comments always count).
+const ORDERING_COMMENT_REACH: usize = 3;
+
+fn has_ordering_contract(lines: &[ScrubbedLine], i: usize) -> bool {
+    let lo = i.saturating_sub(ORDERING_COMMENT_REACH);
+    lines[lo..=i].iter().any(|l| l.comment.contains("ordering:"))
+}
+
+const MSG_UNSAFE: &str =
+    "`unsafe` outside the allowlist (rust/lint/allowlist_unsafe.txt); the crate forbids unsafe";
+const MSG_ORDERING: &str =
+    "`Ordering::*` without an `// ordering:` comment on this line or the 3 above (DESIGN.md \u{a7}11)";
+const MSG_WALL_CLOCK: &str =
+    "wall-clock read outside telemetry//bench.rs; use telemetry::Stopwatch (determinism contract)";
+const MSG_BYTE_CAST: &str =
+    "byte-accounting expression narrowed with `as` can truncate; byte totals stay u64 end to end";
+const MSG_HASH: &str =
+    "HashMap/HashSet in a deterministic path (store/, sgd/, fpga/); use Vec or BTreeMap";
+const MSG_JSON: &str =
+    "second JSON emitter outside bench.rs; write through bench::JsonObj so escaping never drifts";
+
+/// Lint one file's source text. `rel_path` is the `/`-separated path
+/// relative to the scanned source root — the path-scoped rules key off
+/// it. `unsafe_allowlist` holds rel paths where `unsafe` is permitted.
+pub fn lint_source(rel_path: &str, src: &str, unsafe_allowlist: &[String]) -> Vec<Diagnostic> {
+    let lines = scrub(src);
+    let mut out = Vec::new();
+    let in_store = rel_path.starts_with("store/");
+    let det_path = in_store || rel_path.starts_with("sgd/") || rel_path.starts_with("fpga/");
+    let wall_exempt = rel_path.starts_with("telemetry/") || rel_path == "bench.rs";
+    let json_exempt = rel_path == "bench.rs";
+    let unsafe_allowed = unsafe_allowlist.iter().any(|p| p == rel_path);
+    let mut diag = |i: usize, rule: &'static str, msg: &str| {
+        out.push(Diagnostic {
+            path: rel_path.to_string(),
+            line: i + 1,
+            rule,
+            message: msg.to_string(),
+        });
+    };
+    for (i, l) in lines.iter().enumerate() {
+        let code = l.code.as_str();
+        if !unsafe_allowed && has_token(code, "unsafe") && !suppressed(&lines, i, "unsafe-code") {
+            diag(i, "unsafe-code", MSG_UNSAFE);
+        }
+        if code.contains("Ordering::")
+            && !has_ordering_contract(&lines, i)
+            && !suppressed(&lines, i, "ordering-contract")
+        {
+            diag(i, "ordering-contract", MSG_ORDERING);
+        }
+        if !wall_exempt
+            && (has_token(code, "Instant") || has_token(code, "SystemTime"))
+            && !suppressed(&lines, i, "wall-clock")
+        {
+            diag(i, "wall-clock", MSG_WALL_CLOCK);
+        }
+        if in_store && mentions_bytes_ident(code) {
+            if let Some(ty) = cast_to_narrow(code) {
+                if !suppressed(&lines, i, "byte-truncating-cast") {
+                    diag(i, "byte-truncating-cast", &format!("{MSG_BYTE_CAST} (`as {ty}`)"));
+                }
+            }
+        }
+        if det_path
+            && (has_token(code, "HashMap") || has_token(code, "HashSet"))
+            && !suppressed(&lines, i, "hash-in-deterministic-path")
+        {
+            diag(i, "hash-in-deterministic-path", MSG_HASH);
+        }
+        let json_def = code.contains("fn json_");
+        if !json_exempt
+            && (json_def || has_token(code, "json_escape") || has_token(code, "json_val"))
+            && !suppressed(&lines, i, "json-emitter")
+        {
+            diag(i, "json-emitter", MSG_JSON);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Tree walking
+// ---------------------------------------------------------------------------
+
+/// Parse `allowlist_unsafe.txt` content: one rel path per line, `#`
+/// comments and blank lines ignored.
+pub fn parse_allowlist(text: &str) -> Vec<String> {
+    text.lines()
+        .map(|l| l.split('#').next().unwrap_or("").trim())
+        .filter(|l| !l.is_empty())
+        .map(|l| l.to_string())
+        .collect()
+}
+
+fn walk(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `src_root`, in sorted path order (so
+/// diagnostics are deterministic). Returns (files scanned, findings).
+pub fn lint_tree(
+    src_root: &Path,
+    unsafe_allowlist: &[String],
+) -> std::io::Result<(usize, Vec<Diagnostic>)> {
+    let mut files = Vec::new();
+    walk(src_root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(src_root)
+            .expect("walked under root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(f)?;
+        out.extend(lint_source(&rel, &src, unsafe_allowlist));
+    }
+    Ok((files.len(), out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(rel: &str, src: &str) -> Vec<(&'static str, usize)> {
+        lint_source(rel, src, &[]).into_iter().map(|d| (d.rule, d.line)).collect()
+    }
+
+    #[test]
+    fn scrubber_separates_code_and_comments() {
+        let s = scrub("let a = 1; // trailing note\n/* block\nstill block */ code()\n");
+        assert_eq!(s[0].code.trim(), "let a = 1;");
+        assert!(s[0].comment.contains("trailing note"));
+        assert!(s[1].comment.contains("block"));
+        assert!(s[1].code.trim().is_empty());
+        assert_eq!(s[2].code.trim(), "code()");
+    }
+
+    #[test]
+    fn scrubber_blanks_strings_and_chars() {
+        let s = scrub("let x = \"unsafe Instant\"; let c = 'u'; let l: &'a str = y;\n");
+        assert!(!s[0].code.contains("unsafe"));
+        assert!(!s[0].code.contains("Instant"));
+        assert!(s[0].code.contains("&'a str"), "lifetimes survive: {}", s[0].code);
+    }
+
+    #[test]
+    fn scrubber_handles_raw_and_byte_strings() {
+        let s = scrub("let r = r#\"Ordering:: \"quoted\" unsafe\"#; after()\nb\"bytes unsafe\";\n");
+        assert!(!s[0].code.contains("unsafe"), "{:?}", s[0].code);
+        assert!(s[0].code.contains("after()"));
+        assert!(!s[1].code.contains("unsafe"), "{:?}", s[1].code);
+    }
+
+    #[test]
+    fn scrubber_handles_nested_block_comments() {
+        let s = scrub("/* a /* nested */ still comment */ let ok = 1;\n");
+        assert_eq!(s[0].code.trim(), "let ok = 1;");
+        assert!(s[0].comment.contains("nested"));
+    }
+
+    #[test]
+    fn token_matching_respects_word_boundaries() {
+        assert!(has_token("unsafe {", "unsafe"));
+        assert!(!has_token("#![forbid(unsafe_code)]", "unsafe"));
+        assert!(!has_token("an_unsafe_name", "unsafe"));
+        assert!(has_token("x(unsafe)", "unsafe"));
+    }
+
+    #[test]
+    fn rule_unsafe_code_fires_and_respects_allowlist() {
+        let src = "fn f() { unsafe { g() } }\n";
+        assert_eq!(rules_hit("a.rs", src), vec![("unsafe-code", 1)]);
+        let allow = vec!["a.rs".to_string()];
+        assert!(lint_source("a.rs", src, &allow).is_empty());
+    }
+
+    #[test]
+    fn rule_ordering_contract_checks_comment_reach() {
+        let bad = "a.load(Ordering::Relaxed);\n";
+        assert_eq!(rules_hit("a.rs", bad), vec![("ordering-contract", 1)]);
+        let same_line = "a.load(Ordering::Relaxed); // ordering: relaxed — test\n";
+        assert!(rules_hit("a.rs", same_line).is_empty());
+        let above = "// ordering: relaxed — contract\n\n\na.load(Ordering::Relaxed);\n";
+        assert!(rules_hit("a.rs", above).is_empty(), "3 lines above is in reach");
+        let too_far = "// ordering: relaxed\n\n\n\na.load(Ordering::Relaxed);\n";
+        assert_eq!(rules_hit("a.rs", too_far), vec![("ordering-contract", 5)]);
+    }
+
+    #[test]
+    fn rule_wall_clock_exempts_telemetry_and_bench() {
+        let src = "let t = Instant::now();\n";
+        assert_eq!(rules_hit("sgd/host.rs", src), vec![("wall-clock", 1)]);
+        assert_eq!(rules_hit("x.rs", "SystemTime::now();\n"), vec![("wall-clock", 1)]);
+        assert!(rules_hit("telemetry/clock.rs", src).is_empty());
+        assert!(rules_hit("bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn rule_byte_cast_only_narrowing_only_store() {
+        let bad = "let b = total_bytes as u32;\n";
+        assert_eq!(rules_hit("store/shard.rs", bad), vec![("byte-truncating-cast", 1)]);
+        assert!(rules_hit("sgd/host.rs", bad).is_empty(), "scoped to store/");
+        assert!(rules_hit("store/shard.rs", "let b = n_bytes as u64;\n").is_empty());
+        assert!(rules_hit("store/shard.rs", "let r = rows as u32;\n").is_empty());
+    }
+
+    #[test]
+    fn rule_hash_scoped_to_deterministic_paths() {
+        let src = "use std::collections::HashMap;\n";
+        for p in ["store/a.rs", "sgd/a.rs", "fpga/a.rs"] {
+            assert_eq!(rules_hit(p, src), vec![("hash-in-deterministic-path", 1)], "{p}");
+        }
+        assert!(rules_hit("runtime/mod.rs", src).is_empty());
+        assert_eq!(
+            rules_hit("sgd/a.rs", "let s: HashSet<u32> = x;\n"),
+            vec![("hash-in-deterministic-path", 1)]
+        );
+    }
+
+    #[test]
+    fn rule_json_emitter_fires_on_calls_and_defs() {
+        assert_eq!(rules_hit("a.rs", "json_escape(s, &mut out);\n"), vec![("json-emitter", 1)]);
+        assert_eq!(rules_hit("a.rs", "fn json_write(x: &str) {}\n"), vec![("json-emitter", 1)]);
+        assert!(rules_hit("bench.rs", "json_val(v, &mut out);\n").is_empty());
+        assert!(rules_hit("a.rs", "let json_value = parse();\n").is_empty(), "other idents ok");
+    }
+
+    #[test]
+    fn inline_suppression_waives_same_and_next_line() {
+        let same = "let t = Instant::now(); // lint: allow(wall-clock) — fixture\n";
+        assert!(rules_hit("a.rs", same).is_empty());
+        let above = "// lint: allow(wall-clock) timing demo\nlet t = Instant::now();\n";
+        assert!(rules_hit("a.rs", above).is_empty());
+        let wrong_rule = "// lint: allow(unsafe-code)\nlet t = Instant::now();\n";
+        assert_eq!(rules_hit("a.rs", wrong_rule), vec![("wall-clock", 2)]);
+    }
+
+    #[test]
+    fn tokens_inside_literals_never_fire() {
+        let src = "let m = \"contains unsafe and Instant and HashMap\";\n";
+        assert!(rules_hit("sgd/a.rs", src).is_empty());
+        let doc = "/// docs may say unsafe, Instant, HashMap, json_escape\nlet ok = 1;\n";
+        assert!(rules_hit("sgd/a.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn allowlist_parser_strips_comments() {
+        let txt = "# header\n\nruntime/literal.rs  # historical\n";
+        assert_eq!(parse_allowlist(txt), vec!["runtime/literal.rs".to_string()]);
+        assert!(parse_allowlist("# only comments\n").is_empty());
+    }
+
+    #[test]
+    fn diagnostic_renders_file_line_rule() {
+        let d = Diagnostic {
+            path: "store/shard.rs".into(),
+            line: 7,
+            rule: "byte-truncating-cast",
+            message: "m".into(),
+        };
+        assert_eq!(d.to_string(), "store/shard.rs:7: [byte-truncating-cast] m");
+    }
+}

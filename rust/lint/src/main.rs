@@ -1,0 +1,61 @@
+//! `zipml-lint` CLI: lint the crate's source tree against the ZipML
+//! invariant rules (see the library docs / DESIGN.md §11).
+//!
+//! Usage: `zipml-lint [SRC_DIR [ALLOWLIST]]`
+//!
+//! With no arguments it lints the in-repo `rust/src/` with the in-repo
+//! `rust/lint/allowlist_unsafe.txt`, so `cargo run -p zipml-lint` from
+//! anywhere in the workspace is the whole invocation. Exit status is 1
+//! if any diagnostic fires, 2 on I/O or usage errors, 0 on a clean tree.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "-h" || a == "--help") || args.len() > 2 {
+        eprintln!("usage: zipml-lint [SRC_DIR [ALLOWLIST]]");
+        eprintln!("  defaults: SRC_DIR = rust/src, ALLOWLIST = rust/lint/allowlist_unsafe.txt");
+        return ExitCode::from(2);
+    }
+    // CARGO_MANIFEST_DIR is baked in at compile time, so the default
+    // paths resolve no matter the invocation cwd.
+    let manifest: PathBuf = env!("CARGO_MANIFEST_DIR").into();
+    let src_root = args.first().map(PathBuf::from).unwrap_or_else(|| manifest.join("../src"));
+    let allow_path = args
+        .get(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| manifest.join("allowlist_unsafe.txt"));
+
+    let allow_text = match std::fs::read_to_string(&allow_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("zipml-lint: cannot read allowlist {}: {e}", allow_path.display());
+            return ExitCode::from(2);
+        }
+    };
+    let allowlist = zipml_lint::parse_allowlist(&allow_text);
+
+    match zipml_lint::lint_tree(&src_root, &allowlist) {
+        Ok((files, diags)) if diags.is_empty() => {
+            println!(
+                "zipml-lint OK: {files} files, {} rules, 0 findings",
+                zipml_lint::RULE_NAMES.len()
+            );
+            ExitCode::SUCCESS
+        }
+        Ok((_, diags)) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            eprintln!("zipml-lint: {} finding(s)", diags.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("zipml-lint: cannot scan {}: {e}", src_root.display());
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Fixture-driven tests for zipml-lint, plus the clean-tree self-run.
+//!
+//! `tests/lint_fixtures/` holds deliberately-bad (non-compiling — cargo
+//! never builds files in tests/ subdirectories) snippets, one file per
+//! rule, with each seeded violation marked `// LINT-EXPECT[rule-name]`
+//! on its line. The contract checked here is exact: the linter must
+//! report *precisely* the marked (path, line, rule) set — nothing
+//! missed, nothing spurious.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use zipml_lint::{lint_tree, parse_allowlist, Diagnostic};
+
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures")
+}
+
+/// Scan the fixture tree's raw text for `LINT-EXPECT[rule]` markers.
+fn expected_markers() -> BTreeSet<(String, usize, String)> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+        for entry in std::fs::read_dir(dir).expect("fixture dir") {
+            let p = entry.expect("fixture entry").path();
+            if p.is_dir() {
+                walk(&p, out);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    let root = fixture_root();
+    let mut files = Vec::new();
+    walk(&root, &mut files);
+    let mut set = BTreeSet::new();
+    for f in &files {
+        let rel = f.strip_prefix(&root).unwrap().to_string_lossy().replace('\\', "/");
+        let text = std::fs::read_to_string(f).expect("fixture read");
+        for (i, line) in text.lines().enumerate() {
+            if let Some(pos) = line.find("LINT-EXPECT[") {
+                let rest = &line[pos + "LINT-EXPECT[".len()..];
+                let rule = rest.split(']').next().expect("closed marker");
+                set.insert((rel.clone(), i + 1, rule.to_string()));
+            }
+        }
+    }
+    set
+}
+
+fn found() -> Vec<Diagnostic> {
+    // Empty allowlist: the fixtures exercise unsafe-code for real.
+    let (files, diags) = lint_tree(&fixture_root(), &[]).expect("scan fixtures");
+    assert!(files >= 7, "fixture tree went missing? scanned only {files} files");
+    diags
+}
+
+#[test]
+fn fixture_findings_match_expect_markers_exactly() {
+    let expected = expected_markers();
+    assert!(!expected.is_empty(), "no LINT-EXPECT markers found");
+    let got: BTreeSet<(String, usize, String)> = found()
+        .into_iter()
+        .map(|d| (d.path, d.line, d.rule.to_string()))
+        .collect();
+    let missed: Vec<_> = expected.difference(&got).collect();
+    let spurious: Vec<_> = got.difference(&expected).collect();
+    assert!(missed.is_empty(), "marked violations not reported: {missed:?}");
+    assert!(spurious.is_empty(), "unmarked findings reported: {spurious:?}");
+}
+
+/// Every rule must be exercised by at least one fixture marker — so a
+/// rule can never silently rot into a no-op.
+#[test]
+fn every_rule_has_a_firing_fixture() {
+    let hit: BTreeSet<String> = found().into_iter().map(|d| d.rule.to_string()).collect();
+    for rule in zipml_lint::RULE_NAMES {
+        assert!(hit.contains(*rule), "rule {rule} never fires in the fixtures");
+    }
+}
+
+fn hits_in(file: &str, rule: &str) -> Vec<usize> {
+    found()
+        .into_iter()
+        .filter(|d| d.path == file && d.rule == rule)
+        .map(|d| d.line)
+        .collect()
+}
+
+#[test]
+fn unsafe_code_fires_at_seeded_line_only() {
+    assert_eq!(hits_in("unsafe_code.rs", "unsafe-code"), vec![10]);
+}
+
+#[test]
+fn ordering_contract_fires_at_seeded_line_only() {
+    assert_eq!(hits_in("ordering_contract.rs", "ordering-contract"), vec![15]);
+}
+
+#[test]
+fn wall_clock_fires_at_seeded_lines_only() {
+    assert_eq!(hits_in("wall_clock.rs", "wall-clock"), vec![9, 13]);
+}
+
+#[test]
+fn json_emitter_fires_at_seeded_lines_only() {
+    assert_eq!(hits_in("json_emitter.rs", "json-emitter"), vec![10, 13]);
+}
+
+#[test]
+fn byte_cast_fires_at_seeded_lines_only() {
+    assert_eq!(hits_in("store/byte_cast.rs", "byte-truncating-cast"), vec![13, 17]);
+}
+
+#[test]
+fn hash_rule_fires_at_seeded_lines_only() {
+    assert_eq!(hits_in("sgd/hash_iter.rs", "hash-in-deterministic-path"), vec![10, 14]);
+}
+
+#[test]
+fn suppressed_fixture_is_fully_waived() {
+    let hits: Vec<_> = found().into_iter().filter(|d| d.path == "suppressed.rs").collect();
+    assert!(hits.is_empty(), "suppressions ignored: {hits:?}");
+}
+
+/// The real tree must lint clean with the real allowlist — this is the
+/// same check `ci.sh --analyze` runs via the CLI, and it runs under
+/// plain `cargo test` so tier-1 already enforces every invariant.
+#[test]
+fn crate_source_tree_lints_clean() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let src_root = manifest.join("../src");
+    let allow = parse_allowlist(
+        &std::fs::read_to_string(manifest.join("allowlist_unsafe.txt")).expect("allowlist"),
+    );
+    let (files, diags) = lint_tree(&src_root, &allow).expect("scan rust/src");
+    assert!(files >= 20, "rust/src shrank? scanned only {files} files");
+    assert!(
+        diags.is_empty(),
+        "rust/src violates its own invariants:\n{}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}

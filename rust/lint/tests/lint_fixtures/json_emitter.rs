@@ -1,0 +1,15 @@
+// Fixture for the `json-emitter` rule: JSON writing outside bench.rs —
+// either calling bench's private escapers or defining a new `fn json_*`.
+
+fn ok_ident() {
+    let json_payload = parse(); // other json_* identifiers are fine
+    drop(json_payload);
+}
+
+fn bad_call(out: &mut String) {
+    json_escape("k", out); // LINT-EXPECT[json-emitter]
+}
+
+fn json_emit(v: f64) -> String { // LINT-EXPECT[json-emitter]
+    format!("{v}")
+}

@@ -1,0 +1,16 @@
+// Fixture for the `ordering-contract` rule: every Ordering::* use needs
+// an `ordering:` comment on the same line or within the 3 lines above.
+
+fn documented_same_line(a: &AtomicU64) {
+    a.load(Ordering::Relaxed); // ordering: relaxed — fixture contract
+}
+
+fn documented_above(a: &AtomicU64) {
+    // ordering: relaxed — the contract sits two lines up
+    let _x = 0;
+    a.store(1, Ordering::Relaxed);
+}
+
+fn undocumented(a: &AtomicU64) {
+    a.fetch_add(1, Ordering::Relaxed); // LINT-EXPECT[ordering-contract]
+}

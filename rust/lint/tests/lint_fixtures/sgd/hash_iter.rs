@@ -1,0 +1,15 @@
+// Fixture for the `hash-in-deterministic-path` rule (scoped to store/,
+// sgd/, fpga/): hash iteration order is nondeterministic, which would
+// break the fixed-seed determinism contract.
+
+fn btree_is_fine() {
+    let _m: std::collections::BTreeMap<u32, f32> = Default::default();
+}
+
+fn bad_map() {
+    let _m: HashMap<u32, f32> = HashMap::new(); // LINT-EXPECT[hash-in-deterministic-path]
+}
+
+fn bad_set() {
+    use std::collections::HashSet; // LINT-EXPECT[hash-in-deterministic-path]
+}

@@ -1,0 +1,18 @@
+// Fixture for the `byte-truncating-cast` rule (scoped to store/):
+// byte-accounting expressions must not be narrowed with `as`.
+
+fn widening_is_fine(shard_bytes: u32) -> u64 {
+    shard_bytes as u64 // widening a byte count is allowed
+}
+
+fn non_byte_narrowing_is_fine(rows: u64) -> u32 {
+    rows as u32 // narrowing, but not a byte-accounting identifier
+}
+
+fn bad_narrow(total_bytes: u64) -> u32 {
+    total_bytes as u32 // LINT-EXPECT[byte-truncating-cast]
+}
+
+fn bad_float(bytes_read: u64) -> f32 {
+    bytes_read as f32 // LINT-EXPECT[byte-truncating-cast]
+}

@@ -1,0 +1,17 @@
+// Fixture for inline suppression: every would-be finding below carries
+// a `lint: allow(rule)` waiver, so this file must lint CLEAN (zero
+// diagnostics, zero LINT-EXPECT markers).
+
+fn waived_same_line() {
+    let _t0 = Instant::now(); // lint: allow(wall-clock) — fixture waiver
+}
+
+fn waived_line_above(a: &AtomicU64) {
+    // lint: allow(ordering-contract) — fixture waiver
+    a.load(Ordering::Relaxed);
+}
+
+fn waived_unsafe() {
+    // lint: allow(unsafe-code) — fixture waiver
+    unsafe { touch() }
+}

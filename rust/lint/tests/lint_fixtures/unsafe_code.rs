@@ -1,0 +1,11 @@
+// Fixture for the `unsafe-code` rule. Files under tests/ subdirectories
+// are never compiled by cargo; zipml-lint scans them as text.
+// Comments and strings mentioning unsafe must NOT fire; real code must.
+
+fn safe_mention() {
+    let _doc = "this string says unsafe and is fine";
+}
+
+fn bad() {
+    unsafe { core::hint::unreachable_unchecked() } // LINT-EXPECT[unsafe-code]
+}

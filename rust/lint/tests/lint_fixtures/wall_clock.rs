@@ -1,0 +1,14 @@
+// Fixture for the `wall-clock` rule: Instant/SystemTime reads outside
+// telemetry/ and bench.rs break the determinism contract.
+
+fn stringy() {
+    let _msg = "Instant and SystemTime in strings are fine";
+}
+
+fn bad_instant() {
+    let _t0 = std::time::Instant::now(); // LINT-EXPECT[wall-clock]
+}
+
+fn bad_system_time() {
+    let _now = SystemTime::now(); // LINT-EXPECT[wall-clock]
+}

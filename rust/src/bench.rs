@@ -71,6 +71,9 @@ pub fn fmt_ns(ns: f64) -> String {
 }
 
 /// Time `f` per the harness methodology; prints and returns the result.
+// The measurement loop is a sanctioned wall-clock consumer (like
+// telemetry::Stopwatch): bench.rs is outside the determinism contract.
+#[allow(clippy::disallowed_methods)]
 pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult {
     // Warmup + estimate per-call cost.
     let wstart = Instant::now();
@@ -191,9 +194,12 @@ impl From<bool> for JsonVal {
 }
 
 /// Escape `s` as a JSON string (quotes, backslashes, control chars) and
-/// append it, quoted, to `out`. Shared with `telemetry::trace`, whose
+/// append it, quoted, to `out`. Private on purpose: every writer in the
+/// repo ([`BenchJson`], [`JsonObj`] — which `telemetry::trace` builds
+/// on) funnels through this one escaper, and zipml-lint's `json-emitter`
+/// rule keeps second emitters from growing elsewhere. The trace
 /// round-trip tests pin the escaping against the matching parser.
-pub(crate) fn json_escape(s: &str, out: &mut String) {
+fn json_escape(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -206,13 +212,72 @@ pub(crate) fn json_escape(s: &str, out: &mut String) {
     out.push('"');
 }
 
-pub(crate) fn json_val(v: &JsonVal, out: &mut String) {
+fn json_val(v: &JsonVal, out: &mut String) {
     match v {
         JsonVal::Num(n) if n.is_finite() => out.push_str(&format!("{n}")),
         JsonVal::Num(_) => out.push_str("null"),
         JsonVal::UInt(v) => out.push_str(&v.to_string()),
         JsonVal::Str(s) => json_escape(s, out),
         JsonVal::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+    }
+}
+
+/// A compact flat JSON object under construction: `{"k":v,...}` with no
+/// whitespace, fields in call order. This is THE writer for single-line
+/// JSON in the repo — [`crate::telemetry::trace::TraceSink`] emits every
+/// trace event through it and `stable_view` re-renders through it, so
+/// the escaping and number formatting of traces and bench trajectories
+/// can never drift apart (zipml-lint's `json-emitter` rule enforces
+/// that no other module grows its own emitter).
+pub struct JsonObj {
+    buf: String,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        Self::with_capacity(96)
+    }
+
+    /// Pre-size the line buffer (hot emitters pass their typical size).
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut buf = String::with_capacity(cap.max(2));
+        buf.push('{');
+        JsonObj { buf }
+    }
+
+    fn key(&mut self, k: &str) {
+        if self.buf.len() > 1 {
+            self.buf.push(',');
+        }
+        json_escape(k, &mut self.buf);
+        self.buf.push(':');
+    }
+
+    /// Append one `"k":v` field.
+    pub fn field(&mut self, k: &str, v: &JsonVal) -> &mut Self {
+        self.key(k);
+        json_val(v, &mut self.buf);
+        self
+    }
+
+    /// Append one `"k":"v"` string field without routing the value
+    /// through an owned [`JsonVal::Str`] (the hot emit path uses this).
+    pub fn field_str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        json_escape(v, &mut self.buf);
+        self
+    }
+
+    /// Close the object and hand back the rendered line (no newline).
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+impl Default for JsonObj {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -309,6 +374,21 @@ pub fn section(title: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_obj_renders_compact_lines() {
+        let mut o = JsonObj::new();
+        o.field_str("kind", "epoch").field("epoch", &1u64.into()).field("loss", &0.5.into());
+        assert_eq!(o.finish(), r#"{"kind":"epoch","epoch":1,"loss":0.5}"#);
+        assert_eq!(JsonObj::new().finish(), "{}");
+        let mut o = JsonObj::with_capacity(8);
+        o.field_str("a\"b", "c\\d").field("nan", &JsonVal::Num(f64::NAN));
+        o.field("big", &u64::MAX.into());
+        assert_eq!(
+            o.finish(),
+            format!(r#"{{"a\"b":"c\\d","nan":null,"big":{}}}"#, u64::MAX)
+        );
+    }
 
     #[test]
     fn bench_json_renders_valid_shape() {

@@ -1,6 +1,6 @@
 //! Hogwild! CPU baseline (Fig 5's third contender): genuinely lock-free
-//! multi-threaded SGD over a shared model stored as `AtomicU32`-encoded
-//! f32s, racing updates without synchronization (De Sa et al., 2015).
+//! multi-threaded SGD over a shared model of [`crate::sync::RacyF32Cell`]
+//! columns, racing updates without synchronization (De Sa et al., 2015).
 //!
 //! The engine itself lives in [`crate::sgd::host`] as the session's
 //! `Execution::Hogwild` axis — any [`crate::sgd::GlmLoss`] × any read

@@ -20,6 +20,11 @@
 // `select_add_word`, …) to explain the fused hot path; rustdoc renders
 // those as plain code. Broken links still fail the ci.sh doc gate.
 #![allow(rustdoc::private_intra_doc_links)]
+// The crate carries no unsafe at all (the former raw-parts casts in
+// runtime/literal.rs are now safe to_le_bytes copies). zipml-lint's
+// `unsafe-code` rule enforces the same at the token level, with an
+// allowlist that starts empty (rust/lint/allowlist_unsafe.txt).
+#![forbid(unsafe_code)]
 
 pub mod bench;
 pub mod cheby;
@@ -32,5 +37,6 @@ pub mod rng;
 pub mod runtime;
 pub mod sgd;
 pub mod store;
+pub mod sync;
 pub mod telemetry;
 pub mod tensor;

@@ -10,6 +10,8 @@
 //!
 //! (clap is not in the offline crate set — parsing is hand-rolled.)
 
+#![forbid(unsafe_code)]
+
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -262,7 +264,7 @@ fn cmd_train_host(args: &[String]) -> Result<()> {
     let schedule = parse_schedule(args, bits)?;
     let ingest_seed = seed ^ 0x5745_4156_4544; // "WEAVED"
     let store_kind = opt(args, "--store").unwrap_or("weaved");
-    let ingest_start = std::time::Instant::now();
+    let ingest_start = zipml::telemetry::Stopwatch::start();
     let (mut store, read) = match store_kind {
         "weaved" => (
             ShardedStore::ingest(&ds.train_a, &scale, bits, ingest_seed, shards, 0),
@@ -292,7 +294,7 @@ fn cmd_train_host(args: &[String]) -> Result<()> {
         }
         other => bail!("--host needs --store weaved|weaved-ds, got {other}"),
     };
-    let ingest_secs = ingest_start.elapsed().as_secs_f64();
+    let ingest_secs = ingest_start.elapsed_secs();
     // One registry serves both views: the store tallies its exact-byte
     // accounting into it on every read, the session reads it back for the
     // trace's `counters` events — so the two agree bit for bit.

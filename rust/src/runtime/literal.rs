@@ -5,14 +5,26 @@ use xla::{ElementType, Literal};
 
 use super::manifest::DType;
 
+/// Safe widening of a scalar slice to its little-endian byte image —
+/// replaces the crate's former (and only) `unsafe` raw-parts casts.
+/// PJRT untyped-data buffers are little-endian on every supported
+/// target, so this is byte-for-byte what the pointer cast produced.
+fn le_bytes<T: Copy, const N: usize>(data: &[T], to_le: impl Fn(T) -> [u8; N]) -> Vec<u8> {
+    let mut out = vec![0u8; data.len() * N];
+    for (chunk, &v) in out.chunks_exact_mut(N).zip(data) {
+        chunk.copy_from_slice(&to_le(v));
+    }
+    out
+}
+
 /// Build a literal of the given dtype/shape from raw host data.
 pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
     let expected: usize = shape.iter().product();
     if data.len() != expected {
         bail!("lit_f32 shape {shape:?} wants {expected} elems, got {}", data.len());
     }
-    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)?)
+    let bytes = le_bytes(data, f32::to_le_bytes);
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, &bytes)?)
 }
 
 pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
@@ -20,8 +32,8 @@ pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
     if data.len() != expected {
         bail!("lit_i32 shape {shape:?} wants {expected} elems, got {}", data.len());
     }
-    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)?)
+    let bytes = le_bytes(data, i32::to_le_bytes);
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, &bytes)?)
 }
 
 pub fn lit_u8(shape: &[usize], data: &[u8]) -> Result<Literal> {

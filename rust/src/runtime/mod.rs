@@ -88,13 +88,13 @@ impl Runtime {
             args.len()
         );
         let exe = self.load(name)?;
-        let t0 = std::time::Instant::now();
+        let t0 = crate::telemetry::Stopwatch::start();
         let result = exe.execute::<xla::Literal>(args)?;
         let root = result[0][0].to_literal_sync()?;
         let outs = root.to_tuple()?;
         let mut st = self.stats.borrow_mut();
         st.executions += 1;
-        st.exec_nanos += t0.elapsed().as_nanos() as u64;
+        st.exec_nanos += t0.elapsed_nanos();
         anyhow::ensure!(
             outs.len() == spec.num_outputs,
             "artifact {name} declared {} outputs, produced {}",

@@ -186,7 +186,7 @@ pub fn train_mlp(
     lr0: f32,
     seed: u64,
 ) -> Result<DeepResult> {
-    let t0 = std::time::Instant::now();
+    let t0 = crate::telemetry::Stopwatch::start();
     let (d0, d1, d2, d3) = DIMS;
     let mut p = MlpParams::init(seed);
     let mut rng = Rng::new(seed ^ 0xDEE9);
@@ -254,7 +254,7 @@ pub fn train_mlp(
         final_test_acc: *test_acc_curve.last().unwrap_or(&0.0),
         train_loss_curve,
         test_acc_curve,
-        wall_secs: t0.elapsed().as_secs_f64(),
+        wall_secs: t0.elapsed_secs(),
     })
 }
 

@@ -112,7 +112,7 @@ enum Store {
 }
 
 pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
-    let t0 = std::time::Instant::now();
+    let t0 = crate::telemetry::Stopwatch::start();
     let n = ds.n();
     let b = cfg.batch;
     let k = ds.k_train();
@@ -552,7 +552,7 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
         mode_label: cfg.mode.label(),
         final_loss: *loss_curve.last().unwrap(),
         loss_curve,
-        wall_secs: t0.elapsed().as_secs_f64(),
+        wall_secs: t0.elapsed_secs(),
         sample_bytes_per_epoch: sample_bytes,
         refetch_fraction,
         diverged,

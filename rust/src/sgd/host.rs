@@ -62,9 +62,6 @@
 //! println!("{}: final loss {:?}", r.label, r.loss_curve.last());
 //! ```
 
-use std::sync::atomic::{AtomicU32, Ordering};
-use std::time::Instant;
-
 use anyhow::{bail, Result};
 
 use crate::data::Dataset;
@@ -74,7 +71,8 @@ use crate::store::{
     kernel, MinibatchIter, PrecisionSchedule, QuantStepKernel, ScheduleState, ShardedStore,
     StepKernel,
 };
-use crate::telemetry::{Metrics, TraceLevel, TraceSink, MAX_PRECISION};
+use crate::sync::RacyF32Cell;
+use crate::telemetry::{Metrics, Stopwatch, TraceLevel, TraceSink, MAX_PRECISION};
 use crate::tensor::{axpy, dot};
 
 use super::driver::HostTrainResult;
@@ -603,12 +601,12 @@ impl<'a> HostSession<'a> {
                 ],
             );
         }
-        let t0 = std::time::Instant::now();
+        let t0 = Stopwatch::start();
         let mut r = match self.exec {
             Execution::Sequential => self.run_sequential()?,
             Execution::Hogwild { threads } => self.run_hogwild(threads)?,
         };
-        r.wall_secs = t0.elapsed().as_secs_f64();
+        r.wall_secs = t0.elapsed_secs();
         if let Some(t) = self.trace {
             self.emit_tail(t, &r);
         }
@@ -902,8 +900,9 @@ impl<'a> HostSession<'a> {
         let loss = self.loss;
         let n = ds.n();
         let k = ds.k_train();
-        let x: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-        let snapshot = |x: &[AtomicU32]| -> Vec<f32> { x.iter().map(load_f32).collect() };
+        let x: Vec<RacyF32Cell> = (0..n).map(|_| RacyF32Cell::new(0.0)).collect();
+        let snapshot =
+            |x: &[RacyF32Cell]| -> Vec<f32> { x.iter().map(RacyF32Cell::load).collect() };
         let mut loss_curve = Vec::with_capacity(self.epochs + 1);
         loss_curve.push(eval_glm_loss(ds, loss, &snapshot(&x)));
         let mut precisions = Vec::with_capacity(self.epochs);
@@ -932,7 +931,7 @@ impl<'a> HostSession<'a> {
                 ReadStrategy::DoubleSample => 2,
                 _ => 1,
             };
-            let grad_start = Instant::now();
+            let grad_start = Stopwatch::start();
             // Each worker tallies locally (updates, publishes, rng draws,
             // stochastic-round refreshes, secs) and the epoch flushes the
             // tallies once post-join — the hot loop never touches the
@@ -943,7 +942,7 @@ impl<'a> HostSession<'a> {
                     let handles: Vec<_> = (0..threads)
                         .map(|t| {
                             scope.spawn(move || {
-                                let w_start = Instant::now();
+                                let w_start = Stopwatch::start();
                                 let mut w_updates = 0usize;
                                 let mut w_pubs = 0usize;
                                 let mut w_draws = 0u64;
@@ -983,7 +982,7 @@ impl<'a> HostSession<'a> {
                                         let r = r as usize;
                                         // racy model snapshot → update state
                                         for (l, xa) in local.iter_mut().zip(xr.iter()) {
-                                            *l = load_f32(xa);
+                                            *l = xa.load();
                                         }
                                         let target = ds.train_b[r];
                                         if self.read == ReadStrategy::Dense {
@@ -992,7 +991,7 @@ impl<'a> HostSession<'a> {
                                                 -lr * loss.multiplier(dot(row, &local), target);
                                             for (xa, &a) in xr.iter().zip(row) {
                                                 if a != 0.0 {
-                                                    add_f32(xa, coef * a);
+                                                    xa.add(coef * a);
                                                     w_pubs += 1;
                                                 }
                                             }
@@ -1059,7 +1058,7 @@ impl<'a> HostSession<'a> {
                                                 let upd = *d - coef * mc;
                                                 *d = 0.0;
                                                 if upd != 0.0 {
-                                                    add_f32(xa, upd);
+                                                    xa.add(upd);
                                                     w_pubs += 1;
                                                 }
                                             }
@@ -1068,7 +1067,7 @@ impl<'a> HostSession<'a> {
                                             // ℓ2 shrink against the snapshot
                                             for (xa, &lv) in xr.iter().zip(local.iter()) {
                                                 if lv != 0.0 {
-                                                    add_f32(xa, -lrc * lv);
+                                                    xa.add(-lrc * lv);
                                                     w_pubs += 1;
                                                 }
                                             }
@@ -1076,7 +1075,7 @@ impl<'a> HostSession<'a> {
                                         w_updates += 1;
                                     }
                                 }
-                                let secs = w_start.elapsed().as_secs_f64();
+                                let secs = w_start.elapsed_secs();
                                 (w_updates, w_pubs, w_draws, w_srounds, secs)
                             })
                         })
@@ -1086,10 +1085,10 @@ impl<'a> HostSession<'a> {
                         .map(|h| h.join().expect("hogwild worker panicked"))
                         .collect()
                 });
-            let grad_secs = grad_start.elapsed().as_secs_f64();
-            let eval_start = Instant::now();
+            let grad_secs = grad_start.elapsed_secs();
+            let eval_start = Stopwatch::start();
             loss_curve.push(eval_glm_loss(ds, loss, &snapshot(&x)));
-            let eval_secs = eval_start.elapsed().as_secs_f64();
+            let eval_secs = eval_start.elapsed_secs();
 
             let mut epoch_updates = 0usize;
             for (w, &(u, pb, dr, sr, secs)) in worker_stats.iter().enumerate() {
@@ -1240,7 +1239,7 @@ fn epoch_skeleton(
         let p = precision(epoch, &loss_curve);
         precisions.push(p);
         let lr = super::lr_at_epoch(lr0, epoch);
-        let grad_start = Instant::now();
+        let grad_start = Stopwatch::start();
         rng.shuffle(&mut order);
         for bi in 0..nb {
             let rows = &order[bi * batch..((bi + 1) * batch).min(k)];
@@ -1257,10 +1256,10 @@ fn epoch_skeleton(
             }
             updates += 1;
         }
-        let grad_secs = grad_start.elapsed().as_secs_f64();
-        let eval_start = Instant::now();
+        let grad_secs = grad_start.elapsed_secs();
+        let eval_start = Stopwatch::start();
         loss_curve.push(eval_glm_loss(ds, loss, &x));
-        let eval_secs = eval_start.elapsed().as_secs_f64();
+        let eval_secs = eval_start.elapsed_secs();
         on_epoch(EpochObs {
             epoch: epoch + 1,
             p,
@@ -1271,19 +1270,6 @@ fn epoch_skeleton(
         });
     }
     (loss_curve, x, precisions, updates)
-}
-
-#[inline]
-fn load_f32(a: &AtomicU32) -> f32 {
-    f32::from_bits(a.load(Ordering::Relaxed))
-}
-
-#[inline]
-fn add_f32(a: &AtomicU32, delta: f32) {
-    // racy read-modify-write — deliberately NOT a CAS loop: Hogwild!'s
-    // whole point is that unsynchronized updates still converge.
-    let cur = f32::from_bits(a.load(Ordering::Relaxed));
-    a.store((cur + delta).to_bits(), Ordering::Relaxed);
 }
 
 #[cfg(test)]

@@ -22,7 +22,7 @@
 //!   the strided form partitions one epoch's batches across N workers
 //!   without coordination (used by the Hogwild! shard readers).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::quant::packing::PackedMatrix;
@@ -48,9 +48,17 @@ const BLOCK_ROWS: usize = 256;
 /// One cache-line-padded relaxed byte counter — one per shard, so
 /// concurrent readers accounting against different shards never share a
 /// line (and telemetry gets per-shard byte attribution for free).
+// No derive(Default): loom's AtomicU64 has no Default impl, and the
+// explicit zero keeps the std and loom builds identical.
 #[repr(align(64))]
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct PaddedBytes(AtomicU64);
+
+impl Default for PaddedBytes {
+    fn default() -> Self {
+        PaddedBytes(AtomicU64::new(0))
+    }
+}
 
 /// A row-sharded, bit-weaved, any-precision sample store.
 #[derive(Debug)]
@@ -198,6 +206,8 @@ impl ShardedStore {
     /// telemetry writers (shard id or worker id).
     #[inline]
     fn account(&self, si: usize, lane: usize, p: u32, rows: u64, bytes: u64) {
+        // ordering: relaxed — exact-once add, no happens-before with the
+        // data read it accounts (`bytes_read` ordering contract)
         self.shard_bytes[si].0.fetch_add(bytes, Ordering::Relaxed);
         self.metrics.add_read(lane, p, rows, bytes);
     }
@@ -296,6 +306,8 @@ impl ShardedStore {
                 while b < order.len() && rows[order[b] as usize] / self.shard_rows == s {
                     b += 1;
                 }
+                // exact-once batch add, same contract as `account` /
+                // `bytes_read` — ordering: relaxed
                 self.shard_bytes[s]
                     .0
                     .fetch_add(((b - a) * visit_bytes) as u64, Ordering::Relaxed);
@@ -330,6 +342,8 @@ impl ShardedStore {
                     done += 1;
                 }
             }
+            // ordering: relaxed — exact-once batch add, same contract as
+            // `account` / `bytes_read`
             self.shard_bytes[s].0.fetch_add((n * visit_bytes) as u64, Ordering::Relaxed);
             f(&self.shards[s], &locals[..n], &run[..n]);
             next_shard = s + 1;
@@ -610,12 +624,15 @@ impl ShardedStore {
     /// `thread::scope` join or from the owning thread, where it is the
     /// exact total.
     pub fn bytes_read(&self) -> u64 {
+        // ordering: relaxed — exact after quiescence, valid partial
+        // snapshot while readers race (contract in the doc above)
         self.shard_bytes.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
     }
 
     /// Bytes attributed to shard `si` since the last reset (same
     /// ordering contract as [`ShardedStore::bytes_read`]).
     pub fn shard_bytes_read(&self, si: usize) -> u64 {
+        // ordering: relaxed — same snapshot contract as `bytes_read`
         self.shard_bytes[si].0.load(Ordering::Relaxed)
     }
 
@@ -623,6 +640,8 @@ impl ShardedStore {
     /// only from quiescent points, per the ordering contract).
     pub fn reset_bytes_read(&self) {
         for c in &self.shard_bytes {
+            // ordering: relaxed — callers reset only from quiescent
+            // points, never racing readers (ordering contract above)
             c.0.store(0, Ordering::Relaxed);
         }
     }

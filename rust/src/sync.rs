@@ -1,0 +1,127 @@
+//! Concurrency façade: every atomic the crate uses comes from here, so
+//! the whole memory-model surface can be swapped for [loom]'s
+//! permutation-checked shims with `RUSTFLAGS="--cfg loom"` (DESIGN.md
+//! §11). Three real protocols ride on these primitives, and each has a
+//! loom model in `rust/tests/loom_models.rs`:
+//!
+//! 1. [`crate::telemetry::ShardedU64`] — relaxed striped counters
+//!    (record / sum / reset);
+//! 2. the per-shard byte cells behind
+//!    [`crate::store::ShardedStore::bytes_read`] — exact-once relaxed
+//!    accounting adds vs. concurrent relaxed sum snapshots;
+//! 3. the Hogwild! publish: [`RacyF32Cell`], the one *deliberately*
+//!    racy primitive in the repo.
+//!
+//! Everything here is `Relaxed`-only by design: no protocol in this
+//! crate relies on a happens-before edge from an atomic — quiescence
+//! always comes from `thread::scope` joins. zipml-lint's
+//! `ordering-contract` rule enforces that every `Ordering::*` use in
+//! the tree carries an `// ordering:` contract comment.
+//!
+//! [loom]: https://docs.rs/loom
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// A deliberately racy shared `f32`: the Hogwild! model-publish
+/// primitive (De Sa et al., 2015 — unsynchronized SGD updates still
+/// converge).
+///
+/// Contract (the *hogwild publish contract*, DESIGN.md §11):
+///
+/// * **Lossy by design.** [`RacyF32Cell::add`] is a relaxed load
+///   followed by a relaxed store — NOT a CAS loop. Two racing adds may
+///   lose one delta; Hogwild!'s convergence argument absorbs that.
+/// * **Never torn.** The payload is a single `AtomicU32` holding the
+///   f32's bits, so every load observes some value that was actually
+///   stored — mixed-bit-pattern reads are impossible. This is the
+///   property the loom model checks exhaustively.
+/// * **No ordering.** All accesses are `Relaxed`; readers take racy
+///   snapshots and that is fine — the epoch loss is evaluated only
+///   after a `thread::scope` join, where every store is visible.
+///
+/// Keeping the race inside one named type means the ThreadSanitizer
+/// suppression (`rust/tsan.supp`) and zipml-lint both reference
+/// `RacyF32Cell`, not a blanket file or module.
+#[derive(Debug)]
+pub struct RacyF32Cell(AtomicU32);
+
+impl RacyF32Cell {
+    pub fn new(v: f32) -> Self {
+        RacyF32Cell(AtomicU32::new(v.to_bits()))
+    }
+
+    /// Racy snapshot of the current value.
+    #[inline]
+    pub fn load(&self) -> f32 {
+        // ordering: relaxed — racy snapshot per the hogwild publish
+        // contract; joins, not atomics, provide quiescence
+        f32::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Overwrite the value (used from quiescent points only).
+    #[inline]
+    pub fn store(&self, v: f32) {
+        // ordering: relaxed — single-writer or quiescent call sites
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Racy read-modify-write add — deliberately NOT a CAS loop:
+    /// Hogwild!'s whole point is that unsynchronized (lossy) updates
+    /// still converge. Concurrent adds may drop a delta but can never
+    /// produce a torn bit pattern.
+    #[inline]
+    pub fn add(&self, delta: f32) {
+        // ordering: relaxed — lossy-by-design publish (see type docs);
+        // the loom model pins "lossy but never torn"
+        let cur = f32::from_bits(self.0.load(Ordering::Relaxed));
+        self.0.store((cur + delta).to_bits(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn racy_cell_round_trips_values() {
+        let c = RacyF32Cell::new(1.5);
+        assert_eq!(c.load(), 1.5);
+        c.add(0.25);
+        assert_eq!(c.load(), 1.75);
+        c.store(-0.0);
+        assert_eq!(c.load().to_bits(), (-0.0f32).to_bits(), "bit-exact store");
+    }
+
+    #[test]
+    fn sequential_adds_are_exact() {
+        // single-threaded, the racy add IS a plain add: bit-for-bit the
+        // f32 sum in call order (the hogwild threads=1 determinism story)
+        let c = RacyF32Cell::new(0.0);
+        let mut want = 0.0f32;
+        for i in 0..100 {
+            let d = (i as f32) * 0.125 - 3.0;
+            c.add(d);
+            want += d;
+        }
+        assert_eq!(c.load().to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn concurrent_adds_never_tear() {
+        // non-exhaustive sibling of the loom model: every observed value
+        // must be a genuine f32 sum of a subset of published deltas — with
+        // deltas 1.0 and 2.0 from zero, the reachable set is tiny
+        let c = std::sync::Arc::new(RacyF32Cell::new(0.0));
+        std::thread::scope(|s| {
+            let c1 = &c;
+            s.spawn(move || c1.add(1.0));
+            let c2 = &c;
+            s.spawn(move || c2.add(2.0));
+        });
+        let got = c.load();
+        assert!(got == 1.0 || got == 2.0 || got == 3.0, "torn or impossible value {got}");
+    }
+}

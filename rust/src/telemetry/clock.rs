@@ -1,0 +1,68 @@
+//! The crate's single wall-clock portal.
+//!
+//! zipml-lint's `wall-clock` rule (and the clippy `disallowed-methods`
+//! backstop in `clippy.toml`) forbid `Instant::now` / `SystemTime`
+//! outside `telemetry/` and `bench.rs`: wall-clock reads anywhere else
+//! would leak nondeterminism into traced fields and silently break the
+//! fixed-seed determinism contract
+//! ([`crate::telemetry::UNSTABLE_FIELDS`], [`crate::telemetry::stable_view`]).
+//! Code that legitimately times work — the SGD drivers' `wall_secs`,
+//! the runtime's `exec_nanos`, example printouts — goes through
+//! [`Stopwatch`] instead, which keeps every wall-clock read inside the
+//! telemetry boundary and makes new nondeterministic fields a
+//! deliberate, greppable act.
+
+use std::time::Instant;
+
+/// A started wall-clock timer. The only sanctioned way to measure
+/// elapsed time outside `telemetry/` and `bench.rs`.
+///
+/// Anything derived from a `Stopwatch` is wall-clock-dependent and must
+/// only ever feed fields listed in [`crate::telemetry::UNSTABLE_FIELDS`]
+/// (or human-facing printouts) — never fields the fixed-seed
+/// determinism contract covers.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    #[allow(clippy::disallowed_methods)] // the one sanctioned Instant::now
+    pub fn start() -> Self {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Seconds elapsed since [`Stopwatch::start`].
+    pub fn elapsed_secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Whole nanoseconds elapsed since [`Stopwatch::start`], saturating
+    /// at `u64::MAX` (~584 years).
+    pub fn elapsed_nanos(&self) -> u64 {
+        u64::try_from(self.t0.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_monotone_nonnegative() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_nanos();
+        let b = sw.elapsed_nanos();
+        assert!(b >= a);
+        assert!(sw.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn copies_share_the_start_instant() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_nanos();
+        let copy = sw;
+        assert!(copy.elapsed_nanos() >= a, "a copy measures from the same start");
+    }
+}

@@ -14,9 +14,11 @@
 //! taken while writers race is a valid but non-linearizable snapshot —
 //! the same contract as [`crate::store::ShardedStore::bytes_read`].
 
+use crate::sync::{AtomicU64, Ordering};
 use std::fmt;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::Arc;
+#[cfg(not(loom))]
+use std::sync::OnceLock;
 
 /// Stripe width of every counter. A power of two; lane hints are masked
 /// with `COUNTER_LANES - 1`, so any shard id / worker id works as a hint.
@@ -26,9 +28,16 @@ pub const COUNTER_LANES: usize = 16;
 /// bucket, 1..=16 are weaved read widths.
 pub const MAX_PRECISION: u32 = 32;
 
+// No derive(Default): loom's AtomicU64 has no Default impl, and the
+// explicit zero keeps the std and loom builds identical.
 #[repr(align(64))]
-#[derive(Default)]
 struct Lane(AtomicU64);
+
+impl Default for Lane {
+    fn default() -> Self {
+        Lane(AtomicU64::new(0))
+    }
+}
 
 /// One relaxed u64 counter striped across [`COUNTER_LANES`] padded cells.
 pub struct ShardedU64 {
@@ -46,22 +55,29 @@ impl ShardedU64 {
     /// stripe width). Relaxed; see the module ordering contract.
     #[inline]
     pub fn add(&self, lane: usize, v: u64) {
+        // ordering: relaxed — counter adds need atomicity only; totals
+        // are read after writers quiesce (module ordering contract)
         self.lanes[lane & (COUNTER_LANES - 1)].0.fetch_add(v, Ordering::Relaxed);
     }
 
     /// Relaxed sum over all lanes — exact once writers have quiesced.
     pub fn sum(&self) -> u64 {
+        // ordering: relaxed — non-linearizable snapshot while writers
+        // race, exact after quiescence (loom model pins both)
         self.lanes.iter().map(|l| l.0.load(Ordering::Relaxed)).sum()
     }
 
     /// Per-lane relaxed snapshot (worker-keyed counters read this).
     pub fn lane_values(&self) -> [u64; COUNTER_LANES] {
+        // ordering: relaxed — same snapshot contract as `sum`
         std::array::from_fn(|i| self.lanes[i].0.load(Ordering::Relaxed))
     }
 
     /// Zero every lane (relaxed stores).
     pub fn reset(&self) {
         for l in self.lanes.iter() {
+            // ordering: relaxed — reset is only called from quiescence
+            // (between epochs / in tests), never racing recorders
             l.0.store(0, Ordering::Relaxed);
         }
     }
@@ -128,9 +144,17 @@ impl Metrics {
 
     /// The process-wide disabled registry every store points at until a
     /// caller attaches its own — one allocation, shared by `Arc`.
+    #[cfg(not(loom))]
     pub fn shared_disabled() -> Arc<Metrics> {
         static DISABLED: OnceLock<Arc<Metrics>> = OnceLock::new();
         DISABLED.get_or_init(|| Arc::new(Metrics::disabled())).clone()
+    }
+
+    /// Loom build: loom atomics must not outlive one model iteration, so
+    /// the singleton is replaced by a fresh disabled registry per call.
+    #[cfg(loom)]
+    pub fn shared_disabled() -> Arc<Metrics> {
+        Arc::new(Metrics::disabled())
     }
 
     /// Whether adds record (false: addends are masked to 0).

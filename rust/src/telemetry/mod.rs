@@ -16,15 +16,21 @@
 //!   value model in [`crate::bench`], plus the flat-JSON reader,
 //!   schema [`validate`]r, [`summarize`]r, and the fixed-seed
 //!   determinism contract ([`UNSTABLE_FIELDS`], [`stable_view`]).
+//! * [`clock`] — [`Stopwatch`]: the crate's single wall-clock portal.
+//!   zipml-lint's `wall-clock` rule forbids `Instant`/`SystemTime`
+//!   outside `telemetry/` and `bench.rs`, so every timing read funnels
+//!   through here and nondeterministic fields stay a deliberate act.
 //!
 //! Two hard contracts bind this module to the store: telemetry byte
 //! counters equal [`crate::store::ShardedStore`]'s exact-byte
 //! accounting bit-for-bit, and trace content (timing fields aside) is
 //! deterministic under a fixed seed.
 
+pub mod clock;
 pub mod metrics;
 pub mod trace;
 
+pub use clock::Stopwatch;
 pub use metrics::{Metrics, ShardedU64, COUNTER_LANES, MAX_PRECISION};
 pub use trace::{
     field, parse_line, stable_view, summarize, validate, JsonScalar, TraceLevel, TraceSink,

@@ -3,8 +3,9 @@
 //!
 //! One trace is a sequence of flat JSON objects, one per line, each with
 //! a `"kind"` discriminator (DESIGN.md §10 specifies the schema). The
-//! emitter reuses the serde-free value model from [`crate::bench`]
-//! (`JsonVal`, the escaping `json_escape`), so pathological labels are
+//! emitter is [`crate::bench`]'s serde-free writer ([`JsonVal`] values
+//! rendered through `bench::JsonObj` — the repo's ONLY JSON emitters,
+//! per zipml-lint's `json-emitter` rule), so pathological labels are
 //! exactly as safe here as in `BENCH_kernels.json`; the reader below is
 //! the matching serde-free parser for flat objects — it powers the CLI
 //! subcommands and the determinism tests.
@@ -18,7 +19,7 @@
 use std::io::Write;
 use std::sync::Mutex;
 
-use crate::bench::{json_escape, json_val, JsonVal};
+use crate::bench::{JsonObj, JsonVal};
 
 /// How much a [`TraceSink`] records. Ordered: each level is a superset
 /// of the previous one.
@@ -104,16 +105,13 @@ impl TraceSink {
     /// call sites use [`TraceSink::emit_at`]). `kind` becomes the leading
     /// `"kind"` field.
     pub fn emit(&self, kind: &str, fields: &[(&str, JsonVal)]) {
-        let mut line = String::with_capacity(96);
-        line.push_str("{\"kind\":");
-        json_escape(kind, &mut line);
+        let mut obj = JsonObj::with_capacity(96);
+        obj.field_str("kind", kind);
         for (k, v) in fields {
-            line.push(',');
-            json_escape(k, &mut line);
-            line.push(':');
-            json_val(v, &mut line);
+            obj.field(k, v);
         }
-        line.push_str("}\n");
+        let mut line = obj.finish();
+        line.push('\n');
         let mut inner = self.inner.lock().expect("trace sink poisoned");
         inner.events += 1;
         if inner.err.is_some() {
@@ -374,29 +372,20 @@ pub const UNSTABLE_FIELDS: &[&str] = &["secs", "grad_secs", "eval_secs", "wall_s
 /// removed — the form two same-seed traces are compared in.
 pub fn stable_view(line: &str) -> Result<String, String> {
     let obj = parse_line(line)?;
-    let mut out = String::with_capacity(line.len());
-    out.push('{');
-    let mut first = true;
+    let mut out = JsonObj::with_capacity(line.len());
     for (k, v) in &obj {
         if UNSTABLE_FIELDS.contains(&k.as_str()) {
             continue;
         }
-        if !first {
-            out.push(',');
-        }
-        first = false;
-        json_escape(k, &mut out);
-        out.push(':');
-        let jv = match v {
-            JsonScalar::Num(n) => JsonVal::Num(*n),
-            JsonScalar::Str(s) => JsonVal::Str(s.clone()),
-            JsonScalar::Bool(b) => JsonVal::Bool(*b),
-            JsonScalar::Null => JsonVal::Num(f64::NAN), // renders as null
+        match v {
+            JsonScalar::Num(n) => out.field(k, &JsonVal::Num(*n)),
+            JsonScalar::Str(s) => out.field_str(k, s),
+            JsonScalar::Bool(b) => out.field(k, &JsonVal::Bool(*b)),
+            // non-finite Num renders as null
+            JsonScalar::Null => out.field(k, &JsonVal::Num(f64::NAN)),
         };
-        json_val(&jv, &mut out);
     }
-    out.push('}');
-    Ok(out)
+    Ok(out.finish())
 }
 
 // ---------------------------------------------------------------------------
