@@ -15,7 +15,7 @@
 # shared runners) — and which writes the machine-readable perf trajectory
 # BENCH_kernels.json at the repo root (uploaded as a CI artifact).
 #
-# Usage: ci.sh [--quick|--bench|--analyze]
+# Usage: ci.sh [--quick|--bench|--analyze|--simd]
 #   (default) full gate; the bench smoke runs with --quick budgets
 #   --quick   alias for the default gate (kept for muscle memory)
 #   --bench   build + run the fused-dot bench at FULL measurement budgets,
@@ -24,14 +24,20 @@
 #             zipml-lint over rust/src + its fixture suite, then the loom
 #             models (RUSTFLAGS="--cfg loom"); Miri/TSan run as separate
 #             nightly CI jobs (see .github/workflows/ci.yml)
+#   --simd    the std::simd twin tier (DESIGN.md §12) on the pinned
+#             nightly: full test suite with `--features simd` (includes
+#             the forced-tier A/B suite in tests/simd_twins.rs), then the
+#             fused-dot bench smoke with the feature on, writing
+#             BENCH_kernels_simd.json so scalar and simd trajectories can
+#             be diffed side by side
 # Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 MODE="${1:-gate}"
 case "$MODE" in
-  gate|--quick|--bench|--analyze) ;;
-  *) echo "usage: ci.sh [--quick|--bench|--analyze]  (got: $MODE)" >&2; exit 2 ;;
+  gate|--quick|--bench|--analyze|--simd) ;;
+  *) echo "usage: ci.sh [--quick|--bench|--analyze|--simd]  (got: $MODE)" >&2; exit 2 ;;
 esac
 
 if [[ "$MODE" == "--analyze" ]]; then
@@ -42,6 +48,17 @@ if [[ "$MODE" == "--analyze" ]]; then
   echo "== loom models: ShardedU64 / store byte accounting / RacyF32Cell =="
   RUSTFLAGS="--cfg loom" cargo test --release -p zipml --test loom_models -- --nocapture
   echo "ANALYZE OK"
+  exit 0
+fi
+
+if [[ "$MODE" == "--simd" ]]; then
+  NIGHTLY="${SANITIZER_NIGHTLY:-nightly-2025-07-01}"
+  echo "== simd feature tests on pinned nightly ($NIGHTLY) =="
+  cargo +"$NIGHTLY" test -p zipml --features simd -q
+  echo "== simd bench smoke: fused_dot --features simd --quick (writes BENCH_kernels_simd.json) =="
+  ZIPML_BENCH_JSON=BENCH_kernels_simd.json \
+    cargo +"$NIGHTLY" bench -p zipml --features simd --bench fused_dot -- --quick > /dev/null
+  echo "SIMD OK — trajectory in BENCH_kernels_simd.json"
   exit 0
 fi
 

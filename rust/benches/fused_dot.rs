@@ -7,9 +7,17 @@
 //!     at p = 8 — at full budgets; --quick warns instead of failing)
 //!   * popcount fast path: dot_row_q vs the f32 masked-sum dot (ASSERT:
 //!     popcount wins at q ≤ 4 — full budgets; --quick warns)
+//!   * simd tier: scalar vs `std::simd` twin tiers on the fused grad
+//!     batch through the real dispatch sites (ASSERT with `--features
+//!     simd`: simd8 >= 2x scalar at p = 8 — full budgets; --quick warns;
+//!     without the feature the section records the scalar tier alone)
 //!   * sparse/dense crossover: per-popcount timings of both masked_sum
 //!     and spread_word paths — the data behind SPARSE_BITS /
-//!     MASKED_SUM_SPARSE_BITS
+//!     MASKED_SUM_SPARSE_BITS, plus the measured crossover popcounts
+//!     (`masked_sum_crossover_pc`, `spread_crossover_pc`)
+//!   * rank-indexed density sweep: indexed vs dense blocked dots across
+//!     plane-WORD densities on block-sparse rows (ASSERT: indexed wins
+//!     below 5% density — full budgets; --quick warns)
 //!   * byte accounting: blocked == per-row == row-read path; DS == 2×
 //!   * telemetry overhead: fused grad batch with an enabled counter
 //!     registry attached vs the disabled default (ASSERT: enabled ≥
@@ -24,7 +32,7 @@ use zipml::bench::{bench, black_box, section, BenchJson, BenchOpts};
 use zipml::quant::ColumnScale;
 use zipml::rng::Rng;
 use zipml::sgd::{GlmLoss, ModelKind};
-use zipml::store::{kernel, QuantStepKernel, ShardedStore, StepKernel};
+use zipml::store::{kernel, QuantStepKernel, ShardedStore, StepKernel, WeavedMatrix};
 use zipml::tensor::{dot, Matrix};
 
 /// The pre-blocking per-row fused gradient batch (dot_row + bit-walk
@@ -189,6 +197,77 @@ fn main() {
         }
     }
 
+    section("simd tier: scalar vs std::simd twins on the fused grad batch (p=8)");
+    // A/B through the real dispatch sites on the same workload; the twins
+    // are bit-identical (tests/simd_twins.rs), so this is pure throughput.
+    #[cfg(feature = "simd")]
+    {
+        use zipml::store::kernel::dispatch::{force_tier, tier, Tier};
+        let probed = tier();
+        force_tier(Tier::Scalar);
+        let scalar = bench("grad batch scalar tier p=8", &opts, || {
+            grad.fill(0.0);
+            store.fused_grad_batch(&batch, 8, &k, &targets, &mut grad);
+            black_box(&grad);
+        });
+        force_tier(Tier::Lanes8);
+        let simd8 = bench("grad batch simd8 tier  p=8", &opts, || {
+            grad.fill(0.0);
+            store.fused_grad_batch(&batch, 8, &k, &targets, &mut grad);
+            black_box(&grad);
+        });
+        force_tier(probed);
+        let speedup = scalar.mean_ns / simd8.mean_ns;
+        println!("   {}", zipml::bench::speedup_line("simd8 vs scalar p=8", &scalar, &simd8));
+        js.push(
+            "simd",
+            vec![
+                ("p", 8u32.into()),
+                ("batch", b.into()),
+                ("probed_tier", zipml::store::kernel::dispatch::tier_label().into()),
+                ("scalar_ns", scalar.mean_ns.into()),
+                ("simd8_ns", simd8.mean_ns.into()),
+                ("rows_per_sec_simd8", (b as f64 * 1e9 / simd8.mean_ns).into()),
+                ("speedup_simd8_vs_scalar", speedup.into()),
+            ],
+        );
+        if quick {
+            if speedup < 2.0 {
+                println!("   WARNING: simd8 < 2x scalar ({speedup:.2}x) in quick mode");
+            }
+        } else {
+            assert!(
+                speedup >= 2.0,
+                "ACCEPTANCE: the simd8 tier must be >= 2x the scalar tier on the fused \
+                 grad batch at p=8 (got {speedup:.2}x)"
+            );
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        // stable default: one tier only; the section still exists so the
+        // trajectory file keeps a stable shape across feature builds
+        let scalar = bench("grad batch scalar tier p=8", &opts, || {
+            grad.fill(0.0);
+            store.fused_grad_batch(&batch, 8, &k, &targets, &mut grad);
+            black_box(&grad);
+        });
+        println!(
+            "   simd feature off: scalar tier only ({:.1} rows/s)",
+            b as f64 * 1e9 / scalar.mean_ns
+        );
+        js.push(
+            "simd",
+            vec![
+                ("p", 8u32.into()),
+                ("batch", b.into()),
+                ("probed_tier", zipml::store::kernel::dispatch::tier_label().into()),
+                ("scalar_ns", scalar.mean_ns.into()),
+                ("rows_per_sec_scalar", (b as f64 * 1e9 / scalar.mean_ns).into()),
+            ],
+        );
+    }
+
     section("per-model fused grad batch: any GLM through one engine (p=8, batch 64)");
     // the widened scenario space of the HostSession redesign: the same
     // blocked plane-domain batch, with each GlmLoss's step multiplier
@@ -287,6 +366,7 @@ fn main() {
     let g64: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
     let mut out16 = vec![0u16; 64];
     let mut lanes: Vec<u32> = (0..64).collect();
+    let mut pc_rows: Vec<(u64, f64, f64, f64, f64)> = Vec::new();
     for pc in [1usize, 2, 4, 6, 8, 12, 16, 24, 32, 48] {
         // 256 words with exactly pc set bits each
         let words: Vec<u64> = (0..256)
@@ -331,7 +411,112 @@ fn main() {
             ms_walk.mean_ns / ms_lane.mean_ns,
             sp_walk.mean_ns / sp_lut.mean_ns
         );
+        pc_rows.push((pc as u64, ms_walk.mean_ns, ms_lane.mean_ns, sp_walk.mean_ns, sp_lut.mean_ns));
     }
+    // the measured crossovers pin SPARSE_BITS / MASKED_SUM_SPARSE_BITS to
+    // data: the smallest swept popcount where the lane/LUT path beats the
+    // walk (64 = the walk won everywhere in this sweep)
+    let ms_xover = pc_rows.iter().find(|r| r.2 < r.1).map_or(64, |r| r.0);
+    let sp_xover = pc_rows.iter().find(|r| r.4 < r.3).map_or(64, |r| r.0);
+    println!(
+        "   crossovers: masked_sum lanes win from pc={ms_xover}, spread LUT wins from pc={sp_xover}"
+    );
+    js.push(
+        "crossover",
+        vec![
+            ("masked_sum_crossover_pc", ms_xover.into()),
+            ("spread_crossover_pc", sp_xover.into()),
+            ("masked_sum_sparse_bits_const", kernel::MASKED_SUM_SPARSE_BITS.into()),
+            ("spread_word_sparse_bits_const", kernel::SPARSE_BITS.into()),
+        ],
+    );
+
+    section("rank-indexed sparse planes: indexed vs dense blocked dots by plane-word density");
+    // density = fraction of NONZERO plane words (DESIGN.md §12): the rank
+    // index skips all-zero 8-word runs, so zeros are planted at word
+    // granularity (block-sparse rows) — uniform value sparsity barely
+    // produces zero words at 64 values per word
+    let (srows, scols, sbits) = (512usize, 4096usize, 8u32);
+    let swpp = scols.div_ceil(64);
+    let sx: Vec<f32> = (0..scols).map(|_| rng.normal()).collect();
+    let ones = vec![1.0f32; scols];
+    let mut sk = StepKernel::new(scols);
+    sk.refresh(&ones, &sx);
+    let sbatch: Vec<usize> = (0..64).map(|i| (i * 37) % srows).collect();
+    let mut sdots = vec![0.0f32; 64];
+    let mut indexed_wins_up_to = 0u64;
+    for density_pc in [1u64, 2, 5, 10, 25, 100] {
+        let nzw = (density_pc as usize * swpp).div_ceil(100).max(1);
+        let mut idx = vec![0u16; srows * scols];
+        for r in 0..srows {
+            for j in 0..nzw {
+                // evenly spaced nonzero words; the all-ones index value
+                // makes every plane's word occupancy equal the value one
+                let wj = j * swpp / nzw;
+                for c in wj * 64..(wj + 1) * 64 {
+                    idx[r * scols + c] = (1u16 << sbits) - 1;
+                }
+            }
+        }
+        let dense_w = WeavedMatrix::from_indices(
+            srows,
+            scols,
+            sbits,
+            (1u32 << sbits) - 1,
+            ColumnScale { m: ones.clone() },
+            &idx,
+        );
+        let mut indexed_w = dense_w.clone();
+        indexed_w.build_plane_index();
+        let dn = bench(&format!("dense blocked dots   d={density_pc:3}%"), &opts, || {
+            kernel::dot_rows_block(&dense_w, &sbatch, sbits, &sk, &mut sdots);
+            black_box(&sdots);
+        });
+        let ix = bench(&format!("indexed blocked dots d={density_pc:3}%"), &opts, || {
+            kernel::dot_rows_block(&indexed_w, &sbatch, sbits, &sk, &mut sdots);
+            black_box(&sdots);
+        });
+        let speedup = dn.mean_ns / ix.mean_ns;
+        if speedup > 1.0 {
+            indexed_wins_up_to = density_pc;
+        }
+        println!(
+            "   d={density_pc:3}% ({nzw}/{swpp} words): indexed {speedup:.2}x dense, index {} B",
+            indexed_w.index_bytes()
+        );
+        js.push(
+            "density_sweep",
+            vec![
+                ("density_pc", density_pc.into()),
+                ("nonzero_words_per_plane", nzw.into()),
+                ("words_per_plane", swpp.into()),
+                ("dense_ns", dn.mean_ns.into()),
+                ("indexed_ns", ix.mean_ns.into()),
+                ("speedup_indexed_vs_dense", speedup.into()),
+                ("index_bytes", indexed_w.index_bytes().into()),
+            ],
+        );
+        if density_pc <= 5 {
+            if quick {
+                if speedup <= 1.0 {
+                    println!(
+                        "   WARNING: indexed not ahead at {density_pc}% density \
+                         ({speedup:.2}x) in quick mode"
+                    );
+                }
+            } else {
+                assert!(
+                    speedup > 1.0,
+                    "ACCEPTANCE: the rank-indexed path must beat the dense walk at and \
+                     below 5% plane-word density (got {speedup:.2}x at {density_pc}%)"
+                );
+            }
+        }
+    }
+    js.push(
+        "density_sweep_summary",
+        vec![("indexed_wins_up_to_density_pc", indexed_wins_up_to.into())],
+    );
 
     section("byte accounting: blocked == per-row == row-read path, per epoch");
     for p in [2u32, 8] {

@@ -16,6 +16,7 @@
 //! | `byte-truncating-cast` | in `store/`: no `as`-narrowing casts on byte-accounting expressions |
 //! | `hash-in-deterministic-path` | no `HashMap`/`HashSet` in `store/`, `sgd/`, `fpga/` |
 //! | `json-emitter` | no JSON writer outside `bench.rs` (`json_escape`/`json_val` calls, `fn json_*` definitions) |
+//! | `simd-twin-contract` | every `dispatch::tier` dispatch site carries a `// twin: scalar_name (bit_equality_test)` comment |
 //!
 //! The scanner is line/token-level (like the repo's serde-free JSON
 //! code, deliberately not a full parser): comments, string/char
@@ -37,6 +38,7 @@ pub const RULE_NAMES: &[&str] = &[
     "byte-truncating-cast",
     "hash-in-deterministic-path",
     "json-emitter",
+    "simd-twin-contract",
 ];
 
 /// One finding: `path:line: [rule] message`.
@@ -279,6 +281,33 @@ fn has_ordering_contract(lines: &[ScrubbedLine], i: usize) -> bool {
     lines[lo..=i].iter().any(|l| l.comment.contains("ordering:"))
 }
 
+/// How many lines above a `dispatch::tier` site its `// twin:` contract
+/// comment may sit (same reach as the ordering rule).
+const SIMD_TWIN_COMMENT_REACH: usize = 3;
+
+/// A complete twin contract names the scalar equivalent and, in parens,
+/// the bit-equality test: `twin: scalar_name (test_name)`. Either half
+/// empty means the contract is not actually stated.
+fn twin_contract_complete(comment: &str) -> bool {
+    let Some(rest) = comment.split("twin:").nth(1) else {
+        return false;
+    };
+    let Some(open) = rest.find('(') else {
+        return false;
+    };
+    let Some(close) = rest[open + 1..].find(')') else {
+        return false;
+    };
+    let scalar = rest[..open].trim();
+    let test = rest[open + 1..open + 1 + close].trim();
+    !scalar.is_empty() && !test.is_empty()
+}
+
+fn has_twin_contract(lines: &[ScrubbedLine], i: usize) -> bool {
+    let lo = i.saturating_sub(SIMD_TWIN_COMMENT_REACH);
+    lines[lo..=i].iter().any(|l| twin_contract_complete(&l.comment))
+}
+
 const MSG_UNSAFE: &str =
     "`unsafe` outside the allowlist (rust/lint/allowlist_unsafe.txt); the crate forbids unsafe";
 const MSG_ORDERING: &str =
@@ -291,6 +320,9 @@ const MSG_HASH: &str =
     "HashMap/HashSet in a deterministic path (store/, sgd/, fpga/); use Vec or BTreeMap";
 const MSG_JSON: &str =
     "second JSON emitter outside bench.rs; write through bench::JsonObj so escaping never drifts";
+const MSG_SIMD_TWIN: &str =
+    "`dispatch::tier` site without a `// twin: scalar_name (bit_equality_test)` comment on this \
+     line or the 3 above (DESIGN.md \u{a7}12)";
 
 /// Lint one file's source text. `rel_path` is the `/`-separated path
 /// relative to the scanned source root — the path-scoped rules key off
@@ -340,6 +372,12 @@ pub fn lint_source(rel_path: &str, src: &str, unsafe_allowlist: &[String]) -> Ve
             && !suppressed(&lines, i, "hash-in-deterministic-path")
         {
             diag(i, "hash-in-deterministic-path", MSG_HASH);
+        }
+        if has_token(code, "dispatch::tier")
+            && !has_twin_contract(&lines, i)
+            && !suppressed(&lines, i, "simd-twin-contract")
+        {
+            diag(i, "simd-twin-contract", MSG_SIMD_TWIN);
         }
         let json_def = code.contains("fn json_");
         if !json_exempt
@@ -506,6 +544,28 @@ mod tests {
         assert_eq!(rules_hit("a.rs", "fn json_write(x: &str) {}\n"), vec![("json-emitter", 1)]);
         assert!(rules_hit("bench.rs", "json_val(v, &mut out);\n").is_empty());
         assert!(rules_hit("a.rs", "let json_value = parse();\n").is_empty(), "other idents ok");
+    }
+
+    #[test]
+    fn rule_simd_twin_contract_requires_named_twin_and_test() {
+        let bad = "if dispatch::tier() == dispatch::Tier::Lanes8 { return simd::f(x); }\n";
+        assert_eq!(rules_hit("store/kernel.rs", bad), vec![("simd-twin-contract", 1)]);
+        let good = "// twin: f_scalar (simd_f_bit_identical_to_scalar)\n\
+                    if dispatch::tier() == dispatch::Tier::Lanes8 { return simd::f(x); }\n";
+        assert!(rules_hit("store/kernel.rs", good).is_empty());
+        let same_line =
+            "if dispatch::tier() == t { f() } // twin: f_scalar (simd_f_bit_identical_to_scalar)\n";
+        assert!(rules_hit("a.rs", same_line).is_empty());
+        let empty_scalar = "// twin: (some_test) — scalar half missing\n\
+                           if dispatch::tier() == t { f() }\n";
+        assert_eq!(rules_hit("a.rs", empty_scalar), vec![("simd-twin-contract", 2)]);
+        let no_test = "// twin: f_scalar\nif dispatch::tier() == t { f() }\n";
+        assert_eq!(rules_hit("a.rs", no_test), vec![("simd-twin-contract", 2)]);
+        assert!(
+            rules_hit("a.rs", "let l = dispatch::tier_label();\n").is_empty(),
+            "label reads are not dispatch sites"
+        );
+        assert!(rules_hit("a.rs", "let t = dispatch::Tier::Scalar;\n").is_empty());
     }
 
     #[test]

@@ -116,6 +116,11 @@ fn hash_rule_fires_at_seeded_lines_only() {
 }
 
 #[test]
+fn simd_twin_fires_at_seeded_lines_only() {
+    assert_eq!(hits_in("store/simd_twin.rs", "simd-twin-contract"), vec![14, 22]);
+}
+
+#[test]
 fn suppressed_fixture_is_fully_waived() {
     let hits: Vec<_> = found().into_iter().filter(|d| d.path == "suppressed.rs").collect();
     assert!(hits.is_empty(), "suppressions ignored: {hits:?}");

@@ -20,6 +20,10 @@
 // `select_add_word`, …) to explain the fused hot path; rustdoc renders
 // those as plain code. Broken links still fail the ci.sh doc gate.
 #![allow(rustdoc::private_intra_doc_links)]
+// The explicit-SIMD kernel twins (store/kernel/simd.rs) use std::simd,
+// still nightly-only; the attribute is inert on the stable default
+// build, where the scalar tier is the only one compiled (DESIGN.md §12).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 // The crate carries no unsafe at all (the former raw-parts casts in
 // runtime/literal.rs are now safe to_le_bytes copies). zipml-lint's
 // `unsafe-code` rule enforces the same at the token level, with an

@@ -70,7 +70,7 @@ USAGE:
               [--bits B] [--epochs E] [--lr F] [--batch N] [--seed N]
               [--store legacy|weaved|weaved-ds] [--shards N] [--schedule S]
               [--store-bits W] [--bits-m M] [--bits-g G]
-              [--host] [--step-bits Q]
+              [--host] [--step-bits Q] [--plane-index]
               [--trace FILE [--trace-level counters|spans|full]]
        MODE: fp32 | naive | ds | dsu8 | e2e | mq | gq | optimal | round
              | cheby | poly | refetch-l1 | refetch-jl
@@ -92,6 +92,10 @@ USAGE:
        --step-bits Q  (with --host --store weaved) popcount fast path:
                  round g = m*x to Q sign/magnitude bit planes per step and
                  dot by AND+POPCNT; unbiased, off by default
+       --plane-index  (--host only) build the per-plane occupancy index
+                 after ingestion: truncating reads skip all-zero 8-word
+                 plane runs in O(1), bit-identical results (DESIGN.md
+                 §12); index bytes are derived metadata, not wire traffic
        --trace FILE   (--host only) write a JSONL telemetry trace: run
                  header, per-epoch loss/precision/exact-byte rollups,
                  phase spans, counter totals, and a cross-checked summary
@@ -294,6 +298,13 @@ fn cmd_train_host(args: &[String]) -> Result<()> {
         }
         other => bail!("--host needs --store weaved|weaved-ds, got {other}"),
     };
+    if flag(args, "--plane-index") {
+        store.build_plane_index();
+        eprintln!(
+            "plane index: {} occupancy bytes (derived metadata, not wire traffic)",
+            store.index_bytes()
+        );
+    }
     let ingest_secs = ingest_start.elapsed_secs();
     // One registry serves both views: the store tallies its exact-byte
     // accounting into it on every read, the session reads it back for the
@@ -381,6 +392,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     }
     if opt(args, "--trace").is_some() || opt(args, "--trace-level").is_some() {
         bail!("--trace is a host-session feature: add --host (see zipml help)");
+    }
+    if flag(args, "--plane-index") {
+        bail!("--plane-index accelerates the host kernels: add --host (see zipml help)");
     }
     let model = parse_model(args)?;
     let bits: u32 = opt(args, "--bits").map(|v| v.parse()).transpose()?.unwrap_or(5);
@@ -556,6 +570,7 @@ mod tests {
             "3",
             "--epochs",
             "2",
+            "--plane-index",
         ]))
         .unwrap();
     }
@@ -579,6 +594,8 @@ mod tests {
         let err = cmd_train_host(&a(&["--trace-level", "full"])).unwrap_err();
         assert!(format!("{err:#}").contains("--trace"), "unhelpful: {err:#}");
         let err = cmd_train(&a(&["--trace", "t.jsonl"])).unwrap_err();
+        assert!(format!("{err:#}").contains("--host"), "unhelpful: {err:#}");
+        let err = cmd_train(&a(&["--plane-index"])).unwrap_err();
         assert!(format!("{err:#}").contains("--host"), "unhelpful: {err:#}");
         // bad level names are rejected before any training happens
         assert!(cmd_train_host(&a(&["--trace", "t.jsonl", "--trace-level", "verbose"])).is_err());

@@ -598,6 +598,14 @@ impl<'a> HostSession<'a> {
                     ("threads", threads.into()),
                     ("seed", self.seed.into()),
                     ("lr0", (self.lr0 as f64).into()),
+                    // which kernel tier served this run (DESIGN.md §12) and
+                    // whether the sparse-plane occupancy index was resident
+                    ("kernel_tier", crate::store::kernel::dispatch::tier_label().into()),
+                    (
+                        "plane_index",
+                        if self.store.is_some_and(|s| s.has_plane_index()) { "on" } else { "off" }
+                            .into(),
+                    ),
                 ],
             );
         }

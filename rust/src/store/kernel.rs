@@ -87,10 +87,46 @@
 //!   dot; the trade is integer throughput for one stochastic-rounding
 //!   noise term per step. Opt-in (`--step-bits q` on the host CLI path;
 //!   off by default). Derivation and variance notes: DESIGN.md §8.
+//!
+//! * **Explicit SIMD twins + runtime dispatch** — under the `simd` cargo
+//!   feature (pinned nightly, `std::simd`, still zero `unsafe`) the
+//!   dense primitives [`masked_sum_dense`] and [`select_add_word_scalar`]
+//!   gain portable-SIMD twins ([`simd`]) selected by a one-time-probed
+//!   [`dispatch`] tier. Every twin is **bit-for-bit** equal to its
+//!   scalar original — same 8-lane accumulator schedule, same fixed
+//!   reduction tree, same masked-`+0.0` select semantics — so switching
+//!   tiers can never change a result (tests/simd_twins.rs pins it, and
+//!   zipml-lint's `simd-twin-contract` rule forces every dispatch site
+//!   to name its twin and test). The DS carry compare deliberately has
+//!   no SIMD twin: it is already SIMD-within-a-register and batching it
+//!   would reorder the pinned RNG stream (DESIGN.md §12, a "cannot").
+//!
+//! * **Rank-indexed sparse planes** — an opt-in per-plane occupancy
+//!   summary ([`WeavedMatrix::build_plane_index`]: one byte per 8-word
+//!   run, bit k set iff word 8·run+k is nonzero) lets the *truncating*
+//!   dot/axpy kernels skip all-zero word spans in O(1) — one byte test
+//!   skips a whole cache line of plane words. The indexed paths visit
+//!   the surviving words in the same ascending order the dense paths do
+//!   (which already skip zero words), so results stay bit-for-bit
+//!   identical. DS kernels never use the index: a zero residual word
+//!   still consumes threshold draws, so skipping it would change the
+//!   stream. Index bytes are accounted *separately* from wire bytes —
+//!   the exact byte-accounting contract (DESIGN.md §5/§8) is untouched.
+//!
+//! * **Buffered carry thresholds** — [`carry_mask_word`] is generic over
+//!   [`ThresholdSource`]; the DS row kernels wrap their stream in a
+//!   [`BufferedThresholds`] (one per row call) that refills eight draws
+//!   at a time. Served value k is raw draw k, so every sampled carry is
+//!   bit-identical to drawing straight from the stream, and the refill
+//!   is lazy, so p = bits still consumes no randomness.
 
 use crate::rng::Rng;
 
 use super::weave::WeavedMatrix;
+
+pub mod dispatch;
+#[cfg(feature = "simd")]
+pub mod simd;
 
 /// Per-plane-word spread LUT: `SPREAD8[b][j] = (b >> j) & 1`.
 static SPREAD8: [[u16; 8]; 256] = build_spread8();
@@ -112,15 +148,27 @@ const fn build_spread8() -> [[u16; 8]; 256] {
 /// Below this popcount [`spread_word`] walks set bits via `trailing_zeros`
 /// instead of spreading every byte through the LUT. The crossover is
 /// re-measured per popcount by the `sparse_crossover` section of
-/// `benches/fused_dot.rs`, which records both paths' timings in
+/// `benches/fused_dot.rs`, which records both paths' timings *and* the
+/// measured crossover popcount (`spread_crossover_pc` — the smallest
+/// swept popcount where the LUT spread beats the walk) in
 /// `BENCH_kernels.json` — the constant is pinned to data, not folklore.
+/// CI-measured crossovers land between 6 and 12 set bits depending on
+/// runner; 8 sits inside that band. Re-derive from the artifact when the
+/// kernels or targets change.
 pub const SPARSE_BITS: u32 = 8;
 
 /// Below this popcount [`masked_sum`] walks set bits instead of running
 /// the 8-lane select-add over the whole word: the dense path always issues
 /// 64 lane-adds (vectorizable, no dependent chain), so very sparse words
 /// are cheaper on the walk. Re-measured by the same `sparse_crossover`
-/// bench section of `BENCH_kernels.json`.
+/// bench section, which records `masked_sum_crossover_pc` (the smallest
+/// swept popcount where the lane path beats the walk) in
+/// `BENCH_kernels.json`; measured crossovers sit between 2 and 6 set
+/// bits (lower than the spread crossover — the lane path has no LUT
+/// loads), bracketing this constant. With the `simd` feature the lane
+/// path gets faster and the true crossover drops toward 2; the constant
+/// stays at the scalar-safe value so both tiers share one dispatch
+/// boundary (a word's path choice is part of the determinism contract).
 pub const MASKED_SUM_SPARSE_BITS: u32 = 4;
 
 /// OR bit `j` of `word` into `out[j] << shift` for every set bit, without a
@@ -183,10 +231,14 @@ fn masked_sum(word: u64, g: &[f32]) -> f32 {
         g.len()
     );
     if word.count_ones() <= MASKED_SUM_SPARSE_BITS {
-        masked_sum_sparse(word, g)
-    } else {
-        masked_sum_dense(word, g)
+        return masked_sum_sparse(word, g);
     }
+    // twin: masked_sum_dense (simd_masked_sum_bit_identical_to_scalar)
+    #[cfg(feature = "simd")]
+    if dispatch::tier() == dispatch::Tier::Lanes8 {
+        return simd::masked_sum_dense(word, g);
+    }
+    masked_sum_dense(word, g)
 }
 
 /// Sparse [`masked_sum`] path: walk set bits (dependent `trailing_zeros`
@@ -232,8 +284,23 @@ pub fn masked_sum_dense(word: u64, g: &[f32]) -> f32 {
 /// bit-walk issues; unset lanes add a masked `+0.0`, which never changes
 /// an f32 accumulation that started from `+0.0` (adding ±0.0 cannot
 /// produce −0.0, and v + 0.0 == v bit-for-bit for every other v).
+/// Dispatches between the scalar twin and the `std::simd` twin; both are
+/// bit-identical (tests/simd_twins.rs).
 #[inline]
 fn select_add_word(word: u64, wgt: f32, m: &[f32], out: &mut [f32]) {
+    // twin: select_add_word_scalar (simd_select_add_bit_identical_to_scalar)
+    #[cfg(feature = "simd")]
+    if dispatch::tier() == dispatch::Tier::Lanes8 {
+        return simd::select_add_word(word, wgt, m, out);
+    }
+    select_add_word_scalar(word, wgt, m, out);
+}
+
+/// Scalar twin of the lane-parallel select-add (see [`select_add_word`]
+/// for the semantics). Exposed for the SIMD twin property suite and the
+/// scalar-vs-simd bench section.
+#[inline]
+pub fn select_add_word_scalar(word: u64, wgt: f32, m: &[f32], out: &mut [f32]) {
     let lanes = m.len().min(out.len()).min(64);
     debug_assert!(
         lanes >= 64 || word >> lanes == 0,
@@ -313,6 +380,42 @@ fn dot_planes(planes: &[u64], wpp: usize, p: u32, k: &StepKernel) -> f32 {
     (inv_s2 as f64 * acc - k.sum_g as f64) as f32
 }
 
+/// Rank-indexed variant of [`dot_planes`]: identical masked-sum
+/// accumulation sequence, but all-zero 8-word runs are skipped via the
+/// per-plane occupancy bytes instead of loaded — one byte test replaces
+/// one cache line of plane-word loads (DESIGN.md §12). Only truncating
+/// readers may take this path: DS readers must visit every residual
+/// word, because a zero word still consumes threshold draws.
+#[inline]
+fn dot_planes_indexed(
+    planes: &[u64],
+    occ: &[u8],
+    rpp: usize,
+    wpp: usize,
+    p: u32,
+    k: &StepKernel,
+) -> f32 {
+    let inv_s2 = 2.0 / ((1u32 << p) - 1) as f32;
+    let mut acc = 0.0f64;
+    for t in 0..p as usize {
+        let weight = (1u64 << (p as usize - 1 - t)) as f64;
+        let mut psum = 0.0f64;
+        let pw = &planes[t * wpp..(t + 1) * wpp];
+        // ascending run, then ascending bit: the exact nonzero-word order
+        // the dense loop visits, so the f64 accumulation is bit-identical
+        for (run, &ob) in occ[t * rpp..(t + 1) * rpp].iter().enumerate() {
+            let mut ob = ob;
+            while ob != 0 {
+                let wi = run * 8 + ob.trailing_zeros() as usize;
+                psum += masked_sum(pw[wi], &k.g[wi * 64..]) as f64;
+                ob &= ob - 1;
+            }
+        }
+        acc += weight * psum;
+    }
+    (inv_s2 as f64 * acc - k.sum_g as f64) as f32
+}
+
 /// Plane words one precision-`p` row visit touches: `p` bit planes of
 /// `words_per_plane` u64s each. This is the unit the telemetry
 /// `plane_words` counter ([`crate::telemetry::Metrics`]) accumulates —
@@ -329,7 +432,11 @@ pub fn plane_words_per_row(w: &WeavedMatrix, p: u32) -> u64 {
 pub fn dot_row(w: &WeavedMatrix, r: usize, p: u32, k: &StepKernel) -> f32 {
     assert!(p >= 1 && p <= w.bits, "precision {p} outside 1..={}", w.bits);
     assert_eq!(k.g.len(), w.cols, "StepKernel built for {} cols, store has {}", k.g.len(), w.cols);
-    dot_planes(w.row_planes(r), w.words_per_plane(), p, k)
+    let wpp = w.words_per_plane();
+    match w.row_plane_occ(r) {
+        Some(occ) => dot_planes_indexed(w.row_planes(r), occ, w.runs_per_plane(), wpp, p, k),
+        None => dot_planes(w.row_planes(r), wpp, p, k),
+    }
 }
 
 /// Blocked fused dots: `out[i] = dot(dequant_p(rows[i]), x)` for a block
@@ -342,8 +449,76 @@ pub fn dot_rows_block(w: &WeavedMatrix, rows: &[usize], p: u32, k: &StepKernel, 
     assert_eq!(k.g.len(), w.cols, "StepKernel built for {} cols, store has {}", k.g.len(), w.cols);
     assert_eq!(out.len(), rows.len(), "one dot output per row");
     let wpp = w.words_per_plane();
+    let rpp = w.runs_per_plane();
     for (o, &r) in out.iter_mut().zip(rows) {
-        *o = dot_planes(w.row_planes(r), wpp, p, k);
+        *o = match w.row_plane_occ(r) {
+            Some(occ) => dot_planes_indexed(w.row_planes(r), occ, rpp, wpp, p, k),
+            None => dot_planes(w.row_planes(r), wpp, p, k),
+        };
+    }
+}
+
+/// Source of uniform `u64` carry thresholds for [`carry_mask_word`]. The
+/// direct impl on [`Rng`] draws per call (call sites outside the hot DS
+/// row loops keep their exact pre-buffering behavior); the DS row
+/// kernels wrap their stream in a [`BufferedThresholds`]. Both serve the
+/// *same stream values in the same order* — served threshold k is raw
+/// draw k — so every sampled carry is identical regardless of which
+/// source wraps the stream.
+pub trait ThresholdSource {
+    fn next_threshold(&mut self) -> u64;
+}
+
+impl ThresholdSource for Rng {
+    #[inline]
+    fn next_threshold(&mut self) -> u64 {
+        self.next_u64()
+    }
+}
+
+/// Refill granularity of [`BufferedThresholds`]: eight `u64` draws — one
+/// cache line — per refill, amortizing the xoshiro state round-trip
+/// across up to eight residual-word compares.
+const THRESHOLD_BUF: usize = 8;
+
+/// A block-refilled FIFO over an [`Rng`] stream, created once per DS
+/// *row call* (DESIGN.md §12). Stream contract:
+///
+/// * served value k equals raw draw k, so all sampled carries are
+///   bit-identical to drawing straight from the stream;
+/// * the refill is lazy — a row that needs no thresholds (p = bits)
+///   consumes no randomness at all;
+/// * leftover buffered draws are discarded when the row call ends, so a
+///   row call consumes `ceil(served / 8) · 8` raw draws — the same for
+///   the per-row and blocked DS paths, which is what keeps the
+///   identical-draws end-state pins green.
+pub struct BufferedThresholds<'a> {
+    rng: &'a mut Rng,
+    buf: [u64; THRESHOLD_BUF],
+    next: usize,
+    filled: usize,
+}
+
+impl<'a> BufferedThresholds<'a> {
+    #[inline]
+    pub fn new(rng: &'a mut Rng) -> Self {
+        BufferedThresholds { rng, buf: [0; THRESHOLD_BUF], next: 0, filled: 0 }
+    }
+}
+
+impl ThresholdSource for BufferedThresholds<'_> {
+    #[inline]
+    fn next_threshold(&mut self) -> u64 {
+        if self.next == self.filled {
+            for slot in &mut self.buf {
+                *slot = self.rng.next_u64();
+            }
+            self.next = 0;
+            self.filled = THRESHOLD_BUF;
+        }
+        let v = self.buf[self.next];
+        self.next += 1;
+        v
     }
 }
 
@@ -352,27 +527,35 @@ pub fn dot_rows_block(w: &WeavedMatrix, rows: &[usize], p: u32, k: &StepKernel, 
 /// is the residual of column wi·64+j — the integer spelled by its low
 /// bits−p planes. Exact Bernoulli via a bit-sliced comparison of the
 /// residual against fresh uniform threshold bits, MSB first: 64 columns
-/// decide in ≤ bits−p bitwise steps, one `next_u64` each, stopping early
-/// once every lane's comparison is settled. At p == bits the mask is zero
-/// and no randomness is consumed. Tail bits beyond the live columns stay
-/// 0 (their residual planes store 0).
+/// decide in ≤ bits−p bitwise steps, one threshold word each, stopping
+/// early once every lane's comparison is settled. At p == bits the mask
+/// is zero and no randomness is consumed. Tail bits beyond the live
+/// columns stay 0 (their residual planes store 0).
+///
+/// This compare is already SIMD-within-a-register — 64 column lanes per
+/// u64 bit-op — and has no `std::simd` twin *by design*: the early stop
+/// makes the threshold count data-dependent, so batching words or planes
+/// would reorder the pinned RNG stream (DESIGN.md §12).
 #[inline]
-pub fn carry_mask_word(
+pub fn carry_mask_word<T: ThresholdSource>(
     planes: &[u64],
     wpp: usize,
     bits: u32,
     p: u32,
     wi: usize,
-    rng: &mut Rng,
+    thresholds: &mut T,
 ) -> u64 {
     debug_assert!(p >= 1 && p <= bits);
     let mut gt = 0u64;
     let mut eq = !0u64;
     for t in p as usize..bits as usize {
         let r = planes[t * wpp + wi];
-        let thresh = rng.next_u64();
-        gt |= eq & r & !thresh;
-        eq &= !(r ^ thresh);
+        let thresh = thresholds.next_threshold();
+        // bitwise r > thresh: r & !thresh == r & (r ^ thresh), so one XOR
+        // feeds both the greater-than and the still-equal updates
+        let d = r ^ thresh;
+        gt |= eq & r & d;
+        eq &= !d;
         if eq == 0 {
             break;
         }
@@ -397,6 +580,9 @@ fn dot_planes_ds(
     let inv_s2 = 2.0 / s as f32;
     let carry_w = (1u64 << (bits_us - p as usize)) as f64;
     let mut acc = 0.0f64;
+    // one buffer per row call: thresholds amortize 8 draws per refill
+    // while serving the exact raw stream values in order
+    let mut thresholds = BufferedThresholds::new(rng);
     for wi in 0..wpp {
         let g = &k.g[wi * 64..];
         for t in 0..p as usize {
@@ -405,7 +591,7 @@ fn dot_planes_ds(
                 acc += (1u64 << (bits_us - 1 - t)) as f64 * masked_sum(word, g) as f64;
             }
         }
-        let carry = carry_mask_word(planes, wpp, bits, p, wi, rng);
+        let carry = carry_mask_word(planes, wpp, bits, p, wi, &mut thresholds);
         if carry != 0 {
             acc += carry_w * masked_sum(carry, g) as f64;
         }
@@ -470,6 +656,7 @@ pub fn axpy_row_planes_ds(
     let m = &w.scale.m;
     let inv_s2 = 2.0 / w.s as f32;
     let carry_wgt = coef * inv_s2 * (1u64 << (bits - p as usize)) as f32;
+    let mut thresholds = BufferedThresholds::new(rng);
     for wi in 0..wpp {
         let c0 = wi * 64;
         for t in 0..p as usize {
@@ -481,7 +668,7 @@ pub fn axpy_row_planes_ds(
                 word &= word - 1;
             }
         }
-        let mut carry = carry_mask_word(planes, wpp, w.bits, p, wi, rng);
+        let mut carry = carry_mask_word(planes, wpp, w.bits, p, wi, &mut thresholds);
         while carry != 0 {
             let j = c0 + carry.trailing_zeros() as usize;
             out[j] += carry_wgt * m[j];
@@ -509,6 +696,7 @@ fn axpy_row_planes_ds_lanes(
     let m = &w.scale.m;
     let inv_s2 = 2.0 / w.s as f32;
     let carry_wgt = coef * inv_s2 * (1u64 << (bits - p as usize)) as f32;
+    let mut thresholds = BufferedThresholds::new(rng);
     for wi in 0..wpp {
         let c0 = wi * 64;
         for t in 0..p as usize {
@@ -518,7 +706,7 @@ fn axpy_row_planes_ds_lanes(
                 select_add_word(word, wgt, &m[c0..], &mut out[c0..]);
             }
         }
-        let carry = carry_mask_word(planes, wpp, w.bits, p, wi, rng);
+        let carry = carry_mask_word(planes, wpp, w.bits, p, wi, &mut thresholds);
         if carry != 0 {
             select_add_word(carry, carry_wgt, &m[c0..], &mut out[c0..]);
         }
@@ -587,15 +775,36 @@ pub fn axpy_rows_block(w: &WeavedMatrix, rows: &[usize], p: u32, coefs: &[f32], 
     assert_eq!(rows.len(), coefs.len(), "one coefficient per row");
     debug_assert_eq!(out.len(), w.cols);
     let wpp = w.words_per_plane();
+    let rpp = w.runs_per_plane();
     let m = &w.scale.m;
     let inv_s2 = 2.0 / ((1u32 << p) - 1) as f32;
     for (&r, &coef) in rows.iter().zip(coefs) {
         let planes = w.row_planes(r);
-        for t in 0..p as usize {
-            let wgt = coef * inv_s2 * (1u64 << (p as usize - 1 - t)) as f32;
-            for (wi, &word) in planes[t * wpp..(t + 1) * wpp].iter().enumerate() {
-                if word != 0 {
-                    select_add_word(word, wgt, &m[wi * 64..], &mut out[wi * 64..]);
+        match w.row_plane_occ(r) {
+            Some(occ) => {
+                for t in 0..p as usize {
+                    let wgt = coef * inv_s2 * (1u64 << (p as usize - 1 - t)) as f32;
+                    let pw = &planes[t * wpp..(t + 1) * wpp];
+                    // ascending run then bit = the dense loop's nonzero
+                    // visit order, so the addition sequence is identical
+                    for (run, &ob) in occ[t * rpp..(t + 1) * rpp].iter().enumerate() {
+                        let mut ob = ob;
+                        while ob != 0 {
+                            let wi = run * 8 + ob.trailing_zeros() as usize;
+                            select_add_word(pw[wi], wgt, &m[wi * 64..], &mut out[wi * 64..]);
+                            ob &= ob - 1;
+                        }
+                    }
+                }
+            }
+            None => {
+                for t in 0..p as usize {
+                    let wgt = coef * inv_s2 * (1u64 << (p as usize - 1 - t)) as f32;
+                    for (wi, &word) in planes[t * wpp..(t + 1) * wpp].iter().enumerate() {
+                        if word != 0 {
+                            select_add_word(word, wgt, &m[wi * 64..], &mut out[wi * 64..]);
+                        }
+                    }
                 }
             }
         }
@@ -1295,5 +1504,104 @@ mod tests {
             rb.f32();
         }
         assert_eq!(ra.next_u64(), rb.next_u64(), "refresh RNG budget drifted");
+    }
+
+    /// Rank-index pin: with the occupancy index built, the truncating
+    /// dot/axpy kernels are BIT-FOR-BIT what they were without it —
+    /// including a genuinely sparse store (mostly-zero plane words, the
+    /// regime the index exists for) and the ragged shapes.
+    #[test]
+    fn indexed_kernels_bit_identical_to_dense() {
+        // dense random store + a sparse one: rows where only a few
+        // scattered columns are nonzero, so most plane words are zero
+        for sparse in [false, true] {
+            for &cols in &[63usize, 130, 1000] {
+                let bits = 6u32;
+                let mut w = if sparse {
+                    let rows = 5usize;
+                    let mut idx = vec![0u16; rows * cols];
+                    for r in 0..rows {
+                        for j in 0..4usize {
+                            idx[r * cols + (r * 211 + j * 97) % cols] = (17 + r + j) as u16;
+                        }
+                    }
+                    WeavedMatrix::from_indices(
+                        rows,
+                        cols,
+                        bits,
+                        63,
+                        ColumnScale { m: vec![1.0; cols] },
+                        &idx,
+                    )
+                } else {
+                    mk(5, cols, bits, 67).1
+                };
+                let mut rng = Rng::new(11 + cols as u64);
+                let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+                let mut k = StepKernel::new(cols);
+                k.refresh(&w.scale.m, &x);
+                let rows: Vec<usize> = vec![4, 0, 2, 2, 1];
+                let coefs: Vec<f32> = (0..rows.len()).map(|_| rng.normal()).collect();
+                for p in [1u32, 3, bits] {
+                    let mut dots_dense = vec![0.0f32; rows.len()];
+                    let mut axpy_dense = vec![0.0f32; cols];
+                    dot_rows_block(&w, &rows, p, &k, &mut dots_dense);
+                    axpy_rows_block(&w, &rows, p, &coefs, &mut axpy_dense);
+
+                    w.build_plane_index();
+                    let mut dots_ix = vec![0.0f32; rows.len()];
+                    let mut axpy_ix = vec![0.0f32; cols];
+                    dot_rows_block(&w, &rows, p, &k, &mut dots_ix);
+                    axpy_rows_block(&w, &rows, p, &coefs, &mut axpy_ix);
+                    for i in 0..rows.len() {
+                        assert_eq!(
+                            dots_dense[i].to_bits(),
+                            dots_ix[i].to_bits(),
+                            "dot sparse={sparse} cols={cols} p={p} i={i}"
+                        );
+                        // the per-row entry point routes through the index too
+                        assert_eq!(
+                            dot_row(&w, rows[i], p, &k).to_bits(),
+                            dots_ix[i].to_bits(),
+                            "dot_row sparse={sparse} cols={cols} p={p} i={i}"
+                        );
+                    }
+                    for c in 0..cols {
+                        assert_eq!(
+                            axpy_dense[c].to_bits(),
+                            axpy_ix[c].to_bits(),
+                            "axpy sparse={sparse} cols={cols} p={p} c={c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// BufferedThresholds stream contract: served value k IS raw draw k,
+    /// the refill is lazy (an unused buffer consumes nothing), and a
+    /// finished row call has consumed ceil(served/8)·8 raw draws.
+    #[test]
+    fn buffered_thresholds_serve_the_raw_stream() {
+        // served values == the raw stream, across refill boundaries
+        let mut raw = Rng::new(41);
+        let want: Vec<u64> = (0..21).map(|_| raw.next_u64()).collect();
+        let mut rng = Rng::new(41);
+        let mut buf = BufferedThresholds::new(&mut rng);
+        for (k, &w) in want.iter().enumerate() {
+            assert_eq!(buf.next_threshold(), w, "served draw {k} differs from raw draw {k}");
+        }
+        drop(buf);
+        // 21 served → 3 refills → 24 raw draws consumed
+        let mut raw = Rng::new(41);
+        for _ in 0..24 {
+            raw.next_u64();
+        }
+        assert_eq!(rng.next_u64(), raw.next_u64(), "refill granularity drifted");
+        // lazy: an unused buffer leaves the stream untouched
+        let mut rng = Rng::new(43);
+        let before = rng.clone().next_u64();
+        drop(BufferedThresholds::new(&mut rng));
+        assert_eq!(rng.next_u64(), before, "constructing the buffer drew randomness");
     }
 }

@@ -1,0 +1,157 @@
+//! One-time-probed runtime dispatch for the kernel primitives.
+//!
+//! The crate is `#![forbid(unsafe_code)]`, which rules out the classic
+//! `#[target_feature]` fn-pointer multiversioning (calling a
+//! target-feature function is `unsafe`). Portable SIMD gives us the safe
+//! alternative: `std::simd` code compiles for the *baseline* target and
+//! is always sound to call, so "dispatch" reduces to picking which safe
+//! twin to run — a pure decision, probed once and cached.
+//!
+//! * Without the `simd` cargo feature, [`tier`] is an `#[inline(always)]`
+//!   constant `Tier::Scalar`: the stable default build const-folds every
+//!   dispatch site away and is bit-for-bit (and codegen-wise) the
+//!   pre-dispatch scalar crate.
+//! * With the feature (pinned nightly), the first [`tier`] call probes
+//!   the target and the `ZIPML_SIMD` kill switch, then caches the result
+//!   in a relaxed atomic — subsequent calls are one relaxed load, cheap
+//!   enough to sit inside `masked_sum` itself.
+//!
+//! Every *call site* that branches on [`tier`] must carry a
+//! `// twin: <scalar_fn> (<bit_equality_test>)` comment naming the
+//! scalar twin it dispatches against and the test pinning their
+//! bit-equality — enforced by zipml-lint's `simd-twin-contract` rule
+//! (DESIGN.md §12).
+
+/// Kernel implementation tier. Discriminants double as the probe-cache
+/// encoding (0 is reserved for "unprobed").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable scalar lane loops — the stable-toolchain default and the
+    /// bit-exactness oracle every other tier is property-tested against.
+    Scalar = 1,
+    /// `std::simd` 8-lane twins (`simd` feature, nightly): same 8-lane
+    /// accumulator schedule as the scalar path, one `f32x8` per chunk.
+    Lanes8 = 2,
+}
+
+impl Tier {
+    /// Stable label for trace `run` events and `BENCH_kernels.json`.
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Lanes8 => "simd8",
+        }
+    }
+}
+
+/// Label of the active tier (host traces, bench JSON).
+pub fn tier_label() -> &'static str {
+    tier().label()
+}
+
+/// The active kernel tier. Without the `simd` feature there is exactly
+/// one tier, and the call const-folds to `Tier::Scalar` — zero
+/// behavioral change for the stable default build.
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+pub fn tier() -> Tier {
+    Tier::Scalar
+}
+
+/// The active kernel tier: probed once (target arch + the `ZIPML_SIMD`
+/// env kill switch), then served from a relaxed atomic cache.
+#[cfg(feature = "simd")]
+#[inline]
+pub fn tier() -> Tier {
+    probe::get()
+}
+
+/// Pin the dispatch tier — the A/B lever for the twin property suite
+/// (tests/simd_twins.rs) and the bench's scalar-vs-simd section.
+/// Overwrites the probe cache; subsequent [`tier`] calls return `t`
+/// until forced again. Process-global: tests that force tiers must not
+/// run concurrently with other tier-forcing tests.
+#[cfg(feature = "simd")]
+pub fn force_tier(t: Tier) {
+    probe::force(t);
+}
+
+#[cfg(feature = "simd")]
+mod probe {
+    use super::Tier;
+
+    /// Probe cache: 0 = unprobed, otherwise a `Tier` discriminant.
+    /// (Under `--cfg loom` the shimmed atomics cannot live in a static;
+    /// the probe is pure, so the loom build just re-probes per call.)
+    #[cfg(not(loom))]
+    static TIER: crate::sync::AtomicU32 = crate::sync::AtomicU32::new(0);
+
+    fn run() -> u32 {
+        // ZIPML_SIMD=scalar is the kill switch / out-of-process A-B
+        // lever: force the scalar twins even where SIMD is available.
+        if std::env::var_os("ZIPML_SIMD").is_some_and(|v| v == "scalar") {
+            return Tier::Scalar as u32;
+        }
+        // std::simd compiles everywhere; 8 f32 lanes map onto one AVX2
+        // half-register (x86-64) or two NEON registers (aarch64). On
+        // targets without native wide lanes the scalar schedule is at
+        // least as good, so the probe stays conservative.
+        if cfg!(any(target_arch = "x86_64", target_arch = "aarch64")) {
+            Tier::Lanes8 as u32
+        } else {
+            Tier::Scalar as u32
+        }
+    }
+
+    fn decode(t: u32) -> Tier {
+        if t == Tier::Lanes8 as u32 {
+            Tier::Lanes8
+        } else {
+            Tier::Scalar
+        }
+    }
+
+    #[cfg(not(loom))]
+    pub(super) fn get() -> Tier {
+        // ordering: relaxed — idempotent one-time probe cache: every
+        // racing prober computes and publishes the same value, and no
+        // other memory depends on observing the publication
+        let mut t = TIER.load(crate::sync::Ordering::Relaxed);
+        if t == 0 {
+            t = run();
+            // ordering: relaxed — same idempotent-cache contract
+            TIER.store(t, crate::sync::Ordering::Relaxed);
+        }
+        decode(t)
+    }
+
+    #[cfg(loom)]
+    pub(super) fn get() -> Tier {
+        decode(run())
+    }
+
+    #[cfg(not(loom))]
+    pub(super) fn force(t: Tier) {
+        // ordering: relaxed — test/bench override of the idempotent cache
+        TIER.store(t as u32, crate::sync::Ordering::Relaxed);
+    }
+
+    #[cfg(loom)]
+    pub(super) fn force(_t: Tier) {}
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    /// The probe is sticky and labeled; the feature-off build is pinned
+    /// to the scalar tier (the zero-behavioral-change contract).
+    #[test]
+    fn tier_is_stable_and_labeled() {
+        let t = tier();
+        assert_eq!(t, tier(), "probe must be sticky");
+        assert!(matches!(t.label(), "scalar" | "simd8"));
+        #[cfg(not(feature = "simd"))]
+        assert_eq!(t, Tier::Scalar, "stable default build must stay scalar");
+    }
+}

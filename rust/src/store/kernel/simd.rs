@@ -1,0 +1,140 @@
+//! Portable-SIMD (`std::simd`) twins of the dense kernel primitives —
+//! compiled only under the `simd` cargo feature on the pinned nightly,
+//! still `#![forbid(unsafe_code)]`: `std::simd` is a safe API that
+//! compiles for the baseline target, which is exactly why runtime
+//! dispatch can be a cached probe ([`super::dispatch`]) instead of
+//! unsafe fn-pointer multiversioning.
+//!
+//! **Bit-equality contract** (tests/simd_twins.rs, DESIGN.md §12): every
+//! function here returns bit-for-bit what its scalar twin returns. That
+//! contract pins the implementation shape:
+//!
+//! * [`masked_sum_dense`] keeps the scalar twin's exact 8-lane schedule:
+//!   the single `f32x8` accumulator *is* the scalar `[f32; 8]`
+//!   accumulator array (lane j only ever adds `g[8c+j]`, in the same
+//!   chunk order), the ragged tail runs the scalar remainder loop on the
+//!   extracted lane array, and the final reduction is the same fixed
+//!   tree — NOT `reduce_sum`, whose association order is unspecified.
+//!   Wider vectors (16/32 lanes) would change the association order of
+//!   the per-lane partial sums and are therefore not candidates at this
+//!   API: the lane count is part of the kernel's numeric contract.
+//! * Select masks AND at full f32 bit width, so unset lanes add the same
+//!   `+0.0` the scalar path adds (never `-0.0`): `v + (+0.0)` is
+//!   bit-preserving for every value the kernels accumulate onto.
+//! * The DS carry compare has **no** twin here — deliberately. One of
+//!   this codebase's "cannots": [`super::carry_mask_word`] is already
+//!   SIMD-within-a-register (64 column lanes per u64 bit-op), its early
+//!   stop makes the threshold count data-dependent, and batching words
+//!   or planes would reorder the pinned RNG draw stream that every DS
+//!   reader is property-tested against. Both tiers share the scalar
+//!   SWAR compare.
+
+use std::simd::num::SimdFloat;
+use std::simd::{f32x8, u32x8};
+
+/// Per-lane bit positions of one 8-column group within its plane byte.
+const LANE_SHIFTS: u32x8 = u32x8::from_array([0, 1, 2, 3, 4, 5, 6, 7]);
+
+/// Expand the low byte of `w` into the scalar twin's keep masks: lane j
+/// is all-ones iff bit j is set — the vector form of the scalar path's
+/// `0u32.wrapping_sub(bit)` (`0 - x` wraps lanewise on integer vectors).
+#[inline]
+fn keep_mask(w: u64) -> u32x8 {
+    let bits = (u32x8::splat((w & 0xFF) as u32) >> LANE_SHIFTS) & u32x8::splat(1);
+    u32x8::splat(0) - bits
+}
+
+/// SIMD twin of [`super::masked_sum_dense`], bit-identical by
+/// construction (same lane schedule, same remainder handling, same
+/// reduction tree — see the module docs).
+#[inline]
+pub fn masked_sum_dense(word: u64, g: &[f32]) -> f32 {
+    let g = &g[..g.len().min(64)];
+    let mut vacc = f32x8::splat(0.0);
+    let mut w = word;
+    let mut chunks = g.chunks_exact(8);
+    for c8 in &mut chunks {
+        let gv = f32x8::from_slice(c8);
+        vacc += f32x8::from_bits(gv.to_bits() & keep_mask(w));
+        w >>= 8;
+    }
+    let mut acc = vacc.to_array();
+    for (j, &gv) in chunks.remainder().iter().enumerate() {
+        let keep = 0u32.wrapping_sub(((w >> j) & 1) as u32);
+        acc[j] += f32::from_bits(gv.to_bits() & keep);
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// SIMD twin of [`super::select_add_word_scalar`]: identical per-column
+/// additions in identical order; unset lanes add a masked `+0.0`. Keeps
+/// the scalar twin's tail-contract guard so the poisoned-tail regression
+/// twins trip in this tier too.
+#[inline]
+pub fn select_add_word(word: u64, wgt: f32, m: &[f32], out: &mut [f32]) {
+    let lanes = m.len().min(out.len()).min(64);
+    debug_assert!(
+        lanes >= 64 || word >> lanes == 0,
+        "plane word has set bits at or beyond lane {lanes}: the weaved tail contract \
+         (bits beyond the live columns are zero) is violated"
+    );
+    let m = &m[..lanes];
+    let out = &mut out[..lanes];
+    let wv = f32x8::splat(wgt);
+    let mut w = word;
+    let mut oc = out.chunks_exact_mut(8);
+    let mut mc = m.chunks_exact(8);
+    for (o8, m8) in (&mut oc).zip(&mut mc) {
+        let add = f32x8::from_bits((wv * f32x8::from_slice(m8)).to_bits() & keep_mask(w));
+        o8.copy_from_slice(&(f32x8::from_slice(o8) + add).to_array());
+        w >>= 8;
+    }
+    for (j, (o, &mv)) in oc.into_remainder().iter_mut().zip(mc.remainder()).enumerate() {
+        let keep = 0u32.wrapping_sub(((w >> j) & 1) as u32);
+        *o += f32::from_bits((wgt * mv).to_bits() & keep);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rng::Rng;
+
+    /// In-module smoke of the bit-equality contract (the exhaustive
+    /// shapes × bits × multipliers suite is tests/simd_twins.rs): random
+    /// words and ±0.0-seeded inputs, full and ragged lane counts.
+    #[test]
+    fn simd_twins_bit_identical_smoke() {
+        let mut rng = Rng::new(71);
+        for lanes in [64usize, 63, 17, 9, 8, 7, 1] {
+            let mut g: Vec<f32> = (0..lanes).map(|_| rng.normal()).collect();
+            if lanes > 2 {
+                g[1] = -0.0; // signed-zero operand must survive masking
+                g[2] = 0.0;
+            }
+            for trial in 0..50 {
+                let dense = rng.next_u64();
+                let sparse = dense & rng.next_u64() & rng.next_u64();
+                for word in [dense, sparse, 0, u64::MAX] {
+                    let masked = if lanes == 64 { word } else { word & ((1u64 << lanes) - 1) };
+                    assert_eq!(
+                        super::masked_sum_dense(masked, &g).to_bits(),
+                        crate::store::kernel::masked_sum_dense(masked, &g).to_bits(),
+                        "masked_sum lanes={lanes} trial={trial} word={masked:#x}"
+                    );
+                    let wgt = rng.normal();
+                    let mut a: Vec<f32> = (0..lanes).map(|_| rng.normal()).collect();
+                    let mut b = a.clone();
+                    super::select_add_word(masked, wgt, &g, &mut a);
+                    crate::store::kernel::select_add_word_scalar(masked, wgt, &g, &mut b);
+                    for (j, (x, y)) in a.iter().zip(&b).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "select_add lanes={lanes} trial={trial} j={j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

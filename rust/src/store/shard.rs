@@ -612,6 +612,31 @@ impl ShardedStore {
         self.shards.iter().map(|s| s.bytes()).sum()
     }
 
+    /// Build the per-plane occupancy index on every shard
+    /// ([`WeavedMatrix::build_plane_index`]): truncating batch kernels
+    /// then skip all-zero 8-word plane runs in O(1) per run. Results are
+    /// bit-identical with or without the index (the sparse walk visits
+    /// nonzero words in the dense order); only the loads change. The
+    /// index is derived metadata — wire-byte accounting is untouched and
+    /// its own footprint is reported by [`ShardedStore::index_bytes`].
+    pub fn build_plane_index(&mut self) {
+        for s in &mut self.shards {
+            s.build_plane_index();
+        }
+    }
+
+    /// Whether the occupancy index is resident (host trace metadata).
+    pub fn has_plane_index(&self) -> bool {
+        self.shards.iter().all(|s| s.has_plane_index())
+    }
+
+    /// Occupancy-index bytes across shards — derived metadata, reported
+    /// separately from [`ShardedStore::stored_bytes`] and never part of
+    /// any per-read wire figure (DESIGN.md §12).
+    pub fn index_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.index_bytes()).sum()
+    }
+
     /// Exact bytes touched by reads since construction / last reset: the
     /// relaxed sum over the per-shard padded cells.
     ///
@@ -1068,6 +1093,54 @@ mod tests {
         assert_eq!(nb, 2 * store.bytes_per_row(5));
         assert_eq!(store.bytes_read(), nb as u64);
         assert_eq!(store.shard_bytes_read(99 / store.shard_rows()), nb as u64);
+    }
+
+    /// The plane-index fast path is invisible to results and accounting:
+    /// building the index changes no fused-batch bit, no wire byte, and
+    /// its own footprint is reported separately.
+    #[test]
+    fn plane_index_preserves_results_and_wire_accounting() {
+        let (a, sc) = mk(96, 70, 56);
+        let mut store = ShardedStore::ingest(&a, &sc, 8, 13, 5, 1);
+        let mut rng = crate::rng::Rng::new(9);
+        let x: Vec<f32> = (0..70).map(|_| rng.normal()).collect();
+        let mut k = StepKernel::new(70);
+        k.refresh(&sc.m, &x);
+        let rows: Vec<usize> = vec![95, 3, 40, 3, 0, 77, 12, 63, 40];
+        let targets: Vec<f32> = rows.iter().map(|&r| r as f32 * 0.1).collect();
+        let mut dense = vec![0.0f32; 70];
+        store.reset_bytes_read();
+        let bytes_dense = store.fused_grad_batch(&rows, 3, &k, &targets, &mut dense);
+        let counted_dense = store.bytes_read();
+
+        assert!(!store.has_plane_index());
+        store.build_plane_index();
+        assert!(store.has_plane_index());
+        assert!(store.index_bytes() > 0);
+        // 70 cols → 2 words/plane → 1 occ byte per plane, 8 bits × shard rows
+        let expect: usize = (0..store.num_shards())
+            .map(|si| {
+                let r0 = si * store.shard_rows();
+                (store.shard_rows().min(store.rows() - r0)) * store.bits() as usize
+            })
+            .sum();
+        assert_eq!(store.index_bytes(), expect);
+
+        let mut indexed = vec![0.0f32; 70];
+        store.reset_bytes_read();
+        let bytes_indexed = store.fused_grad_batch(&rows, 3, &k, &targets, &mut indexed);
+        for c in 0..70 {
+            assert_eq!(
+                dense[c].to_bits(),
+                indexed[c].to_bits(),
+                "c={c}: dense {} vs indexed {}",
+                dense[c],
+                indexed[c]
+            );
+        }
+        // wire accounting is byte-identical: the index never crosses it
+        assert_eq!(bytes_indexed, bytes_dense);
+        assert_eq!(store.bytes_read(), counted_dense);
     }
 
     #[test]

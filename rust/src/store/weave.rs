@@ -25,6 +25,23 @@ use crate::quant::scaling::ColumnScale;
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
+/// Optional rank-style occupancy summary of the weaved planes: one byte
+/// per 8-word run, bit k set ⇔ word `8·run + k` of that plane is
+/// nonzero. Eight words are one 64-byte cache line, so a zero occupancy
+/// byte lets the truncating kernels skip a whole line of plane loads
+/// with a single byte test (DESIGN.md §12). The index is *derived*
+/// metadata: it never crosses the simulated memory wire, and its bytes
+/// are accounted separately ([`WeavedMatrix::index_bytes`]) from the
+/// §5/§8 wire-byte contract, which is unchanged.
+#[derive(Clone, Debug)]
+pub struct PlaneIndex {
+    /// `rows × bits × runs_per_plane` occupancy bytes, row-major then
+    /// plane-major — the same nesting order as the plane data itself.
+    occ: Vec<u8>,
+    /// Occupancy bytes per plane: ceil(words_per_plane / 8).
+    runs_per_plane: usize,
+}
+
 /// A (rows × cols) matrix of b-bit level indices stored as bit planes.
 ///
 /// Planes are packed at `u64` word granularity, so each plane of a row
@@ -44,6 +61,9 @@ pub struct WeavedMatrix {
     words_per_plane: usize,
     /// rows × bits planes, row-major then plane-major (MSB plane first).
     data: Vec<u64>,
+    /// Optional occupancy index for the truncating sparse fast path;
+    /// built on demand by [`WeavedMatrix::build_plane_index`].
+    index: Option<PlaneIndex>,
 }
 
 impl WeavedMatrix {
@@ -95,7 +115,7 @@ impl WeavedMatrix {
                 }
             }
         }
-        WeavedMatrix { rows, cols, bits, s, scale, words_per_plane: wpp, data }
+        WeavedMatrix { rows, cols, bits, s, scale, words_per_plane: wpp, data, index: None }
     }
 
     /// Re-weave an existing packed store (identical indices, new layout).
@@ -185,9 +205,11 @@ impl WeavedMatrix {
         let stride = self.bits as usize * wpp;
         let base = r * stride;
         let planes = &self.data[base..base + stride];
+        let mut thresholds = super::kernel::BufferedThresholds::new(rng);
         for (w, chunk) in out[..self.cols].chunks_mut(64).enumerate() {
             self.gather_word(base, w, p, chunk);
-            let mut carry = super::kernel::carry_mask_word(planes, wpp, self.bits, p, w, rng);
+            let mut carry =
+                super::kernel::carry_mask_word(planes, wpp, self.bits, p, w, &mut thresholds);
             while carry != 0 {
                 let j = carry.trailing_zeros() as usize;
                 // tail carry bits can't exist: residual planes store 0 there
@@ -213,11 +235,13 @@ impl WeavedMatrix {
         let inv_s2 = 2.0 / self.s as f32;
         let m = &self.scale.m;
         let mut idx = [0u16; 64];
+        let mut thresholds = super::kernel::BufferedThresholds::new(rng);
         for w in 0..wpp {
             let c0 = w * 64;
             let lim = (self.cols - c0).min(64);
             self.gather_word(base, w, p, &mut idx[..lim]);
-            let carry = super::kernel::carry_mask_word(planes, wpp, self.bits, p, w, rng);
+            let carry =
+                super::kernel::carry_mask_word(planes, wpp, self.bits, p, w, &mut thresholds);
             for (j, &h) in idx[..lim].iter().enumerate() {
                 let fine = (h as f32 + ((carry >> j) & 1) as f32) * q;
                 out[c0 + j] = (fine * inv_s2 - 1.0) * m[c0 + j];
@@ -252,6 +276,50 @@ impl WeavedMatrix {
 
     pub fn words_per_plane(&self) -> usize {
         self.words_per_plane
+    }
+
+    /// Build (or rebuild) the per-plane occupancy index. Idempotent over
+    /// the immutable plane data; kernels pick it up on the next call.
+    pub fn build_plane_index(&mut self) {
+        let rpp = self.runs_per_plane();
+        let mut occ = vec![0u8; self.rows * self.bits as usize * rpp];
+        for (pi, plane) in self.data.chunks(self.words_per_plane.max(1)).enumerate() {
+            for (wi, &word) in plane.iter().enumerate() {
+                if word != 0 {
+                    occ[pi * rpp + wi / 8] |= 1 << (wi % 8);
+                }
+            }
+        }
+        self.index = Some(PlaneIndex { occ, runs_per_plane: rpp });
+    }
+
+    /// Whether the occupancy index is resident (host trace metadata).
+    pub fn has_plane_index(&self) -> bool {
+        self.index.is_some()
+    }
+
+    /// Bytes held by the occupancy index — derived metadata, reported
+    /// separately from [`WeavedMatrix::bytes`] and never part of any
+    /// per-read wire-byte figure (DESIGN.md §12).
+    pub fn index_bytes(&self) -> usize {
+        self.index.as_ref().map_or(0, |ix| ix.occ.len())
+    }
+
+    /// Occupancy bytes per plane: ceil(words_per_plane / 8). Valid even
+    /// before the index is built (kernels hoist it outside row loops).
+    #[inline]
+    pub(crate) fn runs_per_plane(&self) -> usize {
+        self.words_per_plane.div_ceil(8)
+    }
+
+    /// Occupancy bytes of row `r` (`bits × runs_per_plane`, plane-major —
+    /// mirroring [`WeavedMatrix::row_planes`]), if the index is built.
+    #[inline]
+    pub(crate) fn row_plane_occ(&self, r: usize) -> Option<&[u8]> {
+        self.index.as_ref().map(|ix| {
+            let stride = self.bits as usize * ix.runs_per_plane;
+            &ix.occ[r * stride..(r + 1) * stride]
+        })
     }
 
     /// Deliberately violate the tail contract (set a bit at or beyond the
@@ -449,6 +517,41 @@ mod tests {
                 "c={c}: mean {mean} vs stored {} (tol {tol})",
                 stored[c]
             );
+        }
+    }
+
+    /// The occupancy index marks exactly the nonzero plane words, its
+    /// bytes are accounted apart from the payload, and building it leaves
+    /// every wire-byte figure unchanged.
+    #[test]
+    fn plane_index_marks_nonzero_words_and_separate_bytes() {
+        let (a, sc) = mk(7, 200, 21);
+        let mut rng = Rng::new(22);
+        let mut w = WeavedMatrix::quantize(&a, &sc, 6, &mut rng);
+        let (bytes, per_row) = (w.bytes(), w.bytes_per_row(3));
+        assert!(!w.has_plane_index());
+        assert_eq!(w.index_bytes(), 0);
+        assert_eq!(w.row_plane_occ(0), None);
+        w.build_plane_index();
+        assert!(w.has_plane_index());
+        // 200 cols → 4 words/plane → 1 occupancy byte per plane
+        let rpp = w.runs_per_plane();
+        assert_eq!(rpp, 1);
+        assert_eq!(w.index_bytes(), 7 * 6 * rpp);
+        // wire/payload accounting is untouched by the derived index
+        assert_eq!(w.bytes(), bytes);
+        assert_eq!(w.bytes_per_row(3), per_row);
+        let wpp = w.words_per_plane();
+        for r in 0..7 {
+            let occ = w.row_plane_occ(r).unwrap();
+            assert_eq!(occ.len(), 6 * rpp);
+            let planes = w.row_planes(r);
+            for t in 0..6usize {
+                for (wi, &word) in planes[t * wpp..(t + 1) * wpp].iter().enumerate() {
+                    let bit = (occ[t * rpp + wi / 8] >> (wi % 8)) & 1;
+                    assert_eq!(bit == 1, word != 0, "r={r} t={t} wi={wi}");
+                }
+            }
         }
     }
 

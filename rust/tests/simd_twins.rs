@@ -1,0 +1,456 @@
+//! SIMD twin property suite (DESIGN.md §12).
+//!
+//! Three layers, each asserting **bit** equality, never approximate:
+//!
+//! 1. **Primitive twins** — `masked_sum_dense` and `select_add_word_scalar`
+//!    against an independent in-test re-statement of their documented
+//!    schedules (eight lane accumulators, masked `+0.0` adds, the fixed
+//!    `((a0+a1)+(a2+a3))+((a4+a5)+(a6+a7))` reduction). These run with the
+//!    `simd` feature OFF too, so the suite is never vacuously green: the
+//!    scalar oracle pins the scalar implementation to the contract the SIMD
+//!    twin is then held to. With the feature ON, `kernel::simd::*` is
+//!    additionally compared lane-for-lane.
+//! 2. **Composition** — the dispatched blocked kernels (`dot_rows_block`,
+//!    `axpy_rows_block`, and their DS variants) against a scalar oracle
+//!    rebuilt from *public* scalar primitives over planes reconstructed via
+//!    `read_row`, across shapes 63/64/65/130 × bits 1..=16 × all four
+//!    [`GlmLoss`] multipliers, dense and rank-indexed. Whatever tier the
+//!    probe picked, the result must equal the scalar composition.
+//! 3. **Forced tiers** (`simd` feature only) — the one test allowed to call
+//!    `dispatch::force_tier`, running the composition suite under both
+//!    tiers explicitly.
+//!
+//! Plus `should_panic` twins for the poisoned-tail debug guard, and the
+//! threshold-source equivalence (buffered vs direct carry draws).
+
+use zipml::quant::ColumnScale;
+use zipml::rng::Rng;
+use zipml::sgd::{GlmLoss, ModelKind};
+use zipml::store::kernel::{self, StepKernel, MASKED_SUM_SPARSE_BITS};
+use zipml::store::WeavedMatrix;
+use zipml::tensor::Matrix;
+
+/// Column counts straddling the word boundary: one short word, exactly one
+/// word, one word + 1 lane, and two words + 2 lanes.
+const SHAPES: [usize; 4] = [63, 64, 65, 130];
+
+fn models() -> [ModelKind; 4] {
+    [ModelKind::Linreg, ModelKind::Lssvm { c: 1e-4 }, ModelKind::Logistic, ModelKind::Svm]
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: lane {i}: {x} vs {y}");
+    }
+}
+
+/// Values with planted `+0.0` / `-0.0` lanes — the sign-of-zero cases the
+/// masked-add contract (§8/§12) is about.
+fn gen_values(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut g: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+    for i in (0..len).step_by(7) {
+        g[i] = 0.0;
+    }
+    for i in (3..len).step_by(11) {
+        g[i] = -0.0;
+    }
+    g
+}
+
+/// Dense, sparse, and boundary words (callers mask to the live lanes).
+fn test_words(rng: &mut Rng) -> Vec<u64> {
+    let mut ws = vec![0u64, !0u64, 1, 1 << 63, 0x8000_0001_0000_0001];
+    for _ in 0..24 {
+        ws.push(rng.next_u64());
+    }
+    for _ in 0..12 {
+        ws.push(rng.next_u64() & rng.next_u64() & rng.next_u64());
+    }
+    ws
+}
+
+/// Independent re-statement of the documented `masked_sum_dense` schedule:
+/// lane j accumulates g[8c+j]; unset lanes add an explicit `+0.0`; fixed
+/// pairwise reduction. Deliberately NOT a copy of the implementation (no
+/// bit masking tricks) — it encodes the contract, not the code.
+fn masked_sum_oracle(word: u64, g: &[f32]) -> f32 {
+    let g = &g[..g.len().min(64)];
+    let mut acc = [0.0f32; 8];
+    for (c, chunk) in g.chunks(8).enumerate() {
+        for (j, &gv) in chunk.iter().enumerate() {
+            if (word >> (8 * c + j)) & 1 == 1 {
+                acc[j] += gv;
+            } else {
+                acc[j] += 0.0;
+            }
+        }
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Independent re-statement of the `select_add_word` contract: set lanes
+/// add exactly `wgt·m[j]`, unset lanes add `+0.0` (so a `-0.0` already in
+/// `out` is normalized to `+0.0` by both sides identically).
+fn select_add_oracle(word: u64, wgt: f32, m: &[f32], out: &mut [f32]) {
+    let lanes = m.len().min(out.len()).min(64);
+    for j in 0..lanes {
+        if (word >> j) & 1 == 1 {
+            out[j] += wgt * m[j];
+        } else {
+            out[j] += 0.0;
+        }
+    }
+}
+
+/// Named by the `// twin:` contract comment at the `masked_sum` dispatch
+/// site (lint rule `simd-twin-contract`).
+#[test]
+fn simd_masked_sum_bit_identical_to_scalar() {
+    let mut rng = Rng::new(0x51D0);
+    for &len in &SHAPES {
+        let live = len.min(64);
+        let mask = if live == 64 { !0u64 } else { (1u64 << live) - 1 };
+        for trial in 0..40 {
+            let g = gen_values(&mut rng, len);
+            for word in test_words(&mut rng) {
+                let word = word & mask;
+                let want = masked_sum_oracle(word, &g);
+                let scalar = kernel::masked_sum_dense(word, &g);
+                assert_eq!(
+                    scalar.to_bits(),
+                    want.to_bits(),
+                    "scalar schedule drifted from contract: len={len} trial={trial} word={word:#x}"
+                );
+                #[cfg(feature = "simd")]
+                {
+                    let simd = kernel::simd::masked_sum_dense(word, &g);
+                    assert_eq!(
+                        simd.to_bits(),
+                        scalar.to_bits(),
+                        "simd twin diverged: len={len} trial={trial} word={word:#x}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Named by the `// twin:` contract comment at the `select_add_word`
+/// dispatch site. Weights come from all four GLM step multipliers so the
+/// exact zeros the hinge emits and the saturated `-0.0` the logistic
+/// multiplier emits both cross the select masks.
+#[test]
+fn simd_select_add_bit_identical_to_scalar() {
+    let mut rng = Rng::new(0x5E1E);
+    for &len in &SHAPES {
+        let live = len.min(64);
+        let mask = if live == 64 { !0u64 } else { (1u64 << live) - 1 };
+        for model in models() {
+            for trial in 0..12 {
+                let m = gen_values(&mut rng, len);
+                let dot = 4.0 * rng.normal();
+                let target = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+                let wgt = model.multiplier(dot, target);
+                let mut seed_out: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+                for i in (0..len).step_by(5) {
+                    seed_out[i] = -0.0;
+                }
+                for word in test_words(&mut rng) {
+                    let word = word & mask;
+                    let mut want = seed_out.clone();
+                    select_add_oracle(word, wgt, &m, &mut want);
+                    let mut scalar = seed_out.clone();
+                    kernel::select_add_word_scalar(word, wgt, &m, &mut scalar);
+                    let what =
+                        format!("select_add {} len={len} trial={trial} word={word:#x}", model.label());
+                    assert_bits_eq(&scalar, &want, &what);
+                    #[cfg(feature = "simd")]
+                    {
+                        let mut simd = seed_out.clone();
+                        kernel::simd::select_add_word(word, wgt, &m, &mut simd);
+                        assert_bits_eq(&simd, &scalar, &format!("simd twin: {what}"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Composition layer: dispatched kernels vs a scalar oracle rebuilt from
+// public scalar primitives over planes reconstructed through `read_row`.
+// ---------------------------------------------------------------------------
+
+fn mk_store(cols: usize, bits: u32, seed: u64) -> WeavedMatrix {
+    const ROWS: usize = 5;
+    let mut rng = Rng::new(seed);
+    let mut data: Vec<f32> = (0..ROWS * cols).map(|_| rng.normal()).collect();
+    // a sparse stretch produces zero plane words (rank-index skip targets)
+    for v in data.iter_mut().skip(cols / 3).step_by(3) {
+        *v = 0.0;
+    }
+    let a = Matrix::from_vec(ROWS, cols, data);
+    let mut scale = ColumnScale::from_data(&a);
+    if cols > 2 {
+        scale.m[1] = 0.0; // zero-scale columns stay inert through every path
+    }
+    WeavedMatrix::quantize(&a, &scale, bits, &mut rng)
+}
+
+/// Reconstruct the p-truncated bit planes of row `r` from the public
+/// `read_row`: bit (p−1−t) of the truncated index IS plane t.
+fn planes_of(w: &WeavedMatrix, r: usize, p: u32) -> (Vec<u64>, usize) {
+    let wpp = w.words_per_plane();
+    let mut idx = vec![0u16; w.cols];
+    w.read_row(r, p, &mut idx);
+    let mut planes = vec![0u64; p as usize * wpp];
+    for (c, &v) in idx.iter().enumerate() {
+        for t in 0..p as usize {
+            if (v >> (p as usize - 1 - t)) & 1 == 1 {
+                planes[t * wpp + c / 64] |= 1u64 << (c % 64);
+            }
+        }
+    }
+    (planes, wpp)
+}
+
+/// The scalar `masked_sum` dispatch rule: popcount picks sparse vs dense.
+fn masked_sum_scalar(word: u64, g: &[f32]) -> f32 {
+    if word.count_ones() <= MASKED_SUM_SPARSE_BITS {
+        kernel::masked_sum_sparse(word, g)
+    } else {
+        kernel::masked_sum_dense(word, g)
+    }
+}
+
+/// Scalar oracle for the fused truncating dot (dot_planes' documented
+/// plane-major order, per-plane f64 partial sums).
+fn dot_oracle(w: &WeavedMatrix, r: usize, p: u32, k: &StepKernel) -> f32 {
+    let (planes, wpp) = planes_of(w, r, p);
+    let inv_s2 = 2.0 / ((1u32 << p) - 1) as f32;
+    let mut acc = 0.0f64;
+    for t in 0..p as usize {
+        let weight = (1u64 << (p as usize - 1 - t)) as f64;
+        let mut psum = 0.0f64;
+        for (wi, &word) in planes[t * wpp..(t + 1) * wpp].iter().enumerate() {
+            if word != 0 {
+                psum += masked_sum_scalar(word, &k.g()[wi * 64..]) as f64;
+            }
+        }
+        acc += weight * psum;
+    }
+    (inv_s2 as f64 * acc - k.sum_g() as f64) as f32
+}
+
+/// Scalar oracle for the blocked truncating axpy (plane part only): per
+/// row, per plane MSB-first, per word ascending — the dense visit order
+/// the rank-indexed path also reproduces.
+fn axpy_oracle(w: &WeavedMatrix, rows: &[usize], p: u32, coefs: &[f32], out: &mut [f32]) {
+    let inv_s2 = 2.0 / ((1u32 << p) - 1) as f32;
+    for (&r, &coef) in rows.iter().zip(coefs) {
+        let (planes, wpp) = planes_of(w, r, p);
+        for t in 0..p as usize {
+            let wgt = coef * inv_s2 * (1u64 << (p as usize - 1 - t)) as f32;
+            for (wi, &word) in planes[t * wpp..(t + 1) * wpp].iter().enumerate() {
+                if word != 0 {
+                    kernel::select_add_word_scalar(
+                        word,
+                        wgt,
+                        &w.scale.m[wi * 64..],
+                        &mut out[wi * 64..],
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Scalar oracle for the stochastic dot: full-width planes, word-major,
+/// fine-grid plane weights, carry via the public `carry_mask_word` +
+/// `BufferedThresholds` — the exact documented DS order.
+fn dot_ds_oracle(w: &WeavedMatrix, r: usize, p: u32, k: &StepKernel, rng: &mut Rng) -> f32 {
+    let (planes, wpp) = planes_of(w, r, w.bits);
+    let bits = w.bits as usize;
+    let inv_s2 = 2.0 / w.s as f32;
+    let carry_w = (1u64 << (bits - p as usize)) as f64;
+    let mut acc = 0.0f64;
+    let mut thresholds = kernel::BufferedThresholds::new(rng);
+    for wi in 0..wpp {
+        let g = &k.g()[wi * 64..];
+        for t in 0..p as usize {
+            let word = planes[t * wpp + wi];
+            if word != 0 {
+                acc += (1u64 << (bits - 1 - t)) as f64 * masked_sum_scalar(word, g) as f64;
+            }
+        }
+        let carry = kernel::carry_mask_word(&planes, wpp, w.bits, p, wi, &mut thresholds);
+        if carry != 0 {
+            acc += carry_w * masked_sum_scalar(carry, g) as f64;
+        }
+    }
+    (inv_s2 as f64 * acc - k.sum_g() as f64) as f32
+}
+
+/// Scalar oracle for one row of the stochastic axpy (plane part only),
+/// mirroring the lane-parallel core's word-major order and per-row-call
+/// threshold buffer.
+fn axpy_ds_oracle(w: &WeavedMatrix, r: usize, p: u32, coef: f32, rng: &mut Rng, out: &mut [f32]) {
+    let (planes, wpp) = planes_of(w, r, w.bits);
+    let bits = w.bits as usize;
+    let m = &w.scale.m;
+    let inv_s2 = 2.0 / w.s as f32;
+    let carry_wgt = coef * inv_s2 * (1u64 << (bits - p as usize)) as f32;
+    let mut thresholds = kernel::BufferedThresholds::new(rng);
+    for wi in 0..wpp {
+        let c0 = wi * 64;
+        for t in 0..p as usize {
+            let wgt = coef * inv_s2 * (1u64 << (bits - 1 - t)) as f32;
+            let word = planes[t * wpp + wi];
+            if word != 0 {
+                kernel::select_add_word_scalar(word, wgt, &m[c0..], &mut out[c0..]);
+            }
+        }
+        let carry = kernel::carry_mask_word(&planes, wpp, w.bits, p, wi, &mut thresholds);
+        if carry != 0 {
+            kernel::select_add_word_scalar(carry, carry_wgt, &m[c0..], &mut out[c0..]);
+        }
+    }
+}
+
+/// The composition property: every dispatched kernel equals its scalar
+/// oracle bit-for-bit, dense and rank-indexed, all four GLM multipliers,
+/// DS streams consumed identically.
+fn run_composition_suite(shapes: &[usize], bit_widths: &[u32]) {
+    let rows = [4usize, 0, 2, 2, 1];
+    for &cols in shapes {
+        for &bits in bit_widths {
+            let mut w = mk_store(cols, bits, 0xC0DE + cols as u64 * 31 + bits as u64);
+            let mut rng = Rng::new(0x11 * cols as u64 + bits as u64);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+            let targets: Vec<f32> = rows
+                .iter()
+                .map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+                .collect();
+            let mut k = StepKernel::new(cols);
+            k.refresh(&w.scale.m, &x);
+            for indexed in [false, true] {
+                if indexed {
+                    w.build_plane_index();
+                }
+                for p in [1, bits.div_ceil(2), bits] {
+                    let tag = format!("cols={cols} bits={bits} p={p} indexed={indexed}");
+
+                    let mut dots = vec![0.0f32; rows.len()];
+                    kernel::dot_rows_block(&w, &rows, p, &k, &mut dots);
+                    for (i, &r) in rows.iter().enumerate() {
+                        let want = dot_oracle(&w, r, p, &k);
+                        assert_eq!(dots[i].to_bits(), want.to_bits(), "blocked dot row {r}: {tag}");
+                        let single = kernel::dot_row(&w, r, p, &k);
+                        assert_eq!(single.to_bits(), want.to_bits(), "dot_row {r}: {tag}");
+                    }
+
+                    for model in models() {
+                        let coefs: Vec<f32> = dots
+                            .iter()
+                            .zip(&targets)
+                            .map(|(&d, &t)| model.multiplier(d, t))
+                            .collect();
+                        let coef_sum = coefs.iter().sum::<f32>();
+                        let mut got = vec![0.0f32; cols];
+                        kernel::axpy_rows_block(&w, &rows, p, &coefs, &mut got);
+                        kernel::axpy_affine(coef_sum, &w.scale.m, &mut got);
+                        let mut want = vec![0.0f32; cols];
+                        axpy_oracle(&w, &rows, p, &coefs, &mut want);
+                        kernel::axpy_affine(coef_sum, &w.scale.m, &mut want);
+                        assert_bits_eq(&got, &want, &format!("axpy {}: {tag}", model.label()));
+                    }
+
+                    // DS twins on twin streams; end states must agree too,
+                    // so the buffered path provably consumed the same draws.
+                    let seed = 0xD5_0000 ^ ((cols as u64) << 8) ^ ((bits as u64) << 4) ^ p as u64;
+                    let mut ra = Rng::new(seed);
+                    let mut rb = Rng::new(seed);
+                    let mut ds = vec![0.0f32; rows.len()];
+                    kernel::dot_rows_block_ds(&w, &rows, p, &k, &mut ra, &mut ds);
+                    for (i, &r) in rows.iter().enumerate() {
+                        let want = dot_ds_oracle(&w, r, p, &k, &mut rb);
+                        assert_eq!(ds[i].to_bits(), want.to_bits(), "DS dot row {r}: {tag}");
+                    }
+                    let coefs: Vec<f32> =
+                        ds.iter().zip(&targets).map(|(&d, &t)| d - t).collect();
+                    let mut got = vec![0.0f32; cols];
+                    kernel::axpy_rows_block_ds(&w, &rows, p, &coefs, &mut ra, &mut got);
+                    let mut want = vec![0.0f32; cols];
+                    for (&r, &coef) in rows.iter().zip(&coefs) {
+                        axpy_ds_oracle(&w, r, p, coef, &mut rb, &mut want);
+                    }
+                    assert_bits_eq(&got, &want, &format!("DS axpy: {tag}"));
+                    assert_eq!(ra.next_u64(), rb.next_u64(), "DS stream end state: {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_glm_composition_matches_scalar_oracle_bitwise() {
+    run_composition_suite(&SHAPES, &(1..=16).collect::<Vec<u32>>());
+}
+
+/// The ONE test allowed to force the process-global dispatch tier.
+/// Concurrent tests in this binary keep passing during the flips precisely
+/// because the twins are bit-identical — tier choice is unobservable.
+#[cfg(feature = "simd")]
+#[test]
+fn forced_tiers_agree_bitwise_end_to_end() {
+    use zipml::store::kernel::dispatch::{force_tier, tier, Tier};
+    let probed = tier();
+    for t in [Tier::Scalar, Tier::Lanes8] {
+        force_tier(t);
+        run_composition_suite(&[65, 130], &[3, 8, 16]);
+    }
+    force_tier(probed);
+}
+
+/// Buffered and direct threshold sources must sample identical carries:
+/// served threshold k is raw draw k regardless of the wrapper.
+#[test]
+fn buffered_and_direct_threshold_sources_sample_identical_carries() {
+    let bits = 6u32;
+    let wpp = 2usize;
+    let mut plane_rng = Rng::new(0xCA881);
+    let planes: Vec<u64> = (0..bits as usize * wpp).map(|_| plane_rng.next_u64()).collect();
+    for p in 1..=bits {
+        let mut direct = Rng::new(0x7117 + p as u64);
+        let mut raw = Rng::new(0x7117 + p as u64);
+        let mut buffered = kernel::BufferedThresholds::new(&mut raw);
+        for wi in 0..wpp {
+            let a = kernel::carry_mask_word(&planes, wpp, bits, p, wi, &mut direct);
+            let b = kernel::carry_mask_word(&planes, wpp, bits, p, wi, &mut buffered);
+            assert_eq!(a, b, "carry mask diverged: p={p} wi={wi}");
+        }
+    }
+}
+
+/// Poisoned-tail `should_panic` twins: the debug guard must hold the SIMD
+/// twin to the same weaved tail contract as the scalar path.
+#[cfg(debug_assertions)]
+mod poisoned_tail {
+    #[test]
+    #[should_panic(expected = "tail contract")]
+    fn scalar_select_add_rejects_poisoned_tail() {
+        let m = vec![1.0f32; 10];
+        let mut out = vec![0.0f32; 10];
+        zipml::store::kernel::select_add_word_scalar(1u64 << 10, 1.0, &m, &mut out);
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    #[should_panic(expected = "tail contract")]
+    fn simd_select_add_rejects_poisoned_tail() {
+        let m = vec![1.0f32; 10];
+        let mut out = vec![0.0f32; 10];
+        zipml::store::kernel::simd::select_add_word(1u64 << 10, 1.0, &m, &mut out);
+    }
+}
