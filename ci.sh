@@ -20,9 +20,14 @@
 #   --quick   alias for the default gate (kept for muscle memory)
 #   --bench   build + run the fused-dot bench at FULL measurement budgets,
 #             refreshing BENCH_kernels.json with trajectory-quality numbers
-#   --analyze concurrency & invariant verification (DESIGN.md §11):
-#             zipml-lint over rust/src + its fixture suite, then the loom
-#             models (RUSTFLAGS="--cfg loom"); Miri/TSan run as separate
+#   --analyze concurrency & invariant verification (DESIGN.md §11, §13):
+#             zipml-lint v2 (all twelve rules, cross-file flow analysis)
+#             over rust/src in baseline-diff mode — findings land in
+#             LINT_findings.json (CI artifact) and the run fails only on
+#             findings not in LINT_baseline.json — plus its fixture
+#             suites, the cfg-matrix typecheck (default cfg, nightly
+#             `--features simd`, `--cfg loom`), then the loom models
+#             (RUSTFLAGS="--cfg loom"); Miri/TSan run as separate
 #             nightly CI jobs (see .github/workflows/ci.yml)
 #   --simd    the std::simd twin tier (DESIGN.md §12) on the pinned
 #             nightly: full test suite with `--features simd` (includes
@@ -41,10 +46,22 @@ case "$MODE" in
 esac
 
 if [[ "$MODE" == "--analyze" ]]; then
-  echo "== zipml-lint: invariant rules over rust/src (DESIGN.md §11) =="
-  cargo run --release -p zipml-lint
+  NIGHTLY="${SANITIZER_NIGHTLY:-nightly-2025-07-01}"
+  echo "== zipml-lint v2: twelve invariant rules over rust/src, baseline diff (DESIGN.md §11, §13) =="
+  # writes the full findings stream (JSONL, one object per finding) to
+  # LINT_findings.json — uploaded as a CI artifact — and fails only on
+  # findings absent from the committed LINT_baseline.json
+  cargo run --release -p zipml-lint -- --json=LINT_findings.json --baseline=LINT_baseline.json
   echo "== zipml-lint: rule unit + fixture tests (each rule fires at its seeded lines) =="
   cargo test --release -p zipml-lint -q
+  echo "== cfg-matrix: every cfg surface typechecks (default / simd nightly / --cfg loom) =="
+  cargo check --workspace --all-targets
+  if command -v rustup > /dev/null && rustup toolchain list | grep -q "$NIGHTLY"; then
+    cargo +"$NIGHTLY" check -p zipml --features simd
+  else
+    echo "   (skipping --features simd leg: pinned nightly $NIGHTLY not installed)"
+  fi
+  RUSTFLAGS="--cfg loom" cargo check --release -p zipml --test loom_models
   echo "== loom models: ShardedU64 / store byte accounting / RacyF32Cell =="
   RUSTFLAGS="--cfg loom" cargo test --release -p zipml --test loom_models -- --nocapture
   echo "ANALYZE OK"

@@ -1,0 +1,695 @@
+//! The item tree: a brace-matched, per-file model of the code the rules
+//! reason about across files.
+//!
+//! Built over the scrubbed code lines (never comments or literals), the
+//! model extracts:
+//!
+//! * fn items — name, body line span, visibility, enclosing impl
+//!   type/trait, `#[deprecated]`, and whether the fn sits in test scope
+//!   (`#[cfg(test)] mod` or a `#[test]`/`#[cfg(test)]` attribute);
+//! * impl blocks — type name and optional trait name, generics stripped;
+//! * inline `mod` scopes (with `#[cfg(test)]` detection) and `mod name;`
+//!   declarations, mirroring the crate's module graph;
+//! * call sites — `ident(` edges attributed to the innermost enclosing
+//!   fn (name-based: the cross-file call graph joins edges by callee
+//!   name, deliberately over-approximating — see DESIGN.md §13);
+//! * match blocks with their top-level arm pattern texts.
+//!
+//! The parser is recovery-oriented: any construct it cannot interpret is
+//! simply not an item. It never fails on weird-but-valid Rust; it only
+//! has to be *consistent*, because every flow rule is fixture-pinned
+//! against it.
+
+use crate::scrub::{scrub, ScrubbedLine};
+
+/// Keywords that look like `ident(` but are never call sites.
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "fn", "let", "else", "move", "in", "as",
+    "ref", "mut", "box", "await", "yield", "unsafe",
+];
+
+/// One `fn` item with a resolved body span.
+#[derive(Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// 0-based line of the `fn` keyword.
+    pub line: usize,
+    /// Body line span (open-brace line ..= close-brace line), 0-based.
+    pub body: (usize, usize),
+    /// Any `pub` / `pub(crate)` / `pub(super)` visibility.
+    pub is_pub: bool,
+    /// Enclosing `impl TYPE` type name, if any.
+    pub impl_type: Option<String>,
+    /// Enclosing `impl TRAIT for TYPE` trait name, if any.
+    pub impl_trait: Option<String>,
+    pub deprecated: bool,
+    /// In a `#[cfg(test)] mod` or carrying `#[test]`/`#[cfg(test)]`.
+    pub in_test: bool,
+}
+
+/// One `impl` block (inherent or trait) with its body span.
+#[derive(Debug)]
+pub struct ImplItem {
+    pub type_name: Option<String>,
+    pub trait_name: Option<String>,
+    pub line: usize,
+    pub body: (usize, usize),
+}
+
+/// One inline `mod name { … }` scope.
+#[derive(Debug)]
+pub struct ModScope {
+    pub name: String,
+    pub line: usize,
+    pub is_test: bool,
+    pub body: (usize, usize),
+}
+
+/// One `match` expression with its top-level arms.
+#[derive(Debug)]
+pub struct MatchBlock {
+    /// 0-based line of the `match` keyword.
+    pub line: usize,
+    pub body: (usize, usize),
+    /// Brace depth of the body's interior (arm level).
+    pub depth: usize,
+    /// (0-based line, pattern text before `=>`) per top-level arm.
+    pub arms: Vec<(usize, String)>,
+}
+
+/// One `ident(` call site.
+#[derive(Debug)]
+pub struct CallSite {
+    /// Index into [`FileModel::fns`] of the innermost enclosing fn.
+    pub caller: Option<usize>,
+    pub callee: String,
+    /// 0-based line.
+    pub line: usize,
+}
+
+#[derive(Debug, PartialEq, Eq, Clone)]
+enum Tok {
+    Ident(String),
+    Num,
+    Punct(char),
+}
+
+fn tokens(code: &str) -> Vec<Tok> {
+    let b: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let ch = b[i];
+        if ch.is_alphabetic() || ch == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.push(Tok::Ident(b[start..i].iter().collect()));
+        } else if ch.is_ascii_digit() {
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.push(Tok::Num);
+        } else if ch == ' ' || ch == '\t' {
+            i += 1;
+        } else {
+            out.push(Tok::Punct(ch));
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Remove `<…>` spans from an impl-header token list (no shift operators
+/// appear in impl headers, so plain depth counting is safe).
+fn strip_generics(toks: &[Tok]) -> Vec<Tok> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    for t in toks {
+        match t {
+            Tok::Punct('<') => depth += 1,
+            Tok::Punct('>') if depth > 0 => depth -= 1,
+            _ if depth == 0 => out.push(t.clone()),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Last ident token's text (so `kernel::Foo` -> `Foo`), or None.
+fn last_path_ident(toks: &[Tok]) -> Option<String> {
+    toks.iter().rev().find_map(|t| match t {
+        Tok::Ident(s) => Some(s.clone()),
+        _ => None,
+    })
+}
+
+fn is_ident(t: Option<&Tok>, name: &str) -> bool {
+    matches!(t, Some(Tok::Ident(s)) if s == name)
+}
+
+fn is_punct(t: Option<&Tok>, c: char) -> bool {
+    matches!(t, Some(Tok::Punct(p)) if *p == c)
+}
+
+/// Everything the flow rules need to know about one source file.
+pub struct FileModel {
+    pub rel_path: String,
+    pub lines: Vec<ScrubbedLine>,
+    pub fns: Vec<FnItem>,
+    pub impls: Vec<ImplItem>,
+    pub mods: Vec<ModScope>,
+    /// (0-based line, name) per `mod name;` declaration.
+    pub mod_decls: Vec<(usize, String)>,
+    pub matches: Vec<MatchBlock>,
+    pub calls: Vec<CallSite>,
+}
+
+enum OpenObj {
+    Fn { f: FnItem },
+    Impl { im: ImplItem },
+    Mod { m: ModScope },
+    Match { mb: MatchBlock },
+    Brace,
+}
+
+struct Open {
+    obj: OpenObj,
+    open_depth: usize,
+    open_line: usize,
+}
+
+impl FileModel {
+    /// Parse one file into its item tree.
+    pub fn build(rel_path: &str, src: &str) -> FileModel {
+        let mut m = FileModel {
+            rel_path: rel_path.to_string(),
+            lines: scrub(src),
+            fns: Vec::new(),
+            impls: Vec::new(),
+            mods: Vec::new(),
+            mod_decls: Vec::new(),
+            matches: Vec::new(),
+            calls: Vec::new(),
+        };
+        m.parse();
+        m
+    }
+
+    /// Index of the innermost fn whose body span contains `line`.
+    pub fn fn_at(&self, line: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (idx, f) in self.fns.iter().enumerate() {
+            if f.body.0 <= line && line <= f.body.1 {
+                let better = match best {
+                    None => true,
+                    Some(b) => f.body.0 > self.fns[b].body.0,
+                };
+                if better {
+                    best = Some(idx);
+                }
+            }
+        }
+        best
+    }
+
+    /// Index of the innermost impl block containing `line`.
+    pub fn impl_at(&self, line: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (idx, im) in self.impls.iter().enumerate() {
+            if im.body.0 <= line && line <= im.body.1 {
+                let better = match best {
+                    None => true,
+                    Some(b) => im.body.0 > self.impls[b].body.0,
+                };
+                if better {
+                    best = Some(idx);
+                }
+            }
+        }
+        best
+    }
+
+    /// Whether `line` sits inside test scope: a `#[cfg(test)] mod`, or a
+    /// fn carrying `#[test]` / `#[cfg(test)]`.
+    pub fn in_test_scope(&self, line: usize) -> bool {
+        if self.mods.iter().any(|m| m.is_test && m.body.0 <= line && line <= m.body.1) {
+            return true;
+        }
+        self.fn_at(line).is_some_and(|i| self.fns[i].in_test)
+    }
+
+    /// The scrubbed code of fn `idx`'s body, joined with newlines.
+    pub fn body_code(&self, idx: usize) -> String {
+        let (b0, b1) = self.fns[idx].body;
+        self.lines[b0..=b1].iter().map(|l| l.code.as_str()).collect::<Vec<_>>().join("\n")
+    }
+
+    fn parse(&mut self) {
+        let mut stack: Vec<Open> = Vec::new();
+        let mut pend_matches: Vec<MatchBlock> = Vec::new();
+        let mut pending: Option<OpenObj> = None;
+        let mut pending_attrs: Vec<String> = Vec::new();
+        let mut depth = 0usize;
+        let mut paren = 0usize;
+
+        let lines = std::mem::take(&mut self.lines);
+        for (ln, sl) in lines.iter().enumerate() {
+            let toks = tokens(&sl.code);
+            let mut k = 0usize;
+            while k < toks.len() {
+                // attribute: `# [ … ]` — consume the bracket group
+                if is_punct(toks.get(k), '#') && is_punct(toks.get(k + 1), '[') {
+                    let mut bdepth = 0usize;
+                    let mut j = k + 1;
+                    let mut attr = String::new();
+                    while j < toks.len() {
+                        match &toks[j] {
+                            Tok::Punct('[') => {
+                                bdepth += 1;
+                                if bdepth > 1 {
+                                    attr.push('[');
+                                }
+                            }
+                            Tok::Punct(']') => {
+                                bdepth -= 1;
+                                if bdepth == 0 {
+                                    break;
+                                }
+                                attr.push(']');
+                            }
+                            Tok::Ident(s) => attr.push_str(s),
+                            Tok::Num => attr.push('0'),
+                            Tok::Punct(p) => attr.push(*p),
+                        }
+                        j += 1;
+                    }
+                    pending_attrs.push(attr);
+                    k = j + 1;
+                    continue;
+                }
+
+                match &toks[k] {
+                    Tok::Ident(text) if text == "fn" && pending.is_none() => {
+                        if let Some(Tok::Ident(name)) = toks.get(k + 1) {
+                            let is_pub = toks[..k]
+                                .iter()
+                                .any(|t| matches!(t, Tok::Ident(s) if s == "pub"));
+                            let deprecated =
+                                pending_attrs.iter().any(|a| a.starts_with("deprecated"));
+                            let in_test_attr = pending_attrs
+                                .iter()
+                                .any(|a| a == "test" || a.replace(' ', "").starts_with("cfg(test"));
+                            pending = Some(OpenObj::Fn {
+                                f: FnItem {
+                                    name: name.clone(),
+                                    line: ln,
+                                    body: (0, 0),
+                                    is_pub,
+                                    impl_type: None,
+                                    impl_trait: None,
+                                    deprecated,
+                                    in_test: in_test_attr,
+                                },
+                            });
+                            pending_attrs.clear();
+                        }
+                        k += 2;
+                    }
+                    Tok::Ident(text) if text == "impl" && pending.is_none() && paren == 0 => {
+                        let mut j = k + 1;
+                        let mut header = Vec::new();
+                        while j < toks.len()
+                            && !is_punct(toks.get(j), '{')
+                            && !is_punct(toks.get(j), ';')
+                        {
+                            header.push(toks[j].clone());
+                            j += 1;
+                        }
+                        let ht = strip_generics(&header);
+                        let fi = ht.iter().position(|t| matches!(t, Tok::Ident(s) if s == "for"));
+                        let (trait_name, type_name) = match fi {
+                            Some(fi) => (last_path_ident(&ht[..fi]), last_path_ident(&ht[fi + 1..])),
+                            None => (None, last_path_ident(&ht)),
+                        };
+                        pending = Some(OpenObj::Impl {
+                            im: ImplItem { type_name, trait_name, line: ln, body: (0, 0) },
+                        });
+                        pending_attrs.clear();
+                        k = j;
+                    }
+                    Tok::Ident(text) if text == "mod" && pending.is_none() => {
+                        if let Some(Tok::Ident(name)) = toks.get(k + 1) {
+                            if is_punct(toks.get(k + 2), ';') {
+                                self.mod_decls.push((ln, name.clone()));
+                            } else {
+                                let is_test = pending_attrs
+                                    .iter()
+                                    .any(|a| a.replace(' ', "").starts_with("cfg(test"));
+                                pending = Some(OpenObj::Mod {
+                                    m: ModScope {
+                                        name: name.clone(),
+                                        line: ln,
+                                        is_test,
+                                        body: (0, 0),
+                                    },
+                                });
+                            }
+                        }
+                        pending_attrs.clear();
+                        k += 2;
+                    }
+                    Tok::Ident(text) if text == "match" => {
+                        pend_matches.push(MatchBlock {
+                            line: ln,
+                            body: (0, 0),
+                            depth: 0,
+                            arms: Vec::new(),
+                        });
+                        k += 1;
+                    }
+                    Tok::Ident(text) => {
+                        // call site: ident followed by `(`, not a keyword,
+                        // not a fn definition (macros never reach here:
+                        // a macro ident is followed by `!`, not `(`).
+                        // Caller attribution is a post-pass.
+                        if !KEYWORDS.contains(&text.as_str())
+                            && is_punct(toks.get(k + 1), '(')
+                            && !(k > 0 && is_ident(toks.get(k - 1), "fn"))
+                        {
+                            self.calls.push(CallSite {
+                                caller: None,
+                                callee: text.clone(),
+                                line: ln,
+                            });
+                        }
+                        k += 1;
+                    }
+                    Tok::Punct('(') => {
+                        paren += 1;
+                        k += 1;
+                    }
+                    Tok::Punct(')') => {
+                        paren = paren.saturating_sub(1);
+                        k += 1;
+                    }
+                    Tok::Punct(';') => {
+                        if paren == 0 && matches!(pending, Some(OpenObj::Fn { .. })) {
+                            pending = None; // bodyless trait-method signature
+                        }
+                        if paren == 0 && pending.is_none() {
+                            pending_attrs.clear();
+                        }
+                        k += 1;
+                    }
+                    Tok::Punct('{') => {
+                        depth += 1;
+                        if pending.is_some() && paren == 0 {
+                            let obj = pending.take().expect("pending checked");
+                            stack.push(Open { obj, open_depth: depth, open_line: ln });
+                        } else if let Some(mut mb) = pend_matches.pop() {
+                            mb.depth = depth;
+                            stack.push(Open {
+                                obj: OpenObj::Match { mb },
+                                open_depth: depth,
+                                open_line: ln,
+                            });
+                        } else {
+                            stack.push(Open {
+                                obj: OpenObj::Brace,
+                                open_depth: depth,
+                                open_line: ln,
+                            });
+                        }
+                        k += 1;
+                    }
+                    Tok::Punct('}') => {
+                        if stack.last().is_some_and(|e| e.open_depth == depth) {
+                            let e = stack.pop().expect("non-empty checked");
+                            let span = (e.open_line, ln);
+                            match e.obj {
+                                OpenObj::Fn { mut f } => {
+                                    f.body = span;
+                                    // in_test holds the attr flag here; the
+                                    // mod-scope half is resolved post-pass
+                                    self.fns.push(f);
+                                }
+                                OpenObj::Impl { mut im } => {
+                                    im.body = span;
+                                    self.impls.push(im);
+                                }
+                                OpenObj::Mod { mut m } => {
+                                    m.body = span;
+                                    self.mods.push(m);
+                                }
+                                OpenObj::Match { mut mb } => {
+                                    mb.body = span;
+                                    self.matches.push(mb);
+                                }
+                                OpenObj::Brace => {}
+                            }
+                        }
+                        depth = depth.saturating_sub(1);
+                        k += 1;
+                    }
+                    _ => k += 1,
+                }
+            }
+        }
+        self.lines = lines;
+
+        // post-pass: impl attribution + test-scope resolution + callers
+        for i in 0..self.fns.len() {
+            if let Some(im) = self.impl_at(self.fns[i].line) {
+                self.fns[i].impl_type = self.impls[im].type_name.clone();
+                self.fns[i].impl_trait = self.impls[im].trait_name.clone();
+            }
+        }
+        for i in 0..self.fns.len() {
+            let line = self.fns[i].line;
+            let in_test_mod = self
+                .mods
+                .iter()
+                .any(|m| m.is_test && m.body.0 <= line && line <= m.body.1);
+            self.fns[i].in_test = self.fns[i].in_test || in_test_mod;
+        }
+        for i in 0..self.calls.len() {
+            self.calls[i].caller = self.fn_at(self.calls[i].line);
+        }
+        self.collect_arms();
+    }
+
+    fn collect_arms(&mut self) {
+        // per-line start depth over the scrubbed code chars (the same
+        // brace stream the parser counted)
+        let mut depth = 0usize;
+        let mut line_depth = Vec::with_capacity(self.lines.len());
+        for sl in &self.lines {
+            line_depth.push(depth);
+            for ch in sl.code.chars() {
+                match ch {
+                    '{' => depth += 1,
+                    '}' => depth = depth.saturating_sub(1),
+                    _ => {}
+                }
+            }
+        }
+        for mb in &mut self.matches {
+            let (b0, b1) = mb.body;
+            let interior = mb.depth;
+            for ln in b0..=b1 {
+                let code: Vec<char> = self.lines[ln].code.chars().collect();
+                if !self.lines[ln].code.contains("=>") {
+                    continue;
+                }
+                let mut d = line_depth[ln];
+                let mut seg_start = 0usize;
+                let mut seen_arrow = false;
+                let mut i = 0usize;
+                while i < code.len() {
+                    match code[i] {
+                        '{' => d += 1,
+                        '}' => {
+                            d = d.saturating_sub(1);
+                            // a `}` closing back to arm level ends a braced
+                            // arm body — but only after its `=>` (a `}` in
+                            // a struct PATTERN precedes the arrow and must
+                            // not reset the segment)
+                            if seen_arrow && d <= interior {
+                                seg_start = i + 1;
+                                seen_arrow = false;
+                            }
+                        }
+                        ',' if d == interior && seen_arrow => {
+                            seg_start = i + 1;
+                            seen_arrow = false;
+                        }
+                        '=' if i + 1 < code.len() && code[i + 1] == '>' => {
+                            if d == interior && !seen_arrow {
+                                let mut pat: String =
+                                    code[seg_start..i].iter().collect::<String>().trim().to_string();
+                                if ln == b0 {
+                                    // strip the `match EXPR {` head
+                                    if let Some(brace) = pat.rfind('{') {
+                                        pat = pat[brace + 1..].trim().to_string();
+                                    }
+                                }
+                                mb.arms.push((ln, pat));
+                                seen_arrow = true;
+                            }
+                            i += 2;
+                            continue;
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_items_get_bodies_visibility_and_impl_scope() {
+        let src = "\
+impl ShardedStore {
+    pub fn read_row(&self) -> u64 {
+        self.inner()
+    }
+    fn inner(&self) -> u64 { 7 }
+}
+impl ThresholdSource for Rng {
+    fn draw(&mut self) -> u64 { self.next_u64() }
+}
+";
+        let m = FileModel::build("store/x.rs", src);
+        assert_eq!(m.fns.len(), 3);
+        let read = m.fns.iter().find(|f| f.name == "read_row").unwrap();
+        assert!(read.is_pub);
+        assert_eq!(read.impl_type.as_deref(), Some("ShardedStore"));
+        assert_eq!(read.impl_trait, None);
+        assert_eq!(read.body, (1, 3));
+        let draw = m.fns.iter().find(|f| f.name == "draw").unwrap();
+        assert_eq!(draw.impl_trait.as_deref(), Some("ThresholdSource"));
+        assert_eq!(draw.impl_type.as_deref(), Some("Rng"));
+    }
+
+    #[test]
+    fn impl_headers_strip_generics_and_paths() {
+        let src = "impl<'a> ThresholdSource for BufferedThresholds<'_> {\n}\n\
+                   impl kernel::StepKernel {\n}\n";
+        let m = FileModel::build("x.rs", src);
+        assert_eq!(m.impls[0].trait_name.as_deref(), Some("ThresholdSource"));
+        assert_eq!(m.impls[0].type_name.as_deref(), Some("BufferedThresholds"));
+        assert_eq!(m.impls[1].type_name.as_deref(), Some("StepKernel"));
+        assert_eq!(m.impls[1].trait_name, None);
+    }
+
+    #[test]
+    fn cfg_test_mod_and_test_attr_mark_test_scope() {
+        let src = "\
+fn prod() { helper() }
+#[cfg(test)]
+mod tests {
+    fn in_mod() { helper() }
+}
+#[test]
+fn unit() { helper() }
+";
+        let m = FileModel::build("x.rs", src);
+        assert!(!m.fns.iter().find(|f| f.name == "prod").unwrap().in_test);
+        assert!(m.fns.iter().find(|f| f.name == "in_mod").unwrap().in_test);
+        assert!(m.fns.iter().find(|f| f.name == "unit").unwrap().in_test);
+        assert!(m.mods[0].is_test);
+    }
+
+    #[test]
+    fn deprecated_attr_is_detected() {
+        let src = "#[deprecated(note = \"use run\")]\npub fn old_run() { run() }\n";
+        let m = FileModel::build("x.rs", src);
+        assert!(m.fns[0].deprecated);
+    }
+
+    #[test]
+    fn calls_attach_to_innermost_fn_and_skip_macros() {
+        let src = "\
+fn outer() {
+    helper(1);
+    assert!(x);
+    vec![helper2()];
+}
+";
+        let m = FileModel::build("x.rs", src);
+        let callees: Vec<&str> = m.calls.iter().map(|c| c.callee.as_str()).collect();
+        assert!(callees.contains(&"helper"));
+        assert!(callees.contains(&"helper2"));
+        assert!(!callees.contains(&"assert"), "macro calls are not edges");
+        for c in &m.calls {
+            assert_eq!(c.caller, Some(0), "{}", c.callee);
+        }
+    }
+
+    #[test]
+    fn mod_decls_are_recorded() {
+        let m = FileModel::build("lib.rs", "pub mod store;\nmod bench;\n");
+        let names: Vec<&str> = m.mod_decls.iter().map(|(_, n)| n.as_str()).collect();
+        assert_eq!(names, vec!["store", "bench"]);
+    }
+
+    #[test]
+    fn match_arms_split_on_top_level_patterns() {
+        let src = "\
+fn f(m: ModelKind) -> f32 {
+    match m {
+        ModelKind::Lssvm { c } => *c,
+        ModelKind::Linreg | ModelKind::Svm => 0.0,
+        _ => 1.0,
+    }
+}
+";
+        let m = FileModel::build("x.rs", src);
+        assert_eq!(m.matches.len(), 1);
+        let pats: Vec<&str> = m.matches[0].arms.iter().map(|(_, p)| p.as_str()).collect();
+        assert_eq!(pats, vec!["ModelKind::Lssvm { c }", "ModelKind::Linreg | ModelKind::Svm", "_"]);
+    }
+
+    #[test]
+    fn single_line_match_keeps_struct_patterns_intact() {
+        let src = "fn f() -> u32 { match k { ReadStrategy::Popcount { q } => q, _ => 1 } }\n";
+        let m = FileModel::build("x.rs", src);
+        let pats: Vec<&str> = m.matches[0].arms.iter().map(|(_, p)| p.as_str()).collect();
+        assert_eq!(pats, vec!["ReadStrategy::Popcount { q }", "_"]);
+    }
+
+    #[test]
+    fn nested_matches_do_not_leak_arms() {
+        let src = "\
+fn f(a: u32, b: u32) -> u32 {
+    match a {
+        0 => match b {
+            1 => 10,
+            _ => 20,
+        },
+        _ => 30,
+    }
+}
+";
+        let m = FileModel::build("x.rs", src);
+        assert_eq!(m.matches.len(), 2);
+        let outer = m.matches.iter().find(|mb| mb.line == 1).unwrap();
+        // the outer match's arms are its own two, not the inner's
+        assert_eq!(outer.arms.len(), 2);
+    }
+
+    #[test]
+    fn matches_macro_is_not_a_match_block() {
+        let src = "fn f(x: u32) -> bool { matches!(x, 1 | 2) }\n";
+        let m = FileModel::build("x.rs", src);
+        assert!(m.matches.is_empty());
+    }
+}

@@ -1,0 +1,163 @@
+//! JSON findings: render and baseline-diff.
+//!
+//! The linter is a JSON *consumer* of the main crate, not a second
+//! emitter: every line it writes goes through [`zipml::bench::JsonObj`]
+//! (the repo's single JSON writer — the very invariant the
+//! `json-emitter` rule guards) and every baseline line it reads goes
+//! through [`zipml::telemetry::trace::parse_line`]. Findings render as
+//! JSONL, one flat object per finding:
+//!
+//! ```text
+//! {"path":"store/shard.rs","line":106,"rule":"rng-stream-discipline","message":"..."}
+//! ```
+//!
+//! A committed baseline (`LINT_baseline.json`) plus `--baseline` diff
+//! mode lets CI fail only on findings *not* present in the baseline, so
+//! a new rule can land before the last legacy finding is burned down.
+
+use std::collections::BTreeSet;
+
+use zipml::bench::{JsonObj, JsonVal};
+use zipml::telemetry::trace::{field, parse_line};
+
+use crate::Diagnostic;
+
+/// Identity of a finding for baseline matching: (path, line, rule).
+/// Messages stay out of the key so rewording a message never churns
+/// the baseline.
+pub type FindingKey = (String, u64, String);
+
+/// Render one finding as a single JSON line (no trailing newline).
+pub fn finding_line(d: &Diagnostic) -> String {
+    let mut o = JsonObj::with_capacity(96);
+    o.field_str("path", &d.path);
+    // UInt, not Num: line numbers must render as integers, byte for byte
+    o.field("line", &JsonVal::UInt(d.line as u64));
+    o.field_str("rule", d.rule);
+    o.field_str("message", &d.message);
+    o.finish()
+}
+
+/// Render the full findings list as JSONL (one finding per line, with a
+/// trailing newline when non-empty; the empty list renders as the empty
+/// string so an all-clean `LINT_findings.json` is a zero-byte artifact).
+pub fn render_findings(diags: &[Diagnostic]) -> String {
+    let mut out = String::new();
+    for d in diags {
+        out.push_str(&finding_line(d));
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a findings/baseline JSONL file back into finding keys. Blank
+/// lines are skipped; any malformed line is a hard error (a corrupt
+/// baseline must never silently waive findings).
+pub fn parse_findings(text: &str) -> Result<BTreeSet<FindingKey>, String> {
+    let mut out = BTreeSet::new();
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let obj = parse_line(line).map_err(|e| format!("baseline line {}: {e}", ln + 1))?;
+        let path = field(&obj, "path")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("baseline line {}: missing `path`", ln + 1))?;
+        let lno = field(&obj, "line")
+            .and_then(|v| v.as_num())
+            .ok_or_else(|| format!("baseline line {}: missing `line`", ln + 1))?;
+        let rule = field(&obj, "rule")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("baseline line {}: missing `rule`", ln + 1))?;
+        out.insert((path.to_string(), lno as u64, rule.to_string()));
+    }
+    Ok(out)
+}
+
+/// Findings not covered by the baseline — the only ones diff mode fails
+/// on. Baseline entries with no matching finding are fine (burned-down
+/// debt); CI prints them as a hint to re-tighten the baseline.
+pub fn new_findings<'a>(
+    diags: &'a [Diagnostic],
+    baseline: &BTreeSet<FindingKey>,
+) -> Vec<&'a Diagnostic> {
+    diags
+        .iter()
+        .filter(|d| {
+            !baseline.contains(&(d.path.clone(), d.line as u64, d.rule.to_string()))
+        })
+        .collect()
+}
+
+/// Baseline keys whose finding no longer fires (stale debt entries).
+pub fn stale_entries(diags: &[Diagnostic], baseline: &BTreeSet<FindingKey>) -> Vec<FindingKey> {
+    let current: BTreeSet<FindingKey> = diags
+        .iter()
+        .map(|d| (d.path.clone(), d.line as u64, d.rule.to_string()))
+        .collect();
+    baseline.iter().filter(|k| !current.contains(*k)).cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(path: &str, line: usize, rule: &'static str, msg: &str) -> Diagnostic {
+        Diagnostic { path: path.to_string(), line, rule, message: msg.to_string() }
+    }
+
+    #[test]
+    fn finding_renders_exact_bytes() {
+        let d = diag("store/shard.rs", 106, "rng-stream-discipline", "raw \"draw\"");
+        assert_eq!(
+            finding_line(&d),
+            "{\"path\":\"store/shard.rs\",\"line\":106,\"rule\":\"rng-stream-discipline\",\
+             \"message\":\"raw \\\"draw\\\"\"}"
+        );
+    }
+
+    #[test]
+    fn empty_findings_render_empty() {
+        assert_eq!(render_findings(&[]), "");
+    }
+
+    #[test]
+    fn findings_round_trip_through_the_trace_parser() {
+        let diags = vec![
+            diag("a.rs", 3, "unsafe-code", "m1"),
+            diag("b.rs", 9, "wall-clock", "m2 \\ \"q\""),
+        ];
+        let keys = parse_findings(&render_findings(&diags)).unwrap();
+        assert_eq!(keys.len(), 2);
+        assert!(keys.contains(&("a.rs".to_string(), 3, "unsafe-code".to_string())));
+        assert!(keys.contains(&("b.rs".to_string(), 9, "wall-clock".to_string())));
+    }
+
+    #[test]
+    fn diff_fails_only_on_new_findings() {
+        let old = diag("a.rs", 3, "unsafe-code", "msg wording may change");
+        let baseline = parse_findings(&render_findings(&[old])).unwrap();
+        let now = vec![
+            diag("a.rs", 3, "unsafe-code", "reworded message, same finding"),
+            diag("c.rs", 7, "design-ref", "new"),
+        ];
+        let new = new_findings(&now, &baseline);
+        assert_eq!(new.len(), 1);
+        assert_eq!(new[0].path, "c.rs");
+        assert!(stale_entries(&now, &baseline).is_empty());
+    }
+
+    #[test]
+    fn burned_down_entries_surface_as_stale() {
+        let baseline =
+            parse_findings(&render_findings(&[diag("gone.rs", 1, "wall-clock", "x")])).unwrap();
+        let stale = stale_entries(&[], &baseline);
+        assert_eq!(stale, vec![("gone.rs".to_string(), 1, "wall-clock".to_string())]);
+    }
+
+    #[test]
+    fn malformed_baseline_is_a_hard_error() {
+        assert!(parse_findings("{\"path\":\"a.rs\"}\n").is_err());
+        assert!(parse_findings("not json\n").is_err());
+    }
+}

@@ -1,12 +1,16 @@
 //! `zipml-lint` — repo-native static analysis for the ZipML invariants
-//! (DESIGN.md §11).
+//! (DESIGN.md §11, §13).
 //!
 //! The crate's correctness story leans on contracts that rustc cannot
 //! see: the exact-byte accounting (DESIGN.md §5/§8), the fixed-seed
 //! determinism contract (§10), and the relaxed-ordering protocols the
-//! loom models check. This linter machine-checks the *textual* side of
-//! those contracts as named, individually-testable rules over
-//! `rust/src/`:
+//! loom models check. v1 of this linter machine-checked the *textual*
+//! side of those contracts with per-line rules; v2 adds a symbol layer
+//! ([`items::FileModel`]: fn items, impl blocks, mod scopes, match
+//! arms, call-site edges) so rules can follow a contract *across*
+//! functions and files. Two rule families:
+//!
+//! **Line rules** (one scrubbed file at a time):
 //!
 //! | rule | invariant |
 //! |------|-----------|
@@ -16,19 +20,42 @@
 //! | `byte-truncating-cast` | in `store/`: no `as`-narrowing casts on byte-accounting expressions |
 //! | `hash-in-deterministic-path` | no `HashMap`/`HashSet` in `store/`, `sgd/`, `fpga/` |
 //! | `json-emitter` | no JSON writer outside `bench.rs` (`json_escape`/`json_val` calls, `fn json_*` definitions) |
-//! | `simd-twin-contract` | every `dispatch::tier` dispatch site carries a `// twin: scalar_name (bit_equality_test)` comment |
 //!
-//! The scanner is line/token-level (like the repo's serde-free JSON
-//! code, deliberately not a full parser): comments, string/char
-//! literals, and raw strings are scrubbed first so tokens inside them
-//! never match. A finding can be waived in place with
-//! `// lint: allow(rule-name)` on the same or the preceding line —
-//! greppable, narrow, and reviewed like any other diff line.
+//! **Flow rules** (the whole crate model at once; see DESIGN.md §13):
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `twin-contract-v2` | every `dispatch::tier` site carries a `// twin: scalar_name (bit_equality_test)` comment, and the named test exists under the tests root |
+//! | `accounting-flow` | every public `*Store` entry point in `store/` that reaches bit-plane words also reaches a byte-accounting sink (call-graph reachability) |
+//! | `rng-stream-discipline` | no `Rng::new` inside thread-spawning fns (streams derive via `new_stream`); store DS threshold draws only inside `impl ThresholdSource` |
+//! | `strategy-matrix-exhaustiveness` | no `_` arm in matches over `ReadStrategy`/`Execution`/`ModelKind` |
+//! | `design-ref` | every `DESIGN.md §N` comment reference resolves to a real `## §N` section |
+//! | `deprecated-no-internal-callers` | `#[deprecated]` fns keep zero non-test in-crate callers |
+//!
+//! The scanner stays deliberately lexical (no rustc, no syn): the
+//! scrubber blanks comments/strings so tokens inside them never match,
+//! and the item tree is brace-matched and recovery-oriented — anything
+//! it cannot interpret is simply not an item. A finding can be waived
+//! in place with `// lint: allow(rule-name)` on the same or the
+//! preceding line — greppable, narrow, and reviewed like any other
+//! diff line. Findings render as JSONL through the main crate's
+//! [`zipml::bench::JsonObj`] (see [`json`]) and diff against a
+//! committed baseline so CI fails only on *new* findings.
 
 #![forbid(unsafe_code)]
 
+pub mod items;
+pub mod json;
+pub mod rules;
+pub mod scrub;
+
+pub use scrub::{has_token, scrub, ScrubbedLine};
+
 use std::fmt;
 use std::path::Path;
+
+use items::FileModel;
+use rules::FlowContext;
 
 /// Every rule this linter knows, in diagnostic order.
 pub const RULE_NAMES: &[&str] = &[
@@ -38,7 +65,12 @@ pub const RULE_NAMES: &[&str] = &[
     "byte-truncating-cast",
     "hash-in-deterministic-path",
     "json-emitter",
-    "simd-twin-contract",
+    "twin-contract-v2",
+    "accounting-flow",
+    "rng-stream-discipline",
+    "strategy-matrix-exhaustiveness",
+    "design-ref",
+    "deprecated-no-internal-callers",
 ];
 
 /// One finding: `path:line: [rule] message`.
@@ -59,334 +91,51 @@ impl fmt::Display for Diagnostic {
     }
 }
 
-// ---------------------------------------------------------------------------
-// The scrubber: split each source line into code text and comment text
-// ---------------------------------------------------------------------------
-
-/// One source line after scrubbing: `code` with all comment bodies and
-/// string/char-literal contents blanked, `comment` holding the line's
-/// comment text (line comments and any block-comment content).
-#[derive(Debug, Default, Clone)]
-pub struct ScrubbedLine {
-    pub code: String,
-    pub comment: String,
+/// Cross-tree inputs for the config-gated flow rules. `design_text`
+/// absent skips `design-ref`; `test_texts` absent skips the cross-file
+/// (test-existence) half of `twin-contract-v2`. The other flow rules
+/// always run — they need nothing beyond the source tree itself.
+#[derive(Default)]
+pub struct LintConfig<'a> {
+    /// Full DESIGN.md text (its `## §N` headers define the section set).
+    pub design_text: Option<&'a str>,
+    /// Contents of every file under the tests root (`rust/tests/`).
+    pub test_texts: Option<&'a [String]>,
 }
 
-#[derive(Clone, Copy)]
-enum State {
-    Code,
-    /// Inside `/* */`, tracking nesting depth.
-    Block(u32),
-    /// Inside a `"…"` (or `b"…"`) string literal.
-    Str,
-    /// Inside a raw string; payload is the `#` count that closes it.
-    RawStr(u32),
-}
-
-/// Scrub `src` into per-line code/comment records. Handles line and
-/// nested block comments, string/byte-string literals, raw strings
-/// (`r#"…"#`), char literals, and the char-vs-lifetime ambiguity.
-pub fn scrub(src: &str) -> Vec<ScrubbedLine> {
-    let c: Vec<char> = src.chars().collect();
-    let mut lines = Vec::new();
-    let mut cur = ScrubbedLine::default();
-    let mut state = State::Code;
-    let mut i = 0;
-    while i < c.len() {
-        let ch = c[i];
-        if ch == '\n' {
-            lines.push(std::mem::take(&mut cur));
-            // line comments end at the newline; block/string states span
-            if !matches!(state, State::Block(_) | State::Str | State::RawStr(_)) {
-                state = State::Code;
-            }
-            i += 1;
-            continue;
-        }
-        match state {
-            State::Code => {
-                if ch == '/' && c.get(i + 1) == Some(&'/') {
-                    // line comment: capture to end of line
-                    i += 2;
-                    while i < c.len() && c[i] != '\n' {
-                        cur.comment.push(c[i]);
-                        i += 1;
-                    }
-                } else if ch == '/' && c.get(i + 1) == Some(&'*') {
-                    state = State::Block(1);
-                    i += 2;
-                } else if ch == '"' {
-                    cur.code.push(' ');
-                    state = State::Str;
-                    i += 1;
-                } else if (ch == 'r' || ch == 'b') && !prev_is_ident(&c, i) {
-                    // r"…" / r#"…"# / b"…" / br#"…"# raw & byte strings
-                    let mut j = i + 1;
-                    if ch == 'b' && c.get(j) == Some(&'r') {
-                        j += 1;
-                    }
-                    let mut hashes = 0u32;
-                    while c.get(j) == Some(&'#') {
-                        hashes += 1;
-                        j += 1;
-                    }
-                    let raw = j > i + 1 || (ch == 'r' && hashes == 0);
-                    if c.get(j) == Some(&'"') && (raw || ch == 'b') {
-                        cur.code.push(' ');
-                        state = if ch == 'b' && hashes == 0 && j == i + 1 {
-                            State::Str
-                        } else {
-                            State::RawStr(hashes)
-                        };
-                        i = j + 1;
-                    } else {
-                        cur.code.push(ch);
-                        i += 1;
-                    }
-                } else if ch == '\'' {
-                    // char literal vs lifetime: a backslash or a closing
-                    // quote two chars on means char literal
-                    if c.get(i + 1) == Some(&'\\') {
-                        i += 2; // skip the escape head
-                        while i < c.len() && c[i] != '\'' && c[i] != '\n' {
-                            i += 1;
-                        }
-                        cur.code.push(' ');
-                        i += 1; // past the closing quote
-                    } else if c.get(i + 2) == Some(&'\'') {
-                        cur.code.push(' ');
-                        i += 3;
-                    } else {
-                        // lifetime: keep the tick so `'a` stays one token
-                        cur.code.push('\'');
-                        i += 1;
-                    }
-                } else {
-                    cur.code.push(ch);
-                    i += 1;
-                }
-            }
-            State::Block(depth) => {
-                if ch == '/' && c.get(i + 1) == Some(&'*') {
-                    state = State::Block(depth + 1);
-                    i += 2;
-                } else if ch == '*' && c.get(i + 1) == Some(&'/') {
-                    state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
-                    i += 2;
-                } else {
-                    cur.comment.push(ch);
-                    i += 1;
-                }
-            }
-            State::Str => {
-                // an escape consumes the next char — except a newline
-                // (the `\`-continuation), which must still count a line
-                if ch == '\\' && c.get(i + 1).is_some_and(|&n| n != '\n') {
-                    i += 2;
-                } else if ch == '"' {
-                    state = State::Code;
-                    i += 1;
-                } else {
-                    i += 1;
-                }
-            }
-            State::RawStr(hashes) => {
-                if ch == '"' {
-                    let close = (0..hashes as usize).all(|k| c.get(i + 1 + k) == Some(&'#'));
-                    if close {
-                        state = State::Code;
-                        i += 1 + hashes as usize;
-                        continue;
-                    }
-                }
-                i += 1;
-            }
-        }
-    }
-    lines.push(cur);
-    lines
-}
-
-fn prev_is_ident(c: &[char], i: usize) -> bool {
-    i > 0 && (c[i - 1].is_alphanumeric() || c[i - 1] == '_')
-}
-
-/// Whether `tok` appears in `s` as a whole word (identifier boundaries
-/// on both sides) — so `unsafe_code` never matches the token `unsafe`.
-pub fn has_token(s: &str, tok: &str) -> bool {
-    let sb = s.as_bytes();
-    let mut from = 0;
-    while let Some(pos) = s[from..].find(tok) {
-        let start = from + pos;
-        let end = start + tok.len();
-        let ok_before =
-            start == 0 || !(sb[start - 1].is_ascii_alphanumeric() || sb[start - 1] == b'_');
-        let ok_after = end >= sb.len() || !(sb[end].is_ascii_alphanumeric() || sb[end] == b'_');
-        if ok_before && ok_after {
-            return true;
-        }
-        from = end;
-    }
-    false
-}
-
-// ---------------------------------------------------------------------------
-// The rules
-// ---------------------------------------------------------------------------
-
-/// Narrowing targets of the `byte-truncating-cast` rule: a byte total
-/// cast to any of these can silently truncate or round (`u64`, `usize`
-/// and `f64`→ reporting casts stay legal).
-const NARROW_CASTS: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32", "f32"];
-
-fn cast_to_narrow(code: &str) -> Option<&'static str> {
-    let b = code.as_bytes();
-    let mut from = 0;
-    while let Some(pos) = code[from..].find(" as ") {
-        let mut j = from + pos + 4;
-        while j < b.len() && b[j] == b' ' {
-            j += 1;
-        }
-        let start = j;
-        while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
-            j += 1;
-        }
-        let ty = &code[start..j];
-        if let Some(&n) = NARROW_CASTS.iter().find(|&&n| n == ty) {
-            return Some(n);
-        }
-        from += pos + 4;
-    }
-    None
-}
-
-/// Whether the scrubbed code mentions a byte-accounting identifier (any
-/// identifier containing `bytes`, case-insensitive).
-fn mentions_bytes_ident(code: &str) -> bool {
-    code.to_ascii_lowercase().contains("bytes")
-}
-
-fn suppressed(lines: &[ScrubbedLine], i: usize, rule: &str) -> bool {
-    let needle = format!("lint: allow({rule})");
-    lines[i].comment.contains(&needle)
-        || (i > 0 && lines[i - 1].comment.contains(&needle))
-}
-
-/// How many lines above an `Ordering::` use its `// ordering:` contract
-/// comment may sit (inclusive; same-line comments always count).
-const ORDERING_COMMENT_REACH: usize = 3;
-
-fn has_ordering_contract(lines: &[ScrubbedLine], i: usize) -> bool {
-    let lo = i.saturating_sub(ORDERING_COMMENT_REACH);
-    lines[lo..=i].iter().any(|l| l.comment.contains("ordering:"))
-}
-
-/// How many lines above a `dispatch::tier` site its `// twin:` contract
-/// comment may sit (same reach as the ordering rule).
-const SIMD_TWIN_COMMENT_REACH: usize = 3;
-
-/// A complete twin contract names the scalar equivalent and, in parens,
-/// the bit-equality test: `twin: scalar_name (test_name)`. Either half
-/// empty means the contract is not actually stated.
-fn twin_contract_complete(comment: &str) -> bool {
-    let Some(rest) = comment.split("twin:").nth(1) else {
-        return false;
-    };
-    let Some(open) = rest.find('(') else {
-        return false;
-    };
-    let Some(close) = rest[open + 1..].find(')') else {
-        return false;
-    };
-    let scalar = rest[..open].trim();
-    let test = rest[open + 1..open + 1 + close].trim();
-    !scalar.is_empty() && !test.is_empty()
-}
-
-fn has_twin_contract(lines: &[ScrubbedLine], i: usize) -> bool {
-    let lo = i.saturating_sub(SIMD_TWIN_COMMENT_REACH);
-    lines[lo..=i].iter().any(|l| twin_contract_complete(&l.comment))
-}
-
-const MSG_UNSAFE: &str =
-    "`unsafe` outside the allowlist (rust/lint/allowlist_unsafe.txt); the crate forbids unsafe";
-const MSG_ORDERING: &str =
-    "`Ordering::*` without an `// ordering:` comment on this line or the 3 above (DESIGN.md \u{a7}11)";
-const MSG_WALL_CLOCK: &str =
-    "wall-clock read outside telemetry//bench.rs; use telemetry::Stopwatch (determinism contract)";
-const MSG_BYTE_CAST: &str =
-    "byte-accounting expression narrowed with `as` can truncate; byte totals stay u64 end to end";
-const MSG_HASH: &str =
-    "HashMap/HashSet in a deterministic path (store/, sgd/, fpga/); use Vec or BTreeMap";
-const MSG_JSON: &str =
-    "second JSON emitter outside bench.rs; write through bench::JsonObj so escaping never drifts";
-const MSG_SIMD_TWIN: &str =
-    "`dispatch::tier` site without a `// twin: scalar_name (bit_equality_test)` comment on this \
-     line or the 3 above (DESIGN.md \u{a7}12)";
-
-/// Lint one file's source text. `rel_path` is the `/`-separated path
-/// relative to the scanned source root — the path-scoped rules key off
-/// it. `unsafe_allowlist` holds rel paths where `unsafe` is permitted.
+/// Lint one file's source text with the line rules only. `rel_path` is
+/// the `/`-separated path relative to the scanned source root — the
+/// path-scoped rules key off it. `unsafe_allowlist` holds rel paths
+/// where `unsafe` is permitted. (Flow rules need the whole tree; use
+/// [`lint_files`] or [`lint_tree`].)
 pub fn lint_source(rel_path: &str, src: &str, unsafe_allowlist: &[String]) -> Vec<Diagnostic> {
     let lines = scrub(src);
+    rules::line_rules(rel_path, &lines, unsafe_allowlist)
+}
+
+/// Lint a set of in-memory files — the core engine under [`lint_tree`].
+/// `files` holds (rel_path, source) pairs; they are modeled in sorted
+/// path order and checked with every line rule plus every flow rule the
+/// config enables. Diagnostics come back sorted by (path, line, rule).
+pub fn lint_files(
+    files: &[(String, String)],
+    unsafe_allowlist: &[String],
+    cfg: &LintConfig,
+) -> Vec<Diagnostic> {
+    let mut sorted: Vec<&(String, String)> = files.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0));
+    let models: Vec<FileModel> =
+        sorted.iter().map(|(rel, src)| FileModel::build(rel, src)).collect();
     let mut out = Vec::new();
-    let in_store = rel_path.starts_with("store/");
-    let det_path = in_store || rel_path.starts_with("sgd/") || rel_path.starts_with("fpga/");
-    let wall_exempt = rel_path.starts_with("telemetry/") || rel_path == "bench.rs";
-    let json_exempt = rel_path == "bench.rs";
-    let unsafe_allowed = unsafe_allowlist.iter().any(|p| p == rel_path);
-    let mut diag = |i: usize, rule: &'static str, msg: &str| {
-        out.push(Diagnostic {
-            path: rel_path.to_string(),
-            line: i + 1,
-            rule,
-            message: msg.to_string(),
-        });
-    };
-    for (i, l) in lines.iter().enumerate() {
-        let code = l.code.as_str();
-        if !unsafe_allowed && has_token(code, "unsafe") && !suppressed(&lines, i, "unsafe-code") {
-            diag(i, "unsafe-code", MSG_UNSAFE);
-        }
-        if code.contains("Ordering::")
-            && !has_ordering_contract(&lines, i)
-            && !suppressed(&lines, i, "ordering-contract")
-        {
-            diag(i, "ordering-contract", MSG_ORDERING);
-        }
-        if !wall_exempt
-            && (has_token(code, "Instant") || has_token(code, "SystemTime"))
-            && !suppressed(&lines, i, "wall-clock")
-        {
-            diag(i, "wall-clock", MSG_WALL_CLOCK);
-        }
-        if in_store && mentions_bytes_ident(code) {
-            if let Some(ty) = cast_to_narrow(code) {
-                if !suppressed(&lines, i, "byte-truncating-cast") {
-                    diag(i, "byte-truncating-cast", &format!("{MSG_BYTE_CAST} (`as {ty}`)"));
-                }
-            }
-        }
-        if det_path
-            && (has_token(code, "HashMap") || has_token(code, "HashSet"))
-            && !suppressed(&lines, i, "hash-in-deterministic-path")
-        {
-            diag(i, "hash-in-deterministic-path", MSG_HASH);
-        }
-        if has_token(code, "dispatch::tier")
-            && !has_twin_contract(&lines, i)
-            && !suppressed(&lines, i, "simd-twin-contract")
-        {
-            diag(i, "simd-twin-contract", MSG_SIMD_TWIN);
-        }
-        let json_def = code.contains("fn json_");
-        if !json_exempt
-            && (json_def || has_token(code, "json_escape") || has_token(code, "json_val"))
-            && !suppressed(&lines, i, "json-emitter")
-        {
-            diag(i, "json-emitter", MSG_JSON);
-        }
+    for m in &models {
+        out.extend(rules::line_rules(&m.rel_path, &m.lines, unsafe_allowlist));
     }
+    let ctx = FlowContext {
+        design_sections: cfg.design_text.map(rules::design_sections),
+        test_fns: cfg.test_texts.map(rules::test_fn_names),
+    };
+    out.extend(rules::flow_rules(&models, &ctx));
+    out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
     out
 }
 
@@ -416,25 +165,44 @@ fn walk(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
     Ok(())
 }
 
-/// Lint every `.rs` file under `src_root`, in sorted path order (so
-/// diagnostics are deterministic). Returns (files scanned, findings).
+/// Read every `.rs` file under `root` into (rel_path, source) pairs,
+/// sorted by rel path.
+pub fn read_tree(root: &Path) -> std::io::Result<Vec<(String, String)>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::with_capacity(files.len());
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .expect("walked under root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.push((rel, std::fs::read_to_string(f)?));
+    }
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `src_root` with the line rules and the
+/// config-free flow rules (deterministic sorted order). Returns
+/// (files scanned, findings). For `design-ref` and the test-existence
+/// half of `twin-contract-v2`, use [`lint_tree_with`].
 pub fn lint_tree(
     src_root: &Path,
     unsafe_allowlist: &[String],
 ) -> std::io::Result<(usize, Vec<Diagnostic>)> {
-    let mut files = Vec::new();
-    walk(src_root, &mut files)?;
-    files.sort();
-    let mut out = Vec::new();
-    for f in &files {
-        let rel = f
-            .strip_prefix(src_root)
-            .expect("walked under root")
-            .to_string_lossy()
-            .replace('\\', "/");
-        let src = std::fs::read_to_string(f)?;
-        out.extend(lint_source(&rel, &src, unsafe_allowlist));
-    }
+    lint_tree_with(src_root, unsafe_allowlist, &LintConfig::default())
+}
+
+/// [`lint_tree`] plus cross-tree config (DESIGN.md text, tests-root
+/// file contents) enabling all twelve rules.
+pub fn lint_tree_with(
+    src_root: &Path,
+    unsafe_allowlist: &[String],
+    cfg: &LintConfig,
+) -> std::io::Result<(usize, Vec<Diagnostic>)> {
+    let files = read_tree(src_root)?;
+    let out = lint_files(&files, unsafe_allowlist, cfg);
     Ok((files.len(), out))
 }
 
@@ -446,46 +214,16 @@ mod tests {
         lint_source(rel, src, &[]).into_iter().map(|d| (d.rule, d.line)).collect()
     }
 
-    #[test]
-    fn scrubber_separates_code_and_comments() {
-        let s = scrub("let a = 1; // trailing note\n/* block\nstill block */ code()\n");
-        assert_eq!(s[0].code.trim(), "let a = 1;");
-        assert!(s[0].comment.contains("trailing note"));
-        assert!(s[1].comment.contains("block"));
-        assert!(s[1].code.trim().is_empty());
-        assert_eq!(s[2].code.trim(), "code()");
+    fn flow_hit(files: &[(&str, &str)], cfg: &LintConfig) -> Vec<(String, usize, &'static str)> {
+        let owned: Vec<(String, String)> =
+            files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect();
+        lint_files(&owned, &[], cfg)
+            .into_iter()
+            .map(|d| (d.path, d.line, d.rule))
+            .collect()
     }
 
-    #[test]
-    fn scrubber_blanks_strings_and_chars() {
-        let s = scrub("let x = \"unsafe Instant\"; let c = 'u'; let l: &'a str = y;\n");
-        assert!(!s[0].code.contains("unsafe"));
-        assert!(!s[0].code.contains("Instant"));
-        assert!(s[0].code.contains("&'a str"), "lifetimes survive: {}", s[0].code);
-    }
-
-    #[test]
-    fn scrubber_handles_raw_and_byte_strings() {
-        let s = scrub("let r = r#\"Ordering:: \"quoted\" unsafe\"#; after()\nb\"bytes unsafe\";\n");
-        assert!(!s[0].code.contains("unsafe"), "{:?}", s[0].code);
-        assert!(s[0].code.contains("after()"));
-        assert!(!s[1].code.contains("unsafe"), "{:?}", s[1].code);
-    }
-
-    #[test]
-    fn scrubber_handles_nested_block_comments() {
-        let s = scrub("/* a /* nested */ still comment */ let ok = 1;\n");
-        assert_eq!(s[0].code.trim(), "let ok = 1;");
-        assert!(s[0].comment.contains("nested"));
-    }
-
-    #[test]
-    fn token_matching_respects_word_boundaries() {
-        assert!(has_token("unsafe {", "unsafe"));
-        assert!(!has_token("#![forbid(unsafe_code)]", "unsafe"));
-        assert!(!has_token("an_unsafe_name", "unsafe"));
-        assert!(has_token("x(unsafe)", "unsafe"));
-    }
+    // ---- line rules (ported v1 suite; twin rule renamed to v2) ----
 
     #[test]
     fn rule_unsafe_code_fires_and_respects_allowlist() {
@@ -547,9 +285,9 @@ mod tests {
     }
 
     #[test]
-    fn rule_simd_twin_contract_requires_named_twin_and_test() {
+    fn rule_twin_contract_requires_named_twin_and_test() {
         let bad = "if dispatch::tier() == dispatch::Tier::Lanes8 { return simd::f(x); }\n";
-        assert_eq!(rules_hit("store/kernel.rs", bad), vec![("simd-twin-contract", 1)]);
+        assert_eq!(rules_hit("store/kernel.rs", bad), vec![("twin-contract-v2", 1)]);
         let good = "// twin: f_scalar (simd_f_bit_identical_to_scalar)\n\
                     if dispatch::tier() == dispatch::Tier::Lanes8 { return simd::f(x); }\n";
         assert!(rules_hit("store/kernel.rs", good).is_empty());
@@ -558,9 +296,9 @@ mod tests {
         assert!(rules_hit("a.rs", same_line).is_empty());
         let empty_scalar = "// twin: (some_test) — scalar half missing\n\
                            if dispatch::tier() == t { f() }\n";
-        assert_eq!(rules_hit("a.rs", empty_scalar), vec![("simd-twin-contract", 2)]);
+        assert_eq!(rules_hit("a.rs", empty_scalar), vec![("twin-contract-v2", 2)]);
         let no_test = "// twin: f_scalar\nif dispatch::tier() == t { f() }\n";
-        assert_eq!(rules_hit("a.rs", no_test), vec![("simd-twin-contract", 2)]);
+        assert_eq!(rules_hit("a.rs", no_test), vec![("twin-contract-v2", 2)]);
         assert!(
             rules_hit("a.rs", "let l = dispatch::tier_label();\n").is_empty(),
             "label reads are not dispatch sites"
@@ -602,5 +340,239 @@ mod tests {
             message: "m".into(),
         };
         assert_eq!(d.to_string(), "store/shard.rs:7: [byte-truncating-cast] m");
+    }
+
+    // ---- flow rules ----
+
+    #[test]
+    fn accounting_flow_flags_unaccounted_store_entry_points() {
+        let src = "\
+pub struct WeavedStore;\n\
+impl WeavedStore {\n\
+    pub fn leaky(&self) -> u64 {\n\
+        self.row_planes(0)\n\
+    }\n\
+    pub fn tallied(&self) -> u64 {\n\
+        self.note_row_visit(0);\n\
+        self.row_planes(0)\n\
+    }\n\
+    fn row_planes(&self, _r: usize) -> u64 { 0 }\n\
+    fn note_row_visit(&self, _r: usize) {}\n\
+}\n";
+        let hits = flow_hit(&[("store/weaved.rs", src)], &LintConfig::default());
+        assert_eq!(hits, vec![("store/weaved.rs".to_string(), 3, "accounting-flow")]);
+    }
+
+    #[test]
+    fn accounting_flow_follows_the_call_graph_across_files() {
+        let a = "\
+pub struct PlaneStore;\n\
+impl PlaneStore {\n\
+    pub fn entry(&self) -> u64 {\n\
+        helper_read()\n\
+    }\n\
+}\n";
+        let b = "\
+pub fn helper_read() -> u64 {\n\
+    gather_word(3)\n\
+}\n\
+fn gather_word(_w: usize) -> u64 { 0 }\n";
+        let hits =
+            flow_hit(&[("store/front.rs", a), ("store/inner.rs", b)], &LintConfig::default());
+        assert_eq!(hits, vec![("store/front.rs".to_string(), 3, "accounting-flow")]);
+        // accounting in the helper clears the entry point transitively
+        let b_ok = "\
+pub fn helper_read() -> u64 {\n\
+    account(1);\n\
+    gather_word(3)\n\
+}\n\
+fn gather_word(_w: usize) -> u64 { 0 }\n\
+fn account(_n: u64) {}\n";
+        let hits =
+            flow_hit(&[("store/front.rs", a), ("store/inner.rs", b_ok)], &LintConfig::default());
+        assert!(hits.is_empty(), "{hits:?}");
+    }
+
+    #[test]
+    fn accounting_flow_skips_non_store_and_non_pub_fns() {
+        let src = "\
+pub struct XStore;\n\
+impl XStore {\n\
+    fn private_probe(&self) -> u64 { self.row_planes(0) }\n\
+    fn row_planes(&self, _r: usize) -> u64 { 0 }\n\
+}\n";
+        assert!(flow_hit(&[("store/x.rs", src)], &LintConfig::default()).is_empty());
+        let outside = "\
+pub struct YStore;\n\
+impl YStore {\n\
+    pub fn read(&self) -> u64 { self.row_planes(0) }\n\
+    fn row_planes(&self, _r: usize) -> u64 { 0 }\n\
+}\n";
+        assert!(
+            flow_hit(&[("sgd/y.rs", outside)], &LintConfig::default()).is_empty(),
+            "accounting-flow is scoped to store/"
+        );
+    }
+
+    #[test]
+    fn rng_stream_discipline_flags_rng_new_in_spawning_fns() {
+        let bad = "\
+fn run(threads: usize) {\n\
+    for t in 0..threads {\n\
+        std::thread::spawn(move || {\n\
+            let mut rng = Rng::new(seed ^ t as u64);\n\
+        });\n\
+    }\n\
+}\n";
+        let hits = flow_hit(&[("sgd/host.rs", bad)], &LintConfig::default());
+        assert_eq!(hits, vec![("sgd/host.rs".to_string(), 4, "rng-stream-discipline")]);
+        let good = bad.replace("Rng::new(seed ^ t as u64)", "Rng::new_stream(seed, t as u64)");
+        assert!(flow_hit(&[("sgd/host.rs", good.as_str())], &LintConfig::default()).is_empty());
+        // no spawn in the fn: Rng::new is the blessed root-stream form
+        let root = "fn seed_root() { let mut rng = Rng::new(0xC0FFEE); }\n";
+        assert!(flow_hit(&[("sgd/host.rs", root)], &LintConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn rng_stream_discipline_gates_threshold_draws_in_store() {
+        let bad = "\
+pub fn draw(rng: &mut Rng) -> u64 {\n\
+    rng.next_u64()\n\
+}\n";
+        let hits = flow_hit(&[("store/ds.rs", bad)], &LintConfig::default());
+        assert_eq!(hits, vec![("store/ds.rs".to_string(), 2, "rng-stream-discipline")]);
+        let good = "\
+pub struct PcgSource;\n\
+impl ThresholdSource for PcgSource {\n\
+    fn draw(&mut self) -> u64 {\n\
+        self.rng.next_u64()\n\
+    }\n\
+}\n";
+        assert!(flow_hit(&[("store/ds.rs", good)], &LintConfig::default()).is_empty());
+        assert!(
+            flow_hit(&[("sgd/ds.rs", bad)], &LintConfig::default()).is_empty(),
+            "threshold half is scoped to store/"
+        );
+    }
+
+    #[test]
+    fn strategy_matrix_rejects_wildcard_arms() {
+        let bad = "\
+fn pick(s: ReadStrategy) -> u32 {\n\
+    match s {\n\
+        ReadStrategy::Dense => 1,\n\
+        _ => 0,\n\
+    }\n\
+}\n";
+        let hits = flow_hit(&[("sgd/modes.rs", bad)], &LintConfig::default());
+        assert_eq!(hits, vec![("sgd/modes.rs".to_string(), 4, "strategy-matrix-exhaustiveness")]);
+        let exhaustive = "\
+fn pick(s: ReadStrategy) -> u32 {\n\
+    match s {\n\
+        ReadStrategy::Dense => 1,\n\
+        ReadStrategy::Truncate | ReadStrategy::DoubleSample => 0,\n\
+        ReadStrategy::Popcount { q } => q,\n\
+    }\n\
+}\n";
+        assert!(flow_hit(&[("sgd/modes.rs", exhaustive)], &LintConfig::default()).is_empty());
+        // non-strategy matches may use wildcards freely
+        let plain = "fn f(x: u32) -> u32 { match x { 0 => 1, _ => 0 } }\n";
+        assert!(flow_hit(&[("sgd/modes.rs", plain)], &LintConfig::default()).is_empty());
+        // test-scope matches are exempt
+        let in_test = "\
+#[cfg(test)]\n\
+mod tests {\n\
+    fn pick(s: ReadStrategy) -> u32 {\n\
+        match s { ReadStrategy::Dense => 1, _ => 0 }\n\
+    }\n\
+}\n";
+        assert!(flow_hit(&[("sgd/modes.rs", in_test)], &LintConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn design_ref_checks_section_numbers_when_configured() {
+        let src = "let x = 1; // the plane walk (DESIGN.md \u{a7}99)\n";
+        let cfg = LintConfig { design_text: Some("## \u{a7}5 Planes\n"), test_texts: None };
+        let hits = flow_hit(&[("store/a.rs", src)], &cfg);
+        assert_eq!(hits, vec![("store/a.rs".to_string(), 1, "design-ref")]);
+        let ok = "let x = 1; // the plane walk (DESIGN.md \u{a7}5)\n";
+        assert!(flow_hit(&[("store/a.rs", ok)], &cfg).is_empty());
+        // without a DESIGN.md config the rule is off
+        assert!(flow_hit(&[("store/a.rs", src)], &LintConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn twin_v2_checks_test_existence_at_dispatch_sites_only() {
+        let src = "\
+// twin: gather_scalar (simd_gather_matches_scalar)\n\
+if dispatch::tier() == t { simd::gather(x) } else { gather_scalar(x) }\n";
+        let tests_missing: Vec<String> = vec!["fn unrelated_test() {}\n".to_string()];
+        let cfg = LintConfig { design_text: None, test_texts: Some(&tests_missing) };
+        let hits = flow_hit(&[("store/kernel.rs", src)], &cfg);
+        assert_eq!(hits, vec![("store/kernel.rs".to_string(), 1, "twin-contract-v2")]);
+        let tests_present: Vec<String> =
+            vec!["#[test]\nfn simd_gather_matches_scalar() {}\n".to_string()];
+        let cfg = LintConfig { design_text: None, test_texts: Some(&tests_present) };
+        assert!(flow_hit(&[("store/kernel.rs", src)], &cfg).is_empty());
+        // a stray twin-shaped comment away from any dispatch site is doc,
+        // not contract — the doc-template in dispatch.rs must stay legal
+        let doc_only = "// twin: <scalar_fn> (<bit_equality_test>)\nlet x = 1;\n";
+        let cfg = LintConfig { design_text: None, test_texts: Some(&tests_missing) };
+        assert!(flow_hit(&[("store/dispatch.rs", doc_only)], &cfg).is_empty());
+    }
+
+    #[test]
+    fn deprecated_fns_keep_zero_internal_callers() {
+        let a = "\
+#[deprecated(note = \"use new_api\")]\n\
+pub fn old_api(x: u32) -> u32 { new_api(x) }\n\
+pub fn new_api(x: u32) -> u32 { x }\n";
+        let b = "pub fn caller() -> u32 { old_api(7) }\n";
+        let hits = flow_hit(&[("api.rs", a), ("user.rs", b)], &LintConfig::default());
+        assert_eq!(hits, vec![("user.rs".to_string(), 1, "deprecated-no-internal-callers")]);
+        // test-scope callers are fine (shim coverage tests)
+        let b_test = "\
+#[cfg(test)]\n\
+mod tests {\n\
+    #[test]\n\
+    fn shim_still_forwards() { assert_eq!(old_api(7), 7); }\n\
+}\n";
+        assert!(flow_hit(&[("api.rs", a), ("user.rs", b_test)], &LintConfig::default())
+            .is_empty());
+        // a deprecated fn may call another deprecated fn (shim chains)
+        let chain = "\
+#[deprecated]\n\
+pub fn old2(x: u32) -> u32 { x }\n\
+#[deprecated]\n\
+pub fn old1(x: u32) -> u32 { old2(x) }\n";
+        assert!(flow_hit(&[("api.rs", chain)], &LintConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn flow_findings_respect_inline_suppressions() {
+        let src = "\
+fn run() {\n\
+    std::thread::spawn(move || {\n\
+        // lint: allow(rng-stream-discipline) — fixture exercises the raw form\n\
+        let mut rng = Rng::new(9);\n\
+    });\n\
+}\n";
+        assert!(flow_hit(&[("sgd/host.rs", src)], &LintConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn lint_files_sorts_findings_by_path_line_rule() {
+        let files = vec![
+            ("z.rs", "let t = Instant::now();\n"),
+            ("a.rs", "fn f() { unsafe { g() } }\n"),
+        ];
+        let hits = flow_hit(&files, &LintConfig::default());
+        assert_eq!(
+            hits,
+            vec![
+                ("a.rs".to_string(), 1, "unsafe-code"),
+                ("z.rs".to_string(), 1, "wall-clock"),
+            ]
+        );
     }
 }

@@ -1,61 +1,231 @@
 //! `zipml-lint` CLI: lint the crate's source tree against the ZipML
-//! invariant rules (see the library docs / DESIGN.md §11).
+//! invariant rules (see the library docs / DESIGN.md §11, §13).
 //!
-//! Usage: `zipml-lint [SRC_DIR [ALLOWLIST]]`
+//! Usage: `zipml-lint [SRC_DIR [ALLOWLIST]] [FLAGS]`
 //!
-//! With no arguments it lints the in-repo `rust/src/` with the in-repo
-//! `rust/lint/allowlist_unsafe.txt`, so `cargo run -p zipml-lint` from
-//! anywhere in the workspace is the whole invocation. Exit status is 1
-//! if any diagnostic fires, 2 on I/O or usage errors, 0 on a clean tree.
+//! With no positional arguments it lints the in-repo `rust/src/` with
+//! the in-repo `rust/lint/allowlist_unsafe.txt` AND the full cross-tree
+//! config (repo `DESIGN.md`, `rust/tests/`), so
+//! `cargo run -p zipml-lint` from anywhere in the workspace is the
+//! whole twelve-rule invocation. An explicit SRC_DIR runs config-free
+//! (fixture trees bring their own config via `--design`/`--tests`).
+//!
+//! Flags:
+//!  - `--json`            print findings as JSONL to stdout (no prose)
+//!  - `--json=FILE`       also write findings as JSONL to FILE
+//!  - `--baseline=FILE`   diff mode: fail only on findings not in FILE
+//!  - `--write-baseline=FILE`  write current findings to FILE, exit 0
+//!  - `--design=FILE`     DESIGN.md to resolve `design-ref` against
+//!  - `--tests=DIR`       tests root for `twin-contract-v2` existence
+//!
+//! Exit status: 1 if any (new, under `--baseline`) finding fires, 2 on
+//! I/O or usage errors, 0 on a clean tree.
 
 #![forbid(unsafe_code)]
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-fn main() -> ExitCode {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    if args.iter().any(|a| a == "-h" || a == "--help") || args.len() > 2 {
-        eprintln!("usage: zipml-lint [SRC_DIR [ALLOWLIST]]");
-        eprintln!("  defaults: SRC_DIR = rust/src, ALLOWLIST = rust/lint/allowlist_unsafe.txt");
-        return ExitCode::from(2);
+use zipml_lint::{json, lint_tree_with, parse_allowlist, read_tree, LintConfig, RULE_NAMES};
+
+struct Cli {
+    src_root: PathBuf,
+    allow_path: PathBuf,
+    json_stdout: bool,
+    json_file: Option<PathBuf>,
+    baseline: Option<PathBuf>,
+    write_baseline: Option<PathBuf>,
+    design: Option<PathBuf>,
+    tests: Option<PathBuf>,
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: zipml-lint [SRC_DIR [ALLOWLIST]] [--json[=FILE]] [--baseline=FILE]\n\
+         \x20                 [--write-baseline=FILE] [--design=FILE] [--tests=DIR]\n\
+         \x20 defaults: SRC_DIR = rust/src, ALLOWLIST = rust/lint/allowlist_unsafe.txt;\n\
+         \x20 with default SRC_DIR, --design/--tests default to the repo DESIGN.md and rust/tests"
+    );
+    ExitCode::from(2)
+}
+
+fn parse_cli(args: &[String]) -> Result<Cli, ()> {
+    let mut pos: Vec<&String> = Vec::new();
+    let mut cli = Cli {
+        src_root: PathBuf::new(),
+        allow_path: PathBuf::new(),
+        json_stdout: false,
+        json_file: None,
+        baseline: None,
+        write_baseline: None,
+        design: None,
+        tests: None,
+    };
+    for a in args {
+        if a == "-h" || a == "--help" {
+            return Err(());
+        } else if a == "--json" {
+            cli.json_stdout = true;
+        } else if let Some(v) = a.strip_prefix("--json=") {
+            cli.json_file = Some(PathBuf::from(v));
+        } else if let Some(v) = a.strip_prefix("--baseline=") {
+            cli.baseline = Some(PathBuf::from(v));
+        } else if let Some(v) = a.strip_prefix("--write-baseline=") {
+            cli.write_baseline = Some(PathBuf::from(v));
+        } else if let Some(v) = a.strip_prefix("--design=") {
+            cli.design = Some(PathBuf::from(v));
+        } else if let Some(v) = a.strip_prefix("--tests=") {
+            cli.tests = Some(PathBuf::from(v));
+        } else if a.starts_with("--") {
+            eprintln!("zipml-lint: unknown flag {a}");
+            return Err(());
+        } else {
+            pos.push(a);
+        }
+    }
+    if pos.len() > 2 {
+        return Err(());
     }
     // CARGO_MANIFEST_DIR is baked in at compile time, so the default
     // paths resolve no matter the invocation cwd.
     let manifest: PathBuf = env!("CARGO_MANIFEST_DIR").into();
-    let src_root = args.first().map(PathBuf::from).unwrap_or_else(|| manifest.join("../src"));
-    let allow_path = args
-        .get(1)
-        .map(PathBuf::from)
-        .unwrap_or_else(|| manifest.join("allowlist_unsafe.txt"));
+    let default_src = pos.is_empty();
+    cli.src_root = pos.first().map(PathBuf::from).unwrap_or_else(|| manifest.join("../src"));
+    cli.allow_path =
+        pos.get(1).map(PathBuf::from).unwrap_or_else(|| manifest.join("allowlist_unsafe.txt"));
+    if default_src {
+        // the in-repo run gets the full cross-tree config by default
+        if cli.design.is_none() {
+            cli.design = Some(manifest.join("../../DESIGN.md"));
+        }
+        if cli.tests.is_none() {
+            cli.tests = Some(manifest.join("../tests"));
+        }
+    }
+    Ok(cli)
+}
 
-    let allow_text = match std::fs::read_to_string(&allow_path) {
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Ok(cli) = parse_cli(&args) else {
+        return usage();
+    };
+
+    let allow_text = match std::fs::read_to_string(&cli.allow_path) {
         Ok(t) => t,
         Err(e) => {
-            eprintln!("zipml-lint: cannot read allowlist {}: {e}", allow_path.display());
+            eprintln!("zipml-lint: cannot read allowlist {}: {e}", cli.allow_path.display());
             return ExitCode::from(2);
         }
     };
-    let allowlist = zipml_lint::parse_allowlist(&allow_text);
+    let allowlist = parse_allowlist(&allow_text);
 
-    match zipml_lint::lint_tree(&src_root, &allowlist) {
-        Ok((files, diags)) if diags.is_empty() => {
-            println!(
-                "zipml-lint OK: {files} files, {} rules, 0 findings",
-                zipml_lint::RULE_NAMES.len()
-            );
-            ExitCode::SUCCESS
+    let design_text = match &cli.design {
+        None => None,
+        Some(p) => match std::fs::read_to_string(p) {
+            Ok(t) => Some(t),
+            Err(e) => {
+                eprintln!("zipml-lint: cannot read design doc {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        },
+    };
+    let test_texts: Option<Vec<String>> = match &cli.tests {
+        None => None,
+        Some(p) => match read_tree(p) {
+            Ok(files) => Some(files.into_iter().map(|(_rel, src)| src).collect()),
+            Err(e) => {
+                eprintln!("zipml-lint: cannot scan tests root {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        },
+    };
+    let cfg = LintConfig { design_text: design_text.as_deref(), test_texts: test_texts.as_deref() };
+
+    let (files, diags) = match lint_tree_with(&cli.src_root, &allowlist, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("zipml-lint: cannot scan {}: {e}", cli.src_root.display());
+            return ExitCode::from(2);
         }
-        Ok((_, diags)) => {
+    };
+
+    let rendered = json::render_findings(&diags);
+    if let Some(p) = &cli.json_file {
+        if let Err(e) = std::fs::write(p, &rendered) {
+            eprintln!("zipml-lint: cannot write {}: {e}", p.display());
+            return ExitCode::from(2);
+        }
+    }
+    if let Some(p) = &cli.write_baseline {
+        if let Err(e) = std::fs::write(p, &rendered) {
+            eprintln!("zipml-lint: cannot write baseline {}: {e}", p.display());
+            return ExitCode::from(2);
+        }
+        eprintln!(
+            "zipml-lint: wrote baseline {} ({} finding(s))",
+            p.display(),
+            diags.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+    if cli.json_stdout {
+        print!("{rendered}");
+    }
+
+    // diff mode: only findings absent from the baseline fail the run
+    if let Some(p) = &cli.baseline {
+        let base_text = match std::fs::read_to_string(p) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("zipml-lint: cannot read baseline {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        };
+        let baseline = match json::parse_findings(&base_text) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("zipml-lint: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        let new = json::new_findings(&diags, &baseline);
+        let stale = json::stale_entries(&diags, &baseline);
+        if !cli.json_stdout {
+            for d in &new {
+                println!("{d}");
+            }
+        }
+        for (path, line, rule) in &stale {
+            eprintln!("zipml-lint: baseline entry burned down (tighten it): {path}:{line} [{rule}]");
+        }
+        return if new.is_empty() {
+            if !cli.json_stdout {
+                println!(
+                    "zipml-lint OK: {files} files, {} rules, {} finding(s), 0 new vs baseline",
+                    RULE_NAMES.len(),
+                    diags.len()
+                );
+            }
+            ExitCode::SUCCESS
+        } else {
+            eprintln!("zipml-lint: {} new finding(s) vs baseline", new.len());
+            ExitCode::FAILURE
+        };
+    }
+
+    if diags.is_empty() {
+        if !cli.json_stdout {
+            println!("zipml-lint OK: {files} files, {} rules, 0 findings", RULE_NAMES.len());
+        }
+        ExitCode::SUCCESS
+    } else {
+        if !cli.json_stdout {
             for d in &diags {
                 println!("{d}");
             }
-            eprintln!("zipml-lint: {} finding(s)", diags.len());
-            ExitCode::FAILURE
         }
-        Err(e) => {
-            eprintln!("zipml-lint: cannot scan {}: {e}", src_root.display());
-            ExitCode::from(2)
-        }
+        eprintln!("zipml-lint: {} finding(s)", diags.len());
+        ExitCode::FAILURE
     }
 }

@@ -1,0 +1,526 @@
+//! The rules: six per-line rules (ported unchanged from v1) and six
+//! cross-file flow rules over the [`crate::items::FileModel`] tree.
+//!
+//! Line rules see one scrubbed file at a time; flow rules see every
+//! file's item tree at once plus optional cross-tree context (the
+//! DESIGN.md section list, the test-fn name set under `rust/tests/`).
+//! Each rule is individually fixture-pinned; every finding can be waived
+//! in place with `// lint: allow(rule)` on the same or preceding line.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::items::FileModel;
+use crate::scrub::{has_token, ScrubbedLine};
+use crate::Diagnostic;
+
+/// Narrowing targets of the `byte-truncating-cast` rule: a byte total
+/// cast to any of these can silently truncate or round (`u64`, `usize`
+/// and `f64`→ reporting casts stay legal).
+const NARROW_CASTS: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32", "f32"];
+
+pub(crate) fn cast_to_narrow(code: &str) -> Option<&'static str> {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(" as ") {
+        let mut j = from + pos + 4;
+        while j < b.len() && b[j] == b' ' {
+            j += 1;
+        }
+        let start = j;
+        while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+            j += 1;
+        }
+        let ty = &code[start..j];
+        if let Some(&n) = NARROW_CASTS.iter().find(|&&n| n == ty) {
+            return Some(n);
+        }
+        from += pos + 4;
+    }
+    None
+}
+
+/// Whether the scrubbed code mentions a byte-accounting identifier (any
+/// identifier containing `bytes`, case-insensitive).
+fn mentions_bytes_ident(code: &str) -> bool {
+    code.to_ascii_lowercase().contains("bytes")
+}
+
+pub(crate) fn suppressed(lines: &[ScrubbedLine], i: usize, rule: &str) -> bool {
+    let needle = format!("lint: allow({rule})");
+    lines[i].comment.contains(&needle)
+        || (i > 0 && lines[i - 1].comment.contains(&needle))
+}
+
+/// How many lines above an `Ordering::` use its `// ordering:` contract
+/// comment may sit (inclusive; same-line comments always count).
+const ORDERING_COMMENT_REACH: usize = 3;
+
+fn has_ordering_contract(lines: &[ScrubbedLine], i: usize) -> bool {
+    let lo = i.saturating_sub(ORDERING_COMMENT_REACH);
+    lines[lo..=i].iter().any(|l| l.comment.contains("ordering:"))
+}
+
+/// How many lines above a `dispatch::tier` site its `// twin:` contract
+/// comment may sit (same reach as the ordering rule).
+const TWIN_COMMENT_REACH: usize = 3;
+
+/// A complete twin contract names the scalar equivalent and, in parens,
+/// the bit-equality test: `twin: scalar_name (test_name)`. Returns the
+/// two halves; either empty means the contract is not actually stated.
+pub(crate) fn twin_contract_parts(comment: &str) -> Option<(String, String)> {
+    let rest = comment.split("twin:").nth(1)?;
+    let open = rest.find('(')?;
+    let close = rest[open + 1..].find(')')?;
+    let scalar = rest[..open].trim();
+    let test = rest[open + 1..open + 1 + close].trim();
+    if scalar.is_empty() || test.is_empty() {
+        return None;
+    }
+    Some((scalar.to_string(), test.to_string()))
+}
+
+fn has_twin_contract(lines: &[ScrubbedLine], i: usize) -> bool {
+    let lo = i.saturating_sub(TWIN_COMMENT_REACH);
+    lines[lo..=i].iter().any(|l| twin_contract_parts(&l.comment).is_some())
+}
+
+const MSG_UNSAFE: &str =
+    "`unsafe` outside the allowlist (rust/lint/allowlist_unsafe.txt); the crate forbids unsafe";
+const MSG_ORDERING: &str =
+    "`Ordering::*` without an `// ordering:` comment on this line or the 3 above (DESIGN.md \u{a7}11)";
+const MSG_WALL_CLOCK: &str =
+    "wall-clock read outside telemetry//bench.rs; use telemetry::Stopwatch (determinism contract)";
+const MSG_BYTE_CAST: &str =
+    "byte-accounting expression narrowed with `as` can truncate; byte totals stay u64 end to end";
+const MSG_HASH: &str =
+    "HashMap/HashSet in a deterministic path (store/, sgd/, fpga/); use Vec or BTreeMap";
+const MSG_JSON: &str =
+    "second JSON emitter outside bench.rs; write through bench::JsonObj so escaping never drifts";
+const MSG_TWIN_SITE: &str =
+    "`dispatch::tier` site without a `// twin: scalar_name (bit_equality_test)` comment on this \
+     line or the 3 above (DESIGN.md \u{a7}12)";
+const MSG_ACCT: &str =
+    "public store entry point reaches plane words without reaching a byte-accounting sink \
+     (`note_row_visit` / shard byte cells); every read path tallies exactly once (DESIGN.md \u{a7}5/\u{a7}8)";
+const MSG_RNG_SPAWN: &str =
+    "`Rng::new` inside a thread-spawning fn; per-thread randomness derives through \
+     `Rng::new_stream` so streams can never collide (DESIGN.md \u{a7}10)";
+const MSG_RNG_THRESH: &str =
+    "raw `.next_u64()` threshold draw in store/ outside an `impl ThresholdSource` block; \
+     DS threshold randomness flows only through `ThresholdSource` (DESIGN.md \u{a7}5)";
+const MSG_STRATEGY: &str =
+    "wildcard `_` arm in a ReadStrategy/Execution/ModelKind match; enumerate the variants so a \
+     new strategy can never silently fall back (error-never-fall-back contract)";
+
+/// Lint one file's source text with the six line rules plus the
+/// dispatch-site half of `twin-contract-v2`. `rel_path` is the
+/// `/`-separated path relative to the scanned source root — the
+/// path-scoped rules key off it. `unsafe_allowlist` holds rel paths
+/// where `unsafe` is permitted.
+pub fn line_rules(rel_path: &str, lines: &[ScrubbedLine], unsafe_allowlist: &[String]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let in_store = rel_path.starts_with("store/");
+    let det_path = in_store || rel_path.starts_with("sgd/") || rel_path.starts_with("fpga/");
+    let wall_exempt = rel_path.starts_with("telemetry/") || rel_path == "bench.rs";
+    let json_exempt = rel_path == "bench.rs";
+    let unsafe_allowed = unsafe_allowlist.iter().any(|p| p == rel_path);
+    let mut diag = |i: usize, rule: &'static str, msg: &str| {
+        out.push(Diagnostic {
+            path: rel_path.to_string(),
+            line: i + 1,
+            rule,
+            message: msg.to_string(),
+        });
+    };
+    for (i, l) in lines.iter().enumerate() {
+        let code = l.code.as_str();
+        if !unsafe_allowed && has_token(code, "unsafe") && !suppressed(lines, i, "unsafe-code") {
+            diag(i, "unsafe-code", MSG_UNSAFE);
+        }
+        if code.contains("Ordering::")
+            && !has_ordering_contract(lines, i)
+            && !suppressed(lines, i, "ordering-contract")
+        {
+            diag(i, "ordering-contract", MSG_ORDERING);
+        }
+        if !wall_exempt
+            && (has_token(code, "Instant") || has_token(code, "SystemTime"))
+            && !suppressed(lines, i, "wall-clock")
+        {
+            diag(i, "wall-clock", MSG_WALL_CLOCK);
+        }
+        if in_store && mentions_bytes_ident(code) {
+            if let Some(ty) = cast_to_narrow(code) {
+                if !suppressed(lines, i, "byte-truncating-cast") {
+                    diag(i, "byte-truncating-cast", &format!("{MSG_BYTE_CAST} (`as {ty}`)"));
+                }
+            }
+        }
+        if det_path
+            && (has_token(code, "HashMap") || has_token(code, "HashSet"))
+            && !suppressed(lines, i, "hash-in-deterministic-path")
+        {
+            diag(i, "hash-in-deterministic-path", MSG_HASH);
+        }
+        if has_token(code, "dispatch::tier")
+            && !has_twin_contract(lines, i)
+            && !suppressed(lines, i, "twin-contract-v2")
+        {
+            diag(i, "twin-contract-v2", MSG_TWIN_SITE);
+        }
+        let json_def = code.contains("fn json_");
+        if !json_exempt
+            && (json_def || has_token(code, "json_escape") || has_token(code, "json_val"))
+            && !suppressed(lines, i, "json-emitter")
+        {
+            diag(i, "json-emitter", MSG_JSON);
+        }
+    }
+    out
+}
+
+/// Cross-tree context the flow rules may consult. Either half absent
+/// means the rules needing it are skipped (fixture trees and plain
+/// `zipml-lint SOME_DIR` runs stay self-contained).
+#[derive(Default)]
+pub struct FlowContext {
+    /// `§N` numbers of real `## §N` sections in DESIGN.md, when known.
+    pub design_sections: Option<BTreeSet<u32>>,
+    /// Names of `fn`s found under the tests root, when known.
+    pub test_fns: Option<BTreeSet<String>>,
+}
+
+/// Base fact for the accounting closure: the fn's body reads bit-plane
+/// words directly.
+fn touches_planes_base(m: &FileModel, idx: usize) -> bool {
+    let code = m.body_code(idx);
+    ["row_planes", "gather_word", "carry_mask_word", "row_plane_occ"]
+        .iter()
+        .any(|t| has_token(&code, t))
+}
+
+/// Base fact for the accounting closure: the fn's body accounts bytes —
+/// it adds to the shard byte cells directly or calls an accounting sink.
+fn accounts_base(m: &FileModel, idx: usize) -> bool {
+    let code = m.body_code(idx);
+    if has_token(&code, "shard_bytes") && has_token(&code, "fetch_add") {
+        return true;
+    }
+    m.calls
+        .iter()
+        .any(|c| c.caller == Some(idx) && (c.callee == "note_row_visit" || c.callee == "account"))
+}
+
+/// Run the six flow rules over the whole file set.
+pub fn flow_rules(models: &[FileModel], ctx: &FlowContext) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+
+    // ---- crate-wide fn table + name-based call edges ----
+    // global fn id = (model idx, fn idx)
+    let mut by_name: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
+    for (mi, m) in models.iter().enumerate() {
+        for (fi, f) in m.fns.iter().enumerate() {
+            by_name.entry(f.name.as_str()).or_default().push((mi, fi));
+        }
+    }
+    // reachability closure: flag(fn) = base(fn) || flag(any callee)
+    let closure = |base: &dyn Fn(&FileModel, usize) -> bool| -> Vec<Vec<bool>> {
+        let mut flag: Vec<Vec<bool>> = models
+            .iter()
+            .map(|m| (0..m.fns.len()).map(|fi| base(m, fi)).collect())
+            .collect();
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for (mi, m) in models.iter().enumerate() {
+                for c in &m.calls {
+                    let Some(fi) = c.caller else { continue };
+                    if flag[mi][fi] {
+                        continue;
+                    }
+                    let hit = by_name
+                        .get(c.callee.as_str())
+                        .is_some_and(|tgts| tgts.iter().any(|&(tm, tf)| flag[tm][tf]));
+                    if hit {
+                        flag[mi][fi] = true;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        flag
+    };
+    let touches = closure(&touches_planes_base);
+    let accounts = closure(&accounts_base);
+
+    // accounting-flow: pub fns on *Store impls in store/ that reach
+    // plane words must also reach an accounting sink
+    for (mi, m) in models.iter().enumerate() {
+        if !m.rel_path.starts_with("store/") {
+            continue;
+        }
+        for (fi, f) in m.fns.iter().enumerate() {
+            if !f.is_pub || f.in_test {
+                continue;
+            }
+            if !f.impl_type.as_deref().is_some_and(|t| t.ends_with("Store")) {
+                continue;
+            }
+            if touches[mi][fi] && !accounts[mi][fi] && !suppressed(&m.lines, f.line, "accounting-flow")
+            {
+                out.push(Diagnostic {
+                    path: m.rel_path.clone(),
+                    line: f.line + 1,
+                    rule: "accounting-flow",
+                    message: MSG_ACCT.to_string(),
+                });
+            }
+        }
+    }
+
+    // rng-stream-discipline
+    for m in models {
+        for f in &m.fns {
+            if f.in_test {
+                continue;
+            }
+            let (b0, b1) = f.body;
+            let code: String =
+                m.lines[b0..=b1].iter().map(|l| l.code.as_str()).collect::<Vec<_>>().join("\n");
+            if !has_token(&code, "spawn") {
+                continue;
+            }
+            for i in b0..=b1 {
+                let flat: String = m.lines[i].code.chars().filter(|c| *c != ' ').collect();
+                if flat.contains("Rng::new(")
+                    && !m.in_test_scope(i)
+                    && !suppressed(&m.lines, i, "rng-stream-discipline")
+                {
+                    out.push(Diagnostic {
+                        path: m.rel_path.clone(),
+                        line: i + 1,
+                        rule: "rng-stream-discipline",
+                        message: MSG_RNG_SPAWN.to_string(),
+                    });
+                }
+            }
+        }
+        if m.rel_path.starts_with("store/") {
+            for (i, l) in m.lines.iter().enumerate() {
+                let flat: String = l.code.chars().filter(|c| *c != ' ').collect();
+                if !flat.contains(".next_u64(") || m.in_test_scope(i) {
+                    continue;
+                }
+                let in_threshold_impl = m
+                    .impl_at(i)
+                    .is_some_and(|im| m.impls[im].trait_name.as_deref() == Some("ThresholdSource"));
+                if !in_threshold_impl && !suppressed(&m.lines, i, "rng-stream-discipline") {
+                    out.push(Diagnostic {
+                        path: m.rel_path.clone(),
+                        line: i + 1,
+                        rule: "rng-stream-discipline",
+                        message: MSG_RNG_THRESH.to_string(),
+                    });
+                }
+            }
+        }
+    }
+
+    // strategy-matrix-exhaustiveness
+    for m in models {
+        for mb in &m.matches {
+            if m.in_test_scope(mb.line) {
+                continue;
+            }
+            let strategic = mb.arms.iter().any(|(_, pat)| {
+                ["ReadStrategy::", "Execution::", "ModelKind::"].iter().any(|e| pat.contains(e))
+            });
+            if !strategic {
+                continue;
+            }
+            for (ln, pat) in &mb.arms {
+                if pat == "_" || pat.starts_with("_ if") || pat.starts_with("_if") {
+                    if !suppressed(&m.lines, *ln, "strategy-matrix-exhaustiveness") {
+                        out.push(Diagnostic {
+                            path: m.rel_path.clone(),
+                            line: ln + 1,
+                            rule: "strategy-matrix-exhaustiveness",
+                            message: MSG_STRATEGY.to_string(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // design-ref: every `DESIGN.md §N` in a comment resolves to a real
+    // `## §N` section (skipped when no DESIGN.md was configured)
+    if let Some(sections) = &ctx.design_sections {
+        for m in models {
+            for (i, l) in m.lines.iter().enumerate() {
+                if !l.comment.contains("DESIGN.md") {
+                    continue;
+                }
+                for n in section_refs(&l.comment) {
+                    if !sections.contains(&n) && !suppressed(&m.lines, i, "design-ref") {
+                        out.push(Diagnostic {
+                            path: m.rel_path.clone(),
+                            line: i + 1,
+                            rule: "design-ref",
+                            message: format!(
+                                "comment references DESIGN.md \u{a7}{n}, but DESIGN.md has no \
+                                 `## \u{a7}{n}` section (stale after a renumbering?)"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // twin-contract-v2 (cross-file half): the test named by the twin
+    // comment attached to each dispatch site must exist under the tests
+    // root. Only comments in a site's reach window bind — stray doc
+    // examples elsewhere are not contracts.
+    if let Some(test_fns) = &ctx.test_fns {
+        for m in models {
+            for (i, l) in m.lines.iter().enumerate() {
+                if !has_token(&l.code, "dispatch::tier") {
+                    continue;
+                }
+                let lo = i.saturating_sub(TWIN_COMMENT_REACH);
+                for j in lo..=i {
+                    let Some((_, test)) = twin_contract_parts(&m.lines[j].comment) else {
+                        continue;
+                    };
+                    if !test_fns.contains(&test) && !suppressed(&m.lines, j, "twin-contract-v2") {
+                        out.push(Diagnostic {
+                            path: m.rel_path.clone(),
+                            line: j + 1,
+                            rule: "twin-contract-v2",
+                            message: format!(
+                                "twin contract names test `{test}`, which does not exist under \
+                                 the tests root (rust/tests/)"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // deprecated-no-internal-callers
+    let deprecated: BTreeSet<&str> = models
+        .iter()
+        .flat_map(|m| m.fns.iter().filter(|f| f.deprecated).map(|f| f.name.as_str()))
+        .collect();
+    for m in models {
+        for c in &m.calls {
+            if !deprecated.contains(c.callee.as_str()) || m.in_test_scope(c.line) {
+                continue;
+            }
+            if c.caller.is_some_and(|fi| m.fns[fi].deprecated) {
+                continue;
+            }
+            if !suppressed(&m.lines, c.line, "deprecated-no-internal-callers") {
+                out.push(Diagnostic {
+                    path: m.rel_path.clone(),
+                    line: c.line + 1,
+                    rule: "deprecated-no-internal-callers",
+                    message: format!(
+                        "internal caller of `#[deprecated]` `{}`; deprecated entry points keep \
+                         exactly zero in-crate callers so they can be dropped on schedule",
+                        c.callee
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// All `§N` numbers in a comment (design-ref scans comments that mention
+/// `DESIGN.md`; every section number on such a line must resolve).
+fn section_refs(comment: &str) -> Vec<u32> {
+    let mut out = Vec::new();
+    let chars: Vec<char> = comment.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i] == '\u{a7}' {
+            let mut j = i + 1;
+            let mut n = 0u32;
+            let mut any = false;
+            while j < chars.len() && chars[j].is_ascii_digit() {
+                n = n.saturating_mul(10) + (chars[j] as u32 - '0' as u32);
+                any = true;
+                j += 1;
+            }
+            if any {
+                out.push(n);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Parse DESIGN.md text into its `## §N` section-number set. The digits
+/// must end at a word boundary (`## §5x` is not section 5).
+pub fn design_sections(text: &str) -> BTreeSet<u32> {
+    let mut out = BTreeSet::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("## \u{a7}") {
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            let boundary = match rest[digits.len()..].chars().next() {
+                None => true,
+                Some(c) => !(c.is_alphanumeric() || c == '_'),
+            };
+            if !digits.is_empty() && boundary {
+                if let Ok(n) = digits.parse() {
+                    out.insert(n);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Collect every `fn NAME` in the given file texts (scrubbed first, so
+/// strings and comments never contribute names).
+pub fn test_fn_names(texts: &[String]) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for t in texts {
+        for sl in crate::scrub::scrub(t) {
+            let b = sl.code.as_bytes();
+            let mut from = 0;
+            while let Some(pos) = sl.code[from..].find("fn") {
+                let start = from + pos;
+                from = start + 2;
+                let ok_before = start == 0
+                    || !(b[start - 1].is_ascii_alphanumeric() || b[start - 1] == b'_');
+                if !ok_before {
+                    continue;
+                }
+                // at least one whitespace char, then the name
+                let mut j = start + 2;
+                let ws_start = j;
+                while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+                    j += 1;
+                }
+                if j == ws_start {
+                    continue;
+                }
+                let name_start = j;
+                while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                if j > name_start && !b[name_start].is_ascii_digit() {
+                    out.insert(sl.code[name_start..j].to_string());
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,250 @@
+//! The scrubber: split each source line into code text and comment text.
+//!
+//! Comments, string/char literals, and raw strings are blanked out of the
+//! code channel so rule tokens inside them never match; comment text is
+//! kept in its own channel because several rules *read* comments
+//! (`// ordering:` contracts, `// twin:` contracts, `// lint: allow(…)`
+//! suppressions, `DESIGN.md §N` references).
+
+/// One source line after scrubbing: `code` with all comment bodies and
+/// string/char-literal contents blanked, `comment` holding the line's
+/// comment text (line comments and any block-comment content).
+#[derive(Debug, Default, Clone)]
+pub struct ScrubbedLine {
+    pub code: String,
+    pub comment: String,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Code,
+    /// Inside `/* */`, tracking nesting depth.
+    Block(u32),
+    /// Inside a `"…"` (or `b"…"`) string literal.
+    Str,
+    /// Inside a raw string; payload is the `#` count that closes it.
+    RawStr(u32),
+}
+
+/// Scrub `src` into per-line code/comment records. Handles line and
+/// nested block comments, string/byte-string literals, raw strings with
+/// any hash count (`r"…"`, `r#"…"#`, `r##"…"##`, …), char literals, and
+/// the char-vs-lifetime ambiguity.
+pub fn scrub(src: &str) -> Vec<ScrubbedLine> {
+    let c: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = ScrubbedLine::default();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < c.len() {
+        let ch = c[i];
+        if ch == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            // line comments end at the newline; block/string states span
+            if !matches!(state, State::Block(_) | State::Str | State::RawStr(_)) {
+                state = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if ch == '/' && c.get(i + 1) == Some(&'/') {
+                    // line comment: capture to end of line
+                    i += 2;
+                    while i < c.len() && c[i] != '\n' {
+                        cur.comment.push(c[i]);
+                        i += 1;
+                    }
+                } else if ch == '/' && c.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    i += 2;
+                } else if ch == '"' {
+                    cur.code.push(' ');
+                    state = State::Str;
+                    i += 1;
+                } else if (ch == 'r' || ch == 'b') && !prev_is_ident(&c, i) {
+                    // r"…" / r#"…"# / b"…" / br#"…"# raw & byte strings
+                    let mut j = i + 1;
+                    if ch == 'b' && c.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while c.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    let raw = j > i + 1 || (ch == 'r' && hashes == 0);
+                    if c.get(j) == Some(&'"') && (raw || ch == 'b') {
+                        cur.code.push(' ');
+                        state = if ch == 'b' && hashes == 0 && j == i + 1 {
+                            State::Str
+                        } else {
+                            State::RawStr(hashes)
+                        };
+                        i = j + 1;
+                    } else {
+                        cur.code.push(ch);
+                        i += 1;
+                    }
+                } else if ch == '\'' {
+                    // char literal vs lifetime: a backslash or a closing
+                    // quote two chars on means char literal
+                    if c.get(i + 1) == Some(&'\\') {
+                        i += 2; // skip the escape head
+                        while i < c.len() && c[i] != '\'' && c[i] != '\n' {
+                            i += 1;
+                        }
+                        cur.code.push(' ');
+                        i += 1; // past the closing quote
+                    } else if c.get(i + 2) == Some(&'\'') {
+                        cur.code.push(' ');
+                        i += 3;
+                    } else {
+                        // lifetime: keep the tick so `'a` stays one token
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(ch);
+                    i += 1;
+                }
+            }
+            State::Block(depth) => {
+                if ch == '/' && c.get(i + 1) == Some(&'*') {
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else if ch == '*' && c.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    cur.comment.push(ch);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                // an escape consumes the next char — except a newline
+                // (the `\`-continuation), which must still count a line
+                if ch == '\\' && c.get(i + 1).is_some_and(|&n| n != '\n') {
+                    i += 2;
+                } else if ch == '"' {
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if ch == '"' {
+                    let close = (0..hashes as usize).all(|k| c.get(i + 1 + k) == Some(&'#'));
+                    if close {
+                        state = State::Code;
+                        i += 1 + hashes as usize;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+fn prev_is_ident(c: &[char], i: usize) -> bool {
+    i > 0 && (c[i - 1].is_alphanumeric() || c[i - 1] == '_')
+}
+
+/// Whether `tok` appears in `s` as a whole word (identifier boundaries
+/// on both sides) — so `unsafe_code` never matches the token `unsafe`.
+pub fn has_token(s: &str, tok: &str) -> bool {
+    let sb = s.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = s[from..].find(tok) {
+        let start = from + pos;
+        let end = start + tok.len();
+        let ok_before =
+            start == 0 || !(sb[start - 1].is_ascii_alphanumeric() || sb[start - 1] == b'_');
+        let ok_after = end >= sb.len() || !(sb[end].is_ascii_alphanumeric() || sb[end] == b'_');
+        if ok_before && ok_after {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_code_and_comments() {
+        let s = scrub("let a = 1; // trailing note\n/* block\nstill block */ code()\n");
+        assert_eq!(s[0].code.trim(), "let a = 1;");
+        assert!(s[0].comment.contains("trailing note"));
+        assert!(s[1].comment.contains("block"));
+        assert!(s[1].code.trim().is_empty());
+        assert_eq!(s[2].code.trim(), "code()");
+    }
+
+    #[test]
+    fn blanks_strings_and_chars() {
+        let s = scrub("let x = \"unsafe Instant\"; let c = 'u'; let l: &'a str = y;\n");
+        assert!(!s[0].code.contains("unsafe"));
+        assert!(!s[0].code.contains("Instant"));
+        assert!(s[0].code.contains("&'a str"), "lifetimes survive: {}", s[0].code);
+    }
+
+    #[test]
+    fn handles_raw_and_byte_strings() {
+        let s = scrub("let r = r#\"Ordering:: \"quoted\" unsafe\"#; after()\nb\"bytes unsafe\";\n");
+        assert!(!s[0].code.contains("unsafe"), "{:?}", s[0].code);
+        assert!(s[0].code.contains("after()"));
+        assert!(!s[1].code.contains("unsafe"), "{:?}", s[1].code);
+    }
+
+    #[test]
+    fn handles_multi_hash_raw_strings() {
+        // ≥2 hashes: the embedded `"#` must NOT close the literal; only
+        // `"` followed by the full hash count does.
+        let s = scrub("let r = r##\"unsafe Instant \"# still\"##; after()\n");
+        assert!(!s[0].code.contains("unsafe"), "{:?}", s[0].code);
+        assert!(!s[0].code.contains("still"), "{:?}", s[0].code);
+        assert!(s[0].code.contains("after()"), "{:?}", s[0].code);
+        let s = scrub("let r = r###\"x\"# y\"## z\"###; tail()\n");
+        assert!(!s[0].code.contains('y'), "{:?}", s[0].code);
+        assert!(!s[0].code.contains('z'), "{:?}", s[0].code);
+        assert!(s[0].code.contains("tail()"), "{:?}", s[0].code);
+    }
+
+    #[test]
+    fn multi_hash_raw_strings_span_lines() {
+        let s = scrub("br##\"line1\nline2 unsafe \"# not yet\nend\"## code()\n");
+        assert!(!s[1].code.contains("unsafe"), "{:?}", s[1].code);
+        assert!(!s[1].code.contains("not yet"), "{:?}", s[1].code);
+        assert_eq!(s[2].code.trim(), "code()");
+    }
+
+    #[test]
+    fn escaped_quote_char_literal_does_not_derail() {
+        let s = scrub("let q = '\\''; let x = \"unsafe\"; after()\n");
+        assert!(!s[0].code.contains("unsafe"), "{:?}", s[0].code);
+        assert!(s[0].code.contains("after()"), "{:?}", s[0].code);
+    }
+
+    #[test]
+    fn token_matching_respects_word_boundaries() {
+        assert!(has_token("unsafe {", "unsafe"));
+        assert!(!has_token("#![forbid(unsafe_code)]", "unsafe"));
+        assert!(!has_token("an_unsafe_name", "unsafe"));
+        assert!(has_token("x(unsafe)", "unsafe"));
+    }
+
+    #[test]
+    fn handles_nested_block_comments() {
+        let s = scrub("/* a /* nested */ still comment */ let ok = 1;\n");
+        assert_eq!(s[0].code.trim(), "let ok = 1;");
+        assert!(s[0].comment.contains("nested"));
+    }
+}

@@ -2,22 +2,23 @@
 //!
 //! `tests/lint_fixtures/` holds deliberately-bad (non-compiling — cargo
 //! never builds files in tests/ subdirectories) snippets, one file per
-//! rule, with each seeded violation marked `// LINT-EXPECT[rule-name]`
+//! line rule, with each seeded violation marked `// LINT-EXPECT[rule-name]`
 //! on its line. The contract checked here is exact: the linter must
 //! report *precisely* the marked (path, line, rule) set — nothing
-//! missed, nothing spurious.
+//! missed, nothing spurious. (`tests/flow_fixtures/` holds the
+//! cross-file flow-rule fixtures — see flow_fixtures.rs.)
 
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 
-use zipml_lint::{lint_tree, parse_allowlist, Diagnostic};
+use zipml_lint::{lint_tree, lint_tree_with, parse_allowlist, read_tree, Diagnostic, LintConfig};
 
 fn fixture_root() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures")
 }
 
-/// Scan the fixture tree's raw text for `LINT-EXPECT[rule]` markers.
-fn expected_markers() -> BTreeSet<(String, usize, String)> {
+/// Scan a fixture tree's raw text for `LINT-EXPECT[rule]` markers.
+fn expected_markers_under(root: &Path) -> BTreeSet<(String, usize, String)> {
     fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
         for entry in std::fs::read_dir(dir).expect("fixture dir") {
             let p = entry.expect("fixture entry").path();
@@ -28,12 +29,11 @@ fn expected_markers() -> BTreeSet<(String, usize, String)> {
             }
         }
     }
-    let root = fixture_root();
     let mut files = Vec::new();
-    walk(&root, &mut files);
+    walk(root, &mut files);
     let mut set = BTreeSet::new();
     for f in &files {
-        let rel = f.strip_prefix(&root).unwrap().to_string_lossy().replace('\\', "/");
+        let rel = f.strip_prefix(root).unwrap().to_string_lossy().replace('\\', "/");
         let text = std::fs::read_to_string(f).expect("fixture read");
         for (i, line) in text.lines().enumerate() {
             if let Some(pos) = line.find("LINT-EXPECT[") {
@@ -46,10 +46,31 @@ fn expected_markers() -> BTreeSet<(String, usize, String)> {
     set
 }
 
+fn expected_markers() -> BTreeSet<(String, usize, String)> {
+    expected_markers_under(&fixture_root())
+}
+
 fn found() -> Vec<Diagnostic> {
     // Empty allowlist: the fixtures exercise unsafe-code for real.
     let (files, diags) = lint_tree(&fixture_root(), &[]).expect("scan fixtures");
     assert!(files >= 7, "fixture tree went missing? scanned only {files} files");
+    diags
+}
+
+/// The flow-fixture tree, scanned with its own DESIGN.md and tests root
+/// so all twelve rules run (flow_fixtures.rs pins its exact markers;
+/// here it only feeds the every-rule-fires check).
+fn flow_found() -> Vec<Diagnostic> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/flow_fixtures");
+    let design = std::fs::read_to_string(root.join("DESIGN.md")).expect("flow DESIGN.md");
+    let tests: Vec<String> = read_tree(&root.join("tests"))
+        .expect("flow tests root")
+        .into_iter()
+        .map(|(_rel, src)| src)
+        .collect();
+    let cfg = LintConfig { design_text: Some(&design), test_texts: Some(&tests) };
+    let (files, diags) = lint_tree_with(&root.join("src"), &[], &cfg).expect("scan flow fixtures");
+    assert!(files >= 8, "flow fixture tree went missing? scanned only {files} files");
     diags
 }
 
@@ -68,10 +89,12 @@ fn fixture_findings_match_expect_markers_exactly() {
 }
 
 /// Every rule must be exercised by at least one fixture marker — so a
-/// rule can never silently rot into a no-op.
+/// rule can never silently rot into a no-op. Line rules fire in
+/// lint_fixtures/, flow rules in flow_fixtures/.
 #[test]
 fn every_rule_has_a_firing_fixture() {
-    let hit: BTreeSet<String> = found().into_iter().map(|d| d.rule.to_string()).collect();
+    let mut hit: BTreeSet<String> = found().into_iter().map(|d| d.rule.to_string()).collect();
+    hit.extend(flow_found().into_iter().map(|d| d.rule.to_string()));
     for rule in zipml_lint::RULE_NAMES {
         assert!(hit.contains(*rule), "rule {rule} never fires in the fixtures");
     }
@@ -116,8 +139,17 @@ fn hash_rule_fires_at_seeded_lines_only() {
 }
 
 #[test]
-fn simd_twin_fires_at_seeded_lines_only() {
-    assert_eq!(hits_in("store/simd_twin.rs", "simd-twin-contract"), vec![14, 22]);
+fn twin_contract_fires_at_seeded_lines_only() {
+    assert_eq!(hits_in("store/simd_twin.rs", "twin-contract-v2"), vec![15, 23]);
+}
+
+/// Multi-hash raw strings scrub as literals end to end: nothing inside
+/// them fires, and the scanner picks up real findings right after.
+#[test]
+fn raw_hash_fixture_only_fires_after_the_literals() {
+    let hits: Vec<_> = found().into_iter().filter(|d| d.path == "raw_hash.rs").collect();
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert_eq!((hits[0].line, hits[0].rule), (18, "wall-clock"));
 }
 
 #[test]
@@ -126,9 +158,11 @@ fn suppressed_fixture_is_fully_waived() {
     assert!(hits.is_empty(), "suppressions ignored: {hits:?}");
 }
 
-/// The real tree must lint clean with the real allowlist — this is the
-/// same check `ci.sh --analyze` runs via the CLI, and it runs under
-/// plain `cargo test` so tier-1 already enforces every invariant.
+/// The real tree must lint clean with the real allowlist AND the full
+/// cross-tree config (repo DESIGN.md + rust/tests) — all twelve rules.
+/// This is the same check `ci.sh --analyze` runs via the CLI, and it
+/// runs under plain `cargo test` so tier-1 already enforces every
+/// invariant.
 #[test]
 fn crate_source_tree_lints_clean() {
     let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
@@ -136,7 +170,14 @@ fn crate_source_tree_lints_clean() {
     let allow = parse_allowlist(
         &std::fs::read_to_string(manifest.join("allowlist_unsafe.txt")).expect("allowlist"),
     );
-    let (files, diags) = lint_tree(&src_root, &allow).expect("scan rust/src");
+    let design = std::fs::read_to_string(manifest.join("../../DESIGN.md")).expect("DESIGN.md");
+    let tests: Vec<String> = read_tree(&manifest.join("../tests"))
+        .expect("rust/tests")
+        .into_iter()
+        .map(|(_rel, src)| src)
+        .collect();
+    let cfg = LintConfig { design_text: Some(&design), test_texts: Some(&tests) };
+    let (files, diags) = lint_tree_with(&src_root, &allow, &cfg).expect("scan rust/src");
     assert!(files >= 20, "rust/src shrank? scanned only {files} files");
     assert!(
         diags.is_empty(),

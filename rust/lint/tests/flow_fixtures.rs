@@ -1,0 +1,154 @@
+//! Fixture-driven tests for the v2 flow rules, plus the golden-bytes
+//! pin on the JSON findings stream.
+//!
+//! `tests/flow_fixtures/` is a miniature repo: `src/` (the tree under
+//! lint), `DESIGN.md` (two sections, §1/§2), and `tests/` (one real
+//! twin test). Scanned with that config, all twelve rules run, and the
+//! findings must match the `LINT-EXPECT[rule]` markers exactly.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use zipml_lint::{json, lint_files, lint_tree_with, read_tree, Diagnostic, LintConfig};
+
+fn flow_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/flow_fixtures")
+}
+
+fn flow_found() -> Vec<Diagnostic> {
+    let root = flow_root();
+    let design = std::fs::read_to_string(root.join("DESIGN.md")).expect("flow DESIGN.md");
+    let tests: Vec<String> = read_tree(&root.join("tests"))
+        .expect("flow tests root")
+        .into_iter()
+        .map(|(_rel, src)| src)
+        .collect();
+    let cfg = LintConfig { design_text: Some(&design), test_texts: Some(&tests) };
+    let (files, diags) = lint_tree_with(&root.join("src"), &[], &cfg).expect("scan flow fixtures");
+    assert!(files >= 8, "flow fixture tree went missing? scanned only {files} files");
+    diags
+}
+
+fn expected_markers() -> BTreeSet<(String, usize, String)> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+        for entry in std::fs::read_dir(dir).expect("fixture dir") {
+            let p = entry.expect("fixture entry").path();
+            if p.is_dir() {
+                walk(&p, out);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    let root = flow_root().join("src");
+    let mut files = Vec::new();
+    walk(&root, &mut files);
+    let mut set = BTreeSet::new();
+    for f in &files {
+        let rel = f.strip_prefix(&root).unwrap().to_string_lossy().replace('\\', "/");
+        let text = std::fs::read_to_string(f).expect("fixture read");
+        for (i, line) in text.lines().enumerate() {
+            if let Some(pos) = line.find("LINT-EXPECT[") {
+                let rest = &line[pos + "LINT-EXPECT[".len()..];
+                let rule = rest.split(']').next().expect("closed marker");
+                set.insert((rel.clone(), i + 1, rule.to_string()));
+            }
+        }
+    }
+    set
+}
+
+#[test]
+fn flow_findings_match_expect_markers_exactly() {
+    let expected = expected_markers();
+    assert!(!expected.is_empty(), "no LINT-EXPECT markers found");
+    let got: BTreeSet<(String, usize, String)> = flow_found()
+        .into_iter()
+        .map(|d| (d.path, d.line, d.rule.to_string()))
+        .collect();
+    let missed: Vec<_> = expected.difference(&got).collect();
+    let spurious: Vec<_> = got.difference(&expected).collect();
+    assert!(missed.is_empty(), "marked violations not reported: {missed:?}");
+    assert!(spurious.is_empty(), "unmarked findings reported: {spurious:?}");
+}
+
+fn hits_in(file: &str, rule: &str) -> Vec<usize> {
+    flow_found()
+        .into_iter()
+        .filter(|d| d.path == file && d.rule == rule)
+        .map(|d| d.line)
+        .collect()
+}
+
+#[test]
+fn accounting_flow_fires_at_the_leaky_entry_point_only() {
+    assert_eq!(hits_in("store/accounting.rs", "accounting-flow"), vec![9]);
+    assert!(hits_in("store/planes.rs", "accounting-flow").is_empty());
+}
+
+#[test]
+fn rng_discipline_fires_on_both_halves() {
+    assert_eq!(hits_in("sgd/spawn_rng.rs", "rng-stream-discipline"), vec![8]);
+    assert_eq!(hits_in("store/rng_threshold.rs", "rng-stream-discipline"), vec![15]);
+}
+
+#[test]
+fn strategy_matrix_fires_at_the_wildcard_arm_only() {
+    assert_eq!(hits_in("sgd/strategy.rs", "strategy-matrix-exhaustiveness"), vec![9]);
+}
+
+#[test]
+fn design_ref_fires_on_the_stale_section_only() {
+    assert_eq!(hits_in("design_ref.rs", "design-ref"), vec![11]);
+}
+
+#[test]
+fn twin_v2_fires_on_the_phantom_test_only() {
+    assert_eq!(hits_in("store/twin_site.rs", "twin-contract-v2"), vec![15]);
+}
+
+#[test]
+fn deprecated_rule_fires_at_the_lingering_caller_only() {
+    assert_eq!(hits_in("deprecated.rs", "deprecated-no-internal-callers"), vec![16]);
+}
+
+/// Golden bytes: the exact JSONL the CLI's `--json` mode emits for a
+/// known two-finding tree — path, line, rule, message, field order,
+/// escaping, and sort order all pinned. Rendering goes through
+/// `zipml::bench::JsonObj`, so this also pins that the linter stays a
+/// consumer of the repo's single JSON writer.
+#[test]
+fn json_findings_stream_is_golden_bytes() {
+    let files = vec![
+        (
+            "store/cast.rs".to_string(),
+            "fn f(n_bytes: u64) -> u32 {\n    n_bytes as u32\n}\n".to_string(),
+        ),
+        (
+            "clock.rs".to_string(),
+            "fn now_ms() -> u64 {\n    clock().elapsed(Instant::now())\n}\n".to_string(),
+        ),
+    ];
+    let diags = lint_files(&files, &[], &LintConfig::default());
+    let got = json::render_findings(&diags);
+    let want = concat!(
+        "{\"path\":\"clock.rs\",\"line\":2,\"rule\":\"wall-clock\",\"message\":\"wall-clock ",
+        "read outside telemetry//bench.rs; use telemetry::Stopwatch (determinism contract)\"}\n",
+        "{\"path\":\"store/cast.rs\",\"line\":2,\"rule\":\"byte-truncating-cast\",",
+        "\"message\":\"byte-accounting expression narrowed with `as` can truncate; byte totals ",
+        "stay u64 end to end (`as u32`)\"}\n",
+    );
+    assert_eq!(got, want);
+}
+
+/// Round trip: the stream `--json` writes is exactly what `--baseline`
+/// reads back, and a baseline equal to the current findings means zero
+/// new findings (the CI gate's steady state).
+#[test]
+fn findings_stream_round_trips_as_a_baseline() {
+    let diags = flow_found();
+    assert!(!diags.is_empty());
+    let baseline = json::parse_findings(&json::render_findings(&diags)).expect("round trip");
+    assert!(json::new_findings(&diags, &baseline).is_empty());
+    assert!(json::stale_entries(&diags, &baseline).is_empty());
+}

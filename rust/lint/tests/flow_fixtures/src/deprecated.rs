@@ -1,0 +1,25 @@
+// Fixture for `deprecated-no-internal-callers`: a `#[deprecated]` fn
+// keeps zero non-test in-crate callers, so the shim can be dropped on
+// schedule. Deprecated-to-deprecated forwarding and test-mod callers
+// (shim coverage) stay legal.
+
+#[deprecated(note = "use read_rows_at")]
+pub fn read_rows(lo: usize, hi: usize) -> u64 {
+    read_rows_at(lo, hi - lo)
+}
+
+pub fn read_rows_at(lo: usize, n: usize) -> u64 {
+    (lo + n) as u64
+}
+
+pub fn lingering_caller() -> u64 {
+    read_rows(0, 4) // LINT-EXPECT[deprecated-no-internal-callers]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn shim_still_forwards() {
+        assert_eq!(read_rows(0, 4), read_rows_at(0, 4));
+    }
+}

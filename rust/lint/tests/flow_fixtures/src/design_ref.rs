@@ -1,0 +1,13 @@
+// Fixture for `design-ref`: every `DESIGN.md §N`-style comment
+// reference must resolve to a real section of the configured design
+// doc (this tree's DESIGN.md has §1 and §2 only — see DESIGN.md §1).
+
+pub fn plane_walk() -> u64 {
+    // the walk order is pinned (DESIGN.md §1, DESIGN.md §2)
+    0
+}
+
+pub fn stale_reference() -> u64 {
+    // tallied exactly once per visit (DESIGN.md §9) // LINT-EXPECT[design-ref]
+    0
+}

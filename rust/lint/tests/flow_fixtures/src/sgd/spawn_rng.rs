@@ -1,0 +1,25 @@
+// Fixture for `rng-stream-discipline` (spawn half): a fn that spawns
+// threads must not construct `Rng::new` — per-thread streams derive
+// through `Rng::new_stream`, the one blessed splitter.
+
+pub fn hogwild_run(seed: u64, threads: usize) {
+    for t in 0..threads {
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(seed ^ t as u64); // LINT-EXPECT[rng-stream-discipline]
+            step(&mut rng);
+        });
+    }
+}
+
+pub fn disciplined_run(seed: u64, threads: usize) {
+    for t in 0..threads {
+        std::thread::spawn(move || {
+            let mut rng = Rng::new_stream(seed, t as u64);
+            step(&mut rng);
+        });
+    }
+}
+
+pub fn root_seed(seed: u64) -> Rng {
+    Rng::new(seed)
+}

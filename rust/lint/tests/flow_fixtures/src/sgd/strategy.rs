@@ -1,0 +1,26 @@
+// Fixture for `strategy-matrix-exhaustiveness`: matches over the
+// strategy/model enums enumerate every variant — no `_` fallback, so
+// a new variant is a compile error at every decision point instead of
+// a silent default.
+
+pub fn wildcard_arm(kind: ModelKind) -> f32 {
+    match kind {
+        ModelKind::Linreg => 0.0,
+        _ => 1.0, // LINT-EXPECT[strategy-matrix-exhaustiveness]
+    }
+}
+
+pub fn exhaustive(kind: ModelKind) -> f32 {
+    match kind {
+        ModelKind::Linreg => 0.0,
+        ModelKind::Logistic | ModelKind::Svm => 1.0,
+        ModelKind::Lssvm { c } => c,
+    }
+}
+
+pub fn plain_wildcards_are_fine(x: u32) -> u32 {
+    match x {
+        0 => 1,
+        _ => 0,
+    }
+}

@@ -1,0 +1,19 @@
+// Fixture for `accounting-flow`: public `*Store` entry points that
+// reach plane words must also reach a byte-accounting sink — checked
+// by call-graph reachability, including across files (the plane walk
+// lives in planes.rs).
+
+pub struct FixtureStore;
+
+impl FixtureStore {
+    pub fn leaky_read(&self) -> u64 { // LINT-EXPECT[accounting-flow]
+        plane_helper(3)
+    }
+
+    pub fn tallied_read(&self) -> u64 {
+        self.note_row_visit(3);
+        plane_helper(3)
+    }
+
+    fn note_row_visit(&self, _row: usize) {}
+}

@@ -1,0 +1,11 @@
+// The plane walk: `gather_word` is one of the plane-touch tokens the
+// accounting closure seeds from, so every caller chain that reaches
+// `plane_helper` counts as touching plane words.
+
+pub fn plane_helper(w: usize) -> u64 {
+    gather_word(w)
+}
+
+fn gather_word(_w: usize) -> u64 {
+    0
+}

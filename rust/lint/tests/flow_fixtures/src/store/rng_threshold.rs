@@ -1,0 +1,16 @@
+// Fixture for `rng-stream-discipline` (threshold half): DS threshold
+// draws in store/ happen only inside an `impl ThresholdSource` block.
+
+pub struct FixtureSource {
+    state: u64,
+}
+
+impl ThresholdSource for FixtureSource {
+    fn draw(&mut self) -> u64 {
+        self.state.next_u64()
+    }
+}
+
+pub fn raw_threshold_draw(rng: &mut Pcg) -> u64 {
+    rng.next_u64() // LINT-EXPECT[rng-stream-discipline]
+}

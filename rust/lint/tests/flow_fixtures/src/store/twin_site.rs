@@ -1,0 +1,20 @@
+// Fixture for `twin-contract-v2` (cross-file half): the bit-equality
+// test named by each dispatch site's twin comment must exist under
+// the configured tests root (this tree's tests/ defines exactly one:
+// `gather_twin_bits_match`).
+
+fn verified_site(x: u64) -> u64 {
+    // twin: gather_scalar (gather_twin_bits_match)
+    if dispatch::tier() == dispatch::Tier::Lanes8 {
+        return simd_gather(x);
+    }
+    gather_scalar(x)
+}
+
+fn phantom_test_site(x: u64) -> u64 {
+    // twin: select_scalar (select_twin_bits_match) // LINT-EXPECT[twin-contract-v2]
+    if dispatch::tier() == dispatch::Tier::Lanes8 {
+        return simd_select(x);
+    }
+    select_scalar(x)
+}

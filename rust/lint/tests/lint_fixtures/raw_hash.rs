@@ -1,0 +1,19 @@
+// Scrubber regression fixture: multi-hash raw strings (`r##"…"##`,
+// `br##"…"##`) must be blanked exactly — an embedded `"#` must NOT
+// close a `##` literal early, and scanning must resume cleanly after
+// the real terminator (zero spurious findings from the literal bodies,
+// one real finding after them).
+
+fn multi_hash_raw() -> &'static str {
+    r##"unsafe Instant HashMap "# still inside the literal"##
+}
+
+fn multi_hash_spans_lines() -> &'static [u8] {
+    br##"first line
+unsafe SystemTime Ordering::Relaxed "# not the end yet
+"##
+}
+
+fn scanning_resumes_after_raw() {
+    let _t = Instant::now(); // LINT-EXPECT[wall-clock]
+}

@@ -1,6 +1,7 @@
-// Fixture for the `simd-twin-contract` rule: every `dispatch::tier`
-// dispatch site must carry a `// twin: scalar_name (bit_equality_test)`
-// comment on the same line or within the 3 lines above.
+// Fixture for the `twin-contract-v2` rule (site half): every
+// `dispatch::tier` dispatch site must carry a
+// `// twin: scalar_name (bit_equality_test)` comment on the same line
+// or within the 3 lines above.
 
 fn documented_site(word: u64, g: &[f32]) -> f32 {
     // twin: masked_sum_dense (simd_masked_sum_bit_identical_to_scalar)
@@ -11,7 +12,7 @@ fn documented_site(word: u64, g: &[f32]) -> f32 {
 }
 
 fn bare_site(word: u64, g: &[f32]) -> f32 {
-    if dispatch::tier() == dispatch::Tier::Lanes8 { // LINT-EXPECT[simd-twin-contract]
+    if dispatch::tier() == dispatch::Tier::Lanes8 { // LINT-EXPECT[twin-contract-v2]
         return simd::masked_sum_dense(word, g);
     }
     masked_sum_dense(word, g)
@@ -19,7 +20,7 @@ fn bare_site(word: u64, g: &[f32]) -> f32 {
 
 fn half_named_site(word: u64) -> u64 {
     // twin: (simd_select_add_bit_identical_to_scalar) — scalar name missing
-    if dispatch::tier() == dispatch::Tier::Lanes8 { // LINT-EXPECT[simd-twin-contract]
+    if dispatch::tier() == dispatch::Tier::Lanes8 { // LINT-EXPECT[twin-contract-v2]
         return word;
     }
     word

@@ -15,3 +15,10 @@ fn waived_unsafe() {
     // lint: allow(unsafe-code) — fixture waiver
     unsafe { touch() }
 }
+
+fn waived_flow_rule(seed: u64) {
+    std::thread::spawn(move || {
+        // lint: allow(rng-stream-discipline) — fixture waiver
+        let _rng = Rng::new(seed);
+    });
+}

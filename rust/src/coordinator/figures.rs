@@ -277,7 +277,11 @@ pub fn fig9(ctx: &Ctx) -> Result<Vec<Report>> {
         let poly = run(ctx, &ds, model, Mode::PolyDs { bits: 4 }, epochs, lr)?;
         let round = run(ctx, &ds, model, Mode::NearestRound { bits: 8 }, epochs, lr)?;
         let naive = run(ctx, &ds, model, Mode::Naive { bits: 8 }, epochs, lr)?;
-        let id = format!("fig9_{}_{name}", match model { ModelKind::Svm => "svm", _ => "logistic" });
+        let model_tag = match model {
+            ModelKind::Svm => "svm",
+            ModelKind::Logistic | ModelKind::Linreg | ModelKind::Lssvm { .. } => "logistic",
+        };
+        let id = format!("fig9_{model_tag}_{name}");
         let mut rep = curve_report(&id,
             &format!("{name} / {:?}: Chebyshev vs 8-bit rounding strawmen", model),
             &[&fp, &cheby, &poly, &round, &naive]);

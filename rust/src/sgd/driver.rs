@@ -218,7 +218,9 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
         let f: Box<dyn Fn(f64) -> f64> = match cfg.model {
             ModelKind::Logistic => Box::new(cheby::logistic_lprime),
             ModelKind::Svm => Box::new(|z| cheby::hinge_lprime_smoothed(z, 0.25)),
-            _ => bail!("cheby modes need a classification model"),
+            ModelKind::Linreg | ModelKind::Lssvm { .. } => {
+                bail!("cheby modes need a classification model")
+            }
         };
         let coefs = cheby::cheb_fit(&*f, RADIUS, CHEBY_DEG);
         let mono = cheby::cheb_to_monomial(&coefs, RADIUS);
@@ -253,7 +255,9 @@ pub fn train(rt: &Runtime, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResul
                     bl.clone(),
                     lit_scalar11(c_reg)?,
                 ],
-                _ => vec![xl.clone(), al.clone(), bl.clone()],
+                ModelKind::Linreg | ModelKind::Logistic | ModelKind::Svm => {
+                    vec![xl.clone(), al.clone(), bl.clone()]
+                }
             };
             acc += rt.exec1_scalar(&loss_art, &args)? as f64;
         }

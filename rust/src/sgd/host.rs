@@ -185,7 +185,7 @@ impl GlmLoss for ModelKind {
     fn l2_reg(&self) -> f32 {
         match self {
             ModelKind::Lssvm { c } => *c,
-            _ => 0.0,
+            ModelKind::Linreg | ModelKind::Logistic | ModelKind::Svm => 0.0,
         }
     }
 }
@@ -937,7 +937,7 @@ impl<'a> HostSession<'a> {
             // fetches for the two DS draws), like the row-read path
             let reads_per_visit: u32 = match self.read {
                 ReadStrategy::DoubleSample => 2,
-                _ => 1,
+                ReadStrategy::Dense | ReadStrategy::Truncate | ReadStrategy::Popcount { .. } => 1,
             };
             let grad_start = Stopwatch::start();
             // Each worker tallies locally (updates, publishes, rng draws,
@@ -970,19 +970,23 @@ impl<'a> HostSession<'a> {
                                 // no plane scratch, Popcount no f32 kernel
                                 let mut delta = match self.read {
                                     ReadStrategy::Dense => Vec::new(),
-                                    _ => vec![0.0f32; n],
+                                    ReadStrategy::Truncate
+                                    | ReadStrategy::DoubleSample
+                                    | ReadStrategy::Popcount { .. } => vec![0.0f32; n],
                                 };
                                 let mut kern = match self.read {
                                     ReadStrategy::Truncate | ReadStrategy::DoubleSample => {
                                         Some(StepKernel::new(n))
                                     }
-                                    _ => None,
+                                    ReadStrategy::Dense | ReadStrategy::Popcount { .. } => None,
                                 };
                                 let mut qk = match self.read {
                                     ReadStrategy::Popcount { q } => {
                                         Some(QuantStepKernel::new(n, q))
                                     }
-                                    _ => None,
+                                    ReadStrategy::Dense
+                                    | ReadStrategy::Truncate
+                                    | ReadStrategy::DoubleSample => None,
                                 };
                                 let store_m = self.store.map(|s| &s.scale().m);
                                 while let Some(batch) = it.next_batch() {

@@ -31,7 +31,8 @@ impl ModelKind {
         match self {
             ModelKind::Linreg => Some("linreg_ds_step"),
             ModelKind::Lssvm { .. } => Some("lssvm_ds_step"),
-            _ => None, // non-linear models use cheby/poly/refetch paths
+            // non-linear models use cheby/poly/refetch paths
+            ModelKind::Logistic | ModelKind::Svm => None,
         }
     }
 

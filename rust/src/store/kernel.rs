@@ -96,8 +96,8 @@
 //!   scalar original — same 8-lane accumulator schedule, same fixed
 //!   reduction tree, same masked-`+0.0` select semantics — so switching
 //!   tiers can never change a result (tests/simd_twins.rs pins it, and
-//!   zipml-lint's `simd-twin-contract` rule forces every dispatch site
-//!   to name its twin and test). The DS carry compare deliberately has
+//!   zipml-lint's `twin-contract-v2` rule forces every dispatch site
+//!   to name its twin and a test that exists). The DS carry compare deliberately has
 //!   no SIMD twin: it is already SIMD-within-a-register and batching it
 //!   would reorder the pinned RNG stream (DESIGN.md §12, a "cannot").
 //!

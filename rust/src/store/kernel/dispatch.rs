@@ -19,8 +19,8 @@
 //! Every *call site* that branches on [`tier`] must carry a
 //! `// twin: <scalar_fn> (<bit_equality_test>)` comment naming the
 //! scalar twin it dispatches against and the test pinning their
-//! bit-equality — enforced by zipml-lint's `simd-twin-contract` rule
-//! (DESIGN.md §12).
+//! bit-equality — enforced by zipml-lint's `twin-contract-v2` rule,
+//! which also checks the named test exists (DESIGN.md §12, §13).
 
 /// Kernel implementation tier. Discriminants double as the probe-cache
 /// encoding (0 is reserved for "unprobed").

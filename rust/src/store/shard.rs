@@ -102,8 +102,10 @@ impl ShardedStore {
         let build = |si: usize| -> WeavedMatrix {
             let r0 = si * shard_rows;
             let r1 = (r0 + shard_rows).min(a.rows);
-            // per-shard RNG stream: identical under any thread schedule
-            let mut rng = Rng::new(seed ^ (si as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            // per-shard RNG stream: identical under any thread schedule,
+            // derived through the one blessed splitter so shard streams
+            // and worker streams can never collide by construction
+            let mut rng = Rng::new_stream(seed, si as u64);
             WeavedMatrix::quantize_rows(
                 &a.data[r0 * cols..r1 * cols],
                 r1 - r0,

@@ -104,7 +104,7 @@ fn select_add_oracle(word: u64, wgt: f32, m: &[f32], out: &mut [f32]) {
 }
 
 /// Named by the `// twin:` contract comment at the `masked_sum` dispatch
-/// site (lint rule `simd-twin-contract`).
+/// site (lint rule `twin-contract-v2`).
 #[test]
 fn simd_masked_sum_bit_identical_to_scalar() {
     let mut rng = Rng::new(0x51D0);
